@@ -1,0 +1,51 @@
+//! Fig.-2 style sweep (§6.2): peak memory and wall-clock vs depth for
+//! Backprop, checkpointed Backprop and Moonwalk on the fully parallel
+//! submersive 2-D CNN.
+//!
+//! Run: `cargo run --release --example memory_sweep_2d [depths...]`
+//! (cargo bench --bench fig2_2d produces the full figure data.)
+
+use moonwalk::autodiff::engine_by_name;
+use moonwalk::coordinator::sweep::{format_table, measure_engine, SweepRow};
+use moonwalk::model::{build_cnn2d, SubmersiveCnn2dSpec};
+use moonwalk::nn::MeanLoss;
+use moonwalk::tensor::Tensor;
+use moonwalk::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let depths: Vec<usize> = std::env::args()
+        .skip(1)
+        .map(|a| a.parse().expect("depth"))
+        .collect();
+    let depths = if depths.is_empty() {
+        vec![1, 2, 3, 4, 6, 8]
+    } else {
+        depths
+    };
+    let mut rows = Vec::new();
+    for &depth in &depths {
+        let spec = SubmersiveCnn2dSpec {
+            input_hw: 64,
+            channels: 32,
+            depth,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(0);
+        let net = build_cnn2d(&spec, &mut rng);
+        let x = Tensor::randn(&[4, 64, 64, 3], 1.0, &mut rng);
+        for name in ["backprop", "backprop_ckpt", "moonwalk"] {
+            let engine = engine_by_name(name, 4, 0, 0)?;
+            let (mem, time, loss) = measure_engine(engine.as_ref(), &net, &x, &MeanLoss, 1, 3)?;
+            rows.push(SweepRow {
+                engine: engine.name(),
+                depth,
+                param: 0,
+                peak_mem_bytes: mem,
+                median_time_s: time,
+                loss,
+            });
+        }
+    }
+    print!("{}", format_table("2-D submersive CNN sweep (Fig. 2)", &rows));
+    Ok(())
+}

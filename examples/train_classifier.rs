@@ -1,0 +1,67 @@
+//! Fig.-4 experiment (§6.4): constrained (Lemma-1 upper-triangular)
+//! versus unconstrained convolutions on a classification task — both
+//! should reach comparable accuracy, showing the submersive
+//! parameterization does not cost expressivity.
+//!
+//! Run: `cargo run --release --example train_classifier [steps]`
+
+use moonwalk::autodiff::{engine_by_name, GradEngine};
+use moonwalk::coordinator::{Optimizer, OptimizerKind, SyntheticSpec, TextureDataset, Trainer};
+use moonwalk::model::{build_cnn2d, SubmersiveCnn2dSpec};
+use moonwalk::util::Rng;
+
+fn run(constrained: bool, steps: usize, engine: &dyn GradEngine) -> anyhow::Result<(f32, f32)> {
+    let spec = SubmersiveCnn2dSpec {
+        input_hw: 32,
+        channels: 16,
+        depth: 3,
+        classes: 4,
+        cin: 3,
+        constrained,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(7);
+    let mut net = build_cnn2d(&spec, &mut rng);
+    let data = TextureDataset::generate(
+        SyntheticSpec {
+            classes: 4,
+            hw: 32,
+            cin: 3,
+            noise: 1.25,
+            seed: 7,
+        },
+        640,
+    );
+    let (train, test) = data.split(0.2);
+    let opt = Optimizer::new(OptimizerKind::Adam, 2e-3, &net, constrained);
+    let mut trainer = Trainer::new(&mut net, engine, opt);
+    let mut rng2 = Rng::new(8);
+    let report = trainer.train(&train, &test, 8, steps, &mut rng2, None)?;
+    println!(
+        "  constrained={constrained:<5} engine={:<10} final_loss={:.4} train_acc={:.3} test_acc={:.3} ({:.1}s)",
+        engine.name(),
+        report.final_loss,
+        report.train_accuracy,
+        report.test_accuracy,
+        report.total_time_s
+    );
+    Ok((report.train_accuracy, report.test_accuracy))
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse().expect("steps"))
+        .unwrap_or(150);
+    println!("Fig. 4: constrained vs unconstrained convolutions ({steps} steps)");
+    // Constrained model trains with Moonwalk (its whole point); the
+    // unconstrained baseline uses Backprop.
+    let moonwalk = engine_by_name("moonwalk", 4, 0, 0)?;
+    let backprop = engine_by_name("backprop", 4, 0, 0)?;
+    let (_, acc_con) = run(true, steps, moonwalk.as_ref())?;
+    let (_, acc_unc) = run(false, steps, backprop.as_ref())?;
+    println!(
+        "test accuracy: constrained {acc_con:.3} vs unconstrained {acc_unc:.3} (paper: both ≈0.90)"
+    );
+    Ok(())
+}

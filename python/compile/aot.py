@@ -1,0 +1,180 @@
+"""AOT compile path: lower every per-layer op of the flagship model to
+HLO **text** and write ``artifacts/manifest.json`` for the Rust runtime.
+
+HLO text (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via ``make artifacts``; Python never runs after that.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels import pallas_kernels as K
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def lower_op(fn, arg_specs):
+    """jit-lower an op for fixed f32 shapes; returns (hlo_text, out_shapes)."""
+    lowered = jax.jit(fn).lower(*arg_specs)
+    out = jax.eval_shape(fn, *arg_specs)
+    if not isinstance(out, (tuple, list)):
+        out = (out,)
+    out_shapes = [list(o.shape) for o in out]
+    return to_hlo_text(lowered), out_shapes
+
+
+def build_ops(cfg: M.ModelConfig):
+    """The op set the Rust Moonwalk e2e driver executes (DESIGN.md §6)."""
+    from .kernels import ref
+
+    ops = {}
+    n, ch, k, s, p, alpha = (
+        cfg.batch,
+        cfg.channels,
+        cfg.k,
+        cfg.stride,
+        cfg.pad,
+        cfg.alpha,
+    )
+
+    # Per conv block i: shapes before/after.
+    for i in range(cfg.depth):
+        hin = cfg.spatial_after(i)
+        hout = cfg.spatial_after(i + 1)
+        x_s = spec(n, hin, hin, ch)
+        y_s = spec(n, hout, hout, ch)
+        w_s = spec(k, k, ch, ch)
+
+        ops[f"conv{i}_fwd"] = (
+            lambda x, w: (K.conv2d_fwd(x, w, s, p),),
+            [x_s, w_s],
+        )
+        ops[f"conv{i}_vjp_in"] = (
+            functools.partial(
+                lambda g, w, xs=tuple(x_s.shape): (
+                    ref.conv2d_vjp_input(g, w, xs, s, p),
+                )
+            ),
+            [y_s, w_s],
+        )
+        ops[f"conv{i}_vjp_w"] = (
+            lambda x, g: (ref.conv2d_vjp_w(x, g, (k, k, ch, ch), s, p),),
+            [x_s, y_s],
+        )
+        # The paper's operator — the Pallas Alg.-2 kernel.
+        ops[f"conv{i}_vijp"] = (
+            lambda h, w: (K.conv2d_vijp(h, w, s, p),),
+            [x_s, w_s],
+        )
+        ops[f"lrelu{i}_fwd"] = (
+            lambda x: (K.leaky_relu_fwd(x, alpha),),
+            [y_s],
+        )
+        ops[f"lrelu{i}_vjp"] = (
+            lambda x, g: (K.leaky_relu_vjp(x, g, alpha),),
+            [y_s, y_s],
+        )
+        ops[f"lrelu{i}_vijp"] = (
+            lambda x, h: (K.leaky_relu_vijp(x, h, alpha),),
+            [y_s, y_s],
+        )
+
+    # Dense head.
+    din, classes = cfg.dense_in(), cfg.classes
+    x2_s, w2_s, b2_s = spec(n, din), spec(din, classes), spec(classes)
+    g2_s = spec(n, classes)
+    ops["dense_fwd"] = (lambda x, w, b: (M.dense_fwd(x, w, b),), [x2_s, w2_s, b2_s])
+    ops["dense_vjp_in"] = (lambda g, w: (M.dense_vjp_in(g, w),), [g2_s, w2_s])
+    ops["dense_vjp_w"] = (
+        lambda x, g: (M.dense_vjp_w(x, g), g.sum(axis=0)),
+        [x2_s, g2_s],
+    )
+    ops["dense_vijp"] = (lambda h, w: (M.dense_vijp(h, w),), [x2_s, w2_s])
+
+    # Loss head (scalar loss reshaped to [1] so every output is an array).
+    ops["loss_grad"] = (
+        lambda logits, onehot: (
+            M.loss_and_grad(logits, onehot)[0].reshape(1),
+            M.loss_and_grad(logits, onehot)[1],
+        ),
+        [g2_s, g2_s],
+    )
+    return ops
+
+
+def emit(out_dir: str, cfg: M.ModelConfig) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "config": {
+            "batch": cfg.batch,
+            "hw": cfg.hw,
+            "cin": cfg.cin,
+            "channels": cfg.channels,
+            "depth": cfg.depth,
+            "classes": cfg.classes,
+            "alpha": cfg.alpha,
+            "k": cfg.k,
+            "stride": cfg.stride,
+            "pad": cfg.pad,
+            "pool": cfg.pool_window(),
+            "dense_in": cfg.dense_in(),
+            "seed": cfg.seed,
+        },
+        "ops": [],
+    }
+    for name, (fn, arg_specs) in sorted(build_ops(cfg).items()):
+        hlo, out_shapes = lower_op(fn, arg_specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(hlo)
+        manifest["ops"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [list(s.shape) for s in arg_specs],
+                "outputs": out_shapes,
+            }
+        )
+        print(f"  lowered {name}: {len(hlo)} chars, outs {out_shapes}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['ops'])} ops to {out_dir}/manifest.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--hw", type=int, default=16)
+    ap.add_argument("--channels", type=int, default=16)
+    ap.add_argument("--depth", type=int, default=2)
+    args = ap.parse_args()
+    cfg = M.ModelConfig(
+        batch=args.batch, hw=args.hw, channels=args.channels, depth=args.depth
+    )
+    emit(args.out_dir, cfg)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,199 @@
+"""Pure-jnp oracles for the Pallas kernels (the L1 correctness signal).
+
+Conventions match the Rust layer library and the paper's §3.1/§5 notation:
+channel-last tensors, kernel ``w[k, k, Cin, Cout]`` (2-D) / ``w[k, Cin,
+Cout]`` (1-D), and the convolution
+
+    x'[i', c'] = sum_{j, c} w[j, c, c'] * x[s*i' + j - p, c].
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------- 2-D conv
+
+
+def conv2d(x, w, stride, pad):
+    """Forward convolution, batched: x [N,H,W,Cin], w [k,k,Cin,Cout]."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv2d_vjp_input(g, w, x_shape, stride, pad):
+    """h = g * dconv/dx — the transpose convolution (paper Eq. 12/13)."""
+    zeros = jnp.zeros(x_shape, dtype=g.dtype)
+    _, pullback = jax.vjp(lambda x: conv2d(x, w, stride, pad), zeros)
+    return pullback(g)[0]
+
+
+def conv2d_vjp_w(x, g, w_shape, stride, pad):
+    """dw = g * dconv/dw."""
+    zeros = jnp.zeros(w_shape, dtype=g.dtype)
+    _, pullback = jax.vjp(lambda w: conv2d(x, w, stride, pad), zeros)
+    return pullback(g)[0]
+
+
+def conv2d_vijp_fast(h, w, stride, pad, out_spatial):
+    """Reference fully-parallel vijp (paper Alg. 2, fast path s+p >= k).
+
+    Recovers the output cotangent h' from the input cotangent h by the
+    per-position channel-triangular solve:
+
+        h'[a,b,co] = (h[s*a, s*b, co]
+                      - sum_{c2<co} w[p,p,co,c2] * h'[a,b,c2]) / w[p,p,co,co]
+    """
+    k = w.shape[0]
+    cout = w.shape[3]
+    assert stride + pad >= k, "fast path requires s + p >= k"
+    ho, wo = out_spatial
+    # Strided gather of the pivot rows: h[s*a, s*b, co] for co < cout.
+    hs = h[:, : stride * (ho - 1) + 1 : stride, : stride * (wo - 1) + 1 : stride, :cout]
+    wp = w[pad, pad]  # [Cin, Cout]
+    cols = []
+    for co in range(cout):
+        acc = hs[..., co]
+        for c2 in range(co):
+            acc = acc - wp[co, c2] * cols[c2]
+        cols.append(acc / wp[co, co])
+    return jnp.stack(cols, axis=-1)
+
+
+def conv2d_vijp_lstsq(h, w, x_shape, stride, pad, out_shape):
+    """Brute-force oracle: least-squares against the materialized Jacobian
+    (single image, tiny shapes only). Solves h' J = h with J = d(conv)/dx.
+    """
+    assert h.shape[0] == 1, "lstsq oracle is single-image"
+    n_in = int(np.prod(x_shape))
+    n_out = int(np.prod(out_shape))
+
+    def f_flat(x_flat):
+        return conv2d(x_flat.reshape(x_shape), w, stride, pad).reshape(n_out)
+
+    jac = jax.jacfwd(f_flat)(jnp.zeros(n_in))  # [n_out, n_in]
+    sol, *_ = jnp.linalg.lstsq(jac.T, h.reshape(n_in))
+    return sol.reshape(out_shape)
+
+
+# ---------------------------------------------------------------- 1-D conv
+
+
+def conv1d(x, w, stride, pad):
+    """x [N,L,Cin], w [k,Cin,Cout]."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride,),
+        padding=[(pad, pad)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    )
+
+
+def conv1d_vjp_input(g, w, x_shape, stride, pad):
+    zeros = jnp.zeros(x_shape, dtype=g.dtype)
+    _, pullback = jax.vjp(lambda x: conv1d(x, w, stride, pad), zeros)
+    return pullback(g)[0]
+
+
+def conv1d_fragment_capture(hp, block, k):
+    """First k-1 slices of each block of the output cotangent (Alg. 3's
+    stored ``h_init``). hp [N, L', C'] -> [N, n_blocks*(k-1), C']."""
+    n, lo, cout = hp.shape
+    keep = k - 1
+    n_blocks = -(-lo // block)
+    pad = n_blocks * block - lo
+    hp_pad = jnp.pad(hp, ((0, 0), (0, pad), (0, 0)))
+    blocks = hp_pad.reshape(n, n_blocks, block, cout)
+    return blocks[:, :, :keep, :].reshape(n, n_blocks * keep, cout)
+
+
+def conv1d_fragment_reconstruct(frag, h, w, block):
+    """Reference Alg. 3 (sequential numpy): reconstruct the full output
+    cotangent from fragments + input cotangent for s=1, p=1 convs."""
+    k, cin, cout = w.shape
+    del cin
+    wnp = np.asarray(w, dtype=np.float64)
+    hnp = np.asarray(h, dtype=np.float64)
+    n, ll, _ = hnp.shape
+    keep = k - 1
+    fragnp = np.asarray(frag, dtype=np.float64)
+    n_blocks = fragnp.shape[1] // keep
+    lo = ll + 3 - k  # s=1, p=1 output length
+    hp = np.zeros((n, lo, cout), dtype=np.float64)
+    for img in range(n):
+        for b in range(n_blocks):
+            for r in range(keep):
+                i = b * block + r
+                if i < lo:
+                    hp[img, i] = fragnp[img, b * keep + r]
+        for b in range(n_blocks):
+            for i in range(b * block + keep, min((b + 1) * block, lo)):
+                for co in range(cout):
+                    acc = hnp[img, i - 1, co]
+                    for c2 in range(co):
+                        acc -= wnp[0, co, c2] * hp[img, i, c2]
+                    for j in range(1, k):
+                        if j > i:
+                            break
+                        for c2 in range(cout):
+                            acc -= wnp[j, co, c2] * hp[img, i - j, c2]
+                    hp[img, i, co] = acc / wnp[0, co, co]
+    return jnp.asarray(hp.astype(np.float32))
+
+
+# ------------------------------------------------------------- activations
+
+
+def leaky_relu(x, alpha):
+    return jnp.where(x >= 0, x, alpha * x)
+
+
+def leaky_relu_vjp(x, g, alpha):
+    return jnp.where(x >= 0, g, alpha * g)
+
+
+def leaky_relu_vijp(x, h, alpha):
+    return jnp.where(x >= 0, h, h / alpha)
+
+
+# ------------------------------------------------------ parameter projection
+
+
+def project_submersive_2d(w, pad, floor=0.05):
+    """Lemma-1 projection: zero sub-triangular entries of the pivot tap and
+    floor the diagonal (mirrors Conv2d::project_submersive in Rust)."""
+    k, _, cin, cout = w.shape
+    del k
+    wp = w[pad, pad]
+    for co in range(cout):
+        for ci in range(co):
+            wp = wp.at[ci, co].set(0.0)
+    for co in range(min(cin, cout)):
+        d = wp[co, co]
+        clamped = jnp.where(
+            jnp.abs(d) < floor, jnp.where(d >= 0, floor, -floor), d
+        )
+        wp = wp.at[co, co].set(clamped)
+    return w.at[pad, pad].set(wp)
+
+
+def project_fragmental_1d(w, floor=0.05):
+    """Appendix-10 projection: tap-0 triangularity + diagonal floor."""
+    k, cin, cout = w.shape
+    del k
+    w0 = w[0]
+    for co in range(cout):
+        for ci in range(co):
+            w0 = w0.at[ci, co].set(0.0)
+    for co in range(min(cin, cout)):
+        d = w0[co, co]
+        clamped = jnp.where(
+            jnp.abs(d) < floor, jnp.where(d >= 0, floor, -floor), d
+        )
+        w0 = w0.at[co, co].set(clamped)
+    return w.at[0].set(w0)

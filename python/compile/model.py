@@ -1,0 +1,150 @@
+"""L2: the flagship submersive CNN in JAX, calling the L1 Pallas kernels.
+
+This module defines the model the AOT path ships to Rust: an
+``Upsample -> [Conv(s=2,p=1,k=3) -> LeakyReLU] x depth -> MaxPool ->
+Dense`` classifier with Lemma-1-constrained convolutions, plus the
+per-layer differential operators (vjp/vijp) the Rust Moonwalk engine
+executes via PJRT. The forward ops call the Pallas kernels so they lower
+into the very HLO the Rust side loads (L1 -> L2 -> L3 composition).
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pallas_kernels as K
+from .kernels import ref
+
+
+@dataclass
+class ModelConfig:
+    """Flagship e2e configuration (kept CPU-interpretable)."""
+
+    batch: int = 8
+    hw: int = 16
+    cin: int = 3
+    channels: int = 16
+    depth: int = 2
+    classes: int = 4
+    alpha: float = 0.1
+    k: int = 3
+    stride: int = 2
+    pad: int = 1
+    seed: int = 0
+
+    def spatial_after(self, i):
+        """Spatial size after i conv blocks."""
+        s = self.hw
+        for _ in range(i):
+            s = (s + 2 * self.pad - self.k) // self.stride + 1
+        return s
+
+    def pool_window(self):
+        return 2 if self.spatial_after(self.depth) % 2 == 0 else 1
+
+    def dense_in(self):
+        s = self.spatial_after(self.depth) // self.pool_window()
+        return s * s * self.channels
+
+
+def init_params(cfg: ModelConfig):
+    """He init + Lemma-1 projection for every conv; dense head."""
+    key = jax.random.PRNGKey(cfg.seed)
+    params = {"convs": [], "dense_w": None, "dense_b": None}
+    for i in range(cfg.depth):
+        key, sub = jax.random.split(key)
+        fan_in = cfg.k * cfg.k * cfg.channels
+        w = jax.random.normal(sub, (cfg.k, cfg.k, cfg.channels, cfg.channels))
+        w = w * (2.0 / fan_in) ** 0.5
+        w = w.at[cfg.pad, cfg.pad].add(jnp.eye(cfg.channels))
+        w = ref.project_submersive_2d(w, cfg.pad)
+        params["convs"].append(w)
+    key, sub = jax.random.split(key)
+    params["dense_w"] = jax.random.normal(sub, (cfg.dense_in(), cfg.classes)) * (
+        2.0 / cfg.dense_in()
+    ) ** 0.5
+    params["dense_b"] = jnp.zeros((cfg.classes,))
+    return params
+
+
+# ----------------------------------------------------------- layer pieces
+
+
+def upsample(x, cout):
+    """Channel replication (parameter-free entry layer)."""
+    cin = x.shape[-1]
+    reps = -(-cout // cin)
+    return jnp.tile(x, (1,) * (x.ndim - 1) + (reps,))[..., :cout]
+
+
+def maxpool(x, q):
+    n, h, w, c = x.shape
+    xr = x.reshape(n, h // q, q, w // q, q, c)
+    return xr.max(axis=(2, 4))
+
+
+def dense_fwd(x2d, w, b):
+    return x2d @ w + b
+
+
+def dense_vjp_in(g, w):
+    return g @ w.T
+
+
+def dense_vjp_w(x2d, g):
+    return x2d.T @ g
+
+
+def small_inverse(m):
+    """Unrolled Gauss-Jordan inverse for small static matrices.
+
+    ``jnp.linalg.solve`` lowers to a LAPACK typed-FFI custom-call that the
+    image's xla_extension 0.5.1 cannot execute; this stays in pure HLO.
+    """
+    n = m.shape[0]
+    aug = jnp.concatenate([m, jnp.eye(n, dtype=m.dtype)], axis=1)
+    for col in range(n):
+        pivot = aug[col, col]
+        aug = aug.at[col].set(aug[col] / pivot)
+        for row in range(n):
+            if row != col:
+                aug = aug.at[row].add(-aug[row, col] * aug[col])
+    return aug[:, n:]
+
+
+def dense_vijp(h2d, w):
+    """Right-inverse cotangent push: h' = (h W)(W^T W)^-1."""
+    gram = w.T @ w
+    return (h2d @ w) @ small_inverse(gram)
+
+
+def loss_and_grad(logits, onehot):
+    """Softmax cross-entropy value + gradient wrt logits."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    n = logits.shape[0]
+    loss = -(onehot * logp).sum() / n
+    g = (jax.nn.softmax(logits, axis=-1) - onehot) / n
+    return loss, g
+
+
+# ------------------------------------------------------------ full model
+
+
+def forward(cfg: ModelConfig, params, x):
+    """Full forward pass (calls the Pallas kernels for conv + lrelu)."""
+    h = upsample(x, cfg.channels)
+    for w in params["convs"]:
+        h = K.conv2d_fwd(h, w, cfg.stride, cfg.pad)
+        h = K.leaky_relu_fwd(h, cfg.alpha)
+    q = cfg.pool_window()
+    if q > 1:
+        h = maxpool(h, q)
+    h = h.reshape(h.shape[0], -1)
+    return dense_fwd(h, params["dense_w"], params["dense_b"])
+
+
+def loss_fn(cfg: ModelConfig, params, x, onehot):
+    logits = forward(cfg, params, x)
+    loss, _ = loss_and_grad(logits, onehot)
+    return loss

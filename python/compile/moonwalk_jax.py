@@ -1,0 +1,51 @@
+"""Moonwalk (mixed-mode, Alg. 1) implemented directly in JAX — the L2
+cross-check that the Moonwalk identity (Eq. 7) reproduces ``jax.grad``.
+
+Works on a fully submersive conv stack (no channel expansion):
+Phase I/II obtain the input cotangent h0 with ``jax.vjp`` restricted to
+the input; Phase III sweeps forward recovering each layer's output
+cotangent with the Pallas vijp kernel (Eq. 9) and emitting parameter
+gradients with vjp (Eq. 10).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pallas_kernels as K
+from .kernels import ref
+
+
+def stack_forward(ws, x, stride, pad, alpha):
+    """[Conv -> LeakyReLU] x depth with mean loss (paper §6.2 sweep net)."""
+    h = x
+    for w in ws:
+        h = ref.conv2d(h, w, stride, pad)
+        h = ref.leaky_relu(h, alpha)
+    return h.mean()
+
+
+def grads_backprop(ws, x, stride, pad, alpha):
+    """Reference gradients via jax.grad (reverse mode)."""
+    return jax.grad(lambda ws_: stack_forward(ws_, x, stride, pad, alpha))(ws)
+
+
+def grads_moonwalk(ws, x, stride, pad, alpha):
+    """Mixed-mode Moonwalk: h0 in reverse mode, parameter grads in the
+    vijp forward sweep."""
+    # Phases I+II: input cotangent only.
+    _, h0 = jax.value_and_grad(lambda x_: stack_forward(ws, x_, stride, pad, alpha))(x)
+
+    # Phase III: forward sweep (Alg. 1).
+    grads = []
+    h = h0
+    act = x
+    for w in ws:
+        conv_out = ref.conv2d(act, w, stride, pad)
+        # Output cotangent of the conv via the Pallas vijp (Eq. 9).
+        h_conv = K.conv2d_vijp(h, w, stride, pad)
+        # Parameter gradient (Eq. 10).
+        grads.append(ref.conv2d_vjp_w(act, h_conv, w.shape, stride, pad))
+        # Push the cotangent through LeakyReLU (diagonal vijp).
+        h = K.leaky_relu_vijp(conv_out, h_conv, alpha)
+        act = ref.leaky_relu(conv_out, alpha)
+    return grads

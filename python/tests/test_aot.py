@@ -1,0 +1,45 @@
+"""AOT path sanity: ops lower to parseable HLO text with consistent
+manifest shapes (the Rust-side round trip is rust/tests/runtime_pjrt.rs)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_lower_op_produces_hlo_text():
+    fn = lambda a, b: (a @ b,)
+    hlo, outs = aot.lower_op(fn, [aot.spec(2, 3), aot.spec(3, 4)])
+    assert "HloModule" in hlo
+    assert outs == [[2, 4]]
+
+
+def test_build_ops_cover_all_layers():
+    cfg = M.ModelConfig(batch=2, hw=16, channels=4, depth=2)
+    ops = aot.build_ops(cfg)
+    for i in range(cfg.depth):
+        for stem in ["conv{}_fwd", "conv{}_vjp_in", "conv{}_vjp_w", "conv{}_vijp",
+                     "lrelu{}_fwd", "lrelu{}_vjp", "lrelu{}_vijp"]:
+            assert stem.format(i) in ops
+    for name in ["dense_fwd", "dense_vjp_in", "dense_vjp_w", "dense_vijp", "loss_grad"]:
+        assert name in ops
+
+
+def test_emit_writes_manifest(tmp_path):
+    cfg = M.ModelConfig(batch=1, hw=8, channels=2, depth=1, classes=2)
+    aot.emit(str(tmp_path), cfg)
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["config"]["depth"] == 1
+    assert len(manifest["ops"]) == 12
+    for op in manifest["ops"]:
+        path = tmp_path / op["file"]
+        assert path.exists()
+        text = path.read_text()
+        assert "HloModule" in text
+        assert op["inputs"], op["name"]

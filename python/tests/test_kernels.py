@@ -1,0 +1,189 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps
+over shapes and geometries) — the core correctness signal of the compile
+path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pallas_kernels as K
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+def submersive_w(key, k, cin, cout, pad):
+    w = rand(key, (k, k, cin, cout), 0.3)
+    w = w.at[pad, pad, : min(cin, cout), : min(cin, cout)].add(
+        jnp.eye(min(cin, cout))
+    )
+    return ref.project_submersive_2d(w, pad)
+
+
+# ------------------------------------------------------------ conv2d fwd
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    hw=st.integers(5, 12),
+    cin=st.integers(1, 5),
+    cout=st.integers(1, 5),
+    k=st.sampled_from([1, 3]),
+    stride=st.integers(1, 2),
+    seed=st.integers(0, 10_000),
+)
+def test_conv2d_fwd_matches_lax(n, hw, cin, cout, k, stride, seed):
+    pad = k // 2
+    if hw + 2 * pad < k:
+        return
+    x = rand(seed, (n, hw, hw, cin))
+    w = rand(seed + 1, (k, k, cin, cout), 0.3)
+    got = K.conv2d_fwd(x, w, stride, pad)
+    want = ref.conv2d(x, w, stride, pad)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------------------------------- conv2d vijp
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 2),
+    hw=st.integers(7, 13),
+    cin=st.integers(2, 6),
+    seed=st.integers(0, 10_000),
+    cout_delta=st.integers(0, 2),
+)
+def test_conv2d_vijp_right_inverse(n, hw, cin, seed, cout_delta):
+    """THE Moonwalk property: vijp(vjp(h')) == h' for the paper's
+    k=3, s=2, p=1 fully-parallel configuration, including Cout < Cin."""
+    cout = max(1, cin - cout_delta)
+    k, stride, pad = 3, 2, 1
+    w = submersive_w(seed, k, cin, cout, pad)
+    ho = (hw + 2 * pad - k) // stride + 1
+    hp = rand(seed + 2, (n, ho, ho, cout))
+    h = ref.conv2d_vjp_input(hp, w, (n, hw, hw, cin), stride, pad)
+    rec = K.conv2d_vijp(h, w, stride, pad)
+    np.testing.assert_allclose(rec, hp, rtol=2e-3, atol=2e-4)
+
+
+def test_conv2d_vijp_matches_ref_impl():
+    w = submersive_w(7, 3, 4, 4, 1)
+    h = rand(8, (2, 9, 9, 4))
+    got = K.conv2d_vijp(h, w, 2, 1)
+    want = ref.conv2d_vijp_fast(h, w, 2, 1, (5, 5))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_conv2d_vijp_agrees_with_lstsq_oracle():
+    """Tiny-shape brute force: the elimination equals the least-squares
+    right-inverse on the row space (uniqueness claim of §4.2)."""
+    w = submersive_w(11, 3, 2, 2, 1)
+    x_shape = (1, 5, 5, 2)
+    out_shape = (1, 3, 3, 2)
+    hp = rand(12, out_shape)
+    h = ref.conv2d_vjp_input(hp, w, x_shape, 2, 1)
+    got = K.conv2d_vijp(h, w, 2, 1)
+    want = ref.conv2d_vijp_lstsq(h, w, x_shape, 2, 1, out_shape)
+    np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-3)
+
+
+def test_conv2d_vijp_rejects_bad_geometry():
+    with pytest.raises(AssertionError):
+        K.conv2d_vijp(jnp.zeros((1, 8, 8, 3)), jnp.zeros((5, 5, 3, 3)), 2, 1)
+
+
+# ----------------------------------------------------- fragmental (1-D)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 2),
+    n_blocks=st.integers(1, 4),
+    block=st.sampled_from([4, 8, 16]),
+    cin=st.integers(1, 5),
+    k=st.sampled_from([2, 3, 4]),
+    seed=st.integers(0, 10_000),
+)
+def test_fragment_reconstruct_roundtrip(n, n_blocks, block, cin, k, seed):
+    """Alg. 3 recovers the exact output cotangent from (k-1)-slice
+    fragments for random geometries."""
+    if block < k:
+        return
+    ll = n_blocks * block
+    w = rand(seed, (k, cin, cin), 0.3)
+    w = w.at[0, : cin, : cin].add(jnp.eye(cin))
+    w = ref.project_fragmental_1d(w)
+    # hp has output length ll (choose input length so L' = ll: L = ll+k-3)
+    lin = ll + k - 3
+    if lin < k:
+        return
+    x_shape = (n, lin, cin)
+    hp = rand(seed + 1, (n, ll, cin))
+    h = ref.conv1d_vjp_input(hp, w, x_shape, 1, 1)
+    frag = ref.conv1d_fragment_capture(hp, block, k)
+    # fit h's spatial axis to exactly n_blocks*block rows for the kernel
+    # (k=4 gives an input one longer than the output; k=2 one shorter)
+    if h.shape[1] >= ll:
+        hpad = h[:, :ll, :]
+    else:
+        hpad = jnp.pad(h, ((0, 0), (0, ll - h.shape[1]), (0, 0)))
+    got = K.conv1d_fragment_reconstruct(hpad, frag, w, block)
+    np.testing.assert_allclose(got, hp, rtol=5e-3, atol=5e-4)
+
+
+def test_fragment_capture_sizes():
+    hp = jnp.ones((2, 32, 8))
+    frag = ref.conv1d_fragment_capture(hp, 4, 3)
+    assert frag.shape == (2, 16, 8)  # 2 of every 4 slices
+    frag16 = ref.conv1d_fragment_capture(hp, 16, 3)
+    assert frag16.shape == (2, 4, 8)  # 1/8 of full
+
+
+# ------------------------------------------------------------ leaky relu
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    shape=st.sampled_from([(4,), (2, 3), (2, 4, 4, 3)]),
+    alpha=st.sampled_from([0.01, 0.1, 0.5]),
+    seed=st.integers(0, 10_000),
+)
+def test_leaky_relu_kernels(shape, alpha, seed):
+    x = rand(seed, shape)
+    g = rand(seed + 1, shape)
+    np.testing.assert_allclose(
+        K.leaky_relu_fwd(x, alpha), ref.leaky_relu(x, alpha), rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        K.leaky_relu_vjp(x, g, alpha), ref.leaky_relu_vjp(x, g, alpha), rtol=1e-6
+    )
+    # vijp inverts vjp exactly (diagonal Jacobian)
+    h = ref.leaky_relu_vjp(x, g, alpha)
+    np.testing.assert_allclose(
+        K.leaky_relu_vijp(x, h, alpha), g, rtol=1e-4, atol=1e-6
+    )
+
+
+# --------------------------------------------------------- jax.grad check
+
+
+def test_conv_vjp_refs_match_autodiff():
+    x = rand(0, (2, 8, 8, 3))
+    w = rand(1, (3, 3, 3, 4), 0.3)
+    g = rand(2, (2, 4, 4, 4))
+    loss = lambda x_, w_: (ref.conv2d(x_, w_, 2, 1) * g).sum()
+    gx, gw = jax.grad(loss, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(
+        ref.conv2d_vjp_input(g, w, x.shape, 2, 1), gx, rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        ref.conv2d_vjp_w(x, g, w.shape, 2, 1), gw, rtol=1e-4, atol=1e-5
+    )

@@ -1,0 +1,65 @@
+//! Fig. 4 (paper §6.4): constrained (upper-triangular, Lemma 1) vs
+//! unconstrained convolutions on classification — both should converge
+//! to comparable accuracy (paper: both ≈90% on their task), showing the
+//! submersive parameterization costs little expressivity.
+
+use moonwalk::autodiff::engine_by_name;
+use moonwalk::coordinator::{Optimizer, OptimizerKind, SyntheticSpec, TextureDataset, Trainer};
+use moonwalk::model::{build_cnn2d, SubmersiveCnn2dSpec};
+use moonwalk::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let steps = if quick { 40 } else { 250 };
+    println!("Fig 4 — constrained vs unconstrained convolutions ({steps} steps)");
+    println!(
+        "{:<14} {:>8} {:>11} {:>10} {:>10}",
+        "model", "engine", "final_loss", "train_acc", "test_acc"
+    );
+    let mut accs = Vec::new();
+    for constrained in [true, false] {
+        let spec = SubmersiveCnn2dSpec {
+            input_hw: 32,
+            channels: 16,
+            depth: 3,
+            classes: 4,
+            constrained,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(7);
+        let mut net = build_cnn2d(&spec, &mut rng);
+        let data = TextureDataset::generate(
+            SyntheticSpec {
+                classes: 4,
+                hw: 32,
+                cin: 3,
+                noise: 1.25,
+                seed: 7,
+            },
+            if quick { 96 } else { 640 },
+        );
+        let (train, test) = data.split(0.2);
+        // Constrained trains with Moonwalk (exact, its whole point);
+        // unconstrained with Backprop.
+        let engine = engine_by_name(if constrained { "moonwalk" } else { "backprop" }, 4, 0, 0)?;
+        let opt = Optimizer::new(OptimizerKind::Adam, 2e-3, &net, constrained);
+        let mut trainer = Trainer::new(&mut net, engine.as_ref(), opt);
+        let mut rng2 = Rng::new(8);
+        let rep = trainer.train(&train, &test, 8, steps, &mut rng2, None)?;
+        println!(
+            "{:<14} {:>8} {:>11.4} {:>10.3} {:>10.3}",
+            if constrained { "constrained" } else { "standard" },
+            if constrained { "moonwalk" } else { "backprop" },
+            rep.final_loss,
+            rep.train_accuracy,
+            rep.test_accuracy
+        );
+        accs.push(rep.test_accuracy);
+    }
+    println!(
+        "\nheadline: constrained {:.3} vs unconstrained {:.3} test accuracy \
+         (paper: both converge to ~0.90 — comparable expressivity)",
+        accs[0], accs[1]
+    );
+    Ok(())
+}

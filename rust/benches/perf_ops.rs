@@ -1,0 +1,119 @@
+//! Op-level microbench (§6 setup claim + §Perf): the convolutional vijp
+//! operator should cost no more than the standard input-vjp — "our
+//! implemented convolutional vijp operator does not introduce a
+//! computational overhead".
+//!
+//! Also reports forward/vjp_w costs and the fast-path vs wavefront vijp
+//! split, plus allocation churn for the §Perf log.
+
+use moonwalk::nn::{Conv2d, Layer, ResidualKind};
+use moonwalk::tensor::{tracker, Tensor};
+use moonwalk::util::timer::bench;
+use moonwalk::util::Rng;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let iters = if quick { 3 } else { 15 };
+    println!(
+        "{:<34} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "config", "fwd_ms", "vjp_in_ms", "vjp_w_ms", "vijp_ms", "vijp/vjp"
+    );
+    let shapes: &[(usize, usize, usize, usize, usize, usize)] = &[
+        // (batch, hw, ch, k, s, p)
+        (4, 32, 16, 3, 2, 1),
+        (4, 64, 32, 3, 2, 1),
+        (2, 96, 32, 3, 2, 1),
+        (2, 64, 32, 5, 3, 2), // s+p>=k: still fast path
+        (2, 63, 16, 5, 3, 1), // s+p<k: wavefront (spatially coupled)
+    ];
+    for &(n, hw, ch, k, s, p) in shapes {
+        let mut rng = Rng::new(1);
+        let conv = Conv2d::new_submersive(k, ch, ch, s, p, false, &mut rng);
+        let x = Tensor::randn(&[n, hw, hw, ch], 1.0, &mut rng);
+        let (y, res) = conv.forward_res(&x, ResidualKind::Minimal);
+        let g = Tensor::randn(y.shape(), 1.0, &mut rng);
+        let h = conv.vjp_input(&res, &g);
+
+        let fwd = bench(1, iters, || {
+            std::hint::black_box(conv.forward(&x));
+        });
+        let vjp_in = bench(1, iters, || {
+            std::hint::black_box(conv.vjp_input(&res, &g));
+        });
+        let vjp_w = bench(1, iters, || {
+            std::hint::black_box(conv.vjp_params(&x, &g));
+        });
+        let vijp = bench(1, iters, || {
+            std::hint::black_box(conv.vijp(&res, &h).unwrap());
+        });
+        println!(
+            "{:<34} {:>12.3} {:>12.3} {:>12.3} {:>12.3} {:>10.2}",
+            format!("{n}x{hw}x{hw}x{ch} k{k}s{s}p{p}{}", if s + p >= k { "" } else { " (wave)" }),
+            fwd.median_ms(),
+            vjp_in.median_ms(),
+            vjp_w.median_ms(),
+            vijp.median_ms(),
+            vijp.median / vjp_in.median
+        );
+    }
+
+    // Ablation 1 (DESIGN.md §10): anchor placement. The h₁ seed
+    // checkpoints the cotangent *after* the stride-2 entry conv (s²
+    // smaller) vs naively at the upsample output.
+    {
+        use moonwalk::autodiff::{Moonwalk, MoonwalkOpts};
+        use moonwalk::coordinator::sweep::measure_engine as me;
+        use moonwalk::model::{build_cnn2d, SubmersiveCnn2dSpec};
+        use moonwalk::nn::MeanLoss;
+        let spec = SubmersiveCnn2dSpec {
+            input_hw: 64,
+            channels: 32,
+            depth: 4,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(0);
+        let net = build_cnn2d(&spec, &mut rng);
+        let x = Tensor::randn(&[4, 64, 64, 3], 1.0, &mut rng);
+        println!("\nablation — cotangent anchor placement (moonwalk, depth 4):");
+        for (label, naive) in [("h1 seed (paper §4.3 variant)", false), ("naive (break-layer output)", true)] {
+            let engine = Moonwalk::new(MoonwalkOpts {
+                naive_anchor: naive,
+                ..Default::default()
+            });
+            let (mem, time, _) = me(&engine, &net, &x, &MeanLoss, 1, iters.min(5)).unwrap();
+            println!(
+                "  {label:<30} peak={} median={:.2}ms",
+                tracker::fmt_bytes(mem),
+                time * 1e3
+            );
+        }
+    }
+
+    // Allocation churn on the end-to-end engines (the §Perf metric).
+    println!("\nallocation churn (one gradient computation):");
+    use moonwalk::autodiff::engine_by_name;
+    use moonwalk::model::{build_cnn2d, SubmersiveCnn2dSpec};
+    use moonwalk::nn::MeanLoss;
+    let spec = SubmersiveCnn2dSpec {
+        input_hw: 64,
+        channels: 32,
+        depth: 4,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(0);
+    let net = build_cnn2d(&spec, &mut rng);
+    let x = Tensor::randn(&[4, 64, 64, 3], 1.0, &mut rng);
+    for name in ["backprop", "moonwalk"] {
+        let engine = engine_by_name(name, 4, 0, 0).unwrap();
+        let (_, prof) = tracker::measure(|| {
+            engine
+                .compute_streaming(&net, &x, &MeanLoss, &mut |_, g| drop(g))
+                .unwrap()
+        });
+        println!(
+            "  {name:<10} allocs={:<6} peak={}",
+            prof.allocs,
+            tracker::fmt_bytes(prof.peak_extra_bytes)
+        );
+    }
+}

@@ -1,0 +1,124 @@
+//! True forward-mode differentiation (paper §3.2 / §11 "Forward"): one
+//! jvp pass per scalar parameter, each pass pushing a tangent from the
+//! parameter's layer to the loss. Exact but `O(n²dL²)` time — the paper's
+//! point of comparison for why naive forward-mode is impractical; usable
+//! here only on micro-networks (Table-1 scaling bench).
+//!
+//! Memory is `O(Mx + Mθ)`: each pass keeps one activation and one tangent.
+
+use crate::autodiff::GradEngine;
+use crate::model::Network;
+use crate::nn::Loss;
+use crate::tensor::Tensor;
+
+/// Naive exact forward-mode differentiation.
+pub struct ForwardMode;
+
+impl GradEngine for ForwardMode {
+    fn name(&self) -> String {
+        "forward".into()
+    }
+
+    fn compute_streaming(
+        &self,
+        net: &Network,
+        x0: &Tensor,
+        loss: &dyn Loss,
+        sink: &mut dyn FnMut(usize, Vec<Tensor>),
+    ) -> anyhow::Result<f32> {
+        let loss_val = loss.value(&net.forward(x0));
+
+        for (li, layer) in net.layers.iter().enumerate() {
+            let params = layer.params();
+            if params.is_empty() {
+                continue;
+            }
+            let shapes: Vec<Vec<usize>> = params.iter().map(|p| p.shape().to_vec()).collect();
+            drop(params);
+            let mut grads: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+            for (pi, shape) in shapes.iter().enumerate() {
+                let len: usize = shape.iter().product();
+                for e in 0..len {
+                    // One full forward pass per parameter element: propagate
+                    // x normally and the tangent u from layer li onward.
+                    let mut x = x0.clone();
+                    let mut u: Option<Tensor> = None;
+                    for (lj, l) in net.layers.iter().enumerate() {
+                        let u_next = match (&u, lj == li) {
+                            (None, false) => None,
+                            (None, true) => {
+                                // Inject the basis tangent dθ = e_(pi,e).
+                                let dparams: Vec<Tensor> = shapes
+                                    .iter()
+                                    .enumerate()
+                                    .map(|(qi, s)| {
+                                        let mut t = Tensor::zeros(s);
+                                        if qi == pi {
+                                            t.data_mut()[e] = 1.0;
+                                        }
+                                        t
+                                    })
+                                    .collect();
+                                Some(l.jvp_params(&x, &dparams))
+                            }
+                            (Some(uv), false) => Some(l.jvp_input(&x, uv)),
+                            (Some(uv), true) => unreachable!(
+                                "tangent exists before its own layer: {uv:?} at {lj}"
+                            ),
+                        };
+                        x = l.forward(&x);
+                        u = u_next;
+                    }
+                    let tangent = u.expect("tangent must exist after injection layer");
+                    grads[pi].data_mut()[e] = loss.jvp(&x, &tangent);
+                }
+            }
+            sink(li, grads);
+        }
+        Ok(loss_val)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::Backprop;
+    use crate::model::build_mlp;
+    use crate::nn::MeanLoss;
+    use crate::tensor::assert_close;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_backprop_on_micro_mlp() {
+        let mut rng = Rng::new(0);
+        let net = build_mlp(&[5, 4, 3], 0.1, &mut rng);
+        let x = Tensor::randn(&[2, 5], 1.0, &mut rng);
+        let bp = Backprop.compute(&net, &x, &MeanLoss).unwrap();
+        let fw = ForwardMode.compute(&net, &x, &MeanLoss).unwrap();
+        assert!((bp.loss - fw.loss).abs() < 1e-6);
+        for (a, b) in bp.grads.iter().flatten().zip(fw.grads.iter().flatten()) {
+            assert_close(b, a, 1e-3, "forward-mode grads");
+        }
+    }
+
+    #[test]
+    fn matches_backprop_on_micro_cnn() {
+        use crate::model::{build_cnn2d, SubmersiveCnn2dSpec};
+        let mut rng = Rng::new(1);
+        let spec = SubmersiveCnn2dSpec {
+            input_hw: 6,
+            depth: 1,
+            channels: 2,
+            cin: 1,
+            classes: 2,
+            ..Default::default()
+        };
+        let net = build_cnn2d(&spec, &mut rng);
+        let x = Tensor::randn(&[1, 6, 6, 1], 1.0, &mut rng);
+        let bp = Backprop.compute(&net, &x, &MeanLoss).unwrap();
+        let fw = ForwardMode.compute(&net, &x, &MeanLoss).unwrap();
+        for (a, b) in bp.grads.iter().flatten().zip(fw.grads.iter().flatten()) {
+            assert_close(b, a, 1e-3, "forward-mode cnn grads");
+        }
+    }
+}

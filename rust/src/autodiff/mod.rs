@@ -1,0 +1,116 @@
+//! Gradient engines — the paper's contribution and every baseline it
+//! compares against (Table 1):
+//!
+//! | engine            | module           | paper section |
+//! |-------------------|------------------|---------------|
+//! | Backprop          | [`backprop`]     | §3.2          |
+//! | Backprop+ckpt     | [`checkpointed`] | §11           |
+//! | Forward-mode      | [`forward_mode`] | §3.2 / §11    |
+//! | ProjForward       | [`proj_forward`] | §11 (Baydin et al.) |
+//! | RevBackprop       | [`rev_backprop`] | §11 (Gomez et al.)  |
+//! | Moonwalk (mixed)  | [`moonwalk`]     | §4.3, Alg. 1  |
+//! | Pure-forward      | [`pure_moonwalk`]| §4.4          |
+//! | Moonwalk+ckpt     | [`moonwalk`] (segments opt) | §11 |
+//! | Moonwalk+fragmental | [`moonwalk`] (block opt)  | §5.1 |
+//!
+//! All engines produce **exact** gradients (bitwise-comparable to Backprop
+//! up to fp reassociation) except ProjForward, which is an unbiased but
+//! high-variance estimator — exactly the paper's Table-1
+//! "High-variance" column.
+
+pub mod backprop;
+pub mod checkpointed;
+pub mod forward_mode;
+pub mod moonwalk;
+pub mod proj_forward;
+pub mod pure_moonwalk;
+pub mod rev_backprop;
+
+pub use backprop::Backprop;
+pub use checkpointed::CheckpointedBackprop;
+pub use forward_mode::ForwardMode;
+pub use moonwalk::{Moonwalk, MoonwalkOpts};
+pub use proj_forward::ProjForward;
+pub use pure_moonwalk::PureMoonwalk;
+pub use rev_backprop::RevBackprop;
+
+use crate::model::Network;
+use crate::nn::Loss;
+use crate::tensor::Tensor;
+
+/// Full gradient set for one loss evaluation.
+pub struct GradResult {
+    pub loss: f32,
+    /// Per-layer, per-parameter gradients (empty vec for parameter-free
+    /// layers), aligned with `net.layers[i].params()`.
+    pub grads: Vec<Vec<Tensor>>,
+}
+
+/// A gradient computation strategy.
+pub trait GradEngine: Send + Sync {
+    fn name(&self) -> String;
+
+    /// Compute the loss and stream each layer's parameter gradients to
+    /// `sink(layer_index, grads)` as soon as they are available, so they
+    /// can be applied and dropped immediately (the paper's §4.3
+    /// observation that Moonwalk "need not store [gradients]
+    /// simultaneously"). Order of sink calls is engine-specific.
+    fn compute_streaming(
+        &self,
+        net: &Network,
+        x0: &Tensor,
+        loss: &dyn Loss,
+        sink: &mut dyn FnMut(usize, Vec<Tensor>),
+    ) -> anyhow::Result<f32>;
+
+    /// Convenience wrapper collecting all gradients (used by equivalence
+    /// tests and simple training loops).
+    fn compute(&self, net: &Network, x0: &Tensor, loss: &dyn Loss) -> anyhow::Result<GradResult> {
+        let mut grads: Vec<Vec<Tensor>> = (0..net.depth()).map(|_| Vec::new()).collect();
+        let loss_val = self.compute_streaming(net, x0, loss, &mut |i, g| {
+            grads[i] = g;
+        })?;
+        Ok(GradResult {
+            loss: loss_val,
+            grads,
+        })
+    }
+}
+
+/// Instantiate an engine by its config name. Recognized names:
+/// `backprop`, `backprop_ckpt`, `forward`, `projforward`, `revbackprop`,
+/// `moonwalk`, `pure_moonwalk`, `moonwalk_ckpt`, `moonwalk_frag`.
+pub fn engine_by_name(
+    name: &str,
+    block: usize,
+    checkpoint_segments: usize,
+    seed: u64,
+) -> anyhow::Result<Box<dyn GradEngine>> {
+    Ok(match name {
+        "backprop" => Box::new(Backprop),
+        "backprop_ckpt" => Box::new(CheckpointedBackprop::new(checkpoint_segments)),
+        "forward" => Box::new(ForwardMode),
+        "projforward" => Box::new(ProjForward::new(1, seed)),
+        "revbackprop" => Box::new(RevBackprop),
+        "moonwalk" => Box::new(Moonwalk::new(MoonwalkOpts::default())),
+        "pure_moonwalk" => Box::new(PureMoonwalk::default()),
+        "moonwalk_ckpt" => Box::new(Moonwalk::new(MoonwalkOpts {
+            checkpoint_segments: Some(checkpoint_segments),
+            ..Default::default()
+        })),
+        "moonwalk_frag" => Box::new(Moonwalk::new(MoonwalkOpts {
+            fragment_block: Some(block),
+            ..Default::default()
+        })),
+        other => anyhow::bail!("unknown gradient engine `{other}`"),
+    })
+}
+
+/// All exact-engine names (gradient-equivalence test set).
+pub const EXACT_ENGINES: &[&str] = &[
+    "backprop",
+    "backprop_ckpt",
+    "moonwalk",
+    "moonwalk_ckpt",
+    "moonwalk_frag",
+];

@@ -1,0 +1,396 @@
+//! **Moonwalk** — mixed-mode inverse-forward differentiation
+//! (paper §4, Algorithm 1, Fig. 1 left column), with the two optional
+//! refinements of §5.1 / §11:
+//!
+//! * **Phase I** — forward pass storing only *Minimal* residuals (sign
+//!   bits, argmax indices; nothing for convolutions/dense).
+//! * **Phase II** — reverse sweep computing only the input cotangent
+//!   `h0 = ∂J/∂x0` via `vjp_input` (no parameter grads). Non-submersive
+//!   layers get their *output* cotangent preserved here: fragmentally
+//!   (first `k−1` slices per block, Alg. 3) when the layer supports it
+//!   and `fragment_block` is set, otherwise as a full cotangent
+//!   checkpoint (§4.1's fallback). With `checkpoint_segments`, Phase
+//!   I+II instead run segment-wise (activation checkpointing), storing
+//!   only segment-boundary activations and rematerializing minimal
+//!   residuals per segment — memory `O(√(n·Mx·L) + Mθ)` (Table 1).
+//! * **Phase III** — forward sweep: recompute activations, push the
+//!   cotangent *forward* with **vijp** (Eq. 9), emit each layer's
+//!   parameter gradient with `vjp_params` (Eq. 10), and drop everything
+//!   before moving on — memory constant in depth.
+
+use crate::autodiff::GradEngine;
+use crate::model::Network;
+use crate::nn::{Fragment, Loss, Residual, ResidualKind, Submersivity};
+use crate::tensor::Tensor;
+
+/// Options selecting the Moonwalk variant.
+#[derive(Clone, Debug, Default)]
+pub struct MoonwalkOpts {
+    /// Fragmental-checkpointing block size `B` for non-submersive layers
+    /// that support it (§5.1). `None` ⇒ full cotangent checkpoints.
+    pub fragment_block: Option<usize>,
+    /// Activation-checkpointing segment count for Phase I+II (§11,
+    /// "Moonwalk + checkpoint"). `Some(0)` ⇒ auto `√L`.
+    pub checkpoint_segments: Option<usize>,
+    /// Ablation switch: checkpoint the cotangent at the *breaking*
+    /// layer's output instead of the paper's h₁-seed placement at the
+    /// next parameterized layer (§4.3). Costs s² more checkpoint bytes
+    /// after a strided entry conv; kept for the ablation bench.
+    pub naive_anchor: bool,
+}
+
+/// What Phase II preserved for a layer whose output cotangent cannot be
+/// recovered by vijp alone.
+enum CotangentAid {
+    /// Submersive layer — Phase III uses vijp, nothing stored.
+    None,
+    /// Fragmental slices (Alg. 3).
+    Fragment(Fragment),
+    /// Full output-cotangent checkpoint (§4.1 fallback; also how the
+    /// leading channel-expanding Upsample is handled).
+    Checkpoint(Tensor),
+}
+
+/// The mixed-mode Moonwalk engine.
+pub struct Moonwalk {
+    pub opts: MoonwalkOpts,
+}
+
+impl Moonwalk {
+    pub fn new(opts: MoonwalkOpts) -> Moonwalk {
+        Moonwalk { opts }
+    }
+
+    /// Decide how Phase II/III must treat each layer.
+    ///
+    /// The cotangent chain runs forward through vijp. A non-submersive
+    /// layer *breaks* the chain; it is re-anchored at the first
+    /// subsequent layer that needs a cotangent (one with parameters) by
+    /// checkpointing that layer's **output** cotangent during Phase II —
+    /// the paper's "alternative reconstruction seed (h₁)" trick (§4.3),
+    /// which places the checkpoint *after* the anchor layer where the
+    /// activation is smallest (e.g. past a stride-2 convolution).
+    /// Parameter-free layers inside a broken stretch need nothing.
+    /// Fragmental capture (Alg. 3) substitutes for a full checkpoint when
+    /// the breaking layer supports it AND the chain is intact at its
+    /// input (reconstruction consumes the input cotangent).
+    fn plan(&self, net: &Network) -> Vec<LayerPlan> {
+        let mut plans = Vec::with_capacity(net.depth());
+        let mut chain_ok = true; // do we know the cotangent entering layer i?
+        for layer in &net.layers {
+            let sub = layer.submersivity();
+            let plan = match sub {
+                Submersivity::Submersive { .. } if chain_ok => {
+                    if layer.n_params() > 0 {
+                        LayerPlan::Vijp
+                    } else {
+                        // vijp is still the cheapest way to continue the
+                        // chain (sign/argmax gathers).
+                        LayerPlan::Vijp
+                    }
+                }
+                Submersivity::NonSubmersive { fragmental_ok, .. }
+                    if chain_ok && fragmental_ok && self.opts.fragment_block.is_some() =>
+                {
+                    LayerPlan::Fragment(self.opts.fragment_block.unwrap())
+                }
+                // Chain broken here (or already broken): anchor at the
+                // first layer that has parameters (h₁ seed) — or, under
+                // the naive-anchor ablation, immediately.
+                _ => {
+                    if layer.n_params() > 0 || self.opts.naive_anchor {
+                        LayerPlan::Checkpoint
+                    } else {
+                        LayerPlan::SkipBroken
+                    }
+                }
+            };
+            chain_ok = !matches!(plan, LayerPlan::SkipBroken);
+            plans.push(plan);
+        }
+        plans
+    }
+
+    /// Phases I+II without activation checkpointing: returns
+    /// `(loss, h0, aids)`.
+    fn input_cotangent_plain(
+        &self,
+        net: &Network,
+        x0: &Tensor,
+        loss: &dyn Loss,
+        plan: &[LayerPlan],
+    ) -> anyhow::Result<(f32, Tensor, Vec<CotangentAid>)> {
+        // Phase I: minimal residuals only.
+        let mut residuals: Vec<Option<Residual>> = Vec::with_capacity(net.depth());
+        let mut x = x0.clone();
+        for layer in &net.layers {
+            let (y, res) = layer.forward_res(&x, ResidualKind::Minimal);
+            residuals.push(Some(res));
+            x = y;
+        }
+        let loss_val = loss.value(&x);
+
+        // Phase II: input cotangent only; capture aids on the way.
+        let mut aids: Vec<CotangentAid> = (0..net.depth()).map(|_| CotangentAid::None).collect();
+        let mut h = loss.grad(&x);
+        drop(x);
+        for (i, layer) in net.layers.iter().enumerate().rev() {
+            let res = residuals[i].take().expect("consumed once");
+            aids[i] = capture_aid(layer.as_ref(), &plan[i], &h)?;
+            h = layer.vjp_input(&res, &h);
+        }
+        Ok((loss_val, h, aids))
+    }
+
+    /// Phases I+II with activation checkpointing (§11): store only
+    /// segment-boundary activations forward, then per segment (reverse)
+    /// rematerialize minimal residuals and sweep the cotangent back.
+    fn input_cotangent_checkpointed(
+        &self,
+        net: &Network,
+        x0: &Tensor,
+        loss: &dyn Loss,
+        plan: &[LayerPlan],
+        segments: usize,
+    ) -> anyhow::Result<(f32, Tensor, Vec<CotangentAid>)> {
+        let depth = net.depth();
+        let segments = if segments == 0 {
+            (depth as f64).sqrt().round().max(1.0) as usize
+        } else {
+            segments.clamp(1, depth)
+        };
+        let seg_len = (depth + segments - 1) / segments;
+        // Segment boundaries: 0, seg_len, 2*seg_len, ...
+        let starts: Vec<usize> = (0..segments).map(|s| s * seg_len).collect();
+
+        // Phase I: forward storing only boundary activations.
+        let mut boundary: Vec<Option<Tensor>> = vec![None; segments];
+        let mut x = x0.clone();
+        for (i, layer) in net.layers.iter().enumerate() {
+            if let Some(seg) = starts.iter().position(|&s| s == i) {
+                boundary[seg] = Some(x.clone());
+            }
+            x = layer.forward(&x);
+        }
+        let loss_val = loss.value(&x);
+        let mut h = loss.grad(&x);
+        drop(x);
+
+        // Phase II: reverse, one segment at a time.
+        let mut aids: Vec<CotangentAid> = (0..depth).map(|_| CotangentAid::None).collect();
+        for seg in (0..segments).rev() {
+            let lo = starts[seg];
+            let hi = ((seg + 1) * seg_len).min(depth);
+            let x_seg = boundary[seg].take().expect("boundary stored");
+            // Rematerialize minimal residuals inside the segment.
+            let mut residuals: Vec<Option<Residual>> = Vec::with_capacity(hi - lo);
+            let mut xs = x_seg;
+            for layer in &net.layers[lo..hi] {
+                let (y, res) = layer.forward_res(&xs, ResidualKind::Minimal);
+                residuals.push(Some(res));
+                xs = y;
+            }
+            drop(xs);
+            for i in (lo..hi).rev() {
+                let res = residuals[i - lo].take().expect("consumed once");
+                aids[i] = capture_aid(net.layers[i].as_ref(), &plan[i], &h)?;
+                h = net.layers[i].vjp_input(&res, &h);
+            }
+        }
+        Ok((loss_val, h, aids))
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum LayerPlan {
+    /// Chain intact: recover the output cotangent with vijp.
+    Vijp,
+    /// Chain intact but layer non-submersive: fragmental capture (Alg. 3).
+    Fragment(usize),
+    /// Chain broken upstream (or broken here): anchor by checkpointing
+    /// this layer's output cotangent in Phase II.
+    Checkpoint,
+    /// Chain broken and the layer has no parameters: nothing needed.
+    SkipBroken,
+}
+
+fn capture_aid(
+    layer: &dyn crate::nn::Layer,
+    plan: &LayerPlan,
+    h_out: &Tensor,
+) -> anyhow::Result<CotangentAid> {
+    Ok(match plan {
+        LayerPlan::Vijp | LayerPlan::SkipBroken => CotangentAid::None,
+        LayerPlan::Fragment(block) => {
+            CotangentAid::Fragment(layer.fragment_capture(h_out, *block)?)
+        }
+        LayerPlan::Checkpoint => CotangentAid::Checkpoint(h_out.clone()),
+    })
+}
+
+impl GradEngine for Moonwalk {
+    fn name(&self) -> String {
+        match (&self.opts.fragment_block, &self.opts.checkpoint_segments) {
+            (Some(b), _) => format!("moonwalk_frag(B={b})"),
+            (_, Some(c)) => format!("moonwalk_ckpt(c={c})"),
+            _ => "moonwalk".into(),
+        }
+    }
+
+    fn compute_streaming(
+        &self,
+        net: &Network,
+        x0: &Tensor,
+        loss: &dyn Loss,
+        sink: &mut dyn FnMut(usize, Vec<Tensor>),
+    ) -> anyhow::Result<f32> {
+        let plan = self.plan(net);
+
+        // Phases I+II: the input cotangent h0 (Alg. 1 line 2).
+        let (loss_val, h0, mut aids) = match self.opts.checkpoint_segments {
+            Some(segs) => {
+                self.input_cotangent_checkpointed(net, x0, loss, &plan, segs)?
+            }
+            None => self.input_cotangent_plain(net, x0, loss, &plan)?,
+        };
+
+        // Phase III (Alg. 1 loop): forward sweep with vijp + vjp_params.
+        // Nothing outlives one iteration except (x, h).
+        let mut x = x0.clone();
+        let mut h = Some(h0);
+        for (i, layer) in net.layers.iter().enumerate() {
+            let (y, res) = layer.forward_res(&x, ResidualKind::Minimal);
+            let h_out = match (std::mem::replace(&mut aids[i], CotangentAid::None), &plan[i]) {
+                (CotangentAid::Checkpoint(ck), _) => Some(ck),
+                (CotangentAid::Fragment(frag), _) => {
+                    let h_in = h.as_ref().ok_or_else(|| {
+                        anyhow::anyhow!("fragment at layer {i} needs an intact chain")
+                    })?;
+                    Some(layer.fragment_reconstruct(&frag, h_in)?)
+                }
+                (CotangentAid::None, LayerPlan::SkipBroken) => None,
+                (CotangentAid::None, _) => {
+                    let h_in = h.as_ref().ok_or_else(|| {
+                        anyhow::anyhow!("vijp at layer {i} needs an intact chain")
+                    })?;
+                    Some(layer.vijp(&res, h_in).map_err(|e| {
+                        anyhow::anyhow!("Phase III vijp failed at layer {i}: {e}")
+                    })?)
+                }
+            };
+            if layer.n_params() > 0 {
+                let h_out = h_out.as_ref().expect("plan anchors parameterized layers");
+                sink(i, layer.vjp_params(&x, h_out)); // Eq. 10
+            }
+            x = y;
+            h = h_out;
+        }
+        Ok(loss_val)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::Backprop;
+    use crate::model::{build_cnn2d, SubmersiveCnn2dSpec};
+    use crate::nn::{MeanLoss, SoftmaxCrossEntropy};
+    use crate::tensor::assert_close;
+    use crate::util::Rng;
+
+    fn small_net(seed: u64, depth: usize) -> (crate::model::Network, Tensor) {
+        let mut rng = Rng::new(seed);
+        let spec = SubmersiveCnn2dSpec {
+            input_hw: 16,
+            depth,
+            channels: 4,
+            cin: 2,
+            classes: 3,
+            ..Default::default()
+        };
+        let net = build_cnn2d(&spec, &mut rng);
+        let x = Tensor::randn(&[2, 16, 16, 2], 1.0, &mut rng);
+        (net, x)
+    }
+
+    #[test]
+    fn matches_backprop_mean_loss() {
+        let (net, x) = small_net(0, 2);
+        let bp = Backprop.compute(&net, &x, &MeanLoss).unwrap();
+        let mw = Moonwalk::new(MoonwalkOpts::default())
+            .compute(&net, &x, &MeanLoss)
+            .unwrap();
+        assert!((bp.loss - mw.loss).abs() < 1e-6);
+        for (li, (a, b)) in bp.grads.iter().zip(&mw.grads).enumerate() {
+            for (pi, (ga, gb)) in a.iter().zip(b).enumerate() {
+                assert_close(gb, ga, 5e-3, &format!("layer {li} param {pi}"));
+            }
+        }
+    }
+
+    #[test]
+    fn matches_backprop_xent_loss() {
+        let (net, x) = small_net(1, 3);
+        let loss = SoftmaxCrossEntropy::new(vec![0, 2]);
+        let bp = Backprop.compute(&net, &x, &loss).unwrap();
+        let mw = Moonwalk::new(MoonwalkOpts::default())
+            .compute(&net, &x, &loss)
+            .unwrap();
+        for (a, b) in bp.grads.iter().flatten().zip(mw.grads.iter().flatten()) {
+            assert_close(b, a, 5e-3, "xent grads");
+        }
+    }
+
+    #[test]
+    fn checkpointed_variant_matches() {
+        let (net, x) = small_net(2, 4);
+        let bp = Backprop.compute(&net, &x, &MeanLoss).unwrap();
+        for segs in [0usize, 2, 3] {
+            let mw = Moonwalk::new(MoonwalkOpts {
+                checkpoint_segments: Some(segs),
+                ..Default::default()
+            })
+            .compute(&net, &x, &MeanLoss)
+            .unwrap();
+            for (a, b) in bp.grads.iter().flatten().zip(mw.grads.iter().flatten()) {
+                assert_close(b, a, 5e-3, &format!("ckpt segs={segs}"));
+            }
+        }
+    }
+
+    #[test]
+    fn unconstrained_conv_falls_back_to_checkpoint() {
+        // Unconstrained convs are non-submersive ⇒ Moonwalk must still be
+        // exact via full cotangent checkpoints (§4.1 fallback).
+        let mut rng = Rng::new(3);
+        let spec = SubmersiveCnn2dSpec {
+            input_hw: 16,
+            depth: 2,
+            channels: 4,
+            cin: 2,
+            constrained: false,
+            ..Default::default()
+        };
+        let net = build_cnn2d(&spec, &mut rng);
+        let x = Tensor::randn(&[1, 16, 16, 2], 1.0, &mut rng);
+        let bp = Backprop.compute(&net, &x, &MeanLoss).unwrap();
+        let mw = Moonwalk::new(MoonwalkOpts::default())
+            .compute(&net, &x, &MeanLoss)
+            .unwrap();
+        for (a, b) in bp.grads.iter().flatten().zip(mw.grads.iter().flatten()) {
+            assert_close(b, a, 5e-3, "fallback grads");
+        }
+    }
+
+    #[test]
+    fn phase3_streams_in_forward_order() {
+        let (net, x) = small_net(4, 3);
+        let mut order = Vec::new();
+        Moonwalk::new(MoonwalkOpts::default())
+            .compute_streaming(&net, &x, &MeanLoss, &mut |i, _| order.push(i))
+            .unwrap();
+        let mut sorted = order.clone();
+        sorted.sort();
+        assert_eq!(order, sorted, "moonwalk delivers grads forward");
+    }
+}

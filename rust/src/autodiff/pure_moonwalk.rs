@@ -1,0 +1,174 @@
+//! **Pure-forward Moonwalk** (paper §4.4): obtain the seed cotangent
+//! entirely in forward mode — one jvp pass per input dimension, each
+//! propagating a basis tangent `e_j` to the loss — then run the same
+//! Phase III as mixed-mode Moonwalk (vijp + vjp_params). No reverse
+//! sweep anywhere; memory `O(Mx + Mθ)`, time `O(n³L + ndL)` (Table 1):
+//! "most suitable when the input dimension is small or when memory
+//! constraints dominate compute considerations".
+//!
+//! Networks may start with a parameter-free non-submersive prefix (the
+//! channel-expanding Upsample); the seed cotangent is then computed at
+//! the prefix boundary instead of the raw input, so Phase III can cross
+//! every parameterized layer with vijp alone.
+
+use crate::autodiff::GradEngine;
+use crate::model::Network;
+use crate::nn::{Loss, ResidualKind, Submersivity};
+use crate::tensor::Tensor;
+
+/// Pure-forward Moonwalk.
+#[derive(Default)]
+pub struct PureMoonwalk;
+
+impl PureMoonwalk {
+    /// First layer index from which the rest of the network is
+    /// submersive; layers before it must be parameter-free (they are
+    /// skipped by seeding past them).
+    fn seed_index(&self, net: &Network) -> anyhow::Result<usize> {
+        let audit = net.audit();
+        let seed = audit
+            .iter()
+            .rposition(|s| !s.is_submersive())
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        for (i, sub) in audit.iter().enumerate().take(seed) {
+            if net.layers[i].n_params() > 0 {
+                let reason = match sub {
+                    Submersivity::NonSubmersive { reason, .. } => reason.clone(),
+                    _ => "earlier non-submersive layer blocks Phase III".into(),
+                };
+                anyhow::bail!(
+                    "pure-forward Moonwalk requires a submersive suffix covering all \
+                     parameterized layers; layer {i} (`{}`) violates it: {reason}",
+                    net.layers[i].name()
+                );
+            }
+        }
+        Ok(seed)
+    }
+}
+
+impl GradEngine for PureMoonwalk {
+    fn name(&self) -> String {
+        "pure_moonwalk".into()
+    }
+
+    fn compute_streaming(
+        &self,
+        net: &Network,
+        x0: &Tensor,
+        loss: &dyn Loss,
+        sink: &mut dyn FnMut(usize, Vec<Tensor>),
+    ) -> anyhow::Result<f32> {
+        let seed = self.seed_index(net)?;
+
+        // Forward to the seed boundary (kept: one activation).
+        let mut x_seed = x0.clone();
+        for layer in &net.layers[..seed] {
+            x_seed = layer.forward(&x_seed);
+        }
+
+        // Loss value via a plain forward continuation.
+        let mut y = x_seed.clone();
+        for layer in &net.layers[seed..] {
+            y = layer.forward(&y);
+        }
+        let loss_val = loss.value(&y);
+        drop(y);
+
+        // Phase I/II (forward-mode): h_seed[j] = ∂J/∂x_seed[j], one jvp
+        // pass per element of the seed activation.
+        let n = x_seed.len();
+        let mut h_seed = Tensor::zeros(x_seed.shape());
+        for j in 0..n {
+            let mut u = Tensor::zeros(x_seed.shape());
+            u.data_mut()[j] = 1.0;
+            let mut x = x_seed.clone();
+            for layer in &net.layers[seed..] {
+                let u_next = layer.jvp_input(&x, &u);
+                x = layer.forward(&x);
+                u = u_next;
+            }
+            h_seed.data_mut()[j] = loss.jvp(&x, &u);
+        }
+
+        // Phase III: identical to mixed-mode Moonwalk from the seed.
+        let mut x = x_seed;
+        let mut h = h_seed;
+        for (off, layer) in net.layers[seed..].iter().enumerate() {
+            let i = seed + off;
+            let (y, res) = layer.forward_res(&x, ResidualKind::Minimal);
+            let h_out = layer
+                .vijp(&res, &h)
+                .map_err(|e| anyhow::anyhow!("Phase III vijp failed at layer {i}: {e}"))?;
+            if layer.n_params() > 0 {
+                sink(i, layer.vjp_params(&x, &h_out));
+            }
+            x = y;
+            h = h_out;
+        }
+        Ok(loss_val)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::Backprop;
+    use crate::model::{build_cnn2d, build_mlp, SubmersiveCnn2dSpec};
+    use crate::nn::MeanLoss;
+    use crate::tensor::assert_close;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_backprop_on_micro_mlp() {
+        let mut rng = Rng::new(0);
+        let net = build_mlp(&[6, 4, 3], 0.1, &mut rng);
+        let x = Tensor::randn(&[2, 6], 1.0, &mut rng);
+        let bp = Backprop.compute(&net, &x, &MeanLoss).unwrap();
+        let pm = PureMoonwalk.compute(&net, &x, &MeanLoss).unwrap();
+        assert!((bp.loss - pm.loss).abs() < 1e-6);
+        for (a, b) in bp.grads.iter().flatten().zip(pm.grads.iter().flatten()) {
+            assert_close(b, a, 1e-2, "pure moonwalk grads");
+        }
+    }
+
+    #[test]
+    fn seeds_past_upsample_prefix() {
+        let mut rng = Rng::new(1);
+        let spec = SubmersiveCnn2dSpec {
+            input_hw: 8,
+            depth: 1,
+            channels: 3,
+            cin: 2,
+            classes: 2,
+            ..Default::default()
+        };
+        let net = build_cnn2d(&spec, &mut rng);
+        let x = Tensor::randn(&[1, 8, 8, 2], 1.0, &mut rng);
+        let bp = Backprop.compute(&net, &x, &MeanLoss).unwrap();
+        let pm = PureMoonwalk.compute(&net, &x, &MeanLoss).unwrap();
+        for (a, b) in bp.grads.iter().flatten().zip(pm.grads.iter().flatten()) {
+            assert_close(b, a, 1e-2, "seeded pure moonwalk");
+        }
+    }
+
+    #[test]
+    fn rejects_parameterized_non_submersive_prefix() {
+        // Unconstrained convolutions are non-submersive AND parameterized:
+        // the pure-forward variant has no backward pass to checkpoint
+        // cotangents, so it must refuse.
+        let mut rng = Rng::new(2);
+        let spec = SubmersiveCnn2dSpec {
+            input_hw: 8,
+            depth: 1,
+            channels: 3,
+            cin: 2,
+            constrained: false,
+            ..Default::default()
+        };
+        let net = build_cnn2d(&spec, &mut rng);
+        let x = Tensor::randn(&[1, 8, 8, 2], 1.0, &mut rng);
+        assert!(PureMoonwalk.compute(&net, &x, &MeanLoss).is_err());
+    }
+}

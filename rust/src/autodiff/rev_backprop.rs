@@ -1,0 +1,114 @@
+//! Reversible backpropagation (Gomez et al. 2017; paper §11
+//! "RevBackprop"): no residuals are stored during the forward pass; in
+//! the reverse sweep each layer's *input* is reconstructed from its
+//! output via the exact inverse `f⁻¹`, after which vjp proceeds as usual.
+//! Memory `O(Mx + Mθ)`, but applicable **only to invertible networks** —
+//! the ✗ in Table 1's Submersive column, and the restriction Moonwalk
+//! lifts (invertible ⊊ submersive, §1).
+
+use crate::autodiff::GradEngine;
+use crate::model::Network;
+use crate::nn::{Loss, ResidualKind};
+use crate::tensor::Tensor;
+
+/// Reversible backprop (invertible architectures only).
+pub struct RevBackprop;
+
+impl GradEngine for RevBackprop {
+    fn name(&self) -> String {
+        "revbackprop".into()
+    }
+
+    fn compute_streaming(
+        &self,
+        net: &Network,
+        x0: &Tensor,
+        loss: &dyn Loss,
+        sink: &mut dyn FnMut(usize, Vec<Tensor>),
+    ) -> anyhow::Result<f32> {
+        // Forward with no storage at all.
+        let mut x = x0.clone();
+        for layer in &net.layers {
+            x = layer.forward(&x);
+        }
+        let loss_val = loss.value(&x);
+        let mut g = loss.grad(&x);
+
+        // Reverse: invert activations layer by layer.
+        let mut x_out = x;
+        for (i, layer) in net.layers.iter().enumerate().rev() {
+            let x_in = layer.inverse(&x_out).map_err(|e| {
+                anyhow::anyhow!("RevBackprop requires invertible layers: {e}")
+            })?;
+            if layer.n_params() > 0 {
+                sink(i, layer.vjp_params(&x_in, &g));
+            }
+            // Rebuild the (cheap) residual from the reconstructed input.
+            let (_, res) = layer.forward_res(&x_in, ResidualKind::Minimal);
+            g = layer.vjp_input(&res, &g);
+            x_out = x_in;
+        }
+        Ok(loss_val)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::Backprop;
+    use crate::model::{build_cnn2d, build_invertible_cnn2d, SubmersiveCnn2dSpec};
+    use crate::nn::MeanLoss;
+    use crate::tensor::assert_close;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_backprop_on_invertible_net() {
+        let mut rng = Rng::new(0);
+        let net = build_invertible_cnn2d(4, 3, 0.2, &mut rng);
+        let x = Tensor::randn(&[2, 6, 6, 4], 1.0, &mut rng);
+        let bp = Backprop.compute(&net, &x, &MeanLoss).unwrap();
+        let rb = RevBackprop.compute(&net, &x, &MeanLoss).unwrap();
+        assert!((bp.loss - rb.loss).abs() < 1e-6);
+        for (a, b) in bp.grads.iter().flatten().zip(rb.grads.iter().flatten()) {
+            assert_close(b, a, 1e-3, "revbackprop grads");
+        }
+    }
+
+    #[test]
+    fn rejects_non_invertible_net() {
+        // The paper's point: strided CNNs are submersive but NOT
+        // invertible — RevBackprop cannot handle them, Moonwalk can.
+        let mut rng = Rng::new(1);
+        let spec = SubmersiveCnn2dSpec {
+            input_hw: 16,
+            depth: 2,
+            channels: 4,
+            cin: 2,
+            ..Default::default()
+        };
+        let net = build_cnn2d(&spec, &mut rng);
+        let x = Tensor::randn(&[1, 16, 16, 2], 1.0, &mut rng);
+        assert!(RevBackprop.compute(&net, &x, &MeanLoss).is_err());
+    }
+
+    #[test]
+    fn constant_memory_in_depth() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&[2, 8, 8, 4], 1.0, &mut rng);
+        let mut peaks = Vec::new();
+        for depth in [2usize, 6] {
+            let net = build_invertible_cnn2d(4, depth, 0.2, &mut rng);
+            let (_, mem) = crate::tensor::tracker::measure(|| {
+                RevBackprop
+                    .compute_streaming(&net, &x, &MeanLoss, &mut |_, _| {})
+                    .unwrap()
+            });
+            peaks.push(mem.peak_extra_bytes as f64);
+        }
+        // Depth tripled; peak should grow far less than linearly.
+        assert!(
+            peaks[1] < peaks[0] * 1.5,
+            "revbackprop peak should be ~constant in depth: {peaks:?}"
+        );
+    }
+}

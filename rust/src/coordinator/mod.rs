@@ -1,0 +1,12 @@
+//! The training coordinator (L3): optimizers, synthetic data pipelines,
+//! the config-driven trainer with JSONL metrics, and the sweep driver the
+//! benches and examples share. Python never runs on any of these paths.
+
+pub mod data;
+pub mod optimizer;
+pub mod sweep;
+pub mod trainer;
+
+pub use data::{SyntheticSpec, TextureDataset};
+pub use optimizer::{Optimizer, OptimizerKind};
+pub use trainer::{TrainReport, Trainer};

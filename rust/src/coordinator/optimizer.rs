@@ -1,0 +1,213 @@
+//! First-order optimizers operating on a [`Network`]'s parameters.
+//!
+//! Gradients arrive *streamed* per layer (the `GradEngine` sink), so the
+//! optimizer keeps per-layer state and can apply updates the moment a
+//! layer's gradient is ready — the §4.3 "gradients … need not be stored
+//! simultaneously" property. Constrained training re-projects each layer
+//! onto the submersive set right after its update (§6.4).
+
+use crate::model::Network;
+use crate::tensor::Tensor;
+
+/// Supported update rules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    Momentum,
+    Adam,
+}
+
+impl OptimizerKind {
+    pub fn parse(name: &str) -> anyhow::Result<OptimizerKind> {
+        Ok(match name {
+            "sgd" => OptimizerKind::Sgd,
+            "momentum" => OptimizerKind::Momentum,
+            "adam" => OptimizerKind::Adam,
+            other => anyhow::bail!("unknown optimizer `{other}`"),
+        })
+    }
+}
+
+/// Per-parameter optimizer state.
+#[derive(Default)]
+struct Slot {
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// A streaming optimizer bound to a network's layer/param structure.
+pub struct Optimizer {
+    pub kind: OptimizerKind,
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub momentum: f32,
+    /// Adam step counter (per whole-network step).
+    step: usize,
+    state: Vec<Vec<Slot>>,
+    /// Re-project layers onto the submersive constraint set after update.
+    pub project: bool,
+}
+
+impl Optimizer {
+    pub fn new(kind: OptimizerKind, lr: f32, net: &Network, project: bool) -> Optimizer {
+        let state = net
+            .layers
+            .iter()
+            .map(|l| l.params().iter().map(|_| Slot::default()).collect())
+            .collect();
+        Optimizer {
+            kind,
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            momentum: 0.9,
+            step: 0,
+            state,
+            project,
+        }
+    }
+
+    /// Mark the beginning of a new optimization step (Adam bias
+    /// correction counts whole steps, not per-layer applications).
+    pub fn begin_step(&mut self) {
+        self.step += 1;
+    }
+
+    /// Apply one layer's gradients to the network; called from the
+    /// engine's streaming sink.
+    pub fn apply_layer(&mut self, net: &mut Network, layer: usize, grads: &[Tensor]) {
+        debug_assert!(self.step > 0, "begin_step() before apply_layer()");
+        let kind = self.kind;
+        let (lr, b1, b2, eps, mu) = (self.lr, self.beta1, self.beta2, self.eps, self.momentum);
+        let t = self.step as f32;
+        let slots = &mut self.state[layer];
+        let mut params = net.layers[layer].params_mut();
+        assert_eq!(params.len(), grads.len(), "grad/param arity mismatch");
+        for (pi, grad) in grads.iter().enumerate() {
+            let p = params[pi].data_mut();
+            let g = grad.data();
+            assert_eq!(p.len(), g.len());
+            match kind {
+                OptimizerKind::Sgd => {
+                    for (pv, gv) in p.iter_mut().zip(g) {
+                        *pv -= lr * gv;
+                    }
+                }
+                OptimizerKind::Momentum => {
+                    let slot = &mut slots[pi];
+                    if slot.m.is_empty() {
+                        slot.m = vec![0.0; p.len()];
+                    }
+                    for ((pv, gv), mv) in p.iter_mut().zip(g).zip(slot.m.iter_mut()) {
+                        *mv = mu * *mv + gv;
+                        *pv -= lr * *mv;
+                    }
+                }
+                OptimizerKind::Adam => {
+                    let slot = &mut slots[pi];
+                    if slot.m.is_empty() {
+                        slot.m = vec![0.0; p.len()];
+                        slot.v = vec![0.0; p.len()];
+                    }
+                    let bc1 = 1.0 - b1.powf(t);
+                    let bc2 = 1.0 - b2.powf(t);
+                    for (i, (pv, gv)) in p.iter_mut().zip(g).enumerate() {
+                        slot.m[i] = b1 * slot.m[i] + (1.0 - b1) * gv;
+                        slot.v[i] = b2 * slot.v[i] + (1.0 - b2) * gv * gv;
+                        let mhat = slot.m[i] / bc1;
+                        let vhat = slot.v[i] / bc2;
+                        *pv -= lr * mhat / (vhat.sqrt() + eps);
+                    }
+                }
+            }
+        }
+        drop(params);
+        if self.project {
+            net.layers[layer].project_submersive();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::{Backprop, GradEngine};
+    use crate::model::build_mlp;
+    use crate::nn::{Loss, MeanLoss};
+    use crate::util::Rng;
+
+    fn quadratic_progress(kind: OptimizerKind) -> (f32, f32) {
+        // Minimize mean of outputs of a tiny MLP — loss should decrease.
+        let mut rng = Rng::new(0);
+        let mut net = build_mlp(&[4, 4, 2], 0.1, &mut rng);
+        let x = Tensor::randn(&[4, 4], 1.0, &mut rng);
+        let mut opt = Optimizer::new(kind, 0.05, &net, false);
+        let loss0 = MeanLoss.value(&net.forward(&x));
+        for _ in 0..30 {
+            opt.begin_step();
+            let r = Backprop.compute(&net, &x, &MeanLoss).unwrap();
+            for (li, g) in r.grads.iter().enumerate() {
+                if !g.is_empty() {
+                    opt.apply_layer(&mut net, li, g);
+                }
+            }
+        }
+        (loss0, MeanLoss.value(&net.forward(&x)))
+    }
+
+    #[test]
+    fn sgd_decreases_loss() {
+        let (a, b) = quadratic_progress(OptimizerKind::Sgd);
+        assert!(b < a, "sgd: {b} !< {a}");
+    }
+
+    #[test]
+    fn momentum_decreases_loss() {
+        let (a, b) = quadratic_progress(OptimizerKind::Momentum);
+        assert!(b < a, "momentum: {b} !< {a}");
+    }
+
+    #[test]
+    fn adam_decreases_loss() {
+        let (a, b) = quadratic_progress(OptimizerKind::Adam);
+        assert!(b < a, "adam: {b} !< {a}");
+    }
+
+    #[test]
+    fn projection_keeps_submersive() {
+        use crate::model::{build_cnn2d, SubmersiveCnn2dSpec};
+        let mut rng = Rng::new(1);
+        let spec = SubmersiveCnn2dSpec {
+            input_hw: 8,
+            depth: 1,
+            channels: 3,
+            cin: 2,
+            ..Default::default()
+        };
+        let mut net = build_cnn2d(&spec, &mut rng);
+        let x = Tensor::randn(&[1, 8, 8, 2], 1.0, &mut rng);
+        let mut opt = Optimizer::new(OptimizerKind::Sgd, 0.5, &net, true);
+        for _ in 0..5 {
+            opt.begin_step();
+            let r = Backprop.compute(&net, &x, &MeanLoss).unwrap();
+            for (li, g) in r.grads.iter().enumerate() {
+                if !g.is_empty() {
+                    opt.apply_layer(&mut net, li, g);
+                }
+            }
+            assert!(
+                net.audit()[1..].iter().all(|s| s.is_submersive()),
+                "projection must hold after every step"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(OptimizerKind::parse("adam").unwrap(), OptimizerKind::Adam);
+        assert!(OptimizerKind::parse("lion").is_err());
+    }
+}

@@ -1,0 +1,128 @@
+//! Sweep driver shared by the figure benches and example binaries: run a
+//! set of gradient engines across a depth (or block-size) grid, measuring
+//! wall-clock and peak extra memory under the paper's grad-free
+//! accounting (sink drops gradients immediately; Table 1 §11).
+
+use crate::autodiff::GradEngine;
+use crate::model::Network;
+use crate::nn::Loss;
+use crate::tensor::{tracker, Tensor};
+use crate::util::timer;
+
+/// One measured cell of a sweep.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub engine: String,
+    pub depth: usize,
+    pub param: usize,
+    pub peak_mem_bytes: usize,
+    pub median_time_s: f64,
+    pub loss: f32,
+}
+
+/// Measure one engine on one network: peak extra bytes (grad-free
+/// accounting) and median wall-clock over `iters` runs.
+pub fn measure_engine(
+    engine: &dyn GradEngine,
+    net: &Network,
+    x0: &Tensor,
+    loss: &dyn Loss,
+    warmup: usize,
+    iters: usize,
+) -> anyhow::Result<(usize, f64, f32)> {
+    // Memory profile: one run under the measurement lock.
+    let (res, prof) = tracker::measure(|| {
+        engine.compute_streaming(net, x0, loss, &mut |_, grads| drop(grads))
+    });
+    let loss_val = res?;
+
+    // Timing: median over iters.
+    let stats = timer::bench(warmup, iters, || {
+        engine
+            .compute_streaming(net, x0, loss, &mut |_, grads| drop(grads))
+            .expect("engine already validated");
+    });
+    Ok((prof.peak_extra_bytes, stats.median, loss_val))
+}
+
+/// Format a sweep as an aligned text table (what the benches print).
+pub fn format_table(title: &str, rows: &[SweepRow]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(out, "== {title} ==");
+    let _ = writeln!(
+        out,
+        "{:<24} {:>6} {:>7} {:>14} {:>12} {:>12}",
+        "engine", "depth", "param", "peak_mem", "median_ms", "loss"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<24} {:>6} {:>7} {:>14} {:>12.2} {:>12.4}",
+            r.engine,
+            r.depth,
+            r.param,
+            tracker::fmt_bytes(r.peak_mem_bytes),
+            r.median_time_s * 1e3,
+            r.loss
+        );
+    }
+    out
+}
+
+/// Serialize rows as CSV (benches drop these next to the printed table).
+pub fn to_csv(rows: &[SweepRow]) -> String {
+    let mut out = String::from("engine,depth,param,peak_mem_bytes,median_time_s,loss\n");
+    for r in rows {
+        out.push_str(&format!(
+            "{},{},{},{},{},{}\n",
+            r.engine, r.depth, r.param, r.peak_mem_bytes, r.median_time_s, r.loss
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::Backprop;
+    use crate::model::{build_cnn2d, SubmersiveCnn2dSpec};
+    use crate::nn::MeanLoss;
+    use crate::util::Rng;
+
+    #[test]
+    fn measure_engine_returns_sane_values() {
+        let mut rng = Rng::new(0);
+        let spec = SubmersiveCnn2dSpec {
+            input_hw: 16,
+            depth: 2,
+            channels: 4,
+            cin: 2,
+            ..Default::default()
+        };
+        let net = build_cnn2d(&spec, &mut rng);
+        let x = Tensor::randn(&[1, 16, 16, 2], 1.0, &mut rng);
+        let (mem, time, loss) =
+            measure_engine(&Backprop, &net, &x, &MeanLoss, 1, 3).unwrap();
+        assert!(mem > 0);
+        assert!(time > 0.0);
+        assert!(loss.is_finite());
+    }
+
+    #[test]
+    fn table_and_csv_contain_rows() {
+        let rows = vec![SweepRow {
+            engine: "backprop".into(),
+            depth: 3,
+            param: 0,
+            peak_mem_bytes: 1 << 20,
+            median_time_s: 0.01,
+            loss: 0.5,
+        }];
+        let t = format_table("test", &rows);
+        assert!(t.contains("backprop"));
+        assert!(t.contains("MiB"));
+        let csv = to_csv(&rows);
+        assert_eq!(csv.lines().count(), 2);
+    }
+}

@@ -1,0 +1,46 @@
+//! # Moonwalk: Inverse-Forward Differentiation
+//!
+//! A reproduction of *"Moonwalk: Inverse-Forward Differentiation"*
+//! (Krylov, Karamzade, Fox), built as a three-layer Rust + JAX + Pallas
+//! stack. The crate provides:
+//!
+//! * [`tensor`] — a small dense-tensor library with a global allocation
+//!   tracker that measures peak live bytes (the reproduction's analogue of
+//!   `jax.device.memory_stats()` on the paper's RTX 3090).
+//! * [`nn`] — a layer library with *submersive* parameterisations
+//!   (paper Lemma 1) where every layer exposes four differential operators:
+//!   `forward`, `vjp_input`, `vjp_params` and the paper's novel
+//!   **`vijp`** (vector-inverse-Jacobian product).
+//! * [`autodiff`] — nine interchangeable gradient engines: Backprop,
+//!   checkpointed Backprop, true forward mode, projected forward gradients,
+//!   reversible backprop, **mixed-mode Moonwalk**, **pure-forward
+//!   Moonwalk**, Moonwalk + activation checkpointing, and Moonwalk with
+//!   **fragmental gradient checkpointing** (paper §5.1).
+//! * [`memsim`] — the analytic time/memory model of the paper's Table 1
+//!   plus a memory-budget planner that picks an engine for a budget.
+//! * [`coordinator`] — a config-driven trainer (optimizers, synthetic data
+//!   pipelines, JSONL metrics, sweeps).
+//! * [`runtime`] — a PJRT client that loads the AOT artifacts produced by
+//!   `python/compile/aot.py` (JAX/Pallas → HLO text) and executes them from
+//!   the Rust hot path; Python never runs at training time.
+//! * [`util`] / [`cli`] — in-tree substrates (JSON codec, PCG64 RNG, CLI
+//!   parser, timing harness) since the offline build has no access to
+//!   serde/clap/criterion/rand.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod autodiff;
+pub mod cli;
+pub mod coordinator;
+pub mod memsim;
+pub mod model;
+pub mod nn;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use tensor::Tensor;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,271 @@
+//! `moonwalk` — CLI launcher for the Moonwalk reproduction framework.
+//!
+//! Subcommands:
+//! * `train     --config cfg.json [--metrics out.jsonl]` — train a
+//!   classifier with the configured gradient engine (Fig. 4 setup).
+//! * `gradcheck --config cfg.json` — verify every applicable engine
+//!   produces Backprop's gradients on the configured network.
+//! * `audit     --config cfg.json` — per-layer submersivity report.
+//! * `plan      --config cfg.json --budget-mb N` — Table-1 model +
+//!   planner: predicted memory/time per method, chosen engine.
+//! * `sweep     --config cfg.json --depths 1,2,..` — memory/time sweep
+//!   (the Fig. 2 / Fig. 3 measurement, printable without cargo bench).
+
+use moonwalk::autodiff::{engine_by_name, Backprop, GradEngine, EXACT_ENGINES};
+use moonwalk::cli::Args;
+use moonwalk::coordinator::{Optimizer, OptimizerKind, SyntheticSpec, TextureDataset, Trainer};
+use moonwalk::model::config::{ArchKind, Config};
+use moonwalk::memsim;
+use moonwalk::nn::MeanLoss;
+use moonwalk::tensor::{rel_err, tracker, Tensor};
+use moonwalk::util::Rng;
+
+fn load_config(args: &Args) -> anyhow::Result<Config> {
+    match args.get("config") {
+        Some(path) => Config::from_file(std::path::Path::new(path)),
+        None => Ok(Config::default()),
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    if cfg.arch != ArchKind::Cnn2d {
+        anyhow::bail!("train currently supports the cnn2d classifier configs");
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let mut net = cfg.build_network(&mut rng);
+    let engine = engine_by_name(&cfg.engine, cfg.block, cfg.checkpoint_every, cfg.seed)?;
+    let data = TextureDataset::generate(
+        SyntheticSpec {
+            classes: cfg.classes,
+            hw: cfg.input_hw,
+            cin: cfg.cin,
+            noise: 0.3,
+            seed: cfg.seed,
+        },
+        cfg.dataset_size,
+    );
+    let (train, test) = data.split(0.2);
+    let opt = Optimizer::new(
+        OptimizerKind::parse(&cfg.optimizer)?,
+        cfg.lr as f32,
+        &net,
+        cfg.constrained,
+    );
+    let mut trainer = Trainer::new(&mut net, engine.as_ref(), opt);
+    let metrics = args.get("metrics").map(std::path::PathBuf::from);
+    let report = trainer.train(
+        &train,
+        &test,
+        cfg.batch,
+        cfg.steps,
+        &mut rng,
+        metrics.as_deref(),
+    )?;
+    println!(
+        "engine={} steps={} final_loss={:.4} train_acc={:.3} test_acc={:.3} peak_mem={} time={:.1}s",
+        engine.name(),
+        report.steps,
+        report.final_loss,
+        report.train_accuracy,
+        report.test_accuracy,
+        tracker::fmt_bytes(report.peak_mem_bytes),
+        report.total_time_s
+    );
+    Ok(())
+}
+
+fn cmd_gradcheck(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let mut rng = Rng::new(cfg.seed);
+    let net = cfg.build_network(&mut rng);
+    let x = Tensor::randn(&cfg.input_shape(), 1.0, &mut rng);
+    let reference = Backprop.compute(&net, &x, &MeanLoss)?;
+    println!("reference: backprop loss={:.6}", reference.loss);
+    let mut failures = 0;
+    for name in EXACT_ENGINES {
+        if *name == "backprop" {
+            continue;
+        }
+        let engine = engine_by_name(name, cfg.block, cfg.checkpoint_every, cfg.seed)?;
+        match engine.compute(&net, &x, &MeanLoss) {
+            Err(e) => {
+                println!("  {name:<16} SKIP ({e})");
+            }
+            Ok(result) => {
+                let mut worst = 0f32;
+                for (a, b) in reference
+                    .grads
+                    .iter()
+                    .flatten()
+                    .zip(result.grads.iter().flatten())
+                {
+                    worst = worst.max(rel_err(b, a));
+                }
+                let ok = worst < 5e-3;
+                if !ok {
+                    failures += 1;
+                }
+                println!(
+                    "  {:<16} {} (max rel err {:.2e})",
+                    engine.name(),
+                    if ok { "OK  " } else { "FAIL" },
+                    worst
+                );
+            }
+        }
+    }
+    if failures > 0 {
+        anyhow::bail!("{failures} engine(s) disagreed with backprop");
+    }
+    Ok(())
+}
+
+fn cmd_audit(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let mut rng = Rng::new(cfg.seed);
+    let net = cfg.build_network(&mut rng);
+    println!("network: {} layers, {} params", net.depth(), net.n_params());
+    for (i, (layer, sub)) in net.layers.iter().zip(net.audit()).enumerate() {
+        let desc = match sub {
+            moonwalk::nn::Submersivity::Submersive { fast_path } => format!(
+                "submersive{}",
+                if fast_path { " (parallel vijp)" } else { " (wavefront vijp)" }
+            ),
+            moonwalk::nn::Submersivity::NonSubmersive {
+                reason,
+                fragmental_ok,
+            } => format!(
+                "NON-submersive{}: {reason}",
+                if fragmental_ok { " (fragmental ok)" } else { "" }
+            ),
+        };
+        println!("  [{i:>2}] {:<34} {desc}", layer.name());
+    }
+    println!(
+        "network is {}",
+        if net.is_submersive() {
+            "fully submersive"
+        } else {
+            "not fully submersive"
+        }
+    );
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let budget_mb = args.get_f64("budget-mb", 1024.0)?;
+    let budget = (budget_mb * 1024.0 * 1024.0) as usize;
+    let mut rng = Rng::new(cfg.seed);
+    let net = cfg.build_network(&mut rng);
+    let in_shape = cfg.input_shape();
+    let costs = memsim::profile(&net, &in_shape)?;
+    let input_elems: usize = in_shape.iter().product();
+
+    println!("Table-1 model for this network (extra bytes to compute gradients):");
+    let methods = [
+        memsim::Method::Backprop,
+        memsim::Method::BackpropCkpt { segments: 0 },
+        memsim::Method::Forward,
+        memsim::Method::ProjForward,
+        memsim::Method::RevBackprop,
+        memsim::Method::PureMoonwalk,
+        memsim::Method::Moonwalk,
+        memsim::Method::MoonwalkCkpt { segments: 0 },
+        memsim::Method::MoonwalkFrag { block: cfg.block.max(3), k: 3 },
+    ];
+    for m in &methods {
+        let app = memsim::applicable(m, &costs);
+        let mem = memsim::predict_memory(m, &costs);
+        let t = memsim::predict_time_units(m, &costs, input_elems);
+        println!(
+            "  {:<24} mem={:<12} time={:>12.3e} fwd-flops {}",
+            m.label(),
+            tracker::fmt_bytes(mem),
+            t,
+            if app { "" } else { "(not applicable)" }
+        );
+    }
+    match memsim::plan(&costs, budget, !args.has("allow-noisy"), input_elems) {
+        Some((m, mem, t)) => println!(
+            "planner: budget {} -> {} (predicted mem {}, time {:.3e})",
+            tracker::fmt_bytes(budget),
+            m.label(),
+            tracker::fmt_bytes(mem),
+            t
+        ),
+        None => println!(
+            "planner: no method fits in {}",
+            tracker::fmt_bytes(budget)
+        ),
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    use moonwalk::coordinator::sweep::{format_table, measure_engine, SweepRow};
+    let cfg = load_config(args)?;
+    let depths: Vec<usize> = args
+        .get_or("depths", "1,2,3,4")
+        .split(',')
+        .map(|s| s.trim().parse())
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("--depths: {e}"))?;
+    let engines: Vec<String> = args
+        .get_or("engines", "backprop,backprop_ckpt,moonwalk")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let mut rows = Vec::new();
+    for &depth in &depths {
+        let mut c = cfg.clone();
+        c.depth = depth;
+        let mut rng = Rng::new(c.seed);
+        let net = c.build_network(&mut rng);
+        let x = Tensor::randn(&c.input_shape(), 1.0, &mut rng);
+        for name in &engines {
+            let engine = engine_by_name(name, c.block, c.checkpoint_every, c.seed)?;
+            let (mem, time, loss) =
+                measure_engine(engine.as_ref(), &net, &x, &MeanLoss, 1, 3)?;
+            rows.push(SweepRow {
+                engine: engine.name(),
+                depth,
+                param: c.block,
+                peak_mem_bytes: mem,
+                median_time_s: time,
+                loss,
+            });
+        }
+    }
+    print!("{}", format_table("sweep", &rows));
+    Ok(())
+}
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("gradcheck") => cmd_gradcheck(&args),
+        Some("audit") => cmd_audit(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("sweep") => cmd_sweep(&args),
+        other => {
+            eprintln!(
+                "usage: moonwalk <train|gradcheck|audit|plan|sweep> [--config cfg.json] ...\n\
+                 (got {other:?}; see README.md)"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

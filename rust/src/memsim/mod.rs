@@ -1,0 +1,365 @@
+//! Analytic memory/time model of the paper's Table 1 (§11 "Complexity
+//! Analysis") and a **memory-budget planner** built on it: given a byte
+//! budget, pick the cheapest-in-time gradient engine that fits.
+//!
+//! Per-layer quantities follow the paper's definitions: `Mx` is the
+//! memory needed to compute `∂x_i/∂x_{i−1}` (our Minimal residual), `Mθ`
+//! the *added* memory to also compute `∂x_i/∂θ_i` (Full − Minimal), `n`
+//! the activation size and `d` the parameter count. The model predicts
+//! *extra* bytes to compute gradients, excluding parameters and the
+//! gradients themselves — exactly Table 1's accounting.
+
+use crate::model::Network;
+use crate::nn::{residual_bytes, ResidualKind, Submersivity};
+use crate::tensor::Tensor;
+
+/// Per-layer cost profile (bytes / counts for one concrete input shape).
+#[derive(Clone, Debug)]
+pub struct LayerCost {
+    pub name: String,
+    /// Minimal-residual bytes (paper's `Mx`).
+    pub mx: usize,
+    /// Additional Full-residual bytes (paper's `Mθ`).
+    pub m_theta: usize,
+    /// Activation (output) bytes (`n`, in bytes).
+    pub act_bytes: usize,
+    /// Input bytes to the layer.
+    pub in_bytes: usize,
+    /// Parameter count (`d`).
+    pub d_params: usize,
+    /// Forward FLOPs.
+    pub flops: f64,
+    pub submersive: bool,
+    pub fragmental_ok: bool,
+}
+
+/// Profile a network on a concrete input shape by running each layer's
+/// forward once per residual tier (cheap; used at plan time, not in the
+/// training hot path).
+pub fn profile(net: &Network, in_shape: &[usize]) -> anyhow::Result<Vec<LayerCost>> {
+    let mut costs = Vec::with_capacity(net.depth());
+    let mut x = Tensor::zeros(in_shape);
+    for layer in &net.layers {
+        let (_, res_min) = layer.forward_res(&x, ResidualKind::Minimal);
+        let (y, res_full) = layer.forward_res(&x, ResidualKind::Full);
+        let mx = residual_bytes(&res_min);
+        let full = residual_bytes(&res_full);
+        let sub = layer.submersivity();
+        costs.push(LayerCost {
+            name: layer.name(),
+            mx,
+            m_theta: full.saturating_sub(mx),
+            act_bytes: y.bytes(),
+            in_bytes: x.bytes(),
+            d_params: layer.n_params(),
+            flops: layer.flops_estimate(x.shape()),
+            submersive: sub.is_submersive(),
+            fragmental_ok: matches!(
+                sub,
+                Submersivity::NonSubmersive {
+                    fragmental_ok: true,
+                    ..
+                }
+            ),
+        });
+        x = y;
+    }
+    Ok(costs)
+}
+
+/// The methods of Table 1.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    Backprop,
+    BackpropCkpt { segments: usize },
+    Forward,
+    ProjForward,
+    RevBackprop,
+    Moonwalk,
+    PureMoonwalk,
+    MoonwalkCkpt { segments: usize },
+    MoonwalkFrag { block: usize, k: usize },
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::Backprop => "backprop".into(),
+            Method::BackpropCkpt { segments } => format!("backprop_ckpt(c={segments})"),
+            Method::Forward => "forward".into(),
+            Method::ProjForward => "projforward".into(),
+            Method::RevBackprop => "revbackprop".into(),
+            Method::Moonwalk => "moonwalk".into(),
+            Method::PureMoonwalk => "pure_moonwalk".into(),
+            Method::MoonwalkCkpt { segments } => format!("moonwalk_ckpt(c={segments})"),
+            Method::MoonwalkFrag { block, .. } => format!("moonwalk_frag(B={block})"),
+        }
+    }
+
+    /// Engine-registry name for `autodiff::engine_by_name`.
+    pub fn engine_name(&self) -> &'static str {
+        match self {
+            Method::Backprop => "backprop",
+            Method::BackpropCkpt { .. } => "backprop_ckpt",
+            Method::Forward => "forward",
+            Method::ProjForward => "projforward",
+            Method::RevBackprop => "revbackprop",
+            Method::Moonwalk => "moonwalk",
+            Method::PureMoonwalk => "pure_moonwalk",
+            Method::MoonwalkCkpt { .. } => "moonwalk_ckpt",
+            Method::MoonwalkFrag { .. } => "moonwalk_frag",
+        }
+    }
+}
+
+fn seg_bounds(depth: usize, segments: usize) -> Vec<(usize, usize)> {
+    let seg_len = (depth + segments - 1) / segments;
+    (0..segments)
+        .map(|s| (s * seg_len, ((s + 1) * seg_len).min(depth)))
+        .collect()
+}
+
+/// Predicted *extra* peak bytes for a method (Table 1, memory column).
+pub fn predict_memory(method: &Method, costs: &[LayerCost]) -> usize {
+    let depth = costs.len();
+    let sum_mx: usize = costs.iter().map(|c| c.mx).sum();
+    // Backprop's tape: every activation stored once + minimal residuals.
+    let sum_full: usize = costs.iter().map(|c| c.mx + c.in_bytes).sum::<usize>()
+        + costs.last().map(|c| c.act_bytes).unwrap_or(0);
+    let max_act = costs.iter().map(|c| c.act_bytes.max(c.in_bytes)).max().unwrap_or(0);
+    let max_mtheta = costs.iter().map(|c| c.m_theta).max().unwrap_or(0);
+    // Cotangent-checkpoint bytes Moonwalk must keep across Phase II→III,
+    // mirroring the engine's chain/anchor plan (§4.1 fallback with the
+    // h₁-seed placement; fragments per §5.1 when enabled).
+    let ckpt_cost = |frag_block: Option<(usize, usize)>| -> usize {
+        let mut total = 0usize;
+        let mut chain_ok = true;
+        for c in costs {
+            if c.submersive && chain_ok {
+                // vijp continues the chain for free
+            } else if chain_ok && c.fragmental_ok && frag_block.is_some() {
+                let (block, k) = frag_block.unwrap();
+                total += c.act_bytes * (k - 1) / block;
+            } else if c.d_params > 0 {
+                // anchor: checkpoint this layer's output cotangent
+                total += c.act_bytes;
+                chain_ok = true;
+                continue;
+            } else {
+                chain_ok = false;
+            }
+        }
+        total
+    };
+    // Every method keeps at least one live activation while sweeping
+    // (the forward/backward transient); charging it uniformly keeps the
+    // model comparable across methods.
+    match method {
+        Method::Backprop => sum_full + max_act,
+        Method::BackpropCkpt { segments } => {
+            let bounds = seg_bounds(depth, (*segments).max(1));
+            let boundary: usize = bounds
+                .iter()
+                .map(|&(lo, _)| costs[lo].in_bytes)
+                .sum();
+            let worst_seg = bounds
+                .iter()
+                .map(|&(lo, hi)| costs[lo..hi].iter().map(|c| c.mx + c.in_bytes).sum::<usize>())
+                .max()
+                .unwrap_or(0);
+            boundary + worst_seg + max_act
+        }
+        // Activation + tangent (+ the next pair during a layer hop).
+        Method::Forward => 3 * max_act,
+        Method::ProjForward => 3 * max_act + costs.iter().map(|c| c.d_params * 4).sum::<usize>(),
+        // x_out, reconstructed x_in, cotangent.
+        Method::RevBackprop => 3 * max_act + costs.iter().map(|c| c.mx).max().unwrap_or(0),
+        // Phase I residuals + §4.1 checkpoints + Phase-III (x, h) pair.
+        Method::Moonwalk => sum_mx + ckpt_cost(None) + 2 * max_act,
+        Method::PureMoonwalk => 3 * max_act + max_mtheta,
+        Method::MoonwalkCkpt { segments } => {
+            let bounds = seg_bounds(depth, (*segments).max(1));
+            let boundary: usize = bounds.iter().map(|&(lo, _)| costs[lo].in_bytes).sum();
+            let worst_seg = bounds
+                .iter()
+                .map(|&(lo, hi)| costs[lo..hi].iter().map(|c| c.mx).sum::<usize>())
+                .max()
+                .unwrap_or(0);
+            boundary + worst_seg + ckpt_cost(None) + 2 * max_act
+        }
+        Method::MoonwalkFrag { block, k } => {
+            sum_mx + ckpt_cost(Some((*block, *k))) + 2 * max_act
+        }
+    }
+}
+
+/// Predicted time in forward-pass units (Table 1, time column).
+pub fn predict_time_units(method: &Method, costs: &[LayerCost], input_elems: usize) -> f64 {
+    let fwd: f64 = costs.iter().map(|c| c.flops).sum();
+    let suffix_flops: Vec<f64> = {
+        // suffix_flops[i] = flops from layer i to the end
+        let mut v = vec![0.0; costs.len() + 1];
+        for i in (0..costs.len()).rev() {
+            v[i] = v[i + 1] + costs[i].flops;
+        }
+        v
+    };
+    match method {
+        // fwd + input-vjp + param-vjp ≈ 3×
+        Method::Backprop => 3.0 * fwd,
+        Method::BackpropCkpt { .. } => 4.0 * fwd,
+        // one pass per parameter element, from its layer to the loss
+        Method::Forward => {
+            fwd + costs
+                .iter()
+                .enumerate()
+                .map(|(i, c)| c.d_params as f64 * (fwd + suffix_flops[i]))
+                .sum::<f64>()
+        }
+        Method::ProjForward => 2.0 * fwd,
+        Method::RevBackprop => 4.0 * fwd,
+        // Phase I+II ≈ 2×, Phase III ≈ 3× (fwd + vijp + param-vjp)
+        Method::Moonwalk => 5.0 * fwd,
+        Method::MoonwalkCkpt { .. } => 6.0 * fwd,
+        Method::MoonwalkFrag { .. } => 5.0 * fwd,
+        // one jvp pass per input element, then Phase III
+        Method::PureMoonwalk => input_elems as f64 * fwd + 3.0 * fwd,
+    }
+}
+
+/// Is a method applicable to this network at all?
+pub fn applicable(method: &Method, costs: &[LayerCost]) -> bool {
+    match method {
+        Method::RevBackprop => costs.iter().all(|c| {
+            // Our invertible configurations: act preserved size-wise and no
+            // pooling/expansion. Approximation: in == out bytes everywhere.
+            c.in_bytes == c.act_bytes
+        }),
+        Method::PureMoonwalk => {
+            // Non-submersive layers must form a parameter-free prefix.
+            let seed = costs
+                .iter()
+                .rposition(|c| !c.submersive)
+                .map(|i| i + 1)
+                .unwrap_or(0);
+            costs[..seed].iter().all(|c| c.d_params == 0)
+        }
+        Method::MoonwalkFrag { .. } => costs
+            .iter()
+            .any(|c| c.fragmental_ok),
+        _ => true,
+    }
+}
+
+/// The planner: smallest-time applicable method under a byte budget.
+/// `exact_only` excludes the high-variance ProjForward estimator.
+pub fn plan(
+    costs: &[LayerCost],
+    budget_bytes: usize,
+    exact_only: bool,
+    input_elems: usize,
+) -> Option<(Method, usize, f64)> {
+    let depth = costs.len();
+    let sqrt_l = (depth as f64).sqrt().round().max(1.0) as usize;
+    let mut candidates = vec![
+        Method::Backprop,
+        Method::Moonwalk,
+        Method::RevBackprop,
+        Method::BackpropCkpt { segments: sqrt_l },
+        Method::MoonwalkCkpt { segments: sqrt_l },
+        Method::MoonwalkFrag { block: 8, k: 3 },
+        Method::MoonwalkFrag { block: 16, k: 3 },
+        Method::PureMoonwalk,
+        Method::Forward,
+    ];
+    if !exact_only {
+        candidates.insert(2, Method::ProjForward);
+    }
+    candidates
+        .into_iter()
+        .filter(|m| applicable(m, costs))
+        .map(|m| {
+            let mem = predict_memory(&m, costs);
+            let t = predict_time_units(&m, costs, input_elems);
+            (m, mem, t)
+        })
+        .filter(|&(_, mem, _)| mem <= budget_bytes)
+        .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{build_cnn2d, SubmersiveCnn2dSpec};
+    use crate::util::Rng;
+
+    fn costs_for(depth: usize) -> Vec<LayerCost> {
+        let mut rng = Rng::new(0);
+        let spec = SubmersiveCnn2dSpec {
+            input_hw: 32,
+            depth,
+            channels: 8,
+            cin: 3,
+            ..Default::default()
+        };
+        let net = build_cnn2d(&spec, &mut rng);
+        profile(&net, &[2, 32, 32, 3]).unwrap()
+    }
+
+    #[test]
+    fn moonwalk_predicted_below_backprop() {
+        let costs = costs_for(4);
+        let bp = predict_memory(&Method::Backprop, &costs);
+        let mw = predict_memory(&Method::Moonwalk, &costs);
+        assert!(mw < bp, "moonwalk {mw} should be < backprop {bp}");
+    }
+
+    #[test]
+    fn backprop_memory_scales_linearly_moonwalk_sublinearly() {
+        let shallow = costs_for(2);
+        let deep = costs_for(6);
+        let bp_ratio = predict_memory(&Method::Backprop, &deep) as f64
+            / predict_memory(&Method::Backprop, &shallow) as f64;
+        let mw_ratio = predict_memory(&Method::Moonwalk, &deep) as f64
+            / predict_memory(&Method::Moonwalk, &shallow) as f64;
+        assert!(
+            mw_ratio < bp_ratio,
+            "moonwalk growth {mw_ratio} should be below backprop {bp_ratio}"
+        );
+    }
+
+    #[test]
+    fn planner_prefers_backprop_unbounded() {
+        let costs = costs_for(4);
+        let (m, _, _) = plan(&costs, usize::MAX, true, 32 * 32 * 3).unwrap();
+        assert_eq!(m.engine_name(), "backprop");
+    }
+
+    #[test]
+    fn planner_switches_to_moonwalk_under_budget() {
+        let costs = costs_for(4);
+        let bp = predict_memory(&Method::Backprop, &costs);
+        let mw = predict_memory(&Method::Moonwalk, &costs);
+        // A budget between the two forces the switch.
+        let budget = (bp + mw) / 2;
+        let (m, mem, _) = plan(&costs, budget, true, 32 * 32 * 3).unwrap();
+        assert_ne!(m.engine_name(), "backprop");
+        assert!(mem <= budget);
+    }
+
+    #[test]
+    fn planner_none_when_impossible() {
+        let costs = costs_for(2);
+        assert!(plan(&costs, 16, true, 8).is_none());
+    }
+
+    #[test]
+    fn forward_time_dominates() {
+        let costs = costs_for(2);
+        let n = 32 * 32 * 3;
+        assert!(
+            predict_time_units(&Method::Forward, &costs, n)
+                > 10.0 * predict_time_units(&Method::Backprop, &costs, n)
+        );
+    }
+}

@@ -1,0 +1,244 @@
+//! JSON-backed experiment configuration (the framework's config system).
+//!
+//! A config names an architecture family, its hyperparameters, the
+//! gradient engine, and the training setup; `examples/` and the CLI load
+//! these from files or inline JSON. Unknown fields are ignored so configs
+//! stay forward-compatible.
+
+use crate::model::{FragmentalCnn1dSpec, Network, SubmersiveCnn2dSpec};
+use crate::util::json::Json;
+use crate::util::Rng;
+
+/// Architecture family selector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ArchKind {
+    Cnn2d,
+    Cnn1dFragmental,
+    Invertible,
+    Mlp,
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub arch: ArchKind,
+    pub depth: usize,
+    pub channels: usize,
+    pub input_hw: usize,
+    pub input_len: usize,
+    pub cin: usize,
+    pub classes: usize,
+    pub alpha: f32,
+    pub constrained: bool,
+    pub batch: usize,
+    /// Gradient engine name (see `autodiff::engine_by_name`).
+    pub engine: String,
+    /// Fragmental block size (1-D configs).
+    pub block: usize,
+    /// Checkpoint segment count (checkpointed engines); 0 = auto √L.
+    pub checkpoint_every: usize,
+    pub steps: usize,
+    pub lr: f64,
+    pub optimizer: String,
+    pub seed: u64,
+    pub dataset_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            arch: ArchKind::Cnn2d,
+            depth: 4,
+            channels: 32,
+            input_hw: 64,
+            input_len: 512,
+            cin: 3,
+            classes: 8,
+            alpha: 0.1,
+            constrained: true,
+            batch: 4,
+            engine: "moonwalk".into(),
+            block: 4,
+            checkpoint_every: 0,
+            steps: 100,
+            lr: 1e-3,
+            optimizer: "adam".into(),
+            seed: 0,
+            dataset_size: 512,
+        }
+    }
+}
+
+impl Config {
+    /// Parse from a JSON object; missing fields fall back to defaults.
+    pub fn from_json(j: &Json) -> anyhow::Result<Config> {
+        let d = Config::default();
+        let arch = match j.opt_str("arch", "cnn2d") {
+            "cnn2d" => ArchKind::Cnn2d,
+            "cnn1d_fragmental" | "cnn1d" => ArchKind::Cnn1dFragmental,
+            "invertible" => ArchKind::Invertible,
+            "mlp" => ArchKind::Mlp,
+            other => anyhow::bail!("unknown arch `{other}`"),
+        };
+        Ok(Config {
+            arch,
+            depth: j.opt_usize("depth", d.depth),
+            channels: j.opt_usize("channels", d.channels),
+            input_hw: j.opt_usize("input_hw", d.input_hw),
+            input_len: j.opt_usize("input_len", d.input_len),
+            cin: j.opt_usize("cin", d.cin),
+            classes: j.opt_usize("classes", d.classes),
+            alpha: j.opt_f64("alpha", d.alpha as f64) as f32,
+            constrained: j.opt_bool("constrained", d.constrained),
+            batch: j.opt_usize("batch", d.batch),
+            engine: j.opt_str("engine", &d.engine).to_string(),
+            block: j.opt_usize("block", d.block),
+            checkpoint_every: j.opt_usize("checkpoint_every", d.checkpoint_every),
+            steps: j.opt_usize("steps", d.steps),
+            lr: j.opt_f64("lr", d.lr),
+            optimizer: j.opt_str("optimizer", &d.optimizer).to_string(),
+            seed: j.opt_usize("seed", d.seed as usize) as u64,
+            dataset_size: j.opt_usize("dataset_size", d.dataset_size),
+        })
+    }
+
+    /// Load from a JSON file.
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Config::from_json(&j)
+    }
+
+    /// Serialize (for run provenance in metric logs).
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            (
+                "arch",
+                match self.arch {
+                    ArchKind::Cnn2d => "cnn2d",
+                    ArchKind::Cnn1dFragmental => "cnn1d_fragmental",
+                    ArchKind::Invertible => "invertible",
+                    ArchKind::Mlp => "mlp",
+                }
+                .into(),
+            ),
+            ("depth", self.depth.into()),
+            ("channels", self.channels.into()),
+            ("input_hw", self.input_hw.into()),
+            ("input_len", self.input_len.into()),
+            ("cin", self.cin.into()),
+            ("classes", self.classes.into()),
+            ("alpha", (self.alpha as f64).into()),
+            ("constrained", self.constrained.into()),
+            ("batch", self.batch.into()),
+            ("engine", self.engine.as_str().into()),
+            ("block", self.block.into()),
+            ("checkpoint_every", self.checkpoint_every.into()),
+            ("steps", self.steps.into()),
+            ("lr", self.lr.into()),
+            ("optimizer", self.optimizer.as_str().into()),
+            ("seed", (self.seed as usize).into()),
+            ("dataset_size", self.dataset_size.into()),
+        ])
+    }
+
+    /// Build the configured network.
+    pub fn build_network(&self, rng: &mut Rng) -> Network {
+        match self.arch {
+            ArchKind::Cnn2d => crate::model::build_cnn2d(
+                &SubmersiveCnn2dSpec {
+                    cin: self.cin,
+                    channels: self.channels,
+                    depth: self.depth,
+                    input_hw: self.input_hw,
+                    classes: self.classes,
+                    alpha: self.alpha,
+                    constrained: self.constrained,
+                },
+                rng,
+            ),
+            ArchKind::Cnn1dFragmental => crate::model::build_cnn1d_fragmental(
+                &FragmentalCnn1dSpec {
+                    cin: self.cin,
+                    channels: self.channels,
+                    depth: self.depth,
+                    input_len: self.input_len,
+                    classes: self.classes,
+                    alpha: self.alpha,
+                },
+                rng,
+            ),
+            ArchKind::Invertible => crate::model::build_invertible_cnn2d(
+                self.channels,
+                self.depth,
+                self.alpha,
+                rng,
+            ),
+            ArchKind::Mlp => {
+                let mut dims = vec![self.channels; self.depth + 1];
+                dims[self.depth] = self.classes;
+                crate::model::build_mlp(&dims, self.alpha, rng)
+            }
+        }
+    }
+
+    /// Input shape for one batch under this config.
+    pub fn input_shape(&self) -> Vec<usize> {
+        match self.arch {
+            ArchKind::Cnn2d => vec![self.batch, self.input_hw, self.input_hw, self.cin],
+            ArchKind::Cnn1dFragmental => vec![self.batch, self.input_len, self.cin],
+            ArchKind::Invertible => {
+                vec![self.batch, self.input_hw, self.input_hw, self.channels]
+            }
+            ArchKind::Mlp => vec![self.batch, self.channels],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_roundtrip() {
+        let c = Config::default();
+        let j = c.to_json();
+        let c2 = Config::from_json(&j).unwrap();
+        assert_eq!(c2.depth, c.depth);
+        assert_eq!(c2.engine, c.engine);
+        assert_eq!(c2.arch, c.arch);
+    }
+
+    #[test]
+    fn parse_partial() {
+        let j = Json::parse(r#"{"arch": "cnn1d", "depth": 7}"#).unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.arch, ArchKind::Cnn1dFragmental);
+        assert_eq!(c.depth, 7);
+        assert_eq!(c.channels, Config::default().channels);
+    }
+
+    #[test]
+    fn unknown_arch_rejected() {
+        let j = Json::parse(r#"{"arch": "transformer"}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn builds_each_arch() {
+        let mut rng = Rng::new(0);
+        for arch in ["cnn2d", "cnn1d", "invertible", "mlp"] {
+            let j = Json::parse(&format!(
+                r#"{{"arch": "{arch}", "depth": 2, "channels": 4, "input_hw": 16, "input_len": 16, "batch": 1}}"#
+            ))
+            .unwrap();
+            let c = Config::from_json(&j).unwrap();
+            let net = c.build_network(&mut rng);
+            let x = Tensor::randn(&c.input_shape(), 1.0, &mut rng);
+            let y = net.forward(&x);
+            assert!(!y.is_empty(), "{arch} produced empty output");
+        }
+    }
+
+    use crate::tensor::Tensor;
+}

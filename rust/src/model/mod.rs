@@ -1,0 +1,301 @@
+//! Networks: ordered layer stacks plus the architecture builders used by
+//! the paper's experiments (§6.2 2-D submersive CNN, §6.3 1-D fragmental
+//! CNN, §6.4 constrained-vs-unconstrained classifier, and the invertible
+//! stack used by the RevBackprop baseline).
+
+pub mod config;
+
+use crate::nn::{
+    Conv1d, Conv2d, Dense, LayerBox, LeakyRelu, MaxPool2d, Submersivity, Upsample,
+};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// A sequential network (the paper's setting, §3.1).
+pub struct Network {
+    pub layers: Vec<LayerBox>,
+}
+
+impl Network {
+    pub fn new(layers: Vec<LayerBox>) -> Network {
+        Network { layers }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.n_params()).sum()
+    }
+
+    /// Plain inference pass.
+    pub fn forward(&self, x0: &Tensor) -> Tensor {
+        let mut x = x0.clone();
+        for layer in &self.layers {
+            x = layer.forward(&x);
+        }
+        x
+    }
+
+    /// The shape chain `[x0, x1, …, xL]` for an input shape.
+    pub fn shape_chain(&self, in_shape: &[usize]) -> anyhow::Result<Vec<Vec<usize>>> {
+        let mut shapes = vec![in_shape.to_vec()];
+        for layer in &self.layers {
+            let next = layer.out_shape(shapes.last().unwrap())?;
+            shapes.push(next);
+        }
+        Ok(shapes)
+    }
+
+    /// Per-layer submersivity audit (used by engines and the planner).
+    pub fn audit(&self) -> Vec<Submersivity> {
+        self.layers.iter().map(|l| l.submersivity()).collect()
+    }
+
+    /// Is every layer submersive (the paper's "submersive network")?
+    pub fn is_submersive(&self) -> bool {
+        self.audit().iter().all(|s| s.is_submersive())
+    }
+
+    /// Project every layer onto its submersive constraint set (§6.4).
+    pub fn project_submersive(&mut self) {
+        for layer in &mut self.layers {
+            layer.project_submersive();
+        }
+    }
+
+    /// Flat gradient-shaped zero buffers, aligned with layer params.
+    pub fn zero_grads(&self) -> Vec<Vec<Tensor>> {
+        self.layers
+            .iter()
+            .map(|l| l.params().iter().map(|p| Tensor::zeros(p.shape())).collect())
+            .collect()
+    }
+}
+
+/// §6.2: the fully parallel submersive 2-D CNN. `Upsample(cin→c)` followed
+/// by `depth` blocks of `[Conv2d(k=3, s=2, p=1, c→c, submersive),
+/// LeakyReLU]`, then max-pool + dense projection to `classes`
+/// (the paper's "max pooling and projects the feature map to a scalar").
+pub struct SubmersiveCnn2dSpec {
+    pub cin: usize,
+    pub channels: usize,
+    pub depth: usize,
+    pub input_hw: usize,
+    pub classes: usize,
+    pub alpha: f32,
+    pub constrained: bool,
+}
+
+impl Default for SubmersiveCnn2dSpec {
+    fn default() -> Self {
+        SubmersiveCnn2dSpec {
+            cin: 3,
+            channels: 32,
+            depth: 4,
+            input_hw: 64,
+            classes: 8,
+            alpha: 0.1,
+            constrained: true,
+        }
+    }
+}
+
+pub fn build_cnn2d(spec: &SubmersiveCnn2dSpec, rng: &mut Rng) -> Network {
+    let mut layers: Vec<LayerBox> = Vec::new();
+    layers.push(Box::new(Upsample::new(spec.cin, spec.channels)));
+    let mut hw = spec.input_hw;
+    for _ in 0..spec.depth {
+        let conv = if spec.constrained {
+            Conv2d::new_submersive(3, spec.channels, spec.channels, 2, 1, false, rng)
+        } else {
+            Conv2d::new(3, spec.channels, spec.channels, 2, 1, false, rng)
+        };
+        layers.push(Box::new(conv));
+        layers.push(Box::new(LeakyRelu::new(spec.alpha)));
+        hw = (hw + 2 - 3) / 2 + 1;
+    }
+    // Final head: pool the remaining spatial grid away, then project.
+    let pool = hw.min(2).max(1);
+    if pool > 1 && hw % pool == 0 {
+        layers.push(Box::new(MaxPool2d::new(pool)));
+        hw /= pool;
+    }
+    layers.push(Box::new(Dense::new(
+        hw * hw * spec.channels,
+        spec.classes,
+        true,
+        rng,
+    )));
+    Network::new(layers)
+}
+
+/// §6.3: the 1-D resolution-preserving CNN (k=3, s=1, p=1) — NOT
+/// submersive; exercised with fragmental checkpointing.
+pub struct FragmentalCnn1dSpec {
+    pub cin: usize,
+    pub channels: usize,
+    pub depth: usize,
+    pub input_len: usize,
+    pub classes: usize,
+    pub alpha: f32,
+}
+
+impl Default for FragmentalCnn1dSpec {
+    fn default() -> Self {
+        FragmentalCnn1dSpec {
+            cin: 3,
+            channels: 64,
+            depth: 4,
+            input_len: 512,
+            classes: 8,
+            alpha: 0.1,
+        }
+    }
+}
+
+pub fn build_cnn1d_fragmental(spec: &FragmentalCnn1dSpec, rng: &mut Rng) -> Network {
+    let mut layers: Vec<LayerBox> = Vec::new();
+    layers.push(Box::new(crate::nn::pool::Upsample::new(
+        spec.cin,
+        spec.channels,
+    )));
+    for _ in 0..spec.depth {
+        layers.push(Box::new(Conv1d::new_fragmental(
+            3,
+            spec.channels,
+            spec.channels,
+            rng,
+        )));
+        layers.push(Box::new(LeakyRelu::new(spec.alpha)));
+    }
+    layers.push(Box::new(Dense::new(
+        spec.input_len * spec.channels,
+        spec.classes,
+        true,
+        rng,
+    )));
+    Network::new(layers)
+}
+
+/// An exactly invertible stack for the RevBackprop baseline: alternating
+/// triangular 1×1 convolutions and LeakyReLU (both invertible).
+pub fn build_invertible_cnn2d(
+    channels: usize,
+    depth: usize,
+    alpha: f32,
+    rng: &mut Rng,
+) -> Network {
+    let mut layers: Vec<LayerBox> = Vec::new();
+    for _ in 0..depth {
+        layers.push(Box::new(Conv2d::new_submersive(
+            1, channels, channels, 1, 0, false, rng,
+        )));
+        layers.push(Box::new(LeakyRelu::new(alpha)));
+    }
+    Network::new(layers)
+}
+
+/// A small dense (MLP) network for micro-scale sweeps (Table 1 exponents)
+/// where layer dims must be controlled independently of conv structure.
+pub fn build_mlp(dims: &[usize], alpha: f32, rng: &mut Rng) -> Network {
+    let mut layers: Vec<LayerBox> = Vec::new();
+    for win in dims.windows(2) {
+        layers.push(Box::new(Dense::new(win[0], win[1], true, rng)));
+        layers.push(Box::new(LeakyRelu::new(alpha)));
+    }
+    Network::new(layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cnn2d_shapes_and_submersivity() {
+        let mut rng = Rng::new(0);
+        let spec = SubmersiveCnn2dSpec {
+            input_hw: 32,
+            depth: 3,
+            channels: 8,
+            ..Default::default()
+        };
+        let net = build_cnn2d(&spec, &mut rng);
+        let shapes = net.shape_chain(&[2, 32, 32, 3]).unwrap();
+        assert_eq!(shapes.last().unwrap(), &vec![2, 8]);
+        // Every layer except the leading Upsample must be submersive.
+        let audit = net.audit();
+        assert!(!audit[0].is_submersive());
+        assert!(audit[1..].iter().all(|s| s.is_submersive()));
+    }
+
+    #[test]
+    fn cnn2d_unconstrained_not_submersive() {
+        let mut rng = Rng::new(1);
+        let spec = SubmersiveCnn2dSpec {
+            constrained: false,
+            input_hw: 32,
+            depth: 2,
+            channels: 4,
+            ..Default::default()
+        };
+        let net = build_cnn2d(&spec, &mut rng);
+        assert!(!net.is_submersive());
+    }
+
+    #[test]
+    fn cnn1d_builds_and_runs() {
+        let mut rng = Rng::new(2);
+        let spec = FragmentalCnn1dSpec {
+            input_len: 32,
+            channels: 8,
+            depth: 2,
+            ..Default::default()
+        };
+        let net = build_cnn1d_fragmental(&spec, &mut rng);
+        let x = Tensor::randn(&[2, 32, 3], 1.0, &mut rng);
+        let y = net.forward(&x);
+        assert_eq!(y.shape(), &[2, 8]);
+    }
+
+    #[test]
+    fn invertible_stack_roundtrip() {
+        let mut rng = Rng::new(3);
+        let net = build_invertible_cnn2d(4, 3, 0.2, &mut rng);
+        let x = Tensor::randn(&[1, 5, 5, 4], 1.0, &mut rng);
+        let mut y = x.clone();
+        for l in &net.layers {
+            y = l.forward(&y);
+        }
+        for l in net.layers.iter().rev() {
+            y = l.inverse(&y).unwrap();
+        }
+        crate::tensor::assert_close(&y, &x, 1e-3, "invertible roundtrip");
+    }
+
+    #[test]
+    fn mlp_param_count() {
+        let mut rng = Rng::new(4);
+        let net = build_mlp(&[10, 8, 6], 0.1, &mut rng);
+        assert_eq!(net.n_params(), 10 * 8 + 8 + 8 * 6 + 6);
+    }
+
+    #[test]
+    fn project_makes_submersive() {
+        let mut rng = Rng::new(5);
+        let spec = SubmersiveCnn2dSpec {
+            constrained: false,
+            input_hw: 16,
+            depth: 2,
+            channels: 4,
+            ..Default::default()
+        };
+        let mut net = build_cnn2d(&spec, &mut rng);
+        assert!(!net.is_submersive());
+        net.project_submersive();
+        // Upsample stays non-submersive by construction; all convs fixed.
+        assert!(net.audit()[1..].iter().all(|s| s.is_submersive()));
+    }
+}

@@ -1,0 +1,204 @@
+//! LeakyReLU — the paper's running example of a *cheap-residual* layer
+//! (§4.5): its Jacobian is diagonal with entries `1` or `α ≠ 0`, so it is
+//! everywhere invertible (hence submersive), and both vjp and vijp need
+//! only the **sign** of each input element — 1 bit instead of 32, the
+//! "16–32× smaller than full-precision activations" saving.
+
+use crate::nn::{
+    Layer, LayerError, Residual, ResidualData, ResidualKind, Submersivity,
+};
+use crate::tensor::{BitTensor, Tensor};
+
+/// Elementwise LeakyReLU with slope `alpha` on the negative side.
+pub struct LeakyRelu {
+    pub alpha: f32,
+}
+
+impl LeakyRelu {
+    pub fn new(alpha: f32) -> LeakyRelu {
+        assert!(alpha != 0.0, "alpha = 0 (plain ReLU) is not submersive");
+        LeakyRelu { alpha }
+    }
+
+    fn signs_of<'a>(&self, res: &'a Residual) -> SignView<'a> {
+        match &res.kind {
+            ResidualData::Signs(b) => SignView::Bits(b),
+            ResidualData::Input(x) => SignView::Input(x),
+            other => panic!("LeakyRelu residual must be Signs or Input, got {other:?}"),
+        }
+    }
+}
+
+enum SignView<'a> {
+    Bits(&'a BitTensor),
+    Input(&'a Tensor),
+}
+
+impl SignView<'_> {
+    #[inline(always)]
+    fn non_negative(&self, i: usize) -> bool {
+        match self {
+            SignView::Bits(b) => b.get(i),
+            SignView::Input(x) => x.data()[i] >= 0.0,
+        }
+    }
+}
+
+impl Layer for LeakyRelu {
+    fn name(&self) -> String {
+        format!("leaky_relu({})", self.alpha)
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>, LayerError> {
+        Ok(in_shape.to_vec())
+    }
+
+    fn forward_res(&self, x: &Tensor, kind: ResidualKind) -> (Tensor, Residual) {
+        let a = self.alpha;
+        let y = Tensor::from_vec(
+            x.data().iter().map(|&v| if v >= 0.0 { v } else { a * v }).collect(),
+            x.shape(),
+        );
+        // Even Backprop only needs the signs here; storing bits for both
+        // tiers reflects what a careful implementation (e.g. the paper's
+        // JAX one) would do. The *savings* relative to Backprop come from
+        // the conv layers, whose Full residual is the entire input.
+        let res = Residual {
+            in_shape: x.shape().to_vec(),
+            kind: ResidualData::Signs(BitTensor::from_signs(x)),
+        };
+        let _ = kind;
+        (y, res)
+    }
+
+    fn vjp_input(&self, res: &Residual, grad_out: &Tensor) -> Tensor {
+        let signs = self.signs_of(res);
+        let a = self.alpha;
+        let data = grad_out
+            .data()
+            .iter()
+            .enumerate()
+            .map(|(i, &g)| if signs.non_negative(i) { g } else { a * g })
+            .collect();
+        Tensor::from_vec(data, grad_out.shape())
+    }
+
+    fn vjp_params(&self, _x: &Tensor, _grad_out: &Tensor) -> Vec<Tensor> {
+        Vec::new()
+    }
+
+    fn vijp(&self, res: &Residual, h_in: &Tensor) -> Result<Tensor, LayerError> {
+        // Diagonal Jacobian ⇒ the right-inverse is the reciprocal diagonal.
+        let signs = self.signs_of(res);
+        let inv_a = 1.0 / self.alpha;
+        let data = h_in
+            .data()
+            .iter()
+            .enumerate()
+            .map(|(i, &h)| if signs.non_negative(i) { h } else { inv_a * h })
+            .collect();
+        Ok(Tensor::from_vec(data, h_in.shape()))
+    }
+
+    fn jvp_input(&self, x: &Tensor, u: &Tensor) -> Tensor {
+        let a = self.alpha;
+        let data = x
+            .data()
+            .iter()
+            .zip(u.data())
+            .map(|(&xv, &uv)| if xv >= 0.0 { uv } else { a * uv })
+            .collect();
+        Tensor::from_vec(data, u.shape())
+    }
+
+    fn jvp_params(&self, x: &Tensor, _dparams: &[Tensor]) -> Tensor {
+        Tensor::zeros(x.shape())
+    }
+
+    fn inverse(&self, y: &Tensor) -> Result<Tensor, LayerError> {
+        // α > 0 preserves signs, so the inverse is exact.
+        if self.alpha < 0.0 {
+            return Err(LayerError::NotInvertible {
+                layer: self.name(),
+                reason: "negative slope does not preserve signs".into(),
+            });
+        }
+        let inv_a = 1.0 / self.alpha;
+        Ok(Tensor::from_vec(
+            y.data()
+                .iter()
+                .map(|&v| if v >= 0.0 { v } else { inv_a * v })
+                .collect(),
+            y.shape(),
+        ))
+    }
+
+    fn submersivity(&self) -> Submersivity {
+        Submersivity::Submersive { fast_path: true }
+    }
+
+    fn params(&self) -> Vec<&Tensor> {
+        Vec::new()
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::testutil;
+    use crate::tensor::assert_close;
+    use crate::util::Rng;
+
+    #[test]
+    fn forward_values() {
+        let l = LeakyRelu::new(0.1);
+        let x = Tensor::from_vec(vec![2.0, -3.0, 0.0], &[3]);
+        let y = l.forward(&x);
+        assert_eq!(y.data(), &[2.0, -0.3, 0.0]);
+    }
+
+    #[test]
+    fn vjp_and_jvp_adjoint() {
+        let l = LeakyRelu::new(0.2);
+        let mut rng = Rng::new(0);
+        let x = Tensor::randn(&[2, 5, 5, 3], 1.0, &mut rng);
+        testutil::check_vjp_input_against_fd(&l, &x, 60, 1e-3);
+    }
+
+    #[test]
+    fn vijp_right_inverse() {
+        let l = LeakyRelu::new(0.3);
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[2, 4, 4, 2], 1.0, &mut rng);
+        testutil::check_vijp_right_inverse(&l, &x, 61, 1e-4);
+    }
+
+    #[test]
+    fn inverse_exact() {
+        let l = LeakyRelu::new(0.25);
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&[64], 1.0, &mut rng);
+        let y = l.forward(&x);
+        assert_close(&l.inverse(&y).unwrap(), &x, 1e-5, "lrelu inverse");
+    }
+
+    #[test]
+    fn residual_is_bits() {
+        let l = LeakyRelu::new(0.1);
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[1024], 1.0, &mut rng);
+        let (_, res) = l.forward_res(&x, ResidualKind::Full);
+        // 1024 bits = 128 bytes, a 32x saving vs the 4096-byte input.
+        assert_eq!(crate::nn::residual_bytes(&res), 128);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_alpha_rejected() {
+        LeakyRelu::new(0.0);
+    }
+}

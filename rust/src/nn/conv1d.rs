@@ -1,0 +1,700 @@
+//! 1-D convolution (channel-last) with **fragmental gradient
+//! checkpointing** (paper §5.1, Appendix 10, Algorithm 3).
+//!
+//! Layout: input `x ∈ [N, L, Cin]`, kernel `w ∈ [k, Cin, Cout]`, output
+//! `x' ∈ [N, L', Cout]` with `L' = (L + 2p − k)/s + 1`:
+//!
+//! `x'[n,i',c'] = Σ_{j,c} w[j,c,c'] · x[n, s·i'+j−p, c]`
+//!
+//! Two regimes:
+//! * `s > p` (+ pivot-tap triangularity): submersive, same elimination as
+//!   2-D (Lemma 1) — vijp works directly.
+//! * `s = 1, p = 1` (the paper's Fig.-3 resolution-preserving setting):
+//!   **not** submersive (the Jacobian has a non-trivial cokernel). The
+//!   output cotangent is reconstructed from stored *fragments*: the first
+//!   `k−1` spatial slices of each block of `B` positions (Alg. 3), plus
+//!   the tap-0 triangularity assumptions of Appendix 10
+//!   (`w[0,c,c'] = 0 for c < c'`, `w[0,c',c'] ≠ 0`).
+
+use crate::nn::{
+    Fragment, Layer, LayerError, Residual, ResidualData, ResidualKind, Submersivity,
+};
+use crate::tensor::{ops, Tensor};
+use crate::util::Rng;
+
+use super::conv2d::DIAG_FLOOR;
+
+/// A channel-last 1-D convolution layer.
+pub struct Conv1d {
+    /// Kernel `[k, Cin, Cout]`.
+    pub w: Tensor,
+    pub bias: Option<Tensor>,
+    pub k: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub stride: usize,
+    pub pad: usize,
+    label: String,
+}
+
+impl Conv1d {
+    pub fn new(
+        k: usize,
+        cin: usize,
+        cout: usize,
+        stride: usize,
+        pad: usize,
+        bias: bool,
+        rng: &mut Rng,
+    ) -> Conv1d {
+        assert!(k > 0 && stride > 0);
+        let fan_in = (k * cin) as f32;
+        let w = Tensor::randn(&[k, cin, cout], (2.0 / fan_in).sqrt(), rng);
+        Conv1d {
+            w,
+            bias: bias.then(|| Tensor::zeros(&[cout])),
+            k,
+            cin,
+            cout,
+            stride,
+            pad,
+            label: format!("conv1d(k={k},s={stride},p={pad},{cin}->{cout})"),
+        }
+    }
+
+    /// Init + project onto the fragmental constraint set (Appendix 10):
+    /// tap-0 channel triangularity with a unit-ish diagonal.
+    pub fn new_fragmental(
+        k: usize,
+        cin: usize,
+        cout: usize,
+        rng: &mut Rng,
+    ) -> Conv1d {
+        let mut conv = Conv1d::new(k, cin, cout, 1, 1, false, rng);
+        for c in 0..cout.min(cin) {
+            let idx = (c) * cout + c; // tap 0
+            conv.w.data_mut()[idx] = 1.0 + conv.w.data()[idx];
+        }
+        conv.project_submersive();
+        conv
+    }
+
+    /// Init + project onto the Lemma-1 (submersive, s>p) constraint set.
+    pub fn new_submersive(
+        k: usize,
+        cin: usize,
+        cout: usize,
+        stride: usize,
+        pad: usize,
+        rng: &mut Rng,
+    ) -> Conv1d {
+        let mut conv = Conv1d::new(k, cin, cout, stride, pad, false, rng);
+        for c in 0..cout.min(cin) {
+            let idx = (pad * cin + c) * cout + c;
+            conv.w.data_mut()[idx] = 1.0 + conv.w.data()[idx];
+        }
+        conv.project_submersive();
+        conv
+    }
+
+    /// Which kernel tap is the elimination pivot? `p` in the submersive
+    /// regime (Lemma 1), `0` in the fragmental regime (Appendix 10).
+    fn pivot_tap(&self) -> usize {
+        if self.stride > self.pad {
+            self.pad
+        } else {
+            0
+        }
+    }
+
+    fn out_len(&self, l: usize) -> Result<usize, LayerError> {
+        let (k, s, p) = (self.k, self.stride, self.pad);
+        if l + 2 * p < k {
+            return Err(LayerError::Shape {
+                layer: self.label.clone(),
+                reason: format!("input length {l} < kernel {k} with pad {p}"),
+            });
+        }
+        Ok((l + 2 * p - k) / s + 1)
+    }
+
+    fn conv_with(&self, x: &Tensor, wdata: &[f32], bias: Option<&Tensor>) -> Tensor {
+        assert_eq!(x.rank(), 3, "conv1d expects [N,L,C]");
+        assert_eq!(x.shape()[2], self.cin);
+        let (n, l) = (x.shape()[0], x.shape()[1]);
+        let lo = self.out_len(l).expect("shape checked");
+        let (k, s, p, cin, cout) = (self.k, self.stride, self.pad, self.cin, self.cout);
+        let row_len = k * cin;
+        let mut out = Tensor::zeros(&[n, lo, cout]);
+        let mut patches = Tensor::zeros(&[lo, row_len]);
+        let xd = x.data();
+        for img in 0..n {
+            let pd = patches.data_mut();
+            for a in 0..lo {
+                for j in 0..k {
+                    let ii = (s * a + j) as isize - p as isize;
+                    let dst = a * row_len + j * cin;
+                    if ii >= 0 && (ii as usize) < l {
+                        let src = (img * l + ii as usize) * cin;
+                        pd[dst..dst + cin].copy_from_slice(&xd[src..src + cin]);
+                    } else {
+                        pd[dst..dst + cin].fill(0.0);
+                    }
+                }
+            }
+            ops::matmul_into(
+                patches.data(),
+                wdata,
+                &mut out.data_mut()[img * lo * cout..(img + 1) * lo * cout],
+                lo,
+                row_len,
+                cout,
+            );
+        }
+        if let Some(b) = bias {
+            for chunk in out.data_mut().chunks_mut(cout) {
+                for (o, bv) in chunk.iter_mut().zip(b.data()) {
+                    *o += bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transpose convolution: `h[n,i,c] = Σ_{j,c'} w[j,c,c'] h'[n,(i−j+p)/s,c']`.
+    fn transpose_conv(&self, g: &Tensor, in_shape: &[usize]) -> Tensor {
+        let (n, l) = (in_shape[0], in_shape[1]);
+        let lo = g.shape()[1];
+        let (k, s, p, cin, cout) = (self.k, self.stride, self.pad, self.cin, self.cout);
+        let mut out = Tensor::zeros(&[n, l, cin]);
+        let od = out.data_mut();
+        let gd = g.data();
+        let wd = self.w.data();
+        for img in 0..n {
+            for a in 0..lo {
+                let grow = &gd[(img * lo + a) * cout..(img * lo + a + 1) * cout];
+                for j in 0..k {
+                    let ii = (s * a + j) as isize - p as isize;
+                    if ii < 0 || ii as usize >= l {
+                        continue;
+                    }
+                    let dst = (img * l + ii as usize) * cin;
+                    for c in 0..cin {
+                        let wrow = &wd[(j * cin + c) * cout..(j * cin + c + 1) * cout];
+                        let mut acc = 0.0f32;
+                        for c2 in 0..cout {
+                            acc += wrow[c2] * grow[c2];
+                        }
+                        od[dst + c] += acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Submersive-regime elimination (1-D analogue of the 2-D vijp).
+    fn vijp_eliminate(&self, h: &Tensor, out_shape: &[usize]) -> Result<Tensor, LayerError> {
+        if let Submersivity::NonSubmersive { reason, .. } = self.submersivity() {
+            return Err(LayerError::NotSubmersive {
+                layer: self.label.clone(),
+                reason,
+            });
+        }
+        let (n, ll) = (h.shape()[0], h.shape()[1]);
+        let (lo, cout) = (out_shape[1], out_shape[2]);
+        let (k, s, p, cin) = (self.k, self.stride, self.pad, self.cin);
+        if s * (lo - 1) >= ll {
+            return Err(LayerError::NotSubmersive {
+                layer: self.label.clone(),
+                reason: format!("spatial bound violated: n={ll} !> s(n'-1)={}", s * (lo - 1)),
+            });
+        }
+        let mut hp = Tensor::zeros(&[n, lo, cout]);
+        let wd = self.w.data();
+        let hd = h.data();
+        let reach = (k - 1 - p.min(k - 1)) / s;
+        for img in 0..n {
+            for a in 0..lo {
+                for co in 0..cout {
+                    let mut acc = hd[(img * ll + s * a) * cin + co];
+                    for a2 in a.saturating_sub(reach)..=a {
+                        let j = s * (a - a2) + p;
+                        if j >= k {
+                            continue;
+                        }
+                        let c_end = if a2 == a { co } else { cout };
+                        let hprow = (img * lo + a2) * cout;
+                        let wrow = (j * cin + co) * cout;
+                        let hpd = hp.data();
+                        for c2 in 0..c_end {
+                            acc -= wd[wrow + c2] * hpd[hprow + c2];
+                        }
+                    }
+                    let diag = wd[(p * cin + co) * cout + co];
+                    hp.data_mut()[(img * lo + a) * cout + co] = acc / diag;
+                }
+            }
+        }
+        Ok(hp)
+    }
+
+    /// Is this layer in the fragmental-checkpointing regime of §5.1
+    /// (s = 1, p = 1, tap-0 triangular with non-zero diagonal)?
+    pub fn fragmental_ready(&self) -> Result<(), String> {
+        if self.stride != 1 || self.pad != 1 {
+            return Err(format!(
+                "fragmental reconstruction implemented for s=1, p=1 (got s={}, p={})",
+                self.stride, self.pad
+            ));
+        }
+        if self.k < 2 {
+            return Err("fragmental reconstruction needs k ≥ 2".into());
+        }
+        if self.cout > self.cin {
+            return Err(format!(
+                "tap-0 triangularity needs Cout ≤ Cin ({} > {})",
+                self.cout, self.cin
+            ));
+        }
+        let wd = self.w.data();
+        for co in 0..self.cout {
+            if wd[co * self.cout + co].abs() < 1e-8 {
+                return Err(format!("zero tap-0 diagonal at channel {co}"));
+            }
+            for ci in 0..co {
+                if wd[ci * self.cout + co] != 0.0 {
+                    return Err(format!(
+                        "tap-0 triangularity violated at w[0,{ci},{co}]"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Layer for Conv1d {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>, LayerError> {
+        if in_shape.len() != 3 || in_shape[2] != self.cin {
+            return Err(LayerError::Shape {
+                layer: self.label.clone(),
+                reason: format!("expected [N,L,{}], got {in_shape:?}", self.cin),
+            });
+        }
+        Ok(vec![in_shape[0], self.out_len(in_shape[1])?, self.cout])
+    }
+
+    fn forward_res(&self, x: &Tensor, kind: ResidualKind) -> (Tensor, Residual) {
+        let y = self.conv_with(x, self.w.data(), self.bias.as_ref());
+        let res = Residual {
+            in_shape: x.shape().to_vec(),
+            kind: match kind {
+                ResidualKind::Full => ResidualData::Input(x.clone()),
+                ResidualKind::Minimal => ResidualData::None,
+            },
+        };
+        (y, res)
+    }
+
+    fn vjp_input(&self, res: &Residual, grad_out: &Tensor) -> Tensor {
+        self.transpose_conv(grad_out, &res.in_shape)
+    }
+
+    fn vjp_params(&self, x: &Tensor, grad_out: &Tensor) -> Vec<Tensor> {
+        let (n, l) = (x.shape()[0], x.shape()[1]);
+        let lo = self.out_len(l).expect("shapes validated");
+        let (k, s, p, cin, cout) = (self.k, self.stride, self.pad, self.cin, self.cout);
+        let mut dw = Tensor::zeros(&[k, cin, cout]);
+        let xd = x.data();
+        let gd = grad_out.data();
+        let dwd = dw.data_mut();
+        for img in 0..n {
+            for a in 0..lo {
+                let grow = &gd[(img * lo + a) * cout..(img * lo + a + 1) * cout];
+                for j in 0..k {
+                    let ii = (s * a + j) as isize - p as isize;
+                    if ii < 0 || ii as usize >= l {
+                        continue;
+                    }
+                    let xrow = &xd[(img * l + ii as usize) * cin..(img * l + ii as usize + 1) * cin];
+                    for c in 0..cin {
+                        let xv = xrow[c];
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let drow = &mut dwd[(j * cin + c) * cout..(j * cin + c + 1) * cout];
+                        for c2 in 0..cout {
+                            drow[c2] += xv * grow[c2];
+                        }
+                    }
+                }
+            }
+        }
+        let mut grads = vec![dw];
+        if self.bias.is_some() {
+            let mut db = Tensor::zeros(&[cout]);
+            for chunk in grad_out.data().chunks(cout) {
+                for (d, g) in db.data_mut().iter_mut().zip(chunk) {
+                    *d += g;
+                }
+            }
+            grads.push(db);
+        }
+        grads
+    }
+
+    fn vijp(&self, res: &Residual, h_in: &Tensor) -> Result<Tensor, LayerError> {
+        let out_shape = self.out_shape(&res.in_shape)?;
+        self.vijp_eliminate(h_in, &out_shape)
+    }
+
+    fn jvp_input(&self, _x: &Tensor, u: &Tensor) -> Tensor {
+        self.conv_with(u, self.w.data(), None)
+    }
+
+    fn jvp_params(&self, x: &Tensor, dparams: &[Tensor]) -> Tensor {
+        let mut out = self.conv_with(x, dparams[0].data(), None);
+        if self.bias.is_some() {
+            for chunk in out.data_mut().chunks_mut(self.cout) {
+                for (o, b) in chunk.iter_mut().zip(dparams[1].data()) {
+                    *o += b;
+                }
+            }
+        }
+        out
+    }
+
+    fn inverse(&self, _y: &Tensor) -> Result<Tensor, LayerError> {
+        Err(LayerError::NotInvertible {
+            layer: self.label.clone(),
+            reason: "1-D convolutions are used in the non-invertible Fig.-3 setting".into(),
+        })
+    }
+
+    fn submersivity(&self) -> Submersivity {
+        let (k, s, p) = (self.k, self.stride, self.pad);
+        if s <= p || k <= p {
+            // The Fig.-3 regime: reconstruction via fragments instead.
+            return Submersivity::NonSubmersive {
+                reason: format!("requires s > p and k > p (k={k}, s={s}, p={p})"),
+                fragmental_ok: self.fragmental_ready().is_ok(),
+            };
+        }
+        if self.cout > self.cin {
+            return Submersivity::NonSubmersive {
+                reason: format!("needs Cout ≤ Cin ({} > {})", self.cout, self.cin),
+                fragmental_ok: false,
+            };
+        }
+        let wd = self.w.data();
+        for co in 0..self.cout {
+            let diag = wd[(p * self.cin + co) * self.cout + co];
+            if diag.abs() < 1e-8 {
+                return Submersivity::NonSubmersive {
+                    reason: format!("zero diagonal tap w[p,{co},{co}]"),
+                    fragmental_ok: false,
+                };
+            }
+            for ci in 0..co {
+                if wd[(p * self.cin + ci) * self.cout + co] != 0.0 {
+                    return Submersivity::NonSubmersive {
+                        reason: format!("triangularity violated at w[p,{ci},{co}]"),
+                        fragmental_ok: false,
+                    };
+                }
+            }
+        }
+        Submersivity::Submersive {
+            fast_path: s + p >= k,
+        }
+    }
+
+    fn params(&self) -> Vec<&Tensor> {
+        match &self.bias {
+            Some(b) => vec![&self.w, b],
+            None => vec![&self.w],
+        }
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        match &mut self.bias {
+            Some(b) => vec![&mut self.w, b],
+            None => vec![&mut self.w],
+        }
+    }
+
+    fn flops_estimate(&self, in_shape: &[usize]) -> f64 {
+        match self.out_shape(in_shape) {
+            Ok(s) => 2.0 * (self.k * self.cin) as f64 * s.iter().product::<usize>() as f64,
+            Err(_) => 0.0,
+        }
+    }
+
+    fn project_submersive(&mut self) {
+        let tap = self.pivot_tap();
+        let (cin, cout) = (self.cin, self.cout);
+        let wd = self.w.data_mut();
+        for co in 0..cout {
+            for ci in 0..co.min(cin) {
+                wd[(tap * cin + ci) * cout + co] = 0.0;
+            }
+            if co < cin {
+                let idx = (tap * cin + co) * cout + co;
+                let d = wd[idx];
+                if d.abs() < DIAG_FLOOR {
+                    wd[idx] = if d >= 0.0 { DIAG_FLOOR } else { -DIAG_FLOOR };
+                }
+            }
+        }
+    }
+
+    /// Capture the first `k−1` spatial slices of each block of `h_out`
+    /// (Alg. 3's `h_init`). Block size must be > `k−1`.
+    fn fragment_capture(&self, h_out: &Tensor, block: usize) -> Result<Fragment, LayerError> {
+        self.fragmental_ready().map_err(|reason| LayerError::NoFragmental {
+            layer: self.label.clone(),
+            reason,
+        })?;
+        if block < self.k {
+            return Err(LayerError::NoFragmental {
+                layer: self.label.clone(),
+                reason: format!("block size {block} must be ≥ k = {}", self.k),
+            });
+        }
+        let (n, lo, cout) = (h_out.shape()[0], h_out.shape()[1], h_out.shape()[2]);
+        let keep = self.k - 1;
+        let n_blocks = (lo + block - 1) / block;
+        let mut slices = Tensor::zeros(&[n, n_blocks * keep, cout]);
+        let sd = slices.data_mut();
+        let hd = h_out.data();
+        for img in 0..n {
+            for b in 0..n_blocks {
+                for r in 0..keep {
+                    let src_i = b * block + r;
+                    let dst = (img * n_blocks * keep + b * keep + r) * cout;
+                    if src_i < lo {
+                        let src = (img * lo + src_i) * cout;
+                        sd[dst..dst + cout].copy_from_slice(&hd[src..src + cout]);
+                    }
+                }
+            }
+        }
+        Ok(Fragment {
+            slices,
+            block,
+            out_shape: h_out.shape().to_vec(),
+        })
+    }
+
+    /// Alg. 3: reconstruct the full output cotangent from the input
+    /// cotangent `h_in` and the stored fragments, block-parallel.
+    ///
+    /// Recursion (Appendix 10, Eq. 20, adapted to our kernel convention —
+    /// solving the tap-0 term):
+    /// `h'[i+1,c'] = (h[i,c'] − Σ_{c''<c'} w[0,c',c''] h'[i+1,c'']
+    ///               − Σ_{j≥1,c''} w[j,c',c''] h'[i+1−j,c'']) / w[0,c',c']`
+    fn fragment_reconstruct(
+        &self,
+        frag: &Fragment,
+        h_in: &Tensor,
+    ) -> Result<Tensor, LayerError> {
+        self.fragmental_ready().map_err(|reason| LayerError::NoFragmental {
+            layer: self.label.clone(),
+            reason,
+        })?;
+        let (n, lo, cout) = (
+            frag.out_shape[0],
+            frag.out_shape[1],
+            frag.out_shape[2],
+        );
+        let (k, cin) = (self.k, self.cin);
+        let ll = h_in.shape()[1];
+        let block = frag.block;
+        let keep = k - 1;
+        let n_blocks = (lo + block - 1) / block;
+        let mut hp = Tensor::zeros(&[n, lo, cout]);
+        let hd = h_in.data();
+        let wd = self.w.data();
+        let sd = frag.slices.data();
+        // The in-block recurrence compounds rounding error over up to B
+        // steps, so accumulate in f64 (the kernel-side Pallas version
+        // relies on the same trick being unnecessary only for small B).
+        let mut buf = vec![0f64; block * cout];
+        for img in 0..n {
+            for b in 0..n_blocks {
+                let lo_i = b * block;
+                let hi_i = ((b + 1) * block).min(lo);
+                // 1) restore the stored k-1 prefix slices of this block
+                for r in 0..keep {
+                    let i = lo_i + r;
+                    if i >= lo {
+                        continue;
+                    }
+                    let src = (img * n_blocks * keep + b * keep + r) * cout;
+                    for c in 0..cout {
+                        buf[r * cout + c] = sd[src + c] as f64;
+                    }
+                }
+                // 2) roll the recurrence forward inside the block; blocks
+                // are independent (the parallelism Alg. 3 exploits).
+                // h'[i,·] from the input-cotangent equation at i−1:
+                // h[i−1,c] = Σ_{j,c'} w[j,c,c'] h'[i−j, c']   (p = 1)
+                for i in lo_i + keep..hi_i {
+                    let hrow_i = i - 1;
+                    debug_assert!(hrow_i < ll);
+                    let r = i - lo_i;
+                    for co in 0..cout {
+                        let mut acc = hd[(img * ll + hrow_i) * cin + co] as f64;
+                        for c2 in 0..co {
+                            acc -= wd[co * cout + c2] as f64 * buf[r * cout + c2];
+                        }
+                        for j in 1..k {
+                            if j > i {
+                                break;
+                            }
+                            let wrow = (j * cin + co) * cout;
+                            let prow = (r - j) * cout;
+                            for c2 in 0..cout {
+                                acc -= wd[wrow + c2] as f64 * buf[prow + c2];
+                            }
+                        }
+                        buf[r * cout + co] = acc / wd[co * cout + co] as f64;
+                    }
+                }
+                // 3) write the block back in f32
+                let out = hp.data_mut();
+                for i in lo_i..hi_i {
+                    let dst = (img * lo + i) * cout;
+                    let r = i - lo_i;
+                    for c in 0..cout {
+                        out[dst + c] = buf[r * cout + c] as f32;
+                    }
+                }
+            }
+        }
+        Ok(hp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::testutil;
+    use crate::tensor::assert_close;
+
+    fn input(n: usize, l: usize, c: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed ^ 0xbeef);
+        Tensor::randn(&[n, l, c], 1.0, &mut rng)
+    }
+
+    #[test]
+    fn forward_shape_same_pad() {
+        let mut rng = Rng::new(0);
+        let conv = Conv1d::new(3, 4, 4, 1, 1, false, &mut rng);
+        let x = input(2, 16, 4, 0);
+        assert_eq!(conv.forward(&x).shape(), &[2, 16, 4]);
+    }
+
+    #[test]
+    fn vjp_input_adjoint() {
+        let mut rng = Rng::new(1);
+        let conv = Conv1d::new(3, 3, 5, 1, 1, false, &mut rng);
+        let x = input(2, 10, 3, 1);
+        testutil::check_vjp_input_against_fd(&conv, &x, 50, 1e-3);
+    }
+
+    #[test]
+    fn vjp_params_adjoint() {
+        let mut rng = Rng::new(2);
+        let conv = Conv1d::new(3, 3, 4, 2, 1, true, &mut rng);
+        let x = input(2, 11, 3, 2);
+        testutil::check_vjp_params_adjoint(&conv, &x, 51, 1e-3);
+    }
+
+    #[test]
+    fn vijp_right_inverse_submersive() {
+        let mut rng = Rng::new(3);
+        let conv = Conv1d::new_submersive(3, 4, 4, 2, 1, &mut rng);
+        assert!(conv.submersivity().is_submersive());
+        let x = input(2, 11, 4, 3);
+        testutil::check_vijp_right_inverse(&conv, &x, 52, 2e-3);
+    }
+
+    #[test]
+    fn fragmental_regime_detected() {
+        let mut rng = Rng::new(4);
+        let conv = Conv1d::new_fragmental(3, 4, 4, &mut rng);
+        match conv.submersivity() {
+            Submersivity::NonSubmersive { fragmental_ok, .. } => assert!(fragmental_ok),
+            s => panic!("expected NonSubmersive, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn fragment_roundtrip_exact() {
+        // THE §5.1 property: capture fragments of a random output
+        // cotangent, push it back through vjp_input, then reconstruct —
+        // must equal the original exactly (up to fp).
+        let mut rng = Rng::new(5);
+        for (k, block) in [(3usize, 4usize), (3, 8), (2, 4), (4, 8), (3, 16)] {
+            let conv = Conv1d::new_fragmental(k, 5, 5, &mut rng);
+            let x = input(2, 32, 5, 5 + k as u64);
+            let (y, res) = conv.forward_res(&x, ResidualKind::Minimal);
+            let hprime = Tensor::randn(y.shape(), 1.0, &mut rng);
+            let h = conv.vjp_input(&res, &hprime);
+            let frag = conv.fragment_capture(&hprime, block).unwrap();
+            let rec = conv.fragment_reconstruct(&frag, &h).unwrap();
+            assert_close(&rec, &hprime, 2e-3, &format!("fragment k={k} B={block}"));
+        }
+    }
+
+    #[test]
+    fn fragment_memory_ratio() {
+        // B=4, k=3 ⇒ store 2/4 = 50% (paper Fig. 3a); B=16 ⇒ 2/16 = 1/8.
+        let mut rng = Rng::new(6);
+        let conv = Conv1d::new_fragmental(3, 8, 8, &mut rng);
+        let x = input(1, 64, 8, 6);
+        let y = conv.forward(&x);
+        let f4 = conv.fragment_capture(&y, 4).unwrap();
+        let f16 = conv.fragment_capture(&y, 16).unwrap();
+        assert_eq!(f4.slices.bytes() * 2, y.bytes());
+        assert_eq!(f16.slices.bytes() * 8, y.bytes());
+    }
+
+    #[test]
+    fn fragment_capture_rejects_small_block() {
+        let mut rng = Rng::new(7);
+        let conv = Conv1d::new_fragmental(3, 4, 4, &mut rng);
+        let y = input(1, 16, 4, 7);
+        assert!(conv.fragment_capture(&y, 2).is_err());
+    }
+
+    #[test]
+    fn fragment_rejects_wrong_geometry() {
+        let mut rng = Rng::new(8);
+        let conv = Conv1d::new(3, 4, 4, 2, 1, false, &mut rng);
+        let y = input(1, 8, 4, 8);
+        assert!(matches!(
+            conv.fragment_capture(&y, 4),
+            Err(LayerError::NoFragmental { .. })
+        ));
+    }
+
+    #[test]
+    fn channel_reducing_fragmental() {
+        let mut rng = Rng::new(9);
+        let conv = Conv1d::new_fragmental(3, 6, 4, &mut rng);
+        let x = input(1, 24, 6, 9);
+        let (y, res) = conv.forward_res(&x, ResidualKind::Minimal);
+        let hprime = Tensor::randn(y.shape(), 1.0, &mut rng);
+        let h = conv.vjp_input(&res, &hprime);
+        let frag = conv.fragment_capture(&hprime, 8).unwrap();
+        let rec = conv.fragment_reconstruct(&frag, &h).unwrap();
+        assert_close(&rec, &hprime, 2e-3, "channel-reducing fragment");
+    }
+}

@@ -1,0 +1,783 @@
+//! 2-D convolution (channel-last) with the paper's submersive
+//! parameterisation and the **vijp** operator of §5 / Algorithm 2.
+//!
+//! Layout conventions (paper §3.1, tensor notation):
+//! * input  `x  ∈ [N, H, W, Cin]`
+//! * kernel `w  ∈ [k, k, Cin, Cout]`
+//! * output `x' ∈ [N, H', W', Cout]`, `H' = (H + 2p − k)/s + 1`
+//!
+//! `x'[n,i',j',c'] = Σ_{ki,kj,c} w[ki,kj,c,c'] · x[n, s·i'+ki−p, s·j'+kj−p, c]`
+//!
+//! Submersivity (Lemma 1) requires `k > p`, `s > p`, `H > s(H'−1)`,
+//! channel triangularity `w[p,p,c,c'] = 0 for c < c'` (⇒ `Cout ≤ Cin`) and
+//! non-zero diagonal `w[p,p,c',c'] ≠ 0`. Under these, the vijp is a
+//! Gaussian elimination whose pivots are the fixed diagonal taps; when
+//! additionally `s + p ≥ k` the elimination decouples across spatial
+//! positions entirely (the paper's *fully parallel* vijp, Alg. 2).
+
+use crate::nn::{
+    Layer, LayerError, Residual, ResidualData, ResidualKind, Submersivity,
+};
+use crate::tensor::{ops, Tensor};
+use crate::util::Rng;
+
+/// Minimum |diagonal tap| enforced by the submersive projection.
+pub const DIAG_FLOOR: f32 = 0.05;
+
+/// A channel-last 2-D convolution layer.
+pub struct Conv2d {
+    /// Kernel `[k, k, Cin, Cout]`.
+    pub w: Tensor,
+    /// Optional per-output-channel bias `[Cout]`.
+    pub bias: Option<Tensor>,
+    pub k: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub stride: usize,
+    pub pad: usize,
+    label: String,
+}
+
+impl Conv2d {
+    /// He-style init (unconstrained — the paper's Fig. 4 "standard" model).
+    pub fn new(
+        k: usize,
+        cin: usize,
+        cout: usize,
+        stride: usize,
+        pad: usize,
+        bias: bool,
+        rng: &mut Rng,
+    ) -> Conv2d {
+        assert!(k > 0 && stride > 0);
+        let fan_in = (k * k * cin) as f32;
+        let w = Tensor::randn(&[k, k, cin, cout], (2.0 / fan_in).sqrt(), rng);
+        Conv2d {
+            w,
+            bias: bias.then(|| Tensor::zeros(&[cout])),
+            k,
+            cin,
+            cout,
+            stride,
+            pad,
+            label: format!("conv2d(k={k},s={stride},p={pad},{cin}->{cout})"),
+        }
+    }
+
+    /// He init followed by projection onto the Lemma-1 constraint set
+    /// (the paper's Fig. 4 "constrained / upper-triangular" model).
+    pub fn new_submersive(
+        k: usize,
+        cin: usize,
+        cout: usize,
+        stride: usize,
+        pad: usize,
+        bias: bool,
+        rng: &mut Rng,
+    ) -> Conv2d {
+        let mut conv = Conv2d::new(k, cin, cout, stride, pad, bias, rng);
+        // Strengthen the diagonal so the triangular solve is well
+        // conditioned from the start, then project.
+        for c in 0..cout.min(cin) {
+            let idx = conv.widx(pad, pad, c, c);
+            conv.w.data_mut()[idx] = 1.0 + conv.w.data()[idx];
+        }
+        conv.project_submersive();
+        conv
+    }
+
+    #[inline(always)]
+    fn widx(&self, ki: usize, kj: usize, ci: usize, co: usize) -> usize {
+        ((ki * self.k + kj) * self.cin + ci) * self.cout + co
+    }
+
+    /// Does the vijp elimination decouple across spatial positions?
+    /// True iff the only kernel tap congruent to `p (mod s)` below `k`
+    /// is `p` itself — guaranteed when `s + p ≥ k`.
+    pub fn vijp_fast_path(&self) -> bool {
+        self.stride + self.pad >= self.k
+    }
+
+    fn out_hw(&self, h: usize, w: usize) -> Result<(usize, usize), LayerError> {
+        let (k, s, p) = (self.k, self.stride, self.pad);
+        if h + 2 * p < k || w + 2 * p < k {
+            return Err(LayerError::Shape {
+                layer: self.label.clone(),
+                reason: format!("input {h}x{w} smaller than kernel {k} with pad {p}"),
+            });
+        }
+        Ok(((h + 2 * p - k) / s + 1, (w + 2 * p - k) / s + 1))
+    }
+
+    /// Gather one kernel tap's input slice: `buf[a*wo+b, ci] =
+    /// x[img, s·a+ki−p, s·b+kj−p, ci]` (zeros outside). Per-tap gathers
+    /// keep transient buffers at `H'·W'·Cin` instead of the full im2col
+    /// matrix (`k²`-fold larger), which matters for the paper's memory
+    /// accounting — see DESIGN.md §9.
+    fn gather_tap(
+        &self,
+        x: &Tensor,
+        img: usize,
+        ki: usize,
+        kj: usize,
+        ho: usize,
+        wo: usize,
+        buf: &mut [f32],
+    ) {
+        let (h, w, cin) = (x.shape()[1], x.shape()[2], self.cin);
+        let (s, p) = (self.stride, self.pad);
+        debug_assert_eq!(buf.len(), ho * wo * cin);
+        let xd = x.data();
+        let x_base = img * h * w * cin;
+        for a in 0..ho {
+            let ii = (s * a + ki) as isize - p as isize;
+            if ii < 0 || ii as usize >= h {
+                buf[a * wo * cin..(a + 1) * wo * cin].fill(0.0);
+                continue;
+            }
+            let xrow = x_base + (ii as usize) * w * cin;
+            for b in 0..wo {
+                let jj = (s * b + kj) as isize - p as isize;
+                let dst = (a * wo + b) * cin;
+                if jj >= 0 && (jj as usize) < w {
+                    let src = xrow + (jj as usize) * cin;
+                    buf[dst..dst + cin].copy_from_slice(&xd[src..src + cin]);
+                } else {
+                    buf[dst..dst + cin].fill(0.0);
+                }
+            }
+        }
+    }
+
+    /// Forward convolution with an arbitrary kernel (shared by `forward`,
+    /// `jvp_input` and `jvp_params`, which differ only in kernel/bias):
+    /// per-tap gather + `[H'W',Cin]·[Cin,Cout]` matmuls.
+    fn conv_with(&self, x: &Tensor, wdata: &[f32], bias: Option<&Tensor>) -> Tensor {
+        assert_eq!(x.rank(), 4, "conv2d expects [N,H,W,C]");
+        assert_eq!(x.shape()[3], self.cin, "channel mismatch");
+        let (n, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+        let (ho, wo) = self.out_hw(h, wd).expect("shape checked by caller");
+        let (k, cin, cout) = (self.k, self.cin, self.cout);
+        let mut out = Tensor::zeros(&[n, ho, wo, cout]);
+        let mut tap = Tensor::zeros(&[ho * wo, cin]);
+        for img in 0..n {
+            let base = img * ho * wo * cout;
+            for ki in 0..k {
+                for kj in 0..k {
+                    self.gather_tap(x, img, ki, kj, ho, wo, tap.data_mut());
+                    let w_tap = &wdata[(ki * k + kj) * cin * cout..(ki * k + kj + 1) * cin * cout];
+                    ops::matmul_into(
+                        tap.data(),
+                        w_tap,
+                        &mut out.data_mut()[base..base + ho * wo * cout],
+                        ho * wo,
+                        cin,
+                        cout,
+                    );
+                }
+            }
+        }
+        if let Some(b) = bias {
+            let bd = b.data();
+            for chunk in out.data_mut().chunks_mut(self.cout) {
+                for (o, bv) in chunk.iter_mut().zip(bd) {
+                    *o += bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transpose convolution (Eq. 12/13): scatter `g · wᵀ` back to input
+    /// positions. Shared by `vjp_input` and the vijp residual term.
+    fn transpose_conv(&self, g: &Tensor, in_shape: &[usize]) -> Tensor {
+        let (n, h, w) = (in_shape[0], in_shape[1], in_shape[2]);
+        let (ho, wo) = (g.shape()[1], g.shape()[2]);
+        let (k, s, p, cin, cout) = (self.k, self.stride, self.pad, self.cin, self.cout);
+        // Per tap: tmp[H'W',Cin] = g·w_tapᵀ, scattered back to input
+        // positions (the adjoint of the forward gather). The tap weight
+        // is transposed once into [Cout,Cin] so the matmul runs the
+        // vectorized AXPY kernel instead of length-Cout dot products
+        // (§Perf iteration 1: 2.4x faster vjp_input).
+        let mut out = Tensor::zeros(&[n, h, w, cin]);
+        let mut tmp = Tensor::zeros(&[ho * wo, cin]);
+        let mut wt = Tensor::zeros(&[cout, cin]);
+        for img in 0..n {
+            let g_img = &g.data()[img * ho * wo * cout..(img + 1) * ho * wo * cout];
+            let o_base = img * h * w * cin;
+            for ki in 0..k {
+                for kj in 0..k {
+                    let w_tap = &self.w.data()
+                        [(ki * k + kj) * cin * cout..(ki * k + kj + 1) * cin * cout];
+                    {
+                        let wtd = wt.data_mut();
+                        for ci in 0..cin {
+                            for co in 0..cout {
+                                wtd[co * cin + ci] = w_tap[ci * cout + co];
+                            }
+                        }
+                    }
+                    tmp.data_mut().fill(0.0);
+                    ops::matmul_into(g_img, wt.data(), tmp.data_mut(), ho * wo, cout, cin);
+                    let od = out.data_mut();
+                    let td = tmp.data();
+                    for a in 0..ho {
+                        let ii = (s * a + ki) as isize - p as isize;
+                        if ii < 0 || ii as usize >= h {
+                            continue;
+                        }
+                        for b in 0..wo {
+                            let jj = (s * b + kj) as isize - p as isize;
+                            if jj < 0 || jj as usize >= w {
+                                continue;
+                            }
+                            let src = (a * wo + b) * cin;
+                            let dst = o_base + ((ii as usize) * w + jj as usize) * cin;
+                            for c in 0..cin {
+                                od[dst + c] += td[src + c];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The vijp elimination (proof of Lemma 1 / Alg. 2): recover the output
+    /// cotangent `h'` from the input cotangent `h`, where
+    /// `h = TransposeConv(h', w)`. Fast path (no spatial coupling) when
+    /// `s + p ≥ k`; otherwise a lexicographic sweep over (a, b) whose
+    /// dependencies point only to already-eliminated positions (a2 ≤ a,
+    /// b2 ≤ b — guaranteed by `s > p`).
+    fn vijp_eliminate(&self, h: &Tensor, out_shape: &[usize]) -> Result<Tensor, LayerError> {
+        if let Submersivity::NonSubmersive { reason, .. } = self.submersivity() {
+            return Err(LayerError::NotSubmersive {
+                layer: self.label.clone(),
+                reason,
+            });
+        }
+        let (n, hh, ww) = (h.shape()[0], h.shape()[1], h.shape()[2]);
+        let (ho, wo, cout) = (out_shape[1], out_shape[2], out_shape[3]);
+        let (k, s, p, cin) = (self.k, self.stride, self.pad, self.cin);
+        // Lemma 1 (i): every pivot row s·a must be a valid input index.
+        if s * (ho - 1) >= hh || s * (wo - 1) >= ww {
+            return Err(LayerError::NotSubmersive {
+                layer: self.label.clone(),
+                reason: format!("spatial bound violated: n={hh} !> s(n'-1)={}", s * (ho - 1)),
+            });
+        }
+        let mut hp = Tensor::zeros(&[n, ho, wo, cout]);
+        let wd = self.w.data();
+        let hd = h.data();
+
+        if self.vijp_fast_path() {
+            // Fully parallel form (Alg. 2): no spatial coupling, so the
+            // channel-triangular solve vectorizes across all positions —
+            // the same schedule the Pallas kernel uses (§Perf iter. 4).
+            let npos = ho * wo;
+            let mut cols = Tensor::zeros(&[cout, npos]); // channel-major
+            for img in 0..n {
+                {
+                    let cd = cols.data_mut();
+                    // Gather pivot rows hs[a,b,co] = h[s·a, s·b, co].
+                    for a in 0..ho {
+                        for b in 0..wo {
+                            let src = ((img * hh + s * a) * ww + s * b) * cin;
+                            let pos = a * wo + b;
+                            for co in 0..cout {
+                                cd[co * npos + pos] = hd[src + co];
+                            }
+                        }
+                    }
+                    // Triangular solve, vectorized over positions.
+                    for co in 0..cout {
+                        let (done, rest) = cd.split_at_mut(co * npos);
+                        let cur = &mut rest[..npos];
+                        for c2 in 0..co {
+                            let wv = wd[((p * k + p) * cin + co) * cout + c2];
+                            if wv == 0.0 {
+                                continue;
+                            }
+                            let prev = &done[c2 * npos..(c2 + 1) * npos];
+                            for (cv, pv) in cur.iter_mut().zip(prev) {
+                                *cv -= wv * pv;
+                            }
+                        }
+                        let diag = wd[((p * k + p) * cin + co) * cout + co];
+                        let inv = 1.0 / diag;
+                        for cv in cur.iter_mut() {
+                            *cv *= inv;
+                        }
+                    }
+                }
+                // Scatter back to channel-last layout.
+                let out = hp.data_mut();
+                let cd = cols.data();
+                for pos in 0..npos {
+                    let dst = (img * npos + pos) * cout;
+                    for co in 0..cout {
+                        out[dst + co] = cd[co * npos + pos];
+                    }
+                }
+            }
+            return Ok(hp);
+        }
+
+        // Max spatial back-reach of the elimination, in output positions.
+        let reach = (k - 1 - p.min(k - 1)) / s; // floor((k-1-p)/s)
+        for img in 0..n {
+            for a in 0..ho {
+                for b in 0..wo {
+                    for co in 0..cout {
+                        // Pivot equation: h[n, s·a, s·b, channel=co].
+                        let mut acc =
+                            hd[((img * hh + s * a) * ww + s * b) * cin + co];
+                        // Subtract contributions of already-solved h' entries.
+                        let a2lo = a.saturating_sub(reach);
+                        let b2lo = b.saturating_sub(reach);
+                        for a2 in a2lo..=a {
+                            let ki = s * (a - a2) + p;
+                            if ki >= k {
+                                continue;
+                            }
+                            for b2 in b2lo..=b {
+                                let kj = s * (b - b2) + p;
+                                if kj >= k {
+                                    continue;
+                                }
+                                let last = a2 == a && b2 == b;
+                                // Strictly-earlier positions contribute all
+                                // channels; the pivot position contributes
+                                // channels below the diagonal only.
+                                let c_end = if last { co } else { cout };
+                                let hprow =
+                                    ((img * ho + a2) * wo + b2) * cout;
+                                let wrow = ((ki * k + kj) * cin + co) * cout;
+                                let hpd = hp.data();
+                                let mut sub = 0.0f32;
+                                for c2 in 0..c_end {
+                                    sub += wd[wrow + c2] * hpd[hprow + c2];
+                                }
+                                acc -= sub;
+                            }
+                        }
+                        let diag = wd[((p * k + p) * cin + co) * cout + co];
+                        let idx = ((img * ho + a) * wo + b) * cout + co;
+                        hp.data_mut()[idx] = acc / diag;
+                    }
+                }
+            }
+        }
+        Ok(hp)
+    }
+}
+
+impl Layer for Conv2d {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>, LayerError> {
+        if in_shape.len() != 4 || in_shape[3] != self.cin {
+            return Err(LayerError::Shape {
+                layer: self.label.clone(),
+                reason: format!("expected [N,H,W,{}], got {in_shape:?}", self.cin),
+            });
+        }
+        let (ho, wo) = self.out_hw(in_shape[1], in_shape[2])?;
+        Ok(vec![in_shape[0], ho, wo, self.cout])
+    }
+
+    fn forward_res(&self, x: &Tensor, kind: ResidualKind) -> (Tensor, Residual) {
+        let y = self.conv_with(x, self.w.data(), self.bias.as_ref());
+        let res = Residual {
+            in_shape: x.shape().to_vec(),
+            kind: match kind {
+                // Backprop must keep the full input for ∂x'/∂w.
+                ResidualKind::Full => ResidualData::Input(x.clone()),
+                // The input-vjp of a convolution needs only the weights —
+                // Moonwalk Phase I stores *nothing* (paper §4.3).
+                ResidualKind::Minimal => ResidualData::None,
+            },
+        };
+        (y, res)
+    }
+
+    fn vjp_input(&self, res: &Residual, grad_out: &Tensor) -> Tensor {
+        self.transpose_conv(grad_out, &res.in_shape)
+    }
+
+    fn vjp_params(&self, x: &Tensor, grad_out: &Tensor) -> Vec<Tensor> {
+        let (n, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+        let (ho, wo) = self.out_hw(h, w).expect("shapes validated");
+        let (k, cin, cout) = (self.k, self.cin, self.cout);
+        let mut dw = Tensor::zeros(&[k, k, cin, cout]);
+        let mut tap = Tensor::zeros(&[ho * wo, cin]);
+        for img in 0..n {
+            let g_img =
+                &grad_out.data()[img * ho * wo * cout..(img + 1) * ho * wo * cout];
+            for ki in 0..k {
+                for kj in 0..k {
+                    self.gather_tap(x, img, ki, kj, ho, wo, tap.data_mut());
+                    // dw[ki,kj] += tapᵀ · g
+                    ops::matmul_tn_into(
+                        tap.data(),
+                        g_img,
+                        &mut dw.data_mut()
+                            [(ki * k + kj) * cin * cout..(ki * k + kj + 1) * cin * cout],
+                        ho * wo,
+                        cin,
+                        cout,
+                    );
+                }
+            }
+        }
+        let mut grads = vec![dw];
+        if self.bias.is_some() {
+            let mut db = Tensor::zeros(&[self.cout]);
+            for chunk in grad_out.data().chunks(self.cout) {
+                for (d, g) in db.data_mut().iter_mut().zip(chunk) {
+                    *d += g;
+                }
+            }
+            grads.push(db);
+        }
+        grads
+    }
+
+    fn vijp(&self, res: &Residual, h_in: &Tensor) -> Result<Tensor, LayerError> {
+        let out_shape = self.out_shape(&res.in_shape)?;
+        self.vijp_eliminate(h_in, &out_shape)
+    }
+
+    fn jvp_input(&self, _x: &Tensor, u: &Tensor) -> Tensor {
+        // The convolution is linear in its input.
+        self.conv_with(u, self.w.data(), None)
+    }
+
+    fn jvp_params(&self, x: &Tensor, dparams: &[Tensor]) -> Tensor {
+        let dw = &dparams[0];
+        let mut out = self.conv_with(x, dw.data(), None);
+        if self.bias.is_some() {
+            let db = &dparams[1];
+            for chunk in out.data_mut().chunks_mut(self.cout) {
+                for (o, b) in chunk.iter_mut().zip(db.data()) {
+                    *o += b;
+                }
+            }
+        }
+        out
+    }
+
+    fn inverse(&self, y: &Tensor) -> Result<Tensor, LayerError> {
+        // Only the 1×1 / s=1 / p=0 / Cin=Cout triangular configuration is
+        // exactly invertible (per-pixel triangular solve); used by the
+        // RevBackprop baseline.
+        if !(self.k == 1 && self.stride == 1 && self.pad == 0 && self.cin == self.cout) {
+            return Err(LayerError::NotInvertible {
+                layer: self.label.clone(),
+                reason: "only k=1, s=1, p=0, Cin=Cout convolutions are invertible".into(),
+            });
+        }
+        let c = self.cin;
+        let wd = self.w.data(); // [1,1,c,c] => [c,c] row ci, col co
+        for co in 0..c {
+            if wd[co * c + co].abs() < 1e-8 {
+                return Err(LayerError::NotInvertible {
+                    layer: self.label.clone(),
+                    reason: format!("zero diagonal at channel {co}"),
+                });
+            }
+        }
+        let mut x = Tensor::zeros(y.shape());
+        let yd = y.data();
+        let xd = x.data_mut();
+        let bias: Option<&[f32]> = self.bias.as_ref().map(|b| b.data());
+        // y[c'] = Σ_{ci} w[ci,c'] x[ci] (+ b); triangular (w[ci,c']=0, ci<c')
+        // ⇒ back-substitute from the last channel.
+        for pix in 0..y.len() / c {
+            let yrow = &yd[pix * c..(pix + 1) * c];
+            let xrow = &mut xd[pix * c..(pix + 1) * c];
+            for co in (0..c).rev() {
+                let mut acc = yrow[co] - bias.map_or(0.0, |b| b[co]);
+                for ci in co + 1..c {
+                    acc -= wd[ci * c + co] * xrow[ci];
+                }
+                xrow[co] = acc / wd[co * c + co];
+            }
+        }
+        Ok(x)
+    }
+
+    fn submersivity(&self) -> Submersivity {
+        let (k, s, p) = (self.k, self.stride, self.pad);
+        // Lemma 1 (i): spatial bounds (the n > s(n'−1) part is checked at
+        // vijp time against the concrete input shape).
+        if k <= p {
+            return Submersivity::NonSubmersive {
+                reason: format!("requires k > p (k={k}, p={p})"),
+                fragmental_ok: false,
+            };
+        }
+        if s <= p {
+            return Submersivity::NonSubmersive {
+                reason: format!("requires s > p (s={s}, p={p})"),
+                fragmental_ok: false, // 2-D fragmental not implemented
+            };
+        }
+        if self.cout > self.cin {
+            return Submersivity::NonSubmersive {
+                reason: format!(
+                    "channel triangularity needs Cout ≤ Cin ({} > {})",
+                    self.cout, self.cin
+                ),
+                fragmental_ok: false,
+            };
+        }
+        // Lemma 1 (ii)+(iii): triangularity and diagonal support of the
+        // pivot tap w[p,p,·,·].
+        let wd = self.w.data();
+        for co in 0..self.cout {
+            let diag = wd[((p * k + p) * self.cin + co) * self.cout + co];
+            if diag.abs() < 1e-8 {
+                return Submersivity::NonSubmersive {
+                    reason: format!("zero diagonal tap w[p,p,{co},{co}]"),
+                    fragmental_ok: false,
+                };
+            }
+            for ci in 0..co {
+                let v = wd[((p * k + p) * self.cin + ci) * self.cout + co];
+                if v != 0.0 {
+                    return Submersivity::NonSubmersive {
+                        reason: format!(
+                            "triangularity violated: w[p,p,{ci},{co}] = {v} ≠ 0"
+                        ),
+                        fragmental_ok: false,
+                    };
+                }
+            }
+        }
+        Submersivity::Submersive {
+            fast_path: self.vijp_fast_path(),
+        }
+    }
+
+    fn params(&self) -> Vec<&Tensor> {
+        match &self.bias {
+            Some(b) => vec![&self.w, b],
+            None => vec![&self.w],
+        }
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        match &mut self.bias {
+            Some(b) => vec![&mut self.w, b],
+            None => vec![&mut self.w],
+        }
+    }
+
+    fn flops_estimate(&self, in_shape: &[usize]) -> f64 {
+        match self.out_shape(in_shape) {
+            Ok(s) => {
+                2.0 * (self.k * self.k * self.cin) as f64
+                    * s.iter().product::<usize>() as f64
+            }
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Project onto the Lemma-1 constraint set: zero the sub-triangular
+    /// entries of the pivot tap and keep the diagonal away from zero
+    /// (§6.4 "constrained convolutions").
+    fn project_submersive(&mut self) {
+        let (k, p, cin, cout) = (self.k, self.pad, self.cin, self.cout);
+        if k <= p {
+            return; // structurally non-submersive; nothing to project
+        }
+        let wd = self.w.data_mut();
+        for co in 0..cout {
+            for ci in 0..co.min(cin) {
+                wd[((p * k + p) * cin + ci) * cout + co] = 0.0;
+            }
+            if co < cin {
+                let idx = ((p * k + p) * cin + co) * cout + co;
+                let d = wd[idx];
+                if d.abs() < DIAG_FLOOR {
+                    wd[idx] = if d >= 0.0 { DIAG_FLOOR } else { -DIAG_FLOOR };
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::testutil;
+    use crate::tensor::assert_close;
+
+    fn sub_conv(k: usize, s: usize, p: usize, cin: usize, cout: usize, seed: u64) -> Conv2d {
+        let mut rng = Rng::new(seed);
+        Conv2d::new_submersive(k, cin, cout, s, p, false, &mut rng)
+    }
+
+    fn input(n: usize, h: usize, w: usize, c: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed ^ 0xdead);
+        Tensor::randn(&[n, h, w, c], 1.0, &mut rng)
+    }
+
+    #[test]
+    fn forward_known_values() {
+        // 1x1 conv is a per-pixel matmul — verify by hand.
+        let mut rng = Rng::new(0);
+        let mut conv = Conv2d::new(1, 2, 1, 1, 0, false, &mut rng);
+        conv.w.data_mut().copy_from_slice(&[2.0, 3.0]);
+        let x = Tensor::from_vec(vec![1.0, 10.0, 2.0, 20.0], &[1, 1, 2, 2]);
+        let y = conv.forward(&x);
+        assert_eq!(y.shape(), &[1, 1, 2, 1]);
+        assert_eq!(y.data(), &[32.0, 64.0]);
+    }
+
+    #[test]
+    fn forward_padding_and_stride_shape() {
+        let conv = sub_conv(3, 2, 1, 4, 4, 1);
+        let x = input(2, 9, 9, 4, 1);
+        let y = conv.forward(&x);
+        // (9 + 2 - 3)/2 + 1 = 5
+        assert_eq!(y.shape(), &[2, 5, 5, 4]);
+    }
+
+    #[test]
+    fn vjp_input_adjoint() {
+        let conv = sub_conv(3, 2, 1, 3, 3, 2);
+        let x = input(2, 7, 7, 3, 2);
+        testutil::check_vjp_input_against_fd(&conv, &x, 42, 1e-3);
+    }
+
+    #[test]
+    fn vjp_params_adjoint() {
+        let mut rng = Rng::new(5);
+        let conv = Conv2d::new(3, 3, 5, 2, 1, true, &mut rng);
+        let x = input(2, 6, 6, 3, 5);
+        testutil::check_vjp_params_adjoint(&conv, &x, 43, 1e-3);
+    }
+
+    #[test]
+    fn vijp_right_inverse_fast_path() {
+        // k=3, s=2, p=1 — the paper's fully-parallel configuration.
+        let conv = sub_conv(3, 2, 1, 4, 4, 3);
+        assert!(conv.vijp_fast_path());
+        let x = input(2, 9, 9, 4, 3);
+        testutil::check_vijp_right_inverse(&conv, &x, 44, 2e-3);
+    }
+
+    #[test]
+    fn vijp_right_inverse_channel_reducing() {
+        // Cout < Cin exercises the non-square channel solve.
+        let conv = sub_conv(3, 2, 1, 6, 3, 6);
+        let x = input(1, 9, 9, 6, 6);
+        testutil::check_vijp_right_inverse(&conv, &x, 45, 2e-3);
+    }
+
+    #[test]
+    fn vijp_right_inverse_spatially_coupled() {
+        // k=5, s=3, p=2: s+p=5 ≥ k → still fast; use k=5,s=3,p=1: s+p=4 < 5
+        // → tap j=p and j=p+s=4 both < k ⇒ real spatial coupling.
+        let conv = sub_conv(5, 3, 1, 3, 3, 7);
+        assert!(!conv.vijp_fast_path());
+        assert!(conv.submersivity().is_submersive());
+        let x = input(2, 13, 13, 3, 7);
+        testutil::check_vijp_right_inverse(&conv, &x, 46, 2e-3);
+    }
+
+    #[test]
+    fn vijp_stride1_same_pad_rejected() {
+        // s=1, p=1 violates s > p — the Fig. 3 non-submersive setting.
+        let mut rng = Rng::new(8);
+        let conv = Conv2d::new(3, 3, 3, 1, 1, false, &mut rng);
+        assert!(!conv.submersivity().is_submersive());
+        let x = input(1, 6, 6, 3, 8);
+        let (_, res) = conv.forward_res(&x, ResidualKind::Minimal);
+        let h = input(1, 6, 6, 3, 9);
+        assert!(matches!(
+            conv.vijp(&res, &h),
+            Err(LayerError::NotSubmersive { .. })
+        ));
+    }
+
+    #[test]
+    fn channel_expansion_rejected() {
+        let mut rng = Rng::new(9);
+        let conv = Conv2d::new(3, 3, 8, 2, 1, false, &mut rng);
+        assert!(!conv.submersivity().is_submersive());
+    }
+
+    #[test]
+    fn triangularity_violation_detected() {
+        let mut conv = sub_conv(3, 2, 1, 4, 4, 10);
+        // Break the constraint manually.
+        let idx = conv.widx(1, 1, 0, 2);
+        conv.w.data_mut()[idx] = 0.5;
+        assert!(!conv.submersivity().is_submersive());
+    }
+
+    #[test]
+    fn projection_idempotent_and_constraining() {
+        let mut rng = Rng::new(11);
+        let mut conv = Conv2d::new(3, 6, 6, 2, 1, false, &mut rng);
+        conv.project_submersive();
+        assert!(conv.submersivity().is_submersive());
+        let snapshot = conv.w.clone();
+        conv.project_submersive();
+        assert_eq!(conv.w, snapshot, "projection must be idempotent");
+    }
+
+    #[test]
+    fn inverse_1x1_triangular() {
+        let mut rng = Rng::new(12);
+        let conv = Conv2d::new_submersive(1, 4, 4, 1, 0, true, &mut rng);
+        let x = input(2, 5, 5, 4, 12);
+        let y = conv.forward(&x);
+        let xr = conv.inverse(&y).unwrap();
+        assert_close(&xr, &x, 1e-4, "1x1 conv inverse");
+    }
+
+    #[test]
+    fn inverse_strided_rejected() {
+        let conv = sub_conv(3, 2, 1, 4, 4, 13);
+        let x = input(1, 9, 9, 4, 13);
+        let y = conv.forward(&x);
+        assert!(matches!(
+            conv.inverse(&y),
+            Err(LayerError::NotInvertible { .. })
+        ));
+    }
+
+    #[test]
+    fn minimal_residual_stores_nothing() {
+        let conv = sub_conv(3, 2, 1, 4, 4, 14);
+        let x = input(1, 9, 9, 4, 14);
+        let (_, res_min) = conv.forward_res(&x, ResidualKind::Minimal);
+        let (_, res_full) = conv.forward_res(&x, ResidualKind::Full);
+        assert_eq!(crate::nn::residual_bytes(&res_min), 0);
+        assert_eq!(crate::nn::residual_bytes(&res_full), x.bytes());
+    }
+
+    #[test]
+    fn spatial_bound_violation_detected_at_vijp() {
+        // n = s(n'−1) exactly ⇒ pivot row out of range must be rejected.
+        // k=2, s=2, p=1: H' = (H + 2 - 2)/2 + 1 = H/2 + 1; H=4 → H'=3,
+        // s(H'-1)=4 = H ⇒ violation.
+        let mut rng = Rng::new(15);
+        let conv = Conv2d::new_submersive(2, 3, 3, 2, 1, false, &mut rng);
+        let x = input(1, 4, 4, 3, 15);
+        let (y, res) = conv.forward_res(&x, ResidualKind::Minimal);
+        let h = Tensor::zeros(x.shape());
+        let _ = y;
+        assert!(matches!(
+            conv.vijp(&res, &h),
+            Err(LayerError::NotSubmersive { .. })
+        ));
+    }
+}

@@ -1,0 +1,253 @@
+//! Dense (fully connected) layer `y = x·W + b`, flattening any input rank
+//! to `[N, Din]`. Submersive iff `W` has full column rank (generic when
+//! `Dout ≤ Din`); its vijp is the Moore–Penrose right-inverse
+//! `h' = (h·W)·(WᵀW)⁻¹`, computed by a dense Gram solve — illustrating
+//! the paper's point that vijp must be hand-derived per layer class (§7).
+
+use crate::nn::{
+    Layer, LayerError, Residual, ResidualData, ResidualKind, Submersivity,
+};
+use crate::tensor::{ops, Tensor};
+use crate::util::Rng;
+
+/// A dense layer with weight `[Din, Dout]` and bias `[Dout]`.
+pub struct Dense {
+    pub w: Tensor,
+    pub bias: Option<Tensor>,
+    pub din: usize,
+    pub dout: usize,
+    label: String,
+}
+
+impl Dense {
+    pub fn new(din: usize, dout: usize, bias: bool, rng: &mut Rng) -> Dense {
+        let w = Tensor::randn(&[din, dout], (2.0 / din as f32).sqrt(), rng);
+        Dense {
+            w,
+            bias: bias.then(|| Tensor::zeros(&[dout])),
+            din,
+            dout,
+            label: format!("dense({din}->{dout})"),
+        }
+    }
+
+    fn flat(&self, x: &Tensor) -> (usize, usize) {
+        let n = x.shape()[0];
+        let d: usize = x.shape()[1..].iter().product();
+        assert_eq!(d, self.din, "dense input dim {d} != {}", self.din);
+        (n, d)
+    }
+}
+
+impl Layer for Dense {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>, LayerError> {
+        let d: usize = in_shape[1..].iter().product();
+        if in_shape.is_empty() || d != self.din {
+            return Err(LayerError::Shape {
+                layer: self.label.clone(),
+                reason: format!("expected flattenable to [N,{}], got {in_shape:?}", self.din),
+            });
+        }
+        Ok(vec![in_shape[0], self.dout])
+    }
+
+    fn forward_res(&self, x: &Tensor, kind: ResidualKind) -> (Tensor, Residual) {
+        let (n, d) = self.flat(x);
+        let xm = Tensor::from_vec(x.data().to_vec(), &[n, d]);
+        let mut y = ops::matmul(&xm, &self.w);
+        if let Some(b) = &self.bias {
+            for chunk in y.data_mut().chunks_mut(self.dout) {
+                for (o, bv) in chunk.iter_mut().zip(b.data()) {
+                    *o += bv;
+                }
+            }
+        }
+        let res = Residual {
+            in_shape: x.shape().to_vec(),
+            kind: match kind {
+                ResidualKind::Full => ResidualData::Input(x.clone()),
+                // Like convolutions: the input-vjp is `g·Wᵀ` — no residual.
+                ResidualKind::Minimal => ResidualData::None,
+            },
+        };
+        (y, res)
+    }
+
+    fn vjp_input(&self, res: &Residual, grad_out: &Tensor) -> Tensor {
+        // h = g · Wᵀ  (matmul_nt contracts over the shared Dout axis)
+        let g = ops::matmul_nt(grad_out, &self.w);
+        g.reshaped_inplace(&res.in_shape)
+    }
+
+    fn vjp_params(&self, x: &Tensor, grad_out: &Tensor) -> Vec<Tensor> {
+        let (n, d) = self.flat(x);
+        let xm = Tensor::from_vec(x.data().to_vec(), &[n, d]);
+        let dw = ops::matmul_tn(&xm, grad_out);
+        let mut grads = vec![dw];
+        if self.bias.is_some() {
+            let mut db = Tensor::zeros(&[self.dout]);
+            for chunk in grad_out.data().chunks(self.dout) {
+                for (dv, g) in db.data_mut().iter_mut().zip(chunk) {
+                    *dv += g;
+                }
+            }
+            grads.push(db);
+        }
+        grads
+    }
+
+    fn vijp(&self, res: &Residual, h_in: &Tensor) -> Result<Tensor, LayerError> {
+        if self.dout > self.din {
+            return Err(LayerError::NotSubmersive {
+                layer: self.label.clone(),
+                reason: format!("Dout {} > Din {}", self.dout, self.din),
+            });
+        }
+        let n = res.in_shape[0];
+        let hm = Tensor::from_vec(h_in.data().to_vec(), &[n, self.din]);
+        // h' = (h·W) (WᵀW)⁻¹
+        let hw = ops::matmul(&hm, &self.w);
+        let gram = ops::matmul_tn(&self.w, &self.w);
+        ops::solve_right(&gram, &hw).map_err(|e| LayerError::NotSubmersive {
+            layer: self.label.clone(),
+            reason: format!("Gram solve failed: {e}"),
+        })
+    }
+
+    fn jvp_input(&self, _x: &Tensor, u: &Tensor) -> Tensor {
+        let n = u.shape()[0];
+        let um = Tensor::from_vec(u.data().to_vec(), &[n, self.din]);
+        ops::matmul(&um, &self.w)
+    }
+
+    fn jvp_params(&self, x: &Tensor, dparams: &[Tensor]) -> Tensor {
+        let (n, d) = self.flat(x);
+        let xm = Tensor::from_vec(x.data().to_vec(), &[n, d]);
+        let mut out = ops::matmul(&xm, &dparams[0]);
+        if self.bias.is_some() {
+            for chunk in out.data_mut().chunks_mut(self.dout) {
+                for (o, b) in chunk.iter_mut().zip(dparams[1].data()) {
+                    *o += b;
+                }
+            }
+        }
+        out
+    }
+
+    fn inverse(&self, y: &Tensor) -> Result<Tensor, LayerError> {
+        if self.din != self.dout {
+            return Err(LayerError::NotInvertible {
+                layer: self.label.clone(),
+                reason: "non-square weight".into(),
+            });
+        }
+        // x = (y - b) W⁻¹ ⇔ solve x W = (y - b).
+        let mut rhs = y.clone();
+        if let Some(b) = &self.bias {
+            for chunk in rhs.data_mut().chunks_mut(self.dout) {
+                for (o, bv) in chunk.iter_mut().zip(b.data()) {
+                    *o -= bv;
+                }
+            }
+        }
+        ops::solve_right(&self.w, &rhs).map_err(|e| LayerError::NotInvertible {
+            layer: self.label.clone(),
+            reason: format!("singular weight: {e}"),
+        })
+    }
+
+    fn submersivity(&self) -> Submersivity {
+        if self.dout > self.din {
+            return Submersivity::NonSubmersive {
+                reason: format!("Dout {} > Din {}", self.dout, self.din),
+                fragmental_ok: false,
+            };
+        }
+        // Full column rank is generic; certified at vijp time by the Gram
+        // solve's pivot check.
+        Submersivity::Submersive { fast_path: true }
+    }
+
+    fn flops_estimate(&self, in_shape: &[usize]) -> f64 {
+        2.0 * in_shape[0] as f64 * (self.din * self.dout) as f64
+    }
+
+    fn params(&self) -> Vec<&Tensor> {
+        match &self.bias {
+            Some(b) => vec![&self.w, b],
+            None => vec![&self.w],
+        }
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        match &mut self.bias {
+            Some(b) => vec![&mut self.w, b],
+            None => vec![&mut self.w],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::testutil;
+    use crate::tensor::assert_close;
+
+    #[test]
+    fn forward_flattens() {
+        let mut rng = Rng::new(0);
+        let dense = Dense::new(12, 3, true, &mut rng);
+        let x = Tensor::randn(&[2, 2, 3, 2], 1.0, &mut rng);
+        let y = dense.forward(&x);
+        assert_eq!(y.shape(), &[2, 3]);
+    }
+
+    #[test]
+    fn vjp_adjoints() {
+        let mut rng = Rng::new(1);
+        let dense = Dense::new(8, 4, true, &mut rng);
+        let x = Tensor::randn(&[3, 8], 1.0, &mut rng);
+        testutil::check_vjp_input_against_fd(&dense, &x, 80, 1e-3);
+        testutil::check_vjp_params_adjoint(&dense, &x, 81, 1e-3);
+    }
+
+    #[test]
+    fn vijp_right_inverse() {
+        let mut rng = Rng::new(2);
+        let dense = Dense::new(10, 4, false, &mut rng);
+        let x = Tensor::randn(&[3, 10], 1.0, &mut rng);
+        testutil::check_vijp_right_inverse(&dense, &x, 82, 1e-2);
+    }
+
+    #[test]
+    fn vijp_expanding_rejected() {
+        let mut rng = Rng::new(3);
+        let dense = Dense::new(3, 7, false, &mut rng);
+        let x = Tensor::randn(&[2, 3], 1.0, &mut rng);
+        let (_, res) = dense.forward_res(&x, ResidualKind::Minimal);
+        assert!(dense.vijp(&res, &x).is_err());
+    }
+
+    #[test]
+    fn inverse_square() {
+        let mut rng = Rng::new(4);
+        let dense = Dense::new(5, 5, true, &mut rng);
+        let x = Tensor::randn(&[2, 5], 1.0, &mut rng);
+        let y = dense.forward(&x);
+        assert_close(&dense.inverse(&y).unwrap(), &x, 1e-3, "dense inverse");
+    }
+
+    #[test]
+    fn vjp_input_reshapes_to_input_rank() {
+        let mut rng = Rng::new(5);
+        let dense = Dense::new(12, 2, false, &mut rng);
+        let x = Tensor::randn(&[2, 2, 3, 2], 1.0, &mut rng);
+        let (y, res) = dense.forward_res(&x, ResidualKind::Minimal);
+        let g = Tensor::full(y.shape(), 1.0);
+        assert_eq!(dense.vjp_input(&res, &g).shape(), x.shape());
+    }
+}

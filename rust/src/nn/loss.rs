@@ -1,0 +1,174 @@
+//! Loss heads. A loss provides the scalar objective and its gradient with
+//! respect to the network output — the starting cotangent of Phase II
+//! (`∂J/∂x_L`), which every engine then propagates in its own way.
+
+use crate::tensor::{ops, Tensor};
+
+/// A differentiable scalar loss over the network output.
+pub trait Loss: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Scalar loss value.
+    fn value(&self, y: &Tensor) -> f32;
+
+    /// Gradient of the loss w.r.t. `y` (the output cotangent `∂J/∂x_L`).
+    fn grad(&self, y: &Tensor) -> Tensor;
+
+    /// Directional derivative `⟨∂J/∂y, u⟩` (for forward-mode engines);
+    /// default goes through `grad`.
+    fn jvp(&self, y: &Tensor, u: &Tensor) -> f32 {
+        ops::dot(&self.grad(y), u)
+    }
+}
+
+/// Mean of all outputs — the "project the feature map to a scalar" loss
+/// used by the paper's memory/time sweeps (§6.2), where the objective's
+/// form is irrelevant and only the differentiation pattern matters.
+pub struct MeanLoss;
+
+impl Loss for MeanLoss {
+    fn name(&self) -> &'static str {
+        "mean"
+    }
+
+    fn value(&self, y: &Tensor) -> f32 {
+        ops::sum(y) / y.len() as f32
+    }
+
+    fn grad(&self, y: &Tensor) -> Tensor {
+        Tensor::full(y.shape(), 1.0 / y.len() as f32)
+    }
+}
+
+/// Softmax cross-entropy with integer class targets over logits `[N, C]`
+/// (the Fig.-4 classification head).
+pub struct SoftmaxCrossEntropy {
+    pub targets: Vec<usize>,
+}
+
+impl SoftmaxCrossEntropy {
+    pub fn new(targets: Vec<usize>) -> SoftmaxCrossEntropy {
+        SoftmaxCrossEntropy { targets }
+    }
+
+    /// Row-wise softmax probabilities (numerically stabilized).
+    pub fn probs(&self, y: &Tensor) -> Tensor {
+        assert_eq!(y.rank(), 2);
+        let (n, c) = (y.shape()[0], y.shape()[1]);
+        let mut p = Tensor::zeros(&[n, c]);
+        for i in 0..n {
+            let row = &y.data()[i * c..(i + 1) * c];
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0;
+            for (j, &v) in row.iter().enumerate() {
+                let e = (v - m).exp();
+                p.data_mut()[i * c + j] = e;
+                z += e;
+            }
+            for j in 0..c {
+                p.data_mut()[i * c + j] /= z;
+            }
+        }
+        p
+    }
+
+    /// Classification accuracy of logits against the stored targets.
+    pub fn accuracy(&self, y: &Tensor) -> f32 {
+        let (n, c) = (y.shape()[0], y.shape()[1]);
+        assert_eq!(n, self.targets.len());
+        let mut correct = 0;
+        for i in 0..n {
+            if ops::argmax(&y.data()[i * c..(i + 1) * c]) == self.targets[i] {
+                correct += 1;
+            }
+        }
+        correct as f32 / n as f32
+    }
+}
+
+impl Loss for SoftmaxCrossEntropy {
+    fn name(&self) -> &'static str {
+        "softmax_xent"
+    }
+
+    fn value(&self, y: &Tensor) -> f32 {
+        let (n, c) = (y.shape()[0], y.shape()[1]);
+        assert_eq!(n, self.targets.len(), "target count mismatch");
+        let p = self.probs(y);
+        let mut loss = 0.0;
+        for i in 0..n {
+            loss -= p.data()[i * c + self.targets[i]].max(1e-12).ln();
+        }
+        loss / n as f32
+    }
+
+    fn grad(&self, y: &Tensor) -> Tensor {
+        let (n, c) = (y.shape()[0], y.shape()[1]);
+        let mut g = self.probs(y);
+        for i in 0..n {
+            g.data_mut()[i * c + self.targets[i]] -= 1.0;
+        }
+        ops::scale(&g, 1.0 / n as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn mean_loss_grad() {
+        let y = Tensor::from_vec(vec![1.0, 3.0, 5.0, 7.0], &[2, 2]);
+        let l = MeanLoss;
+        assert_eq!(l.value(&y), 4.0);
+        assert_eq!(l.grad(&y).data(), &[0.25; 4]);
+    }
+
+    #[test]
+    fn xent_matches_finite_difference() {
+        let mut rng = Rng::new(0);
+        let y = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        let loss = SoftmaxCrossEntropy::new(vec![2, 0, 4]);
+        let g = loss.grad(&y);
+        let eps = 1e-3;
+        for idx in [0usize, 4, 7, 12, 14] {
+            let mut yp = y.clone();
+            yp.data_mut()[idx] += eps;
+            let mut ym = y.clone();
+            ym.data_mut()[idx] -= eps;
+            let fd = (loss.value(&yp) - loss.value(&ym)) / (2.0 * eps);
+            assert!(
+                (fd - g.data()[idx]).abs() < 1e-3,
+                "idx {idx}: fd {fd} vs {}",
+                g.data()[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn probs_sum_to_one() {
+        let mut rng = Rng::new(1);
+        let y = Tensor::randn(&[4, 6], 3.0, &mut rng);
+        let loss = SoftmaxCrossEntropy::new(vec![0; 4]);
+        let p = loss.probs(&y);
+        for i in 0..4 {
+            let s: f32 = p.data()[i * 6..(i + 1) * 6].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let y = Tensor::from_vec(vec![0.9, 0.1, 0.2, 0.8], &[2, 2]);
+        let loss = SoftmaxCrossEntropy::new(vec![0, 0]);
+        assert_eq!(loss.accuracy(&y), 0.5);
+    }
+
+    #[test]
+    fn xent_perfect_prediction_low_loss() {
+        let y = Tensor::from_vec(vec![10.0, -10.0, -10.0, 10.0], &[2, 2]);
+        let loss = SoftmaxCrossEntropy::new(vec![0, 1]);
+        assert!(loss.value(&y) < 1e-3);
+    }
+}

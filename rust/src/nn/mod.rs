@@ -1,0 +1,351 @@
+//! The submersive layer library.
+//!
+//! Every layer exposes the four differential operators the paper builds on
+//! (§3.1, Eqs. 1–3):
+//!
+//! * `forward`        — `x' = f(x; θ)`
+//! * `vjp_input`      — `h = h' · ∂x'/∂x` (standard reverse mode)
+//! * `vjp_params`     — `g = h' · ∂x'/∂θ`
+//! * **`vijp`**       — `h' = h · (∂x'/∂x)^+` (the paper's novel
+//!   vector-inverse-Jacobian product, Eq. 3/9), defined when the layer is
+//!   *submersive* — its input-output Jacobian has full row rank (Def. 1).
+//! * `jvp_input` / `jvp_params` — forward-mode tangents (for the
+//!   forward-mode and projected-forward baselines and pure-forward
+//!   Moonwalk).
+//! * `inverse`        — exact input reconstruction for *invertible*
+//!   configurations (RevBackprop baseline); errs otherwise.
+//!
+//! Residual storage is explicit and two-tiered, mirroring the paper's
+//! Phase-I distinction: [`ResidualKind::Full`] stores whatever Backprop
+//! needs to compute *parameter* gradients (typically the layer input),
+//! while [`ResidualKind::Minimal`] stores only what the *input* cotangent
+//! path needs (LeakyReLU sign bits, pooling argmax indices — and for
+//! convolutions **nothing at all**, which is Moonwalk's Phase-I saving).
+
+pub mod activation;
+pub mod conv1d;
+pub mod conv2d;
+pub mod dense;
+pub mod loss;
+pub mod pool;
+
+pub use activation::LeakyRelu;
+pub use conv1d::Conv1d;
+pub use conv2d::Conv2d;
+pub use dense::Dense;
+pub use loss::{Loss, MeanLoss, SoftmaxCrossEntropy};
+pub use pool::{MaxPool2d, Upsample};
+
+use crate::tensor::{BitTensor, Tensor};
+
+/// How much residual a forward pass should retain (paper Fig. 1a vs 1b).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResidualKind {
+    /// Enough to compute parameter gradients in a later backward pass
+    /// (Backprop's requirement): typically the full layer input.
+    Full,
+    /// Only what `vjp_input` / `vijp` need (Moonwalk Phase I): sign bits,
+    /// argmax indices — or nothing.
+    Minimal,
+}
+
+/// What a layer stored during a forward pass.
+#[derive(Debug)]
+pub struct Residual {
+    /// Input shape (needed to size `vjp_input` outputs; negligible memory).
+    pub in_shape: Vec<usize>,
+    pub kind: ResidualData,
+}
+
+/// Layer-specific residual payloads. All tensor payloads are tracked, so
+/// memory profiles see exactly what each method keeps alive.
+#[derive(Debug)]
+pub enum ResidualData {
+    /// Nothing stored (convolutions and dense layers under
+    /// [`ResidualKind::Minimal`]: their input-vjp needs only the weights).
+    None,
+    /// The full layer input (Backprop's residual for parameter grads).
+    Input(Tensor),
+    /// Sign bits of the input (LeakyReLU — 32× smaller than the input,
+    /// paper §4.5).
+    Signs(BitTensor),
+    /// Flat argmax indices (max pooling); stored as u32 per output element.
+    ArgMax(IndexTensor),
+}
+
+/// A tracked u32 index tensor (pooling argmax residuals).
+#[derive(Debug)]
+pub struct IndexTensor {
+    data: Vec<u32>,
+    shape: Vec<usize>,
+}
+
+impl IndexTensor {
+    pub fn from_vec(data: Vec<u32>, shape: &[usize]) -> IndexTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        crate::tensor::tracker::alloc(data.len() * 4);
+        IndexTensor {
+            data,
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn data(&self) -> &[u32] {
+        &self.data
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+}
+
+impl Drop for IndexTensor {
+    fn drop(&mut self) {
+        crate::tensor::tracker::free(self.data.len() * 4);
+    }
+}
+
+/// Is a layer submersive (Def. 1), and if so can its vijp avoid the
+/// sequential spatial wavefront?
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Submersivity {
+    /// The Jacobian is surjective for all valid parameters; `fast_path`
+    /// means the vijp elimination has no spatial coupling (paper Alg. 2:
+    /// holds for convolutions when `s + p ≥ k`) and is fully parallel
+    /// over spatial positions.
+    Submersive { fast_path: bool },
+    /// Not submersive; `fragmental_ok` means the layer supports the
+    /// fragmental-checkpointing reconstruction of §5.1 instead.
+    NonSubmersive {
+        reason: String,
+        fragmental_ok: bool,
+    },
+}
+
+impl Submersivity {
+    pub fn is_submersive(&self) -> bool {
+        matches!(self, Submersivity::Submersive { .. })
+    }
+}
+
+/// Cotangent fragments stored by fragmental gradient checkpointing
+/// (paper §5.1 / Alg. 3): the first `k−1` spatial slices of each block of
+/// the *output* cotangent, captured during Phase II.
+#[derive(Debug)]
+pub struct Fragment {
+    /// `[n_blocks * (k-1), channels]` stored slices, tracked.
+    pub slices: Tensor,
+    /// Block size `B` used at capture.
+    pub block: usize,
+    /// Full output-cotangent shape `[N, L', C']`.
+    pub out_shape: Vec<usize>,
+}
+
+/// Typed layer errors.
+#[derive(Debug, thiserror::Error)]
+pub enum LayerError {
+    #[error("layer `{layer}` is not submersive: {reason}")]
+    NotSubmersive { layer: String, reason: String },
+    #[error("layer `{layer}` is not invertible: {reason}")]
+    NotInvertible { layer: String, reason: String },
+    #[error("layer `{layer}` does not support fragmental checkpointing: {reason}")]
+    NoFragmental { layer: String, reason: String },
+    #[error("shape error in `{layer}`: {reason}")]
+    Shape { layer: String, reason: String },
+}
+
+/// The layer interface (see module docs). Object-safe; networks hold
+/// `Vec<Box<dyn Layer>>`.
+pub trait Layer: Send + Sync {
+    /// Human-readable name (used in configs, metrics and errors).
+    fn name(&self) -> String;
+
+    /// Output shape for a given input shape.
+    fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>, LayerError>;
+
+    /// Forward pass storing the requested residual tier.
+    fn forward_res(&self, x: &Tensor, kind: ResidualKind) -> (Tensor, Residual);
+
+    /// Forward pass without residuals.
+    fn forward(&self, x: &Tensor) -> Tensor {
+        self.forward_res(x, ResidualKind::Minimal).0
+    }
+
+    /// `h = h' · ∂x'/∂x` from the stored residual.
+    fn vjp_input(&self, res: &Residual, grad_out: &Tensor) -> Tensor;
+
+    /// `g_θ = h' · ∂x'/∂θ`, given the layer input explicitly (engines pass
+    /// either the stored Full residual or a Phase-III recomputed input).
+    /// Returns one tensor per parameter, aligned with [`Layer::params`].
+    fn vjp_params(&self, x: &Tensor, grad_out: &Tensor) -> Vec<Tensor>;
+
+    /// **vijp** — `h' = h · (∂x'/∂x)^+` (paper Eq. 9): recover the output
+    /// cotangent from the input cotangent. Requires submersivity; the
+    /// residual supplies sign/argmax data where the Jacobian depends on
+    /// the input.
+    fn vijp(&self, res: &Residual, h_in: &Tensor) -> Result<Tensor, LayerError>;
+
+    /// Forward-mode input tangent: `u' = (∂x'/∂x) · u`.
+    fn jvp_input(&self, x: &Tensor, u: &Tensor) -> Tensor;
+
+    /// Forward-mode parameter tangent: `u' = (∂x'/∂θ) · dθ`.
+    fn jvp_params(&self, x: &Tensor, dparams: &[Tensor]) -> Tensor;
+
+    /// Exact inverse `x = f⁻¹(x')` for invertible configurations
+    /// (RevBackprop); errs when the layer is not invertible.
+    fn inverse(&self, y: &Tensor) -> Result<Tensor, LayerError>;
+
+    /// Lemma-1 style submersivity check against the *current* parameters.
+    fn submersivity(&self) -> Submersivity;
+
+    /// Parameters (possibly empty).
+    fn params(&self) -> Vec<&Tensor>;
+
+    /// Mutable parameters (for the optimizer).
+    fn params_mut(&mut self) -> Vec<&mut Tensor>;
+
+    /// Total parameter count.
+    fn n_params(&self) -> usize {
+        self.params().iter().map(|p| p.len()).sum()
+    }
+
+    /// Project parameters onto the submersive constraint set (Lemma 1 /
+    /// §6.4 "constrained convolutions"); the constrained trainer calls
+    /// this after every optimizer step. Default: no-op.
+    fn project_submersive(&mut self) {}
+
+    /// Rough forward-pass FLOP estimate for an input shape (used by the
+    /// Table-1 analytic time model and the planner). Default: one op per
+    /// output element.
+    fn flops_estimate(&self, in_shape: &[usize]) -> f64 {
+        self.out_shape(in_shape)
+            .map(|s| s.iter().product::<usize>() as f64)
+            .unwrap_or(0.0)
+    }
+
+    /// Fragmental checkpointing (§5.1): capture the minimal cotangent
+    /// fragments of `h_out` needed to reconstruct it later.
+    fn fragment_capture(&self, _h_out: &Tensor, _block: usize) -> Result<Fragment, LayerError> {
+        Err(LayerError::NoFragmental {
+            layer: self.name(),
+            reason: "not implemented for this layer type".into(),
+        })
+    }
+
+    /// Fragmental checkpointing: reconstruct the full output cotangent
+    /// from the input cotangent and stored fragments (Alg. 3).
+    fn fragment_reconstruct(
+        &self,
+        _frag: &Fragment,
+        _h_in: &Tensor,
+    ) -> Result<Tensor, LayerError> {
+        Err(LayerError::NoFragmental {
+            layer: self.name(),
+            reason: "not implemented for this layer type".into(),
+        })
+    }
+}
+
+/// Boxed layer alias used throughout.
+pub type LayerBox = Box<dyn Layer>;
+
+/// Bytes held by a residual (for memory model cross-checks in tests).
+pub fn residual_bytes(res: &Residual) -> usize {
+    match &res.kind {
+        ResidualData::None => 0,
+        ResidualData::Input(t) => t.bytes(),
+        ResidualData::Signs(b) => b.bytes(),
+        ResidualData::ArgMax(ix) => ix.data().len() * 4,
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! Finite-difference oracles shared by per-layer unit tests.
+
+    use super::*;
+    use crate::tensor::ops;
+
+    /// Numerical jvp wrt input: `(f(x+eps*u) - f(x-eps*u)) / (2 eps)`.
+    pub fn fd_jvp_input(layer: &dyn Layer, x: &Tensor, u: &Tensor, eps: f32) -> Tensor {
+        let xp = ops::add(x, &ops::scale(u, eps));
+        let xm = ops::sub(x, &ops::scale(u, eps));
+        ops::scale(&ops::sub(&layer.forward(&xp), &layer.forward(&xm)), 0.5 / eps)
+    }
+
+    /// Check `<g, u> == <h', jvp(u)>` for random u — validates vjp against
+    /// jvp, and jvp against finite differences.
+    pub fn check_vjp_input_against_fd(
+        layer: &dyn Layer,
+        x: &Tensor,
+        seed: u64,
+        tol: f32,
+    ) {
+        let mut rng = crate::util::Rng::new(seed);
+        let (y, res) = layer.forward_res(x, ResidualKind::Full);
+        for trial in 0..3 {
+            let u = Tensor::randn(x.shape(), 1.0, &mut rng);
+            let hprime = Tensor::randn(y.shape(), 1.0, &mut rng);
+            let jvp_fd = fd_jvp_input(layer, x, &u, 1e-2);
+            let jvp_an = layer.jvp_input(x, &u);
+            let fd_dot = ops::dot(&hprime, &jvp_fd);
+            let an_dot = ops::dot(&hprime, &jvp_an);
+            let scale = an_dot.abs().max(1.0);
+            assert!(
+                (fd_dot - an_dot).abs() / scale < tol * 10.0,
+                "jvp vs fd mismatch (trial {trial}): {fd_dot} vs {an_dot}"
+            );
+            let g = layer.vjp_input(&res, &hprime);
+            let vjp_dot = ops::dot(&g, &u);
+            assert!(
+                (vjp_dot - an_dot).abs() / scale < tol,
+                "vjp vs jvp adjoint mismatch (trial {trial}): {vjp_dot} vs {an_dot}"
+            );
+        }
+    }
+
+    /// Check `<g_θ, dθ> == <h', jvp_params(dθ)>` for random dθ.
+    pub fn check_vjp_params_adjoint(layer: &dyn Layer, x: &Tensor, seed: u64, tol: f32) {
+        let mut rng = crate::util::Rng::new(seed);
+        let y = layer.forward(x);
+        for _ in 0..3 {
+            let hprime = Tensor::randn(y.shape(), 1.0, &mut rng);
+            let dparams: Vec<Tensor> = layer
+                .params()
+                .iter()
+                .map(|p| Tensor::randn(p.shape(), 1.0, &mut rng))
+                .collect();
+            let jp = layer.jvp_params(x, &dparams);
+            let lhs: f32 = layer
+                .vjp_params(x, &hprime)
+                .iter()
+                .zip(&dparams)
+                .map(|(g, d)| ops::dot(g, d))
+                .sum();
+            let rhs = ops::dot(&hprime, &jp);
+            let scale = rhs.abs().max(1.0);
+            assert!(
+                (lhs - rhs).abs() / scale < tol,
+                "vjp_params adjoint mismatch: {lhs} vs {rhs}"
+            );
+        }
+    }
+
+    /// THE Moonwalk property: vijp is a right-inverse of vjp on the row
+    /// space. For any output cotangent h', `vijp(vjp_input(h')) == h'`.
+    pub fn check_vijp_right_inverse(layer: &dyn Layer, x: &Tensor, seed: u64, tol: f32) {
+        let mut rng = crate::util::Rng::new(seed);
+        let (y, res) = layer.forward_res(x, ResidualKind::Minimal);
+        for trial in 0..3 {
+            let hprime = Tensor::randn(y.shape(), 1.0, &mut rng);
+            let h = layer.vjp_input(&res, &hprime);
+            let recovered = layer.vijp(&res, &h).expect("layer should be submersive");
+            crate::tensor::assert_close(
+                &recovered,
+                &hprime,
+                tol,
+                &format!("vijp right-inverse (trial {trial})"),
+            );
+        }
+    }
+}

@@ -1,0 +1,360 @@
+//! Max pooling (the paper's final-stage layer: "the final layer performs
+//! max pooling and projects the feature map to a scalar", §6.2) and the
+//! channel-replicating Upsample used as the networks' entry layer
+//! ("an input of size 256×256×3 is first upsampled to ... 128 channels").
+//!
+//! Max pooling with disjoint windows is *submersive*: its Jacobian rows
+//! are distinct standard basis vectors (one per window argmax), hence
+//! surjective. Its minimal residual is the argmax index per output — the
+//! same data its vjp needs — and its vijp is a plain gather.
+//!
+//! Upsample is *expanding* (output dim > input dim) so it cannot be
+//! submersive; it carries no parameters, and the Moonwalk engine handles
+//! it by checkpointing its output cotangent during Phase II (§4.1's
+//! "gradient checkpointing" fallback).
+
+use crate::nn::{
+    IndexTensor, Layer, LayerError, Residual, ResidualData, ResidualKind, Submersivity,
+};
+use crate::tensor::Tensor;
+
+/// Max pooling over `[N,H,W,C]` with square window = stride (disjoint).
+pub struct MaxPool2d {
+    pub window: usize,
+}
+
+impl MaxPool2d {
+    pub fn new(window: usize) -> MaxPool2d {
+        assert!(window > 0);
+        MaxPool2d { window }
+    }
+
+    fn pool(&self, x: &Tensor) -> (Tensor, Vec<u32>) {
+        let (n, h, w, c) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+        let q = self.window;
+        let (ho, wo) = (h / q, w / q);
+        assert!(ho > 0 && wo > 0, "pool window {q} larger than input {h}x{w}");
+        let mut out = Tensor::zeros(&[n, ho, wo, c]);
+        let mut arg = vec![0u32; n * ho * wo * c];
+        let xd = x.data();
+        let od = out.data_mut();
+        for img in 0..n {
+            for a in 0..ho {
+                for b in 0..wo {
+                    for ch in 0..c {
+                        let mut best = f32::NEG_INFINITY;
+                        let mut best_idx = 0usize;
+                        for di in 0..q {
+                            for dj in 0..q {
+                                let idx =
+                                    ((img * h + a * q + di) * w + b * q + dj) * c + ch;
+                                if xd[idx] > best {
+                                    best = xd[idx];
+                                    best_idx = idx;
+                                }
+                            }
+                        }
+                        let o = ((img * ho + a) * wo + b) * c + ch;
+                        od[o] = best;
+                        arg[o] = best_idx as u32;
+                    }
+                }
+            }
+        }
+        (out, arg)
+    }
+
+    fn argmaxes<'a>(&self, res: &'a Residual) -> &'a IndexTensor {
+        match &res.kind {
+            ResidualData::ArgMax(ix) => ix,
+            other => panic!("MaxPool residual must be ArgMax, got {other:?}"),
+        }
+    }
+}
+
+impl Layer for MaxPool2d {
+    fn name(&self) -> String {
+        format!("maxpool2d({})", self.window)
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>, LayerError> {
+        if in_shape.len() != 4 {
+            return Err(LayerError::Shape {
+                layer: self.name(),
+                reason: format!("expected [N,H,W,C], got {in_shape:?}"),
+            });
+        }
+        let q = self.window;
+        if in_shape[1] < q || in_shape[2] < q {
+            return Err(LayerError::Shape {
+                layer: self.name(),
+                reason: format!("window {q} larger than spatial dims {in_shape:?}"),
+            });
+        }
+        Ok(vec![in_shape[0], in_shape[1] / q, in_shape[2] / q, in_shape[3]])
+    }
+
+    fn forward_res(&self, x: &Tensor, _kind: ResidualKind) -> (Tensor, Residual) {
+        // Both tiers need exactly the argmaxes — max pooling is another
+        // layer whose parameter-free vjp residual is tiny.
+        let (y, arg) = self.pool(x);
+        let shape = y.shape().to_vec();
+        (
+            y,
+            Residual {
+                in_shape: x.shape().to_vec(),
+                kind: ResidualData::ArgMax(IndexTensor::from_vec(arg, &shape)),
+            },
+        )
+    }
+
+    fn vjp_input(&self, res: &Residual, grad_out: &Tensor) -> Tensor {
+        let ix = self.argmaxes(res);
+        let mut out = Tensor::zeros(&res.in_shape);
+        let od = out.data_mut();
+        for (g, &i) in grad_out.data().iter().zip(ix.data()) {
+            od[i as usize] += g;
+        }
+        out
+    }
+
+    fn vjp_params(&self, _x: &Tensor, _grad_out: &Tensor) -> Vec<Tensor> {
+        Vec::new()
+    }
+
+    fn vijp(&self, res: &Residual, h_in: &Tensor) -> Result<Tensor, LayerError> {
+        // Rows of J are distinct basis vectors e_{argmax}; the right
+        // inverse gathers the input cotangent at each argmax.
+        let ix = self.argmaxes(res);
+        let hd = h_in.data();
+        let data = ix.data().iter().map(|&i| hd[i as usize]).collect();
+        Ok(Tensor::from_vec(data, ix.shape()))
+    }
+
+    fn jvp_input(&self, x: &Tensor, u: &Tensor) -> Tensor {
+        let (_, arg) = self.pool(x);
+        let ud = u.data();
+        let shape = self.out_shape(x.shape()).expect("validated");
+        let data = arg.iter().map(|&i| ud[i as usize]).collect();
+        Tensor::from_vec(data, &shape)
+    }
+
+    fn jvp_params(&self, x: &Tensor, _dparams: &[Tensor]) -> Tensor {
+        let shape = self.out_shape(x.shape()).expect("validated");
+        Tensor::zeros(&shape)
+    }
+
+    fn inverse(&self, _y: &Tensor) -> Result<Tensor, LayerError> {
+        Err(LayerError::NotInvertible {
+            layer: self.name(),
+            reason: "max pooling discards non-max elements".into(),
+        })
+    }
+
+    fn submersivity(&self) -> Submersivity {
+        // Disjoint windows ⇒ distinct argmaxes ⇒ surjective Jacobian.
+        Submersivity::Submersive { fast_path: true }
+    }
+
+    fn params(&self) -> Vec<&Tensor> {
+        Vec::new()
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        Vec::new()
+    }
+}
+
+/// Channel-replicating upsample: `out[..., c'] = x[..., c' mod Cin]`,
+/// rank-preserving on the spatial grid, expanding on channels.
+pub struct Upsample {
+    pub cin: usize,
+    pub cout: usize,
+}
+
+impl Upsample {
+    pub fn new(cin: usize, cout: usize) -> Upsample {
+        assert!(cout >= cin, "upsample must expand channels");
+        Upsample { cin, cout }
+    }
+}
+
+impl Layer for Upsample {
+    fn name(&self) -> String {
+        format!("upsample({}->{})", self.cin, self.cout)
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>, LayerError> {
+        if in_shape.is_empty() || *in_shape.last().unwrap() != self.cin {
+            return Err(LayerError::Shape {
+                layer: self.name(),
+                reason: format!("expected trailing dim {}, got {in_shape:?}", self.cin),
+            });
+        }
+        let mut s = in_shape.to_vec();
+        *s.last_mut().unwrap() = self.cout;
+        Ok(s)
+    }
+
+    fn forward_res(&self, x: &Tensor, _kind: ResidualKind) -> (Tensor, Residual) {
+        let shape = self.out_shape(x.shape()).expect("validated");
+        let (cin, cout) = (self.cin, self.cout);
+        let mut out = Tensor::zeros(&shape);
+        {
+            let od = out.data_mut();
+            // Whole-chunk replication (no per-element modulo, §Perf it. 5).
+            for (pix, chunk) in x.data().chunks(cin).enumerate() {
+                let dst = &mut od[pix * cout..(pix + 1) * cout];
+                let mut off = 0;
+                while off + cin <= cout {
+                    dst[off..off + cin].copy_from_slice(chunk);
+                    off += cin;
+                }
+                if off < cout {
+                    dst[off..].copy_from_slice(&chunk[..cout - off]);
+                }
+            }
+        }
+        (
+            out,
+            Residual {
+                in_shape: x.shape().to_vec(),
+                kind: ResidualData::None,
+            },
+        )
+    }
+
+    fn vjp_input(&self, res: &Residual, grad_out: &Tensor) -> Tensor {
+        let (cin, cout) = (self.cin, self.cout);
+        let mut out = Tensor::zeros(&res.in_shape);
+        {
+            let od = out.data_mut();
+            for (pix, chunk) in grad_out.data().chunks(cout).enumerate() {
+                let dst = &mut od[pix * cin..(pix + 1) * cin];
+                for (c2, &g) in chunk.iter().enumerate() {
+                    dst[c2 % cin] += g;
+                }
+            }
+        }
+        out
+    }
+
+    fn vjp_params(&self, _x: &Tensor, _grad_out: &Tensor) -> Vec<Tensor> {
+        Vec::new()
+    }
+
+    fn vijp(&self, _res: &Residual, _h_in: &Tensor) -> Result<Tensor, LayerError> {
+        // Expanding Jacobian ⇒ non-trivial cokernel; the output cotangent
+        // is NOT a function of the input cotangent. Engines must
+        // checkpoint it in Phase II instead (§4.1).
+        Err(LayerError::NotSubmersive {
+            layer: self.name(),
+            reason: "channel expansion has a non-trivial cokernel".into(),
+        })
+    }
+
+    fn jvp_input(&self, _x: &Tensor, u: &Tensor) -> Tensor {
+        self.forward_res(u, ResidualKind::Minimal).0
+    }
+
+    fn jvp_params(&self, x: &Tensor, _dparams: &[Tensor]) -> Tensor {
+        let shape = self.out_shape(x.shape()).expect("validated");
+        Tensor::zeros(&shape)
+    }
+
+    fn inverse(&self, _y: &Tensor) -> Result<Tensor, LayerError> {
+        Err(LayerError::NotInvertible {
+            layer: self.name(),
+            reason: "expanding map".into(),
+        })
+    }
+
+    fn submersivity(&self) -> Submersivity {
+        Submersivity::NonSubmersive {
+            reason: "channel expansion (output dim > input dim)".into(),
+            fragmental_ok: false,
+        }
+    }
+
+    fn params(&self) -> Vec<&Tensor> {
+        Vec::new()
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::testutil;
+    use crate::tensor::ops;
+    use crate::util::Rng;
+
+    #[test]
+    fn pool_known_values() {
+        let p = MaxPool2d::new(2);
+        let x = Tensor::from_vec(
+            vec![1.0, 5.0, 2.0, 3.0, 9.0, 4.0, 0.0, 7.0, 6.0, 8.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            &[1, 4, 4, 1],
+        );
+        let y = p.forward(&x);
+        assert_eq!(y.shape(), &[1, 2, 2, 1]);
+        assert_eq!(y.data(), &[9.0, 7.0, 8.0, 6.0]);
+    }
+
+    #[test]
+    fn pool_vjp_scatter() {
+        let p = MaxPool2d::new(2);
+        let mut rng = Rng::new(0);
+        let x = Tensor::randn(&[2, 4, 4, 3], 1.0, &mut rng);
+        let (y, res) = p.forward_res(&x, ResidualKind::Minimal);
+        let g = Tensor::full(y.shape(), 1.0);
+        let h = p.vjp_input(&res, &g);
+        // Exactly one 1 per pooling window per channel.
+        assert_eq!(ops::sum(&h), (2 * 2 * 2 * 3) as f32);
+    }
+
+    #[test]
+    fn pool_vijp_right_inverse() {
+        let p = MaxPool2d::new(2);
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[2, 6, 6, 4], 1.0, &mut rng);
+        testutil::check_vijp_right_inverse(&p, &x, 70, 1e-5);
+    }
+
+    #[test]
+    fn pool_jvp_matches_fd() {
+        // jvp at a point where argmaxes are stable under perturbation.
+        let p = MaxPool2d::new(2);
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&[1, 4, 4, 2], 1.0, &mut rng);
+        let u = Tensor::randn(x.shape(), 0.01, &mut rng);
+        let fd = testutil::fd_jvp_input(&p, &x, &u, 1e-3);
+        let an = p.jvp_input(&x, &u);
+        crate::tensor::assert_close(&an, &fd, 1e-2, "pool jvp");
+    }
+
+    #[test]
+    fn upsample_replicates_and_adjoints() {
+        let up = Upsample::new(2, 5);
+        let x = Tensor::from_vec(vec![1.0, 2.0], &[1, 1, 1, 2]);
+        let y = up.forward(&x);
+        assert_eq!(y.data(), &[1.0, 2.0, 1.0, 2.0, 1.0]);
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[2, 3, 3, 2], 1.0, &mut rng);
+        testutil::check_vjp_input_against_fd(&up, &x, 71, 1e-3);
+    }
+
+    #[test]
+    fn upsample_vijp_rejected() {
+        let up = Upsample::new(2, 4);
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(&[1, 2, 2, 2], 1.0, &mut rng);
+        let (_, res) = up.forward_res(&x, ResidualKind::Minimal);
+        let h = Tensor::zeros(x.shape());
+        assert!(up.vijp(&res, &h).is_err());
+        assert!(!up.submersivity().is_submersive());
+    }
+}

@@ -1,0 +1,139 @@
+//! Artifact manifest: `artifacts/manifest.json` describes every compiled
+//! op — its HLO file, input/output shapes and role — plus the flagship
+//! model configuration the artifacts were lowered for. Produced by
+//! `python/compile/aot.py`; consumed by [`crate::runtime::PjrtRuntime`].
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One AOT-compiled operation.
+#[derive(Clone, Debug)]
+pub struct OpSpec {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    /// Input shapes (f32).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes (f32); multiple outputs arrive as a tuple.
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub ops: BTreeMap<String, OpSpec>,
+    /// Flagship model config (opaque JSON the e2e driver interprets).
+    pub config: Json,
+}
+
+fn parse_shapes(j: &Json, what: &str) -> anyhow::Result<Vec<Vec<usize>>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{what}: expected array of shapes"))?
+        .iter()
+        .map(|s| {
+            s.as_arr()
+                .ok_or_else(|| anyhow::anyhow!("{what}: shape must be an array"))?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("{what}: bad dim"))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e} — run `make artifacts`"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        let mut ops = BTreeMap::new();
+        for op in j
+            .get("ops")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing `ops` array"))?
+        {
+            let name = op.req_str("name")?.to_string();
+            let spec = OpSpec {
+                name: name.clone(),
+                file: op.req_str("file")?.to_string(),
+                inputs: parse_shapes(op.get("inputs"), &format!("op {name} inputs"))?,
+                outputs: parse_shapes(op.get("outputs"), &format!("op {name} outputs"))?,
+            };
+            if ops.insert(name.clone(), spec).is_some() {
+                anyhow::bail!("duplicate op `{name}` in manifest");
+            }
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            ops,
+            config: j.get("config").clone(),
+        })
+    }
+
+    pub fn op(&self, name: &str) -> anyhow::Result<&OpSpec> {
+        self.ops
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact op `{name}` not in manifest"))
+    }
+
+    pub fn hlo_path(&self, op: &OpSpec) -> PathBuf {
+        self.dir.join(&op.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parse_minimal() {
+        let dir = std::env::temp_dir().join("moonwalk_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{"config": {"depth": 2},
+                "ops": [{"name": "f", "file": "f.hlo.txt",
+                          "inputs": [[2,2],[2,2]], "outputs": [[2,2]]}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.ops.len(), 1);
+        let op = m.op("f").unwrap();
+        assert_eq!(op.inputs.len(), 2);
+        assert_eq!(op.outputs[0], vec![2, 2]);
+        assert_eq!(m.config.req_usize("depth").unwrap(), 2);
+        assert!(m.op("g").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let dir = std::env::temp_dir().join("moonwalk_manifest_missing");
+        std::fs::remove_dir_all(&dir).ok();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_ops_rejected() {
+        let dir = std::env::temp_dir().join("moonwalk_manifest_dup");
+        write_manifest(
+            &dir,
+            r#"{"ops": [
+                {"name": "f", "file": "a", "inputs": [], "outputs": []},
+                {"name": "f", "file": "b", "inputs": [], "outputs": []}]}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,12 @@
+//! The PJRT runtime (L3 ⇄ L2/L1 bridge): loads the AOT artifacts emitted
+//! by `python/compile/aot.py` (JAX/Pallas programs lowered to **HLO
+//! text** — see DESIGN.md §3 for why text, not serialized protos),
+//! compiles them once on the PJRT CPU client, and executes them from the
+//! Rust hot path. After `make artifacts`, the binary is self-contained;
+//! Python never runs at training/serving time.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{Manifest, OpSpec};
+pub use pjrt::PjrtRuntime;

@@ -1,0 +1,140 @@
+//! PJRT CPU client wrapper: compile-once, execute-many over the AOT
+//! artifacts (pattern from the reference at /opt/xla-example/load_hlo).
+//!
+//! Marshalling: host [`Tensor`]s ⇄ `xla::Literal` (f32). AOT programs are
+//! lowered with `return_tuple=True`, so every execution returns a tuple,
+//! unpacked against the manifest's declared output shapes.
+
+use std::collections::HashMap;
+
+use crate::runtime::artifacts::{Manifest, OpSpec};
+use crate::tensor::Tensor;
+
+/// A compiled artifact set bound to a PJRT CPU client.
+pub struct PjrtRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Load + compile every op in `dir/manifest.json`.
+    pub fn load(dir: &std::path::Path) -> anyhow::Result<PjrtRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = HashMap::new();
+        for (name, op) in &manifest.ops {
+            let path = manifest.hlo_path(op);
+            let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+                anyhow::anyhow!("parsing HLO for `{name}` from {path:?}: {e}")
+            })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling `{name}`: {e}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(PjrtRuntime {
+            manifest,
+            client,
+            exes,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn op_names(&self) -> Vec<&str> {
+        self.exes.keys().map(|s| s.as_str()).collect()
+    }
+
+    fn check_shapes(op: &OpSpec, inputs: &[&Tensor]) -> anyhow::Result<()> {
+        if inputs.len() != op.inputs.len() {
+            anyhow::bail!(
+                "op `{}` expects {} inputs, got {}",
+                op.name,
+                op.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&op.inputs).enumerate() {
+            if t.shape() != &spec[..] {
+                anyhow::bail!(
+                    "op `{}` input {i}: shape {:?} != manifest {:?}",
+                    op.name,
+                    t.shape(),
+                    spec
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute a compiled op on host tensors.
+    pub fn execute(&self, name: &str, inputs: &[&Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        let op = self.manifest.op(name)?;
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("op `{name}` not compiled"))?;
+        Self::check_shapes(op, inputs)?;
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(t.data())
+                    .reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("literal reshape: {e}"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing `{name}`: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching `{name}` result: {e}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling `{name}` result: {e}"))?;
+        if parts.len() != op.outputs.len() {
+            anyhow::bail!(
+                "op `{name}` returned {} outputs, manifest says {}",
+                parts.len(),
+                op.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&op.outputs)
+            .map(|(lit, shape)| {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("reading `{name}` output: {e}"))?;
+                let expect: usize = shape.iter().product();
+                if data.len() != expect {
+                    anyhow::bail!(
+                        "op `{name}` output has {} elements, manifest shape {:?}",
+                        data.len(),
+                        shape
+                    );
+                }
+                Ok(Tensor::from_vec(data, shape))
+            })
+            .collect()
+    }
+
+    /// Execute an op with exactly one output.
+    pub fn execute1(&self, name: &str, inputs: &[&Tensor]) -> anyhow::Result<Tensor> {
+        let mut out = self.execute(name, inputs)?;
+        if out.len() != 1 {
+            anyhow::bail!("op `{name}` has {} outputs, expected 1", out.len());
+        }
+        Ok(out.pop().unwrap())
+    }
+}
+
+// Compile/execute round-trip tests live in rust/tests/runtime_pjrt.rs
+// (they need `make artifacts` to have produced the HLO files).

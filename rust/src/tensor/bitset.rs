@@ -1,0 +1,113 @@
+//! Bit-packed residual storage.
+//!
+//! Paper §4.5 ("Residual Impact"): for LeakyReLU layers, Moonwalk needs only
+//! the *sign* of each pre-activation to evaluate the activation vjp/vijp —
+//! 1 bit per element instead of a 32-bit float, a 32× reduction that is the
+//! main source of Phase-I memory savings. `BitTensor` stores exactly that,
+//! and its (byte-rounded) size is registered with the allocation tracker so
+//! memory profiles reflect the compression.
+
+use crate::tensor::{tracker, Tensor};
+
+/// A bit-per-element tensor (packed into u64 words).
+#[derive(Debug)]
+pub struct BitTensor {
+    words: Vec<u64>,
+    len: usize,
+    shape: Vec<usize>,
+}
+
+impl BitTensor {
+    /// Record the signs (`x >= 0`) of a tensor's elements.
+    pub fn from_signs(x: &Tensor) -> BitTensor {
+        let len = x.len();
+        let n_words = (len + 63) / 64;
+        tracker::alloc(n_words * 8);
+        let mut words = vec![0u64; n_words];
+        for (i, &v) in x.data().iter().enumerate() {
+            if v >= 0.0 {
+                words[i / 64] |= 1 << (i % 64);
+            }
+        }
+        BitTensor {
+            words,
+            len,
+            shape: x.shape().to_vec(),
+        }
+    }
+
+    /// Bit `i` (true = non-negative).
+    #[inline(always)]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Tracked payload bytes (the 32× compression vs f32 storage).
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+impl Drop for BitTensor {
+    fn drop(&mut self) {
+        tracker::free(self.words.len() * 8);
+    }
+}
+
+impl Clone for BitTensor {
+    fn clone(&self) -> BitTensor {
+        tracker::alloc(self.words.len() * 8);
+        BitTensor {
+            words: self.words.clone(),
+            len: self.len,
+            shape: self.shape.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signs_roundtrip() {
+        let x = Tensor::from_vec(vec![1.0, -2.0, 0.0, -0.5, 3.0], &[5]);
+        let b = BitTensor::from_signs(&x);
+        assert!(b.get(0));
+        assert!(!b.get(1));
+        assert!(b.get(2)); // zero counts as non-negative
+        assert!(!b.get(3));
+        assert!(b.get(4));
+    }
+
+    #[test]
+    fn compression_ratio() {
+        let x = Tensor::zeros(&[1024]);
+        let b = BitTensor::from_signs(&x);
+        assert_eq!(b.bytes(), 128); // 1024 bits = 128 bytes vs 4096 bytes f32
+        assert_eq!(x.bytes() / b.bytes(), 32);
+    }
+
+    #[test]
+    fn tracker_balance() {
+        let live0 = tracker::current();
+        {
+            let x = Tensor::zeros(&[100]);
+            let _b = BitTensor::from_signs(&x);
+        }
+        assert_eq!(tracker::current(), live0);
+    }
+}

@@ -1,0 +1,467 @@
+//! Elementwise and linear-algebra primitives over [`Tensor`].
+//!
+//! `matmul` is the hot primitive (conv lowers to im2col + matmul); it uses a
+//! cache-blocked ikj loop with unchecked indexing. The §Perf pass iterates
+//! on this file — see EXPERIMENTS.md §Perf.
+
+use crate::tensor::Tensor;
+
+// ----- elementwise -------------------------------------------------------
+
+/// `a + b` (same shape).
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    zip_map(a, b, |x, y| x + y)
+}
+
+/// `a - b` (same shape).
+pub fn sub(a: &Tensor, b: &Tensor) -> Tensor {
+    zip_map(a, b, |x, y| x - y)
+}
+
+/// Hadamard product.
+pub fn mul(a: &Tensor, b: &Tensor) -> Tensor {
+    zip_map(a, b, |x, y| x * y)
+}
+
+/// `a * s`.
+pub fn scale(a: &Tensor, s: f32) -> Tensor {
+    let data = a.data().iter().map(|x| x * s).collect();
+    Tensor::from_vec(data, a.shape())
+}
+
+/// In-place `a += s * b` (axpy); avoids an allocation in hot loops.
+pub fn axpy_inplace(a: &mut Tensor, s: f32, b: &Tensor) {
+    assert_eq!(a.shape(), b.shape());
+    for (x, y) in a.data_mut().iter_mut().zip(b.data()) {
+        *x += s * y;
+    }
+}
+
+fn zip_map(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    assert_eq!(a.shape(), b.shape(), "elementwise shape mismatch");
+    let data = a
+        .data()
+        .iter()
+        .zip(b.data())
+        .map(|(x, y)| f(*x, *y))
+        .collect();
+    Tensor::from_vec(data, a.shape())
+}
+
+// ----- reductions ---------------------------------------------------------
+
+/// Sum of all elements.
+pub fn sum(a: &Tensor) -> f32 {
+    a.data().iter().sum()
+}
+
+/// Dot product of flattened tensors (used by ProjForward and grad checks).
+pub fn dot(a: &Tensor, b: &Tensor) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    a.data().iter().zip(b.data()).map(|(x, y)| x * y).sum()
+}
+
+/// L2 norm of the flattened tensor.
+pub fn norm(a: &Tensor) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+// ----- matmul --------------------------------------------------------------
+
+/// `C[m,n] = A[m,k] · B[k,n]`, cache-blocked.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner dim {k} != {k2}");
+    let mut c = Tensor::zeros(&[m, n]);
+    matmul_into(a.data(), b.data(), c.data_mut(), m, k, n);
+    c
+}
+
+/// `C[m,n] = A[k,m]ᵀ · B[k,n]` without materializing the transpose.
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (k, m) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2);
+    let mut c = Tensor::zeros(&[m, n]);
+    let (ad, bd, cd) = (a.data(), b.data(), c.data_mut());
+    // c[i,j] += a[l,i] * b[l,j]: stream over l so both reads are rows.
+    for l in 0..k {
+        let arow = &ad[l * m..(l + 1) * m];
+        let brow = &bd[l * n..(l + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut cd[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// `C[m,n] = A[m,k] · B[n,k]ᵀ` without materializing the transpose.
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (n, k2) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2);
+    let mut c = Tensor::zeros(&[m, n]);
+    let (ad, bd, cd) = (a.data(), b.data(), c.data_mut());
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for l in 0..k {
+                acc += arow[l] * brow[l];
+            }
+            cd[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Raw blocked matmul kernel: `c[m,n] += a[m,k] * b[k,n]` (c pre-zeroed by
+/// callers that want assignment). ikj order with row-slice inner loops; the
+/// compiler autovectorizes the j loop.
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if n <= 128 {
+        // Register/L1-blocked micro-kernel for the conv per-tap shapes
+        // (n = channels ≤ 128): accumulate the whole c row across a
+        // 4-way-unrolled k loop, so c traffic happens once per row and
+        // the fma chains interleave (§Perf iteration 3).
+        let mut acc = [0f32; 128];
+        for i in 0..m {
+            let accs = &mut acc[..n];
+            accs.copy_from_slice(&c[i * n..(i + 1) * n]);
+            let arow = &a[i * k..(i + 1) * k];
+            let mut l = 0;
+            while l + 4 <= k {
+                let (a0, a1, a2, a3) = (arow[l], arow[l + 1], arow[l + 2], arow[l + 3]);
+                let b0 = &b[l * n..(l + 1) * n];
+                let b1 = &b[(l + 1) * n..(l + 2) * n];
+                let b2 = &b[(l + 2) * n..(l + 3) * n];
+                let b3 = &b[(l + 3) * n..(l + 4) * n];
+                for j in 0..n {
+                    accs[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                }
+                l += 4;
+            }
+            while l < k {
+                let av = arow[l];
+                let brow = &b[l * n..(l + 1) * n];
+                for j in 0..n {
+                    accs[j] += av * brow[j];
+                }
+                l += 1;
+            }
+            c[i * n..(i + 1) * n].copy_from_slice(accs);
+        }
+        return;
+    }
+    const BK: usize = 64; // k-blocking keeps b rows hot in L1/L2
+    for k0 in (0..k).step_by(BK) {
+        let k1 = (k0 + BK).min(k);
+        for i in 0..m {
+            let crow = &mut c[i * n..(i + 1) * n];
+            for l in k0..k1 {
+                let av = a[i * k + l];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[l * n..(l + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+}
+
+/// Raw kernel: `c[m,n] += a[m,k] · b[n,k]ᵀ` over slices (no allocation).
+pub fn matmul_nt_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for l in 0..k {
+                acc += arow[l] * brow[l];
+            }
+            crow[j] += acc;
+        }
+    }
+}
+
+/// Raw kernel: `c[m,n] += a[k,m]ᵀ · b[k,n]` over slices (no allocation).
+pub fn matmul_tn_into(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    // 4-way unroll over the streamed k axis so each c row is touched
+    // once per 4 contributions (§Perf iteration 3).
+    let mut l = 0;
+    while l + 4 <= k {
+        let a0 = &a[l * m..(l + 1) * m];
+        let a1 = &a[(l + 1) * m..(l + 2) * m];
+        let a2 = &a[(l + 2) * m..(l + 3) * m];
+        let a3 = &a[(l + 3) * m..(l + 4) * m];
+        let b0 = &b[l * n..(l + 1) * n];
+        let b1 = &b[(l + 1) * n..(l + 2) * n];
+        let b2 = &b[(l + 2) * n..(l + 3) * n];
+        let b3 = &b[(l + 3) * n..(l + 4) * n];
+        for i in 0..m {
+            let (v0, v1, v2, v3) = (a0[i], a1[i], a2[i], a3[i]);
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += v0 * b0[j] + v1 * b1[j] + v2 * b2[j] + v3 * b3[j];
+            }
+        }
+        l += 4;
+    }
+    while l < k {
+        let arow = &a[l * m..(l + 1) * m];
+        let brow = &b[l * n..(l + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+        l += 1;
+    }
+}
+
+/// Transpose a 2-d tensor.
+pub fn transpose(a: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let mut out = Tensor::zeros(&[n, m]);
+    for i in 0..m {
+        for j in 0..n {
+            out.data_mut()[j * m + i] = a.data()[i * n + j];
+        }
+    }
+    out
+}
+
+// ----- linear solves (dense vijp support) -----------------------------------
+
+/// Solve `X · A = B` for X given square `A[n,n]`, `B[m,n]` → `X[m,n]`,
+/// via Gaussian elimination with partial pivoting on `Aᵀ Xᵀ = Bᵀ`.
+/// Used by the dense-layer right-inverse when `A = W Wᵀ` (Gram matrix).
+pub fn solve_right(a: &Tensor, b: &Tensor) -> anyhow::Result<Tensor> {
+    assert_eq!(a.rank(), 2);
+    let n = a.shape()[0];
+    assert_eq!(a.shape()[1], n, "solve_right needs square A");
+    assert_eq!(b.shape()[1], n);
+    let m = b.shape()[0];
+
+    // Build augmented system on Aᵀ (X Aᵀᵀ = B ⇒ Aᵀ xᵀ = bᵀ per row of B).
+    let mut lu: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    let rhs: Vec<f64> = b.data().iter().map(|&x| x as f64).collect();
+    // We solve A^T y = b^T for each row b of B; A^T[i][j] = a[j*n+i].
+    // Materialize A^T once into `lu` (n x n, row-major).
+    let mut at = vec![0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            at[i * n + j] = lu[j * n + i];
+        }
+    }
+    lu = at;
+
+    let mut perm: Vec<usize> = (0..n).collect();
+    // LU with partial pivoting.
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        let mut best = lu[perm[col] * n + col].abs();
+        for r in col + 1..n {
+            let v = lu[perm[r] * n + col].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best < 1e-12 {
+            anyhow::bail!("solve_right: singular matrix (pivot {best:e} at col {col}) — layer is not submersive");
+        }
+        perm.swap(col, piv);
+        let prow = perm[col];
+        let pval = lu[prow * n + col];
+        for r in col + 1..n {
+            let row = perm[r];
+            let factor = lu[row * n + col] / pval;
+            lu[row * n + col] = factor; // store L
+            for c in col + 1..n {
+                lu[row * n + c] -= factor * lu[prow * n + c];
+            }
+        }
+    }
+
+    // Solve for each row of B.
+    let mut out = Tensor::zeros(&[m, n]);
+    let mut y = vec![0f64; n];
+    for r in 0..m {
+        // forward substitution (apply permutation)
+        for i in 0..n {
+            let mut acc = rhs[r * n + perm[i]];
+            for j in 0..i {
+                acc -= lu[perm[i] * n + j] * y[j];
+            }
+            y[i] = acc;
+        }
+        // back substitution
+        for i in (0..n).rev() {
+            let mut acc = y[i];
+            for j in i + 1..n {
+                acc -= lu[perm[i] * n + j] * y[j];
+            }
+            y[i] = acc / lu[perm[i] * n + i];
+        }
+        for i in 0..n {
+            out.data_mut()[r * n + i] = y[i] as f32;
+        }
+    }
+    // rhs unused further
+    let _ = rhs;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::assert_close;
+    use crate::util::Rng;
+
+    #[test]
+    fn elementwise() {
+        let a = Tensor::from_vec(vec![1.0, 2.0, 3.0], &[3]);
+        let b = Tensor::from_vec(vec![4.0, 5.0, 6.0], &[3]);
+        assert_eq!(add(&a, &b).data(), &[5.0, 7.0, 9.0]);
+        assert_eq!(sub(&b, &a).data(), &[3.0, 3.0, 3.0]);
+        assert_eq!(mul(&a, &b).data(), &[4.0, 10.0, 18.0]);
+        assert_eq!(scale(&a, 2.0).data(), &[2.0, 4.0, 6.0]);
+        assert_eq!(dot(&a, &b), 32.0);
+        assert_eq!(sum(&a), 6.0);
+    }
+
+    #[test]
+    fn axpy() {
+        let mut a = Tensor::from_vec(vec![1.0, 1.0], &[2]);
+        let b = Tensor::from_vec(vec![2.0, 3.0], &[2]);
+        axpy_inplace(&mut a, 0.5, &b);
+        assert_eq!(a.data(), &[2.0, 2.5]);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let b = Tensor::from_vec(vec![5.0, 6.0, 7.0, 8.0], &[2, 2]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let mut rng = Rng::new(0);
+        let a = Tensor::randn(&[7, 5], 1.0, &mut rng);
+        let b = Tensor::randn(&[5, 9], 1.0, &mut rng);
+        let c = matmul(&a, &b);
+        let c_tn = matmul_tn(&transpose(&a), &b);
+        let c_nt = matmul_nt(&a, &transpose(&b));
+        assert_close(&c_tn, &c, 1e-5, "matmul_tn");
+        assert_close(&c_nt, &c, 1e-5, "matmul_nt");
+    }
+
+    #[test]
+    fn matmul_blocked_large_k() {
+        // exercise the BK blocking boundary
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[3, 130], 1.0, &mut rng);
+        let b = Tensor::randn(&[130, 4], 1.0, &mut rng);
+        let c = matmul(&a, &b);
+        // naive reference
+        let mut expect = Tensor::zeros(&[3, 4]);
+        for i in 0..3 {
+            for j in 0..4 {
+                let mut acc = 0.0;
+                for l in 0..130 {
+                    acc += a.at2(i, l) * b.at2(l, j);
+                }
+                expect.data_mut()[i * 4 + j] = acc;
+            }
+        }
+        assert_close(&c, &expect, 1e-5, "blocked matmul");
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let t = transpose(&transpose(&a));
+        assert_eq!(a, t);
+    }
+
+    #[test]
+    fn argmax_ties_first() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn solve_right_recovers() {
+        // X A = B with known X
+        let mut rng = Rng::new(3);
+        let n = 6;
+        let m = 4;
+        // Build a well-conditioned A = M Mᵀ + I
+        let mmat = Tensor::randn(&[n, n], 0.5, &mut rng);
+        let mut a = matmul_nt(&mmat, &mmat);
+        for i in 0..n {
+            let idx = i * n + i;
+            a.data_mut()[idx] += 1.0;
+        }
+        let x_true = Tensor::randn(&[m, n], 1.0, &mut rng);
+        let b = matmul(&x_true, &a);
+        let x = solve_right(&a, &b).unwrap();
+        assert_close(&x, &x_true, 1e-3, "solve_right");
+    }
+
+    #[test]
+    fn solve_right_singular_errors() {
+        let a = Tensor::zeros(&[3, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        assert!(solve_right(&a, &b).is_err());
+    }
+}

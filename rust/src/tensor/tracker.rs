@@ -1,0 +1,152 @@
+//! Global allocation tracker — the reproduction's analogue of
+//! `jax.device.memory_stats()` in the paper's experimental setup (§6.1).
+//!
+//! Every [`crate::tensor::Tensor`] (and the sign-bit residual store)
+//! registers its payload bytes on allocation and releases them on drop.
+//! Gradient engines report the **peak live bytes** observed between
+//! [`reset_peak`] and the end of a gradient computation; this ranks methods
+//! exactly as GPU peak memory would, because peak residual footprint is a
+//! property of what the algorithm keeps alive, not of the device.
+//!
+//! Measurements that must not interleave (e.g. two engines measured from
+//! concurrent tests) serialize through [`measure_lock`].
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+static CURRENT: AtomicI64 = AtomicI64::new(0);
+static PEAK: AtomicI64 = AtomicI64::new(0);
+static TOTAL_ALLOCS: AtomicI64 = AtomicI64::new(0);
+
+static MEASURE_MUTEX: Mutex<()> = Mutex::new(());
+
+/// Register an allocation of `bytes`.
+pub fn alloc(bytes: usize) {
+    let now = CURRENT.fetch_add(bytes as i64, Ordering::Relaxed) + bytes as i64;
+    TOTAL_ALLOCS.fetch_add(1, Ordering::Relaxed);
+    // Monotone peak update.
+    let mut peak = PEAK.load(Ordering::Relaxed);
+    while now > peak {
+        match PEAK.compare_exchange_weak(peak, now, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => break,
+            Err(p) => peak = p,
+        }
+    }
+}
+
+/// Release an allocation of `bytes`.
+pub fn free(bytes: usize) {
+    CURRENT.fetch_sub(bytes as i64, Ordering::Relaxed);
+}
+
+/// Currently live tracked bytes.
+pub fn current() -> usize {
+    CURRENT.load(Ordering::Relaxed).max(0) as usize
+}
+
+/// Peak live bytes since the last [`reset_peak`].
+pub fn peak() -> usize {
+    PEAK.load(Ordering::Relaxed).max(0) as usize
+}
+
+/// Number of tracked allocations since process start (allocation-churn
+/// metric used by the §Perf pass).
+pub fn total_allocs() -> usize {
+    TOTAL_ALLOCS.load(Ordering::Relaxed).max(0) as usize
+}
+
+/// Reset the peak to the current live value.
+pub fn reset_peak() {
+    PEAK.store(CURRENT.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+/// Acquire the global measurement lock. Hold this while measuring a
+/// memory profile so that concurrent tests/threads do not pollute the peak.
+pub fn measure_lock() -> MutexGuard<'static, ()> {
+    match MEASURE_MUTEX.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// A memory profile of a closure run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemProfile {
+    /// Peak live bytes during the run, minus the live bytes at entry —
+    /// i.e. the *extra* memory the computation needed (the paper's
+    /// "memory consumption ... extra amount of memory needed to compute
+    /// gradients", §11).
+    pub peak_extra_bytes: usize,
+    /// Absolute peak during the run.
+    pub peak_bytes: usize,
+    /// Live bytes at entry (inputs, parameters).
+    pub baseline_bytes: usize,
+    /// Allocation count during the run.
+    pub allocs: usize,
+}
+
+/// Run `f` under the measurement lock and report its memory profile.
+pub fn measure<T>(f: impl FnOnce() -> T) -> (T, MemProfile) {
+    let _guard = measure_lock();
+    let baseline = current();
+    let allocs0 = total_allocs();
+    reset_peak();
+    let out = f();
+    let profile = MemProfile {
+        peak_extra_bytes: peak().saturating_sub(baseline),
+        peak_bytes: peak(),
+        baseline_bytes: baseline,
+        allocs: total_allocs() - allocs0,
+    };
+    (out, profile)
+}
+
+/// Pretty-print a byte count.
+pub fn fmt_bytes(bytes: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn measure_tracks_peak_and_balance() {
+        let (live_before, profile) = {
+            let live_before = current();
+            let (_, p) = measure(|| {
+                let a = Tensor::zeros(&[1024]); // 4 KiB
+                let b = Tensor::zeros(&[2048]); // 8 KiB
+                drop(a);
+                let c = Tensor::zeros(&[512]);
+                drop(b);
+                drop(c);
+            });
+            (live_before, p)
+        };
+        // Peak extra should be >= 12 KiB (a+b live together).
+        assert!(profile.peak_extra_bytes >= 12 * 1024, "{profile:?}");
+        // All freed: live returns to the pre-run value.
+        assert_eq!(current(), live_before);
+        assert!(profile.allocs >= 3);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert!(fmt_bytes(3 * 1024 * 1024).starts_with("3.00 MiB"));
+    }
+}

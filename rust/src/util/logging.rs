@@ -1,0 +1,122 @@
+//! Leveled stderr logging + JSONL metric sinks. Substrate for the missing
+//! tracing/log crates; intentionally tiny.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::util::json::Json;
+
+/// Log levels, ordered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+
+/// Set the global minimum level.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Is `level` currently enabled?
+pub fn enabled(level: Level) -> bool {
+    level as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Log a message to stderr if the level is enabled.
+pub fn log(level: Level, msg: &str) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO ",
+            Level::Warn => "WARN ",
+            Level::Error => "ERROR",
+        };
+        eprintln!("[{tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, &format!($($arg)*)) };
+}
+
+/// Append-only JSONL metrics writer (one JSON object per line).
+pub struct JsonlWriter {
+    out: BufWriter<File>,
+}
+
+impl JsonlWriter {
+    pub fn create(path: &Path) -> anyhow::Result<JsonlWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(path)?;
+        Ok(JsonlWriter {
+            out: BufWriter::new(file),
+        })
+    }
+
+    pub fn write(&mut self, record: &Json) -> anyhow::Result<()> {
+        writeln!(self.out, "{}", record.to_string())?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let dir = std::env::temp_dir().join("moonwalk_log_test");
+        let path = dir.join("m.jsonl");
+        {
+            let mut w = JsonlWriter::create(&path).unwrap();
+            w.write(&Json::from_pairs(vec![("step", 1usize.into())]))
+                .unwrap();
+            w.write(&Json::from_pairs(vec![("step", 2usize.into())]))
+                .unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(
+            Json::parse(lines[1]).unwrap().req_usize("step").unwrap(),
+            2
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn level_filtering() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info);
+    }
+}

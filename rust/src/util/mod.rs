@@ -1,0 +1,15 @@
+//! In-tree substrates: PRNG, JSON codec, timing, logging.
+//!
+//! The offline build image vendors only `xla`/`anyhow`/`thiserror`, so the
+//! usual ecosystem crates (rand, serde/serde_json, criterion) are rebuilt
+//! here at the size this project needs.
+
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use timer::Timer;

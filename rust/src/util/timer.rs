@@ -1,0 +1,98 @@
+//! Wall-clock timing helpers and a tiny benchmark runner (substrate for the
+//! missing criterion crate): warm-up iterations followed by timed runs,
+//! reporting median / p10 / p90.
+
+use std::time::Instant;
+
+/// A simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds since start.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}
+
+/// Result of a [`bench`] run, in seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub median: f64,
+    pub p10: f64,
+    pub p90: f64,
+    pub mean: f64,
+    pub iters: usize,
+}
+
+impl BenchStats {
+    pub fn median_ms(&self) -> f64 {
+        self.median * 1e3
+    }
+}
+
+/// Run `f` for `warmup` unmeasured + `iters` measured iterations.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        times.push(t.elapsed_s());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| times[((times.len() - 1) as f64 * p).round() as usize];
+    BenchStats {
+        median: pct(0.5),
+        p10: pct(0.1),
+        p90: pct(0.9),
+        mean: times.iter().sum::<f64>() / times.len() as f64,
+        iters,
+    }
+}
+
+/// Adaptive bench: choose an iteration count so total time ≈ `budget_s`,
+/// with at least `min_iters` iterations.
+pub fn bench_auto<F: FnMut()>(budget_s: f64, min_iters: usize, mut f: F) -> BenchStats {
+    let t = Timer::start();
+    f(); // first call (also warms caches / lazy init)
+    let once = t.elapsed_s().max(1e-9);
+    let iters = ((budget_s / once).floor() as usize).clamp(min_iters, 1000);
+    bench(1.min(iters), iters, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0;
+        let stats = bench(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(stats.iters, 5);
+        assert!(stats.p10 <= stats.median && stats.median <= stats.p90);
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed_s();
+        let b = t.elapsed_s();
+        assert!(b >= a);
+    }
+}

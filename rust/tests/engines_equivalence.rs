@@ -1,0 +1,236 @@
+//! Cross-engine gradient equivalence — the repo's central correctness
+//! property: every exact engine must reproduce Backprop's gradients on
+//! every architecture family it applies to (paper: Moonwalk computes
+//! *true* gradients, unlike projection methods).
+
+use moonwalk::autodiff::{
+    engine_by_name, Backprop, ForwardMode, GradEngine, Moonwalk, MoonwalkOpts, PureMoonwalk,
+    RevBackprop, EXACT_ENGINES,
+};
+use moonwalk::model::{
+    build_cnn1d_fragmental, build_cnn2d, build_invertible_cnn2d, build_mlp,
+    FragmentalCnn1dSpec, Network, SubmersiveCnn2dSpec,
+};
+use moonwalk::nn::{Loss, MeanLoss, SoftmaxCrossEntropy};
+use moonwalk::tensor::{rel_err, Tensor};
+use moonwalk::util::Rng;
+
+fn assert_engines_match(
+    net: &Network,
+    x: &Tensor,
+    loss: &dyn Loss,
+    engines: &[&dyn GradEngine],
+    tol: f32,
+) {
+    let reference = Backprop.compute(net, x, loss).unwrap();
+    for engine in engines {
+        let got = engine
+            .compute(net, x, loss)
+            .unwrap_or_else(|e| panic!("{} failed: {e}", engine.name()));
+        assert!(
+            (got.loss - reference.loss).abs() <= 1e-5 * reference.loss.abs().max(1.0),
+            "{}: loss {} vs {}",
+            engine.name(),
+            got.loss,
+            reference.loss
+        );
+        for (li, (a, b)) in reference.grads.iter().zip(&got.grads).enumerate() {
+            assert_eq!(a.len(), b.len(), "{}: arity at layer {li}", engine.name());
+            for (pi, (ga, gb)) in a.iter().zip(b).enumerate() {
+                let err = rel_err(gb, ga);
+                assert!(
+                    err <= tol,
+                    "{} layer {li} param {pi}: rel err {err} > {tol}",
+                    engine.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn all_exact_engines_on_submersive_cnn2d() {
+    let mut rng = Rng::new(0);
+    let spec = SubmersiveCnn2dSpec {
+        input_hw: 16,
+        depth: 3,
+        channels: 5,
+        cin: 2,
+        classes: 3,
+        ..Default::default()
+    };
+    let net = build_cnn2d(&spec, &mut rng);
+    let x = Tensor::randn(&[2, 16, 16, 2], 1.0, &mut rng);
+    let engines: Vec<Box<dyn GradEngine>> = EXACT_ENGINES
+        .iter()
+        .map(|n| engine_by_name(n, 4, 2, 0).unwrap())
+        .collect();
+    let refs: Vec<&dyn GradEngine> = engines.iter().map(|e| e.as_ref()).collect();
+    assert_engines_match(&net, &x, &MeanLoss, &refs, 5e-3);
+}
+
+#[test]
+fn all_exact_engines_with_xent_loss() {
+    let mut rng = Rng::new(1);
+    let spec = SubmersiveCnn2dSpec {
+        input_hw: 16,
+        depth: 2,
+        channels: 4,
+        cin: 3,
+        classes: 4,
+        ..Default::default()
+    };
+    let net = build_cnn2d(&spec, &mut rng);
+    let x = Tensor::randn(&[3, 16, 16, 3], 1.0, &mut rng);
+    let loss = SoftmaxCrossEntropy::new(vec![0, 3, 1]);
+    let engines: Vec<Box<dyn GradEngine>> = EXACT_ENGINES
+        .iter()
+        .map(|n| engine_by_name(n, 8, 0, 0).unwrap())
+        .collect();
+    let refs: Vec<&dyn GradEngine> = engines.iter().map(|e| e.as_ref()).collect();
+    assert_engines_match(&net, &x, &loss, &refs, 5e-3);
+}
+
+#[test]
+fn fragmental_on_1d_cnn_all_blocks() {
+    let mut rng = Rng::new(2);
+    let spec = FragmentalCnn1dSpec {
+        input_len: 64,
+        channels: 8,
+        depth: 3,
+        classes: 3,
+        ..Default::default()
+    };
+    let net = build_cnn1d_fragmental(&spec, &mut rng);
+    let x = Tensor::randn(&[2, 64, 3], 1.0, &mut rng);
+    for block in [4usize, 8, 16] {
+        let engine = Moonwalk::new(MoonwalkOpts {
+            fragment_block: Some(block),
+            ..Default::default()
+        });
+        // The in-block recurrence amplifies the f32 rounding already
+        // present in the Phase-II cotangents by a per-step factor set by
+        // the off-pivot/pivot weight ratio, so tolerance grows with
+        // block size (EXPERIMENTS.md §Numerics; the effect exists in the
+        // paper's f32 GPU implementation too but is mild at their 256
+        // channels where He-init taps are ~1/16 the pivot).
+        let tol = 5e-3 * (block as f32 / 4.0) * (block as f32 / 4.0);
+        assert_engines_match(&net, &x, &MeanLoss, &[&engine], tol);
+    }
+}
+
+#[test]
+fn moonwalk_without_blocks_checkpoints_1d_cnn() {
+    // Without fragment_block the engine must fall back to full cotangent
+    // checkpoints and still be exact.
+    let mut rng = Rng::new(3);
+    let spec = FragmentalCnn1dSpec {
+        input_len: 32,
+        channels: 6,
+        depth: 2,
+        ..Default::default()
+    };
+    let net = build_cnn1d_fragmental(&spec, &mut rng);
+    let x = Tensor::randn(&[1, 32, 3], 1.0, &mut rng);
+    let engine = Moonwalk::new(MoonwalkOpts::default());
+    assert_engines_match(&net, &x, &MeanLoss, &[&engine], 5e-3);
+}
+
+#[test]
+fn revbackprop_and_all_moonwalks_on_invertible_net() {
+    let mut rng = Rng::new(4);
+    let net = build_invertible_cnn2d(5, 4, 0.2, &mut rng);
+    let x = Tensor::randn(&[2, 6, 6, 5], 1.0, &mut rng);
+    let mw = Moonwalk::new(MoonwalkOpts::default());
+    let pm = PureMoonwalk;
+    assert_engines_match(&net, &x, &MeanLoss, &[&RevBackprop, &mw, &pm], 1e-2);
+}
+
+#[test]
+fn forward_mode_and_pure_moonwalk_on_micro_mlp() {
+    let mut rng = Rng::new(5);
+    let net = build_mlp(&[5, 4, 3], 0.15, &mut rng);
+    let x = Tensor::randn(&[2, 5], 1.0, &mut rng);
+    let mw = Moonwalk::new(MoonwalkOpts::default());
+    assert_engines_match(&net, &x, &MeanLoss, &[&ForwardMode, &PureMoonwalk, &mw], 1e-2);
+}
+
+#[test]
+fn deep_network_stability() {
+    // Moonwalk's vijp chain must stay numerically stable across many
+    // layers (the triangular solves could amplify error).
+    let mut rng = Rng::new(6);
+    let spec = SubmersiveCnn2dSpec {
+        input_hw: 64,
+        depth: 5,
+        channels: 4,
+        cin: 2,
+        ..Default::default()
+    };
+    let net = build_cnn2d(&spec, &mut rng);
+    let x = Tensor::randn(&[1, 64, 64, 2], 1.0, &mut rng);
+    let mw = Moonwalk::new(MoonwalkOpts::default());
+    assert_engines_match(&net, &x, &MeanLoss, &[&mw], 1e-2);
+}
+
+#[test]
+fn combined_checkpoint_and_fragmental() {
+    // The two refinements compose: activation checkpointing in Phase
+    // I/II together with fragmental capture at non-submersive layers.
+    let mut rng = Rng::new(7);
+    let spec = FragmentalCnn1dSpec {
+        input_len: 64,
+        channels: 8,
+        depth: 4,
+        ..Default::default()
+    };
+    let net = build_cnn1d_fragmental(&spec, &mut rng);
+    let x = Tensor::randn(&[2, 64, 3], 1.0, &mut rng);
+    let engine = Moonwalk::new(MoonwalkOpts {
+        fragment_block: Some(8),
+        checkpoint_segments: Some(2),
+        ..Default::default()
+    });
+    assert_engines_match(&net, &x, &MeanLoss, &[&engine], 1e-2);
+}
+
+#[test]
+fn mixed_pool_mid_network() {
+    // Pooling mid-network (not just as the head) keeps the vijp chain
+    // intact — argmax gather is a valid right-inverse anywhere.
+    use moonwalk::nn::{Conv2d, LayerBox, LeakyRelu, MaxPool2d};
+    let mut rng = Rng::new(8);
+    let layers: Vec<LayerBox> = vec![
+        Box::new(Conv2d::new_submersive(3, 4, 4, 2, 1, false, &mut rng)),
+        Box::new(LeakyRelu::new(0.1)),
+        Box::new(MaxPool2d::new(2)),
+        Box::new(Conv2d::new_submersive(3, 4, 4, 2, 1, true, &mut rng)),
+        Box::new(LeakyRelu::new(0.2)),
+    ];
+    let net = Network::new(layers);
+    assert!(net.is_submersive());
+    let x = Tensor::randn(&[2, 33, 33, 4], 1.0, &mut rng);
+    let mw = Moonwalk::new(MoonwalkOpts::default());
+    assert_engines_match(&net, &x, &MeanLoss, &[&mw], 5e-3);
+}
+
+#[test]
+fn gradients_deterministic_across_runs() {
+    // Engines are bit-deterministic (required for the AOT parity tests).
+    let mut rng = Rng::new(9);
+    let spec = SubmersiveCnn2dSpec {
+        input_hw: 16,
+        depth: 2,
+        channels: 4,
+        cin: 2,
+        ..Default::default()
+    };
+    let net = build_cnn2d(&spec, &mut rng);
+    let x = Tensor::randn(&[1, 16, 16, 2], 1.0, &mut rng);
+    let mw = Moonwalk::new(MoonwalkOpts::default());
+    let a = mw.compute(&net, &x, &MeanLoss).unwrap();
+    let b = mw.compute(&net, &x, &MeanLoss).unwrap();
+    for (ga, gb) in a.grads.iter().flatten().zip(b.grads.iter().flatten()) {
+        assert_eq!(ga.data(), gb.data());
+    }
+}

@@ -1,0 +1,135 @@
+//! PJRT round-trip tests: load the AOT artifacts (`make artifacts`),
+//! compile them on the PJRT CPU client and check their numerics against
+//! the native Rust layer library — the L1/L2/L3 composition proof.
+//!
+//! Skipped (with a notice) when `artifacts/` has not been built.
+
+use moonwalk::nn::{Conv2d, Layer, LeakyRelu, ResidualKind};
+use moonwalk::runtime::PjrtRuntime;
+use moonwalk::tensor::{assert_close, Tensor};
+use moonwalk::util::Rng;
+use std::path::Path;
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(PjrtRuntime::load(&dir).expect("artifact compilation"))
+}
+
+/// Build the same conv layer the artifacts were lowered for.
+fn conv_from_manifest(rt: &PjrtRuntime, seed: u64) -> (Conv2d, usize, usize) {
+    let cfg = &rt.manifest.config;
+    let ch = cfg.req_usize("channels").unwrap();
+    let k = cfg.req_usize("k").unwrap();
+    let s = cfg.req_usize("stride").unwrap();
+    let p = cfg.req_usize("pad").unwrap();
+    let batch = cfg.req_usize("batch").unwrap();
+    let hw = cfg.req_usize("hw").unwrap();
+    let mut rng = Rng::new(seed);
+    (
+        Conv2d::new_submersive(k, ch, ch, s, p, false, &mut rng),
+        batch,
+        hw,
+    )
+}
+
+#[test]
+fn conv_fwd_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let (conv, batch, hw) = conv_from_manifest(&rt, 1);
+    let mut rng = Rng::new(2);
+    let x = Tensor::randn(&[batch, hw, hw, conv.cin], 1.0, &mut rng);
+    let y_native = conv.forward(&x);
+    let y_pjrt = rt.execute1("conv0_fwd", &[&x, &conv.w]).unwrap();
+    assert_close(&y_pjrt, &y_native, 1e-4, "PJRT conv fwd vs native");
+}
+
+#[test]
+fn conv_vijp_pallas_matches_native() {
+    // The paper's operator: the Pallas Alg.-2 kernel (lowered through
+    // interpret mode into the artifact) must agree with the Rust
+    // elimination.
+    let Some(rt) = runtime() else { return };
+    let (conv, batch, hw) = conv_from_manifest(&rt, 3);
+    let mut rng = Rng::new(4);
+    let x = Tensor::randn(&[batch, hw, hw, conv.cin], 1.0, &mut rng);
+    let (y, res) = conv.forward_res(&x, ResidualKind::Minimal);
+    let hprime = Tensor::randn(y.shape(), 1.0, &mut rng);
+    let h = conv.vjp_input(&res, &hprime);
+    let native = conv.vijp(&res, &h).unwrap();
+    let pjrt = rt.execute1("conv0_vijp", &[&h, &conv.w]).unwrap();
+    assert_close(&pjrt, &native, 1e-3, "PJRT Pallas vijp vs native");
+    assert_close(&pjrt, &hprime, 1e-3, "PJRT Pallas vijp right-inverse");
+}
+
+#[test]
+fn conv_vjps_match_native() {
+    let Some(rt) = runtime() else { return };
+    let (conv, batch, hw) = conv_from_manifest(&rt, 5);
+    let mut rng = Rng::new(6);
+    let x = Tensor::randn(&[batch, hw, hw, conv.cin], 1.0, &mut rng);
+    let (y, res) = conv.forward_res(&x, ResidualKind::Minimal);
+    let g = Tensor::randn(y.shape(), 1.0, &mut rng);
+    let h_native = conv.vjp_input(&res, &g);
+    let h_pjrt = rt.execute1("conv0_vjp_in", &[&g, &conv.w]).unwrap();
+    assert_close(&h_pjrt, &h_native, 1e-4, "PJRT conv vjp_in");
+    let dw_native = conv.vjp_params(&x, &g);
+    let dw_pjrt = rt.execute1("conv0_vjp_w", &[&x, &g]).unwrap();
+    assert_close(&dw_pjrt, &dw_native[0], 1e-3, "PJRT conv vjp_w");
+}
+
+#[test]
+fn lrelu_ops_match_native() {
+    let Some(rt) = runtime() else { return };
+    let cfg = &rt.manifest.config;
+    let alpha = cfg.req_f64("alpha").unwrap() as f32;
+    let op = rt.manifest.op("lrelu0_fwd").unwrap().clone();
+    let shape = op.inputs[0].clone();
+    let mut rng = Rng::new(7);
+    let x = Tensor::randn(&shape, 1.0, &mut rng);
+    let lrelu = LeakyRelu::new(alpha);
+    let y_native = lrelu.forward(&x);
+    let y_pjrt = rt.execute1("lrelu0_fwd", &[&x]).unwrap();
+    assert_close(&y_pjrt, &y_native, 1e-5, "PJRT lrelu fwd");
+
+    let h = Tensor::randn(&shape, 1.0, &mut rng);
+    let (_, res) = lrelu.forward_res(&x, ResidualKind::Minimal);
+    let vijp_native = lrelu.vijp(&res, &h).unwrap();
+    let vijp_pjrt = rt.execute1("lrelu0_vijp", &[&x, &h]).unwrap();
+    assert_close(&vijp_pjrt, &vijp_native, 1e-4, "PJRT lrelu vijp");
+}
+
+#[test]
+fn loss_grad_shapes_and_values() {
+    let Some(rt) = runtime() else { return };
+    let cfg = &rt.manifest.config;
+    let batch = cfg.req_usize("batch").unwrap();
+    let classes = cfg.req_usize("classes").unwrap();
+    let mut rng = Rng::new(8);
+    let logits = Tensor::randn(&[batch, classes], 1.0, &mut rng);
+    let mut onehot = Tensor::zeros(&[batch, classes]);
+    for i in 0..batch {
+        let idx = i * classes + (i % classes);
+        onehot.data_mut()[idx] = 1.0;
+    }
+    let out = rt.execute("loss_grad", &[&logits, &onehot]).unwrap();
+    assert_eq!(out.len(), 2);
+    assert_eq!(out[0].len(), 1);
+    // Compare against the native softmax cross-entropy.
+    let targets: Vec<usize> = (0..batch).map(|i| i % classes).collect();
+    let native = moonwalk::nn::SoftmaxCrossEntropy::new(targets);
+    use moonwalk::nn::Loss;
+    assert!((out[0].data()[0] - native.value(&logits)).abs() < 1e-4);
+    assert_close(&out[1], &native.grad(&logits), 1e-4, "PJRT loss grad");
+}
+
+#[test]
+fn shape_mismatch_rejected() {
+    let Some(rt) = runtime() else { return };
+    let bad = Tensor::zeros(&[1, 2, 3]);
+    assert!(rt.execute("conv0_fwd", &[&bad, &bad]).is_err());
+    assert!(rt.execute("nonexistent_op", &[]).is_err());
+}
