@@ -3,17 +3,35 @@
 //! implemented convolutional vijp operator does not introduce a
 //! computational overhead".
 //!
-//! Also reports forward/vjp_w costs and the fast-path vs wavefront vijp
-//! split, plus allocation churn for the §Perf log.
+//! Also reports forward/vjp_w costs, the fast-path vs wavefront vijp
+//! split, and allocation churn (cold + steady-state) for the §Perf log.
+//!
+//! Flags (after `--`):
+//! * `--quick`      — 3 iterations instead of 15 (the tier-1 smoke run)
+//! * `--threads N`  — worker-pool size (default: env / autodetect)
+//! * `--gemm A`     — force a GEMM algorithm (auto|scalar|blocked|parallel)
+//! * `--json PATH`  — machine-readable output (default BENCH_perf_ops.json)
+//!
+//! Compare `--threads 1` vs `--threads 4` on the 64×64×32 shapes for the
+//! parallel-runtime speedup tracked in EXPERIMENTS.md §Perf.
 
-use moonwalk::nn::{Conv2d, Layer, ResidualKind};
+use moonwalk::autodiff::engine_by_name;
+use moonwalk::cli::Args;
+use moonwalk::model::{build_cnn2d, SubmersiveCnn2dSpec};
+use moonwalk::nn::{Conv2d, Layer, MeanLoss, ResidualKind};
+use moonwalk::runtime::pool;
 use moonwalk::tensor::{tracker, Tensor};
+use moonwalk::util::json::Json;
 use moonwalk::util::timer::bench;
 use moonwalk::util::Rng;
 
-fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    moonwalk::cli::configure_runtime(&args)?;
+    let quick = args.has("quick");
     let iters = if quick { 3 } else { 15 };
+    let threads = pool::threads();
+    println!("threads={threads} quick={quick}");
     println!(
         "{:<34} {:>12} {:>12} {:>12} {:>12} {:>10}",
         "config", "fwd_ms", "vjp_in_ms", "vjp_w_ms", "vijp_ms", "vijp/vjp"
@@ -26,6 +44,7 @@ fn main() {
         (2, 64, 32, 5, 3, 2), // s+p>=k: still fast path
         (2, 63, 16, 5, 3, 1), // s+p<k: wavefront (spatially coupled)
     ];
+    let mut rows: Vec<Json> = Vec::new();
     for &(n, hw, ch, k, s, p) in shapes {
         let mut rng = Rng::new(1);
         let conv = Conv2d::new_submersive(k, ch, ch, s, p, false, &mut rng);
@@ -46,15 +65,33 @@ fn main() {
         let vijp = bench(1, iters, || {
             std::hint::black_box(conv.vijp(&res, &h).unwrap());
         });
+        let config = format!(
+            "{n}x{hw}x{hw}x{ch} k{k}s{s}p{p}{}",
+            if s + p >= k { "" } else { " (wave)" }
+        );
         println!(
             "{:<34} {:>12.3} {:>12.3} {:>12.3} {:>12.3} {:>10.2}",
-            format!("{n}x{hw}x{hw}x{ch} k{k}s{s}p{p}{}", if s + p >= k { "" } else { " (wave)" }),
+            config,
             fwd.median_ms(),
             vjp_in.median_ms(),
             vjp_w.median_ms(),
             vijp.median_ms(),
             vijp.median / vjp_in.median
         );
+        rows.push(Json::from_pairs(vec![
+            ("config", config.as_str().into()),
+            ("n", n.into()),
+            ("hw", hw.into()),
+            ("ch", ch.into()),
+            ("k", k.into()),
+            ("s", s.into()),
+            ("p", p.into()),
+            ("fwd_ms", fwd.median_ms().into()),
+            ("vjp_in_ms", vjp_in.median_ms().into()),
+            ("vjp_w_ms", vjp_w.median_ms().into()),
+            ("vijp_ms", vijp.median_ms().into()),
+            ("vijp_vjp_ratio", (vijp.median / vjp_in.median).into()),
+        ]));
     }
 
     // Ablation 1 (DESIGN.md §10): anchor placement. The h₁ seed
@@ -63,8 +100,6 @@ fn main() {
     {
         use moonwalk::autodiff::{Moonwalk, MoonwalkOpts};
         use moonwalk::coordinator::sweep::measure_engine as me;
-        use moonwalk::model::{build_cnn2d, SubmersiveCnn2dSpec};
-        use moonwalk::nn::MeanLoss;
         let spec = SubmersiveCnn2dSpec {
             input_hw: 64,
             channels: 32,
@@ -75,12 +110,15 @@ fn main() {
         let net = build_cnn2d(&spec, &mut rng);
         let x = Tensor::randn(&[4, 64, 64, 3], 1.0, &mut rng);
         println!("\nablation — cotangent anchor placement (moonwalk, depth 4):");
-        for (label, naive) in [("h1 seed (paper §4.3 variant)", false), ("naive (break-layer output)", true)] {
+        for (label, naive) in [
+            ("h1 seed (paper §4.3 variant)", false),
+            ("naive (break-layer output)", true),
+        ] {
             let engine = Moonwalk::new(MoonwalkOpts {
                 naive_anchor: naive,
                 ..Default::default()
             });
-            let (mem, time, _) = me(&engine, &net, &x, &MeanLoss, 1, iters.min(5)).unwrap();
+            let (mem, time, _) = me(&engine, &net, &x, &MeanLoss, 1, iters.min(5))?;
             println!(
                 "  {label:<30} peak={} median={:.2}ms",
                 tracker::fmt_bytes(mem),
@@ -89,11 +127,11 @@ fn main() {
         }
     }
 
-    // Allocation churn on the end-to-end engines (the §Perf metric).
-    println!("\nallocation churn (one gradient computation):");
-    use moonwalk::autodiff::engine_by_name;
-    use moonwalk::model::{build_cnn2d, SubmersiveCnn2dSpec};
-    use moonwalk::nn::MeanLoss;
+    // Allocation churn on the end-to-end engines (the §Perf metric):
+    // `cold` is the first gradient computation (arena misses included),
+    // `steady` a later one (arena warm — scratch churn should be ~0, only
+    // the per-layer activation/cotangent/grad tensors remain).
+    println!("\nallocation churn (one gradient computation, cold vs steady):");
     let spec = SubmersiveCnn2dSpec {
         input_hw: 64,
         channels: 32,
@@ -103,17 +141,47 @@ fn main() {
     let mut rng = Rng::new(0);
     let net = build_cnn2d(&spec, &mut rng);
     let x = Tensor::randn(&[4, 64, 64, 3], 1.0, &mut rng);
+    let mut churn: Vec<Json> = Vec::new();
     for name in ["backprop", "moonwalk"] {
-        let engine = engine_by_name(name, 4, 0, 0).unwrap();
-        let (_, prof) = tracker::measure(|| {
-            engine
-                .compute_streaming(&net, &x, &MeanLoss, &mut |_, g| drop(g))
-                .unwrap()
-        });
+        let engine = engine_by_name(name, 4, 0, 0)?;
+        let run = |engine: &dyn moonwalk::autodiff::GradEngine| {
+            tracker::measure(|| {
+                engine
+                    .compute_streaming(&net, &x, &MeanLoss, &mut |_, g| drop(g))
+                    .unwrap()
+            })
+        };
+        // Drain the process-global arena so `cold` really is a cold
+        // start for every engine, not just the first one measured.
+        moonwalk::tensor::arena::clear();
+        let (_, cold) = run(engine.as_ref());
+        let (_, steady) = run(engine.as_ref());
         println!(
-            "  {name:<10} allocs={:<6} peak={}",
-            prof.allocs,
-            tracker::fmt_bytes(prof.peak_extra_bytes)
+            "  {name:<10} cold_allocs={:<6} steady_allocs={:<6} peak={}",
+            cold.allocs,
+            steady.allocs,
+            tracker::fmt_bytes(steady.peak_extra_bytes)
         );
+        churn.push(Json::from_pairs(vec![
+            ("engine", name.into()),
+            ("cold_allocs", cold.allocs.into()),
+            ("steady_allocs", steady.allocs.into()),
+            ("peak_extra_bytes", steady.peak_extra_bytes.into()),
+        ]));
     }
+
+    // Machine-readable output for the perf-trajectory tracking (CI keeps
+    // one BENCH_perf_ops.json per run; diff across commits).
+    let json_path = args.get_or("json", "BENCH_perf_ops.json");
+    let out = Json::from_pairs(vec![
+        ("bench", "perf_ops".into()),
+        ("threads", threads.into()),
+        ("quick", quick.into()),
+        ("iters", iters.into()),
+        ("rows", Json::Arr(rows)),
+        ("churn", Json::Arr(churn)),
+    ]);
+    std::fs::write(json_path, out.to_string())?;
+    println!("\nwrote {json_path}");
+    Ok(())
 }

@@ -17,6 +17,15 @@
 //!   cotangent *forward* with **vijp** (Eq. 9), emit each layer's
 //!   parameter gradient with `vjp_params` (Eq. 10), and drop everything
 //!   before moving on — memory constant in depth.
+//!
+//! Parallelism: every layer operator invoked by the three phases
+//! (`forward_res`, `vjp_input`, `vijp`, `vjp_params`) is batch-parallel
+//! internally — images fan out across the scoped worker pool
+//! (`runtime::pool`, `--threads`) with per-worker scratch leased from the
+//! buffer arena, so the Phase I/II/III loops run multicore and, in steady
+//! state, allocation-free apart from the per-layer activation/cotangent
+//! tensors themselves. Partitioning is deterministic: a fixed thread
+//! count reproduces gradients bit-for-bit.
 
 use crate::autodiff::GradEngine;
 use crate::model::Network;

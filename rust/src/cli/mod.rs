@@ -1,8 +1,22 @@
 //! Minimal CLI argument parser (substrate for the missing clap crate):
 //! `binary <subcommand> [--flag value] [--switch]` with typed accessors
-//! and helpful errors.
+//! and helpful errors, plus the shared global-runtime-flag application
+//! ([`configure_runtime`]) used by the binary and the bench harnesses.
 
 use std::collections::BTreeMap;
+
+/// Apply the global runtime flags shared by every entry point:
+/// `--threads N` (worker-pool size) and `--gemm auto|scalar|blocked|parallel`
+/// (GEMM algorithm override). Call before any tensor work.
+pub fn configure_runtime(args: &Args) -> anyhow::Result<()> {
+    if let Some(t) = args.get_usize_opt("threads")? {
+        crate::runtime::pool::set_threads(t);
+    }
+    if let Some(algo) = args.get("gemm") {
+        crate::tensor::ops::set_gemm_override(algo)?;
+    }
+    Ok(())
+}
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
@@ -66,6 +80,18 @@ impl Args {
         }
     }
 
+    /// Optional integer flag: `None` when absent (so callers can
+    /// distinguish "unset" from an explicit value — e.g. `--threads`).
+    pub fn get_usize_opt(&self, name: &str) -> anyhow::Result<Option<usize>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
     pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -114,6 +140,15 @@ mod tests {
     fn bad_numeric_rejected() {
         let a = parse("x --steps abc");
         assert!(a.get_usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn optional_usize() {
+        let a = parse("bench --threads 4");
+        assert_eq!(a.get_usize_opt("threads").unwrap(), Some(4));
+        assert_eq!(a.get_usize_opt("depth").unwrap(), None);
+        let bad = parse("bench --threads x");
+        assert!(bad.get_usize_opt("threads").is_err());
     }
 
     #[test]

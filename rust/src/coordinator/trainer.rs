@@ -105,8 +105,10 @@ impl<'a> Trainer<'a> {
                         ("step", step.into()),
                         ("loss", (loss_val as f64).into()),
                         ("peak_mem_bytes", prof.peak_extra_bytes.into()),
+                        ("allocs", prof.allocs.into()),
                         ("step_time_s", step_timer.elapsed_s().into()),
                         ("engine", self.engine.name().as_str().into()),
+                        ("threads", crate::runtime::pool::threads().into()),
                     ]))?;
                 }
             }

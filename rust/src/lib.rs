@@ -20,9 +20,11 @@
 //!   plus a memory-budget planner that picks an engine for a budget.
 //! * [`coordinator`] — a config-driven trainer (optimizers, synthetic data
 //!   pipelines, JSONL metrics, sweeps).
-//! * [`runtime`] — a PJRT client that loads the AOT artifacts produced by
-//!   `python/compile/aot.py` (JAX/Pallas → HLO text) and executes them from
-//!   the Rust hot path; Python never runs at training time.
+//! * [`runtime`] — the scoped worker pool behind the parallel tensor
+//!   runtime (`runtime::pool`, `--threads`), plus a PJRT client (gated
+//!   behind the `xla` feature) that loads the AOT artifacts produced by
+//!   `python/compile/aot.py` (JAX/Pallas → HLO text) and executes them
+//!   from the Rust hot path; Python never runs at training time.
 //! * [`util`] / [`cli`] — in-tree substrates (JSON codec, PCG64 RNG, CLI
 //!   parser, timing harness) since the offline build has no access to
 //!   serde/clap/criterion/rand.

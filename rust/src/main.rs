@@ -10,6 +10,12 @@
 //!   planner: predicted memory/time per method, chosen engine.
 //! * `sweep     --config cfg.json --depths 1,2,..` — memory/time sweep
 //!   (the Fig. 2 / Fig. 3 measurement, printable without cargo bench).
+//!
+//! Global flags (every subcommand):
+//! * `--threads N` — worker-pool size for the parallel tensor runtime
+//!   (default: `MOONWALK_THREADS` env var, else available parallelism).
+//! * `--gemm auto|scalar|blocked|parallel` — force a GEMM algorithm
+//!   (default auto; `MOONWALK_GEMM` is the env spelling).
 
 use moonwalk::autodiff::{engine_by_name, Backprop, GradEngine, EXACT_ENGINES};
 use moonwalk::cli::Args;
@@ -250,6 +256,10 @@ fn main() {
             std::process::exit(2);
         }
     };
+    if let Err(e) = moonwalk::cli::configure_runtime(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
     let result = match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("gradcheck") => cmd_gradcheck(&args),
@@ -258,7 +268,8 @@ fn main() {
         Some("sweep") => cmd_sweep(&args),
         other => {
             eprintln!(
-                "usage: moonwalk <train|gradcheck|audit|plan|sweep> [--config cfg.json] ...\n\
+                "usage: moonwalk <train|gradcheck|audit|plan|sweep> [--config cfg.json] \
+                 [--threads N] [--gemm auto|scalar|blocked|parallel] ...\n\
                  (got {other:?}; see README.md)"
             );
             std::process::exit(2);

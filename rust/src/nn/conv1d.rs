@@ -19,7 +19,8 @@
 use crate::nn::{
     Fragment, Layer, LayerError, Residual, ResidualData, ResidualKind, Submersivity,
 };
-use crate::tensor::{ops, Tensor};
+use crate::runtime::pool;
+use crate::tensor::{arena, ops, Tensor};
 use crate::util::Rng;
 
 use super::conv2d::DIAG_FLOOR;
@@ -126,31 +127,35 @@ impl Conv1d {
         let (k, s, p, cin, cout) = (self.k, self.stride, self.pad, self.cin, self.cout);
         let row_len = k * cin;
         let mut out = Tensor::zeros(&[n, lo, cout]);
-        let mut patches = Tensor::zeros(&[lo, row_len]);
         let xd = x.data();
-        for img in 0..n {
-            let pd = patches.data_mut();
-            for a in 0..lo {
-                for j in 0..k {
-                    let ii = (s * a + j) as isize - p as isize;
-                    let dst = a * row_len + j * cin;
-                    if ii >= 0 && (ii as usize) < l {
-                        let src = (img * l + ii as usize) * cin;
-                        pd[dst..dst + cin].copy_from_slice(&xd[src..src + cin]);
-                    } else {
-                        pd[dst..dst + cin].fill(0.0);
+        let img_out = lo * cout;
+        // Batch-parallel: each worker leases its own im2col patch buffer.
+        let workers = pool::effective_threads(n);
+        pool::run_records(out.data_mut(), img_out, workers, |imgs, chunk| {
+            let mut patches = arena::take(lo * row_len);
+            for (local, img) in imgs.enumerate() {
+                for a in 0..lo {
+                    for j in 0..k {
+                        let ii = (s * a + j) as isize - p as isize;
+                        let dst = a * row_len + j * cin;
+                        if ii >= 0 && (ii as usize) < l {
+                            let src = (img * l + ii as usize) * cin;
+                            patches[dst..dst + cin].copy_from_slice(&xd[src..src + cin]);
+                        } else {
+                            patches[dst..dst + cin].fill(0.0);
+                        }
                     }
                 }
+                ops::matmul_into_auto(
+                    &patches,
+                    wdata,
+                    &mut chunk[local * img_out..(local + 1) * img_out],
+                    lo,
+                    row_len,
+                    cout,
+                );
             }
-            ops::matmul_into(
-                patches.data(),
-                wdata,
-                &mut out.data_mut()[img * lo * cout..(img + 1) * lo * cout],
-                lo,
-                row_len,
-                cout,
-            );
-        }
+        });
         if let Some(b) = bias {
             for chunk in out.data_mut().chunks_mut(cout) {
                 for (o, bv) in chunk.iter_mut().zip(b.data()) {
@@ -162,34 +167,39 @@ impl Conv1d {
     }
 
     /// Transpose convolution: `h[n,i,c] = Σ_{j,c'} w[j,c,c'] h'[n,(i−j+p)/s,c']`.
+    /// Batch-parallel: images scatter into disjoint output chunks.
     fn transpose_conv(&self, g: &Tensor, in_shape: &[usize]) -> Tensor {
         let (n, l) = (in_shape[0], in_shape[1]);
         let lo = g.shape()[1];
         let (k, s, p, cin, cout) = (self.k, self.stride, self.pad, self.cin, self.cout);
         let mut out = Tensor::zeros(&[n, l, cin]);
-        let od = out.data_mut();
         let gd = g.data();
         let wd = self.w.data();
-        for img in 0..n {
-            for a in 0..lo {
-                let grow = &gd[(img * lo + a) * cout..(img * lo + a + 1) * cout];
-                for j in 0..k {
-                    let ii = (s * a + j) as isize - p as isize;
-                    if ii < 0 || ii as usize >= l {
-                        continue;
-                    }
-                    let dst = (img * l + ii as usize) * cin;
-                    for c in 0..cin {
-                        let wrow = &wd[(j * cin + c) * cout..(j * cin + c + 1) * cout];
-                        let mut acc = 0.0f32;
-                        for c2 in 0..cout {
-                            acc += wrow[c2] * grow[c2];
+        let img_in = l * cin;
+        let workers = pool::effective_threads(n);
+        pool::run_records(out.data_mut(), img_in, workers, |imgs, chunk| {
+            for (local, img) in imgs.enumerate() {
+                let o_img = &mut chunk[local * img_in..(local + 1) * img_in];
+                for a in 0..lo {
+                    let grow = &gd[(img * lo + a) * cout..(img * lo + a + 1) * cout];
+                    for j in 0..k {
+                        let ii = (s * a + j) as isize - p as isize;
+                        if ii < 0 || ii as usize >= l {
+                            continue;
                         }
-                        od[dst + c] += acc;
+                        let dst = (ii as usize) * cin;
+                        for c in 0..cin {
+                            let wrow = &wd[(j * cin + c) * cout..(j * cin + c + 1) * cout];
+                            let mut acc = 0.0f32;
+                            for c2 in 0..cout {
+                                acc += wrow[c2] * grow[c2];
+                            }
+                            o_img[dst + c] += acc;
+                        }
                     }
                 }
             }
-        }
+        });
         out
     }
 
@@ -214,28 +224,35 @@ impl Conv1d {
         let wd = self.w.data();
         let hd = h.data();
         let reach = (k - 1 - p.min(k - 1)) / s;
-        for img in 0..n {
-            for a in 0..lo {
-                for co in 0..cout {
-                    let mut acc = hd[(img * ll + s * a) * cin + co];
-                    for a2 in a.saturating_sub(reach)..=a {
-                        let j = s * (a - a2) + p;
-                        if j >= k {
-                            continue;
+        let img_h = ll * cin;
+        let img_hp = lo * cout;
+        // Images are independent; the in-image elimination is sequential.
+        let workers = pool::effective_threads(n);
+        pool::run_records(hp.data_mut(), img_hp, workers, |imgs, chunk| {
+            for (local, img) in imgs.enumerate() {
+                let h_img = &hd[img * img_h..(img + 1) * img_h];
+                let hp_img = &mut chunk[local * img_hp..(local + 1) * img_hp];
+                for a in 0..lo {
+                    for co in 0..cout {
+                        let mut acc = h_img[(s * a) * cin + co];
+                        for a2 in a.saturating_sub(reach)..=a {
+                            let j = s * (a - a2) + p;
+                            if j >= k {
+                                continue;
+                            }
+                            let c_end = if a2 == a { co } else { cout };
+                            let hprow = a2 * cout;
+                            let wrow = (j * cin + co) * cout;
+                            for c2 in 0..c_end {
+                                acc -= wd[wrow + c2] * hp_img[hprow + c2];
+                            }
                         }
-                        let c_end = if a2 == a { co } else { cout };
-                        let hprow = (img * lo + a2) * cout;
-                        let wrow = (j * cin + co) * cout;
-                        let hpd = hp.data();
-                        for c2 in 0..c_end {
-                            acc -= wd[wrow + c2] * hpd[hprow + c2];
-                        }
+                        let diag = wd[(p * cin + co) * cout + co];
+                        hp_img[a * cout + co] = acc / diag;
                     }
-                    let diag = wd[(p * cin + co) * cout + co];
-                    hp.data_mut()[(img * lo + a) * cout + co] = acc / diag;
                 }
             }
-        }
+        });
         Ok(hp)
     }
 
@@ -309,32 +326,51 @@ impl Layer for Conv1d {
         let (n, l) = (x.shape()[0], x.shape()[1]);
         let lo = self.out_len(l).expect("shapes validated");
         let (k, s, p, cin, cout) = (self.k, self.stride, self.pad, self.cin, self.cout);
-        let mut dw = Tensor::zeros(&[k, cin, cout]);
+        let wlen = k * cin * cout;
         let xd = x.data();
         let gd = grad_out.data();
-        let dwd = dw.data_mut();
-        for img in 0..n {
-            for a in 0..lo {
-                let grow = &gd[(img * lo + a) * cout..(img * lo + a + 1) * cout];
-                for j in 0..k {
-                    let ii = (s * a + j) as isize - p as isize;
-                    if ii < 0 || ii as usize >= l {
-                        continue;
-                    }
-                    let xrow = &xd[(img * l + ii as usize) * cin..(img * l + ii as usize + 1) * cin];
-                    for c in 0..cin {
-                        let xv = xrow[c];
-                        if xv == 0.0 {
-                            continue;
-                        }
-                        let drow = &mut dwd[(j * cin + c) * cout..(j * cin + c + 1) * cout];
-                        for c2 in 0..cout {
-                            drow[c2] += xv * grow[c2];
+        // Image-parallel reduction with worker-ordered (deterministic)
+        // merge of per-worker dw accumulators, leased from the arena so
+        // they are tracker-visible and recycled.
+        let workers = pool::effective_threads(n);
+        let acc = pool::run_reduce(
+            n,
+            workers,
+            || arena::take_zeroed(wlen),
+            |imgs, dwd| {
+                for img in imgs {
+                    for a in 0..lo {
+                        let grow = &gd[(img * lo + a) * cout..(img * lo + a + 1) * cout];
+                        for j in 0..k {
+                            let ii = (s * a + j) as isize - p as isize;
+                            if ii < 0 || ii as usize >= l {
+                                continue;
+                            }
+                            let xrow = &xd
+                                [(img * l + ii as usize) * cin..(img * l + ii as usize + 1) * cin];
+                            for c in 0..cin {
+                                let xv = xrow[c];
+                                if xv == 0.0 {
+                                    continue;
+                                }
+                                let drow =
+                                    &mut dwd[(j * cin + c) * cout..(j * cin + c + 1) * cout];
+                                for c2 in 0..cout {
+                                    drow[c2] += xv * grow[c2];
+                                }
+                            }
                         }
                     }
                 }
-            }
-        }
+            },
+            |a, b| {
+                for (av, bv) in a.iter_mut().zip(b.iter()) {
+                    *av += *bv;
+                }
+            },
+        );
+        let mut dw = Tensor::zeros(&[k, cin, cout]);
+        dw.data_mut().copy_from_slice(&acc);
         let mut grads = vec![dw];
         if self.bias.is_some() {
             let mut db = Tensor::zeros(&[cout]);

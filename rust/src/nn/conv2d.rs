@@ -18,7 +18,8 @@
 use crate::nn::{
     Layer, LayerError, Residual, ResidualData, ResidualKind, Submersivity,
 };
-use crate::tensor::{ops, Tensor};
+use crate::runtime::pool;
+use crate::tensor::{arena, ops, Tensor};
 use crate::util::Rng;
 
 /// Minimum |diagonal tap| enforced by the submersive projection.
@@ -151,7 +152,10 @@ impl Conv2d {
 
     /// Forward convolution with an arbitrary kernel (shared by `forward`,
     /// `jvp_input` and `jvp_params`, which differ only in kernel/bias):
-    /// per-tap gather + `[H'W',Cin]·[Cin,Cout]` matmuls.
+    /// per-tap gather + `[H'W',Cin]·[Cin,Cout]` matmuls. Images are
+    /// independent, so the batch axis fans out across the worker pool
+    /// (each worker leases its own tap buffer from the arena); a
+    /// single-image batch instead lets the per-tap GEMM go row-parallel.
     fn conv_with(&self, x: &Tensor, wdata: &[f32], bias: Option<&Tensor>) -> Tensor {
         assert_eq!(x.rank(), 4, "conv2d expects [N,H,W,C]");
         assert_eq!(x.shape()[3], self.cin, "channel mismatch");
@@ -159,32 +163,30 @@ impl Conv2d {
         let (ho, wo) = self.out_hw(h, wd).expect("shape checked by caller");
         let (k, cin, cout) = (self.k, self.cin, self.cout);
         let mut out = Tensor::zeros(&[n, ho, wo, cout]);
-        let mut tap = Tensor::zeros(&[ho * wo, cin]);
-        for img in 0..n {
-            let base = img * ho * wo * cout;
-            for ki in 0..k {
-                for kj in 0..k {
-                    self.gather_tap(x, img, ki, kj, ho, wo, tap.data_mut());
-                    let w_tap = &wdata[(ki * k + kj) * cin * cout..(ki * k + kj + 1) * cin * cout];
-                    ops::matmul_into(
-                        tap.data(),
-                        w_tap,
-                        &mut out.data_mut()[base..base + ho * wo * cout],
-                        ho * wo,
-                        cin,
-                        cout,
-                    );
+        let img_out = ho * wo * cout;
+        let workers = pool::effective_threads(n);
+        pool::run_records(out.data_mut(), img_out, workers, |imgs, chunk| {
+            let mut tap = arena::take(ho * wo * cin);
+            for (local, img) in imgs.enumerate() {
+                let o_img = &mut chunk[local * img_out..(local + 1) * img_out];
+                for ki in 0..k {
+                    for kj in 0..k {
+                        self.gather_tap(x, img, ki, kj, ho, wo, &mut tap);
+                        let w_tap =
+                            &wdata[(ki * k + kj) * cin * cout..(ki * k + kj + 1) * cin * cout];
+                        ops::matmul_into_auto(&tap, w_tap, o_img, ho * wo, cin, cout);
+                    }
+                }
+                if let Some(b) = bias {
+                    let bd = b.data();
+                    for row in o_img.chunks_mut(cout) {
+                        for (o, bv) in row.iter_mut().zip(bd) {
+                            *o += bv;
+                        }
+                    }
                 }
             }
-        }
-        if let Some(b) = bias {
-            let bd = b.data();
-            for chunk in out.data_mut().chunks_mut(self.cout) {
-                for (o, bv) in chunk.iter_mut().zip(bd) {
-                    *o += bv;
-                }
-            }
-        }
+        });
         out
     }
 
@@ -195,52 +197,67 @@ impl Conv2d {
         let (ho, wo) = (g.shape()[1], g.shape()[2]);
         let (k, s, p, cin, cout) = (self.k, self.stride, self.pad, self.cin, self.cout);
         // Per tap: tmp[H'W',Cin] = g·w_tapᵀ, scattered back to input
-        // positions (the adjoint of the forward gather). The tap weight
-        // is transposed once into [Cout,Cin] so the matmul runs the
+        // positions (the adjoint of the forward gather). Every tap weight
+        // is transposed once into [Cout,Cin] — so the matmul runs the
         // vectorized AXPY kernel instead of length-Cout dot products
-        // (§Perf iteration 1: 2.4x faster vjp_input).
+        // (§Perf iteration 1: 2.4x faster vjp_input) — and shared
+        // read-only by the image-parallel workers (§Perf iteration 5).
         let mut out = Tensor::zeros(&[n, h, w, cin]);
-        let mut tmp = Tensor::zeros(&[ho * wo, cin]);
-        let mut wt = Tensor::zeros(&[cout, cin]);
-        for img in 0..n {
-            let g_img = &g.data()[img * ho * wo * cout..(img + 1) * ho * wo * cout];
-            let o_base = img * h * w * cin;
-            for ki in 0..k {
-                for kj in 0..k {
-                    let w_tap = &self.w.data()
-                        [(ki * k + kj) * cin * cout..(ki * k + kj + 1) * cin * cout];
-                    {
-                        let wtd = wt.data_mut();
-                        for ci in 0..cin {
-                            for co in 0..cout {
-                                wtd[co * cin + ci] = w_tap[ci * cout + co];
-                            }
-                        }
+        let mut wt_all = arena::take(k * k * cout * cin);
+        {
+            let wd = self.w.data();
+            for t in 0..k * k {
+                let w_tap = &wd[t * cin * cout..(t + 1) * cin * cout];
+                let dst = &mut wt_all[t * cout * cin..(t + 1) * cout * cin];
+                for ci in 0..cin {
+                    for co in 0..cout {
+                        dst[co * cin + ci] = w_tap[ci * cout + co];
                     }
-                    tmp.data_mut().fill(0.0);
-                    ops::matmul_into(g_img, wt.data(), tmp.data_mut(), ho * wo, cout, cin);
-                    let od = out.data_mut();
-                    let td = tmp.data();
-                    for a in 0..ho {
-                        let ii = (s * a + ki) as isize - p as isize;
-                        if ii < 0 || ii as usize >= h {
-                            continue;
-                        }
-                        for b in 0..wo {
-                            let jj = (s * b + kj) as isize - p as isize;
-                            if jj < 0 || jj as usize >= w {
+                }
+            }
+        }
+        let wt: &[f32] = &wt_all;
+        let gd = g.data();
+        let img_in = h * w * cin;
+        let img_g = ho * wo * cout;
+        let workers = pool::effective_threads(n);
+        pool::run_records(out.data_mut(), img_in, workers, |imgs, chunk| {
+            let mut tmp = arena::take(ho * wo * cin);
+            for (local, img) in imgs.enumerate() {
+                let g_img = &gd[img * img_g..(img + 1) * img_g];
+                let o_img = &mut chunk[local * img_in..(local + 1) * img_in];
+                for ki in 0..k {
+                    for kj in 0..k {
+                        tmp.fill(0.0);
+                        ops::matmul_into_auto(
+                            g_img,
+                            &wt[(ki * k + kj) * cout * cin..(ki * k + kj + 1) * cout * cin],
+                            &mut tmp,
+                            ho * wo,
+                            cout,
+                            cin,
+                        );
+                        for a in 0..ho {
+                            let ii = (s * a + ki) as isize - p as isize;
+                            if ii < 0 || ii as usize >= h {
                                 continue;
                             }
-                            let src = (a * wo + b) * cin;
-                            let dst = o_base + ((ii as usize) * w + jj as usize) * cin;
-                            for c in 0..cin {
-                                od[dst + c] += td[src + c];
+                            for b in 0..wo {
+                                let jj = (s * b + kj) as isize - p as isize;
+                                if jj < 0 || jj as usize >= w {
+                                    continue;
+                                }
+                                let src = (a * wo + b) * cin;
+                                let dst = ((ii as usize) * w + jj as usize) * cin;
+                                for c in 0..cin {
+                                    o_img[dst + c] += tmp[src + c];
+                                }
                             }
                         }
                     }
                 }
             }
-        }
+        });
         out
     }
 
@@ -259,7 +276,7 @@ impl Conv2d {
         }
         let (n, hh, ww) = (h.shape()[0], h.shape()[1], h.shape()[2]);
         let (ho, wo, cout) = (out_shape[1], out_shape[2], out_shape[3]);
-        let (k, s, p, cin) = (self.k, self.stride, self.pad, self.cin);
+        let (s, cin) = (self.stride, self.cin);
         // Lemma 1 (i): every pivot row s·a must be a valid input index.
         if s * (ho - 1) >= hh || s * (wo - 1) >= ww {
             return Err(LayerError::NotSubmersive {
@@ -268,108 +285,139 @@ impl Conv2d {
             });
         }
         let mut hp = Tensor::zeros(&[n, ho, wo, cout]);
-        let wd = self.w.data();
         let hd = h.data();
-
-        if self.vijp_fast_path() {
-            // Fully parallel form (Alg. 2): no spatial coupling, so the
-            // channel-triangular solve vectorizes across all positions —
-            // the same schedule the Pallas kernel uses (§Perf iter. 4).
-            let npos = ho * wo;
-            let mut cols = Tensor::zeros(&[cout, npos]); // channel-major
-            for img in 0..n {
-                {
-                    let cd = cols.data_mut();
-                    // Gather pivot rows hs[a,b,co] = h[s·a, s·b, co].
-                    for a in 0..ho {
-                        for b in 0..wo {
-                            let src = ((img * hh + s * a) * ww + s * b) * cin;
-                            let pos = a * wo + b;
-                            for co in 0..cout {
-                                cd[co * npos + pos] = hd[src + co];
-                            }
-                        }
-                    }
-                    // Triangular solve, vectorized over positions.
-                    for co in 0..cout {
-                        let (done, rest) = cd.split_at_mut(co * npos);
-                        let cur = &mut rest[..npos];
-                        for c2 in 0..co {
-                            let wv = wd[((p * k + p) * cin + co) * cout + c2];
-                            if wv == 0.0 {
-                                continue;
-                            }
-                            let prev = &done[c2 * npos..(c2 + 1) * npos];
-                            for (cv, pv) in cur.iter_mut().zip(prev) {
-                                *cv -= wv * pv;
-                            }
-                        }
-                        let diag = wd[((p * k + p) * cin + co) * cout + co];
-                        let inv = 1.0 / diag;
-                        for cv in cur.iter_mut() {
-                            *cv *= inv;
-                        }
-                    }
-                }
-                // Scatter back to channel-last layout.
-                let out = hp.data_mut();
-                let cd = cols.data();
-                for pos in 0..npos {
-                    let dst = (img * npos + pos) * cout;
-                    for co in 0..cout {
-                        out[dst + co] = cd[co * npos + pos];
-                    }
+        let img_h = hh * ww * cin;
+        let img_hp = ho * wo * cout;
+        let fast = self.vijp_fast_path();
+        // Images are independent in both regimes (even the wavefront only
+        // couples positions *within* an image), so the batch axis fans
+        // out across the worker pool.
+        let workers = pool::effective_threads(n);
+        pool::run_records(hp.data_mut(), img_hp, workers, |imgs, chunk| {
+            let mut cols = if fast {
+                Some(arena::take(cout * ho * wo))
+            } else {
+                None
+            };
+            for (local, img) in imgs.enumerate() {
+                let h_img = &hd[img * img_h..(img + 1) * img_h];
+                let hp_img = &mut chunk[local * img_hp..(local + 1) * img_hp];
+                match cols.as_mut() {
+                    Some(cols) => self.vijp_img_fast(h_img, hp_img, cols, ww, ho, wo),
+                    None => self.vijp_img_wavefront(h_img, hp_img, ww, ho, wo),
                 }
             }
-            return Ok(hp);
-        }
+        });
+        Ok(hp)
+    }
 
+    /// Fully parallel vijp (Alg. 2) for one image: no spatial coupling, so
+    /// the channel-triangular solve vectorizes across all positions — the
+    /// same schedule the Pallas kernel uses (§Perf iter. 4). `cols` is the
+    /// worker's `[Cout, H'W']` channel-major workspace.
+    fn vijp_img_fast(
+        &self,
+        h_img: &[f32],
+        hp_img: &mut [f32],
+        cols: &mut [f32],
+        ww: usize,
+        ho: usize,
+        wo: usize,
+    ) {
+        let (k, s, p, cin, cout) = (self.k, self.stride, self.pad, self.cin, self.cout);
+        let wd = self.w.data();
+        let npos = ho * wo;
+        // Gather pivot rows hs[a,b,co] = h[s·a, s·b, co].
+        for a in 0..ho {
+            for b in 0..wo {
+                let src = ((s * a) * ww + s * b) * cin;
+                let pos = a * wo + b;
+                for co in 0..cout {
+                    cols[co * npos + pos] = h_img[src + co];
+                }
+            }
+        }
+        // Triangular solve, vectorized over positions.
+        for co in 0..cout {
+            let (done, rest) = cols.split_at_mut(co * npos);
+            let cur = &mut rest[..npos];
+            for c2 in 0..co {
+                let wv = wd[((p * k + p) * cin + co) * cout + c2];
+                if wv == 0.0 {
+                    continue;
+                }
+                let prev = &done[c2 * npos..(c2 + 1) * npos];
+                for (cv, pv) in cur.iter_mut().zip(prev) {
+                    *cv -= wv * pv;
+                }
+            }
+            let diag = wd[((p * k + p) * cin + co) * cout + co];
+            let inv = 1.0 / diag;
+            for cv in cur.iter_mut() {
+                *cv *= inv;
+            }
+        }
+        // Scatter back to channel-last layout.
+        for pos in 0..npos {
+            let dst = pos * cout;
+            for co in 0..cout {
+                hp_img[dst + co] = cols[co * npos + pos];
+            }
+        }
+    }
+
+    /// Spatially coupled vijp for one image (`s + p < k`): lexicographic
+    /// wavefront whose dependencies point only to already-eliminated
+    /// positions (a2 ≤ a, b2 ≤ b — guaranteed by `s > p`).
+    fn vijp_img_wavefront(
+        &self,
+        h_img: &[f32],
+        hp_img: &mut [f32],
+        ww: usize,
+        ho: usize,
+        wo: usize,
+    ) {
+        let (k, s, p, cin, cout) = (self.k, self.stride, self.pad, self.cin, self.cout);
+        let wd = self.w.data();
         // Max spatial back-reach of the elimination, in output positions.
         let reach = (k - 1 - p.min(k - 1)) / s; // floor((k-1-p)/s)
-        for img in 0..n {
-            for a in 0..ho {
-                for b in 0..wo {
-                    for co in 0..cout {
-                        // Pivot equation: h[n, s·a, s·b, channel=co].
-                        let mut acc =
-                            hd[((img * hh + s * a) * ww + s * b) * cin + co];
-                        // Subtract contributions of already-solved h' entries.
-                        let a2lo = a.saturating_sub(reach);
-                        let b2lo = b.saturating_sub(reach);
-                        for a2 in a2lo..=a {
-                            let ki = s * (a - a2) + p;
-                            if ki >= k {
+        for a in 0..ho {
+            for b in 0..wo {
+                for co in 0..cout {
+                    // Pivot equation: h[s·a, s·b, channel=co].
+                    let mut acc = h_img[((s * a) * ww + s * b) * cin + co];
+                    // Subtract contributions of already-solved h' entries.
+                    let a2lo = a.saturating_sub(reach);
+                    let b2lo = b.saturating_sub(reach);
+                    for a2 in a2lo..=a {
+                        let ki = s * (a - a2) + p;
+                        if ki >= k {
+                            continue;
+                        }
+                        for b2 in b2lo..=b {
+                            let kj = s * (b - b2) + p;
+                            if kj >= k {
                                 continue;
                             }
-                            for b2 in b2lo..=b {
-                                let kj = s * (b - b2) + p;
-                                if kj >= k {
-                                    continue;
-                                }
-                                let last = a2 == a && b2 == b;
-                                // Strictly-earlier positions contribute all
-                                // channels; the pivot position contributes
-                                // channels below the diagonal only.
-                                let c_end = if last { co } else { cout };
-                                let hprow =
-                                    ((img * ho + a2) * wo + b2) * cout;
-                                let wrow = ((ki * k + kj) * cin + co) * cout;
-                                let hpd = hp.data();
-                                let mut sub = 0.0f32;
-                                for c2 in 0..c_end {
-                                    sub += wd[wrow + c2] * hpd[hprow + c2];
-                                }
-                                acc -= sub;
+                            let last = a2 == a && b2 == b;
+                            // Strictly-earlier positions contribute all
+                            // channels; the pivot position contributes
+                            // channels below the diagonal only.
+                            let c_end = if last { co } else { cout };
+                            let hprow = (a2 * wo + b2) * cout;
+                            let wrow = ((ki * k + kj) * cin + co) * cout;
+                            let mut sub = 0.0f32;
+                            for c2 in 0..c_end {
+                                sub += wd[wrow + c2] * hp_img[hprow + c2];
                             }
+                            acc -= sub;
                         }
-                        let diag = wd[((p * k + p) * cin + co) * cout + co];
-                        let idx = ((img * ho + a) * wo + b) * cout + co;
-                        hp.data_mut()[idx] = acc / diag;
                     }
+                    let diag = wd[((p * k + p) * cin + co) * cout + co];
+                    hp_img[(a * wo + b) * cout + co] = acc / diag;
                 }
             }
         }
-        Ok(hp)
     }
 }
 
@@ -412,27 +460,48 @@ impl Layer for Conv2d {
         let (n, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
         let (ho, wo) = self.out_hw(h, w).expect("shapes validated");
         let (k, cin, cout) = (self.k, self.cin, self.cout);
-        let mut dw = Tensor::zeros(&[k, k, cin, cout]);
-        let mut tap = Tensor::zeros(&[ho * wo, cin]);
-        for img in 0..n {
-            let g_img =
-                &grad_out.data()[img * ho * wo * cout..(img + 1) * ho * wo * cout];
-            for ki in 0..k {
-                for kj in 0..k {
-                    self.gather_tap(x, img, ki, kj, ho, wo, tap.data_mut());
-                    // dw[ki,kj] += tapᵀ · g
-                    ops::matmul_tn_into(
-                        tap.data(),
-                        g_img,
-                        &mut dw.data_mut()
-                            [(ki * k + kj) * cin * cout..(ki * k + kj + 1) * cin * cout],
-                        ho * wo,
-                        cin,
-                        cout,
-                    );
+        let wlen = k * k * cin * cout;
+        let gd = grad_out.data();
+        let img_g = ho * wo * cout;
+        // Image-parallel reduction: each worker folds its contiguous image
+        // range into a private dw accumulator; partials merge in worker
+        // order, so a fixed thread count is bit-deterministic. The
+        // accumulators come from the arena so they are tracker-visible
+        // and recycled (no per-call heap churn).
+        let workers = pool::effective_threads(n);
+        let acc = pool::run_reduce(
+            n,
+            workers,
+            || arena::take_zeroed(wlen),
+            |imgs, acc| {
+                let mut tap = arena::take(ho * wo * cin);
+                for img in imgs {
+                    let g_img = &gd[img * img_g..(img + 1) * img_g];
+                    for ki in 0..k {
+                        for kj in 0..k {
+                            self.gather_tap(x, img, ki, kj, ho, wo, &mut tap);
+                            // dw[ki,kj] += tapᵀ · g
+                            ops::matmul_tn_into_auto(
+                                &tap,
+                                g_img,
+                                &mut acc[(ki * k + kj) * cin * cout
+                                    ..(ki * k + kj + 1) * cin * cout],
+                                ho * wo,
+                                cin,
+                                cout,
+                            );
+                        }
+                    }
                 }
-            }
-        }
+            },
+            |a, b| {
+                for (av, bv) in a.iter_mut().zip(b.iter()) {
+                    *av += *bv;
+                }
+            },
+        );
+        let mut dw = Tensor::zeros(&[k, k, cin, cout]);
+        dw.data_mut().copy_from_slice(&acc);
         let mut grads = vec![dw];
         if self.bias.is_some() {
             let mut db = Tensor::zeros(&[self.cout]);

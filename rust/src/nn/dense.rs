@@ -56,9 +56,12 @@ impl Layer for Dense {
     }
 
     fn forward_res(&self, x: &Tensor, kind: ResidualKind) -> (Tensor, Residual) {
+        // The flatten is a pure view change — run the GEMM directly on the
+        // input payload instead of materializing a reshaped copy (the seed
+        // allocated one per call; §Perf iteration 5).
         let (n, d) = self.flat(x);
-        let xm = Tensor::from_vec(x.data().to_vec(), &[n, d]);
-        let mut y = ops::matmul(&xm, &self.w);
+        let mut y = Tensor::zeros(&[n, self.dout]);
+        ops::matmul_into_auto(x.data(), self.w.data(), y.data_mut(), n, d, self.dout);
         if let Some(b) = &self.bias {
             for chunk in y.data_mut().chunks_mut(self.dout) {
                 for (o, bv) in chunk.iter_mut().zip(b.data()) {
@@ -78,15 +81,29 @@ impl Layer for Dense {
     }
 
     fn vjp_input(&self, res: &Residual, grad_out: &Tensor) -> Tensor {
-        // h = g · Wᵀ  (matmul_nt contracts over the shared Dout axis)
-        let g = ops::matmul_nt(grad_out, &self.w);
+        // h = g · Wᵀ (contract over the shared Dout axis). The raw kernels
+        // skip shape checks in release builds, so validate here.
+        assert_eq!(grad_out.rank(), 2, "dense vjp_input expects [N,Dout]");
+        assert_eq!(grad_out.shape()[1], self.dout, "dense grad dim mismatch");
+        let n = grad_out.shape()[0];
+        let mut g = Tensor::zeros(&[n, self.din]);
+        ops::matmul_nt_into_auto(
+            grad_out.data(),
+            self.w.data(),
+            g.data_mut(),
+            n,
+            self.dout,
+            self.din,
+        );
         g.reshaped_inplace(&res.in_shape)
     }
 
     fn vjp_params(&self, x: &Tensor, grad_out: &Tensor) -> Vec<Tensor> {
         let (n, d) = self.flat(x);
-        let xm = Tensor::from_vec(x.data().to_vec(), &[n, d]);
-        let dw = ops::matmul_tn(&xm, grad_out);
+        assert_eq!(grad_out.len(), n * self.dout, "dense grad shape mismatch");
+        // dw = xᵀ · g without copying x into a 2-d view.
+        let mut dw = Tensor::zeros(&[d, self.dout]);
+        ops::matmul_tn_into_auto(x.data(), grad_out.data(), dw.data_mut(), n, d, self.dout);
         let mut grads = vec![dw];
         if self.bias.is_some() {
             let mut db = Tensor::zeros(&[self.dout]);
@@ -108,9 +125,17 @@ impl Layer for Dense {
             });
         }
         let n = res.in_shape[0];
-        let hm = Tensor::from_vec(h_in.data().to_vec(), &[n, self.din]);
+        assert_eq!(h_in.len(), n * self.din, "dense vijp cotangent mismatch");
         // h' = (h·W) (WᵀW)⁻¹
-        let hw = ops::matmul(&hm, &self.w);
+        let mut hw = Tensor::zeros(&[n, self.dout]);
+        ops::matmul_into_auto(
+            h_in.data(),
+            self.w.data(),
+            hw.data_mut(),
+            n,
+            self.din,
+            self.dout,
+        );
         let gram = ops::matmul_tn(&self.w, &self.w);
         ops::solve_right(&gram, &hw).map_err(|e| LayerError::NotSubmersive {
             layer: self.label.clone(),
@@ -120,14 +145,16 @@ impl Layer for Dense {
 
     fn jvp_input(&self, _x: &Tensor, u: &Tensor) -> Tensor {
         let n = u.shape()[0];
-        let um = Tensor::from_vec(u.data().to_vec(), &[n, self.din]);
-        ops::matmul(&um, &self.w)
+        assert_eq!(u.len(), n * self.din, "dense jvp tangent mismatch");
+        let mut out = Tensor::zeros(&[n, self.dout]);
+        ops::matmul_into_auto(u.data(), self.w.data(), out.data_mut(), n, self.din, self.dout);
+        out
     }
 
     fn jvp_params(&self, x: &Tensor, dparams: &[Tensor]) -> Tensor {
         let (n, d) = self.flat(x);
-        let xm = Tensor::from_vec(x.data().to_vec(), &[n, d]);
-        let mut out = ops::matmul(&xm, &dparams[0]);
+        let mut out = Tensor::zeros(&[n, self.dout]);
+        ops::matmul_into_auto(x.data(), dparams[0].data(), out.data_mut(), n, d, self.dout);
         if self.bias.is_some() {
             for chunk in out.data_mut().chunks_mut(self.dout) {
                 for (o, b) in chunk.iter_mut().zip(dparams[1].data()) {

@@ -1,12 +1,21 @@
-//! The PJRT runtime (L3 ⇄ L2/L1 bridge): loads the AOT artifacts emitted
-//! by `python/compile/aot.py` (JAX/Pallas programs lowered to **HLO
-//! text** — see DESIGN.md §3 for why text, not serialized protos),
-//! compiles them once on the PJRT CPU client, and executes them from the
-//! Rust hot path. After `make artifacts`, the binary is self-contained;
-//! Python never runs at training/serving time.
+//! Execution runtimes.
+//!
+//! * [`pool`] — the in-process scoped worker pool that powers the
+//!   parallel tensor kernels (row-blocked GEMM, batch-parallel conv ops,
+//!   Moonwalk phase loops). Std-only, deterministic partitioning.
+//! * [`artifacts`] — manifest/loader for the AOT artifacts emitted by
+//!   `python/compile/aot.py` (JAX/Pallas programs lowered to HLO text).
+//! * [`pjrt`] — the PJRT client that compiles and executes those
+//!   artifacts from the Rust hot path. Gated behind the `xla` feature
+//!   because it needs the vendored `xla` crate, which not every build
+//!   image carries; the default build is pure-std + anyhow/thiserror.
 
 pub mod artifacts;
+pub mod pool;
+
+#[cfg(feature = "xla")]
 pub mod pjrt;
 
 pub use artifacts::{Manifest, OpSpec};
+#[cfg(feature = "xla")]
 pub use pjrt::PjrtRuntime;

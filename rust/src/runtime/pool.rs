@@ -1,0 +1,303 @@
+//! Scoped worker pool for data-parallel tensor kernels (§Perf iteration 5).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Determinism.** For a fixed thread count, every parallel kernel
+//!    must produce bit-identical results across runs. Work is therefore
+//!    split into *contiguous, deterministic* chunks ([`chunk_ranges`]) —
+//!    never work-stolen — and reductions fold per-worker partials in
+//!    worker order ([`run_reduce`]).
+//! 2. **Safety.** No `unsafe`, no lifetime erasure: workers are spawned
+//!    with [`std::thread::scope`], so they may borrow the caller's
+//!    tensors directly and are joined before the kernel returns. Spawn
+//!    cost (~tens of µs) is negligible against the multi-ms conv/GEMM
+//!    kernels this pool exists for; tiny kernels stay serial via the
+//!    shape heuristics in `tensor::ops`.
+//! 3. **No oversubscription.** A kernel running *inside* a worker (e.g.
+//!    a per-tap GEMM inside a batch-parallel convolution) sees
+//!    [`effective_threads`]` == 1` and runs serially.
+//!
+//! Thread count resolution: explicit [`set_threads`] (the CLI's
+//! `--threads`) > `MOONWALK_THREADS` env var > available parallelism.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Global thread budget; 0 = not yet resolved.
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Set inside pool workers so nested kernels stay serial.
+    static IN_WORKER: Cell<bool> = Cell::new(false);
+}
+
+fn resolve_default() -> usize {
+    if let Ok(v) = std::env::var("MOONWALK_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// The configured worker count (resolving lazily on first use).
+pub fn threads() -> usize {
+    let t = THREADS.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let t = resolve_default();
+    THREADS.store(t, Ordering::Relaxed);
+    t
+}
+
+/// Set the worker count explicitly (CLI `--threads`). Clamped to ≥ 1.
+pub fn set_threads(n: usize) {
+    THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Is the current thread a pool worker?
+pub fn in_worker() -> bool {
+    IN_WORKER.with(|w| w.get())
+}
+
+/// How many workers a kernel with `n_tasks` independent tasks should use:
+/// `min(threads(), n_tasks)`, or 1 when already inside a worker (nested
+/// parallelism would oversubscribe) or when there is nothing to split.
+pub fn effective_threads(n_tasks: usize) -> usize {
+    if n_tasks <= 1 || in_worker() {
+        1
+    } else {
+        threads().min(n_tasks)
+    }
+}
+
+/// Deterministic contiguous partition of `0..n` into at most `parts`
+/// non-empty ranges; the first `n % parts` ranges get one extra item.
+pub fn chunk_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.clamp(1, n.max(1));
+    if n == 0 {
+        return vec![0..0];
+    }
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `f(record_range, records_slice)` over disjoint contiguous chunks of
+/// `data`, which holds `data.len() / record_len` records of `record_len`
+/// f32s each. `workers` is the requested parallelism (callers usually pass
+/// [`effective_threads`]); it is clamped by the record count and forced to
+/// 1 inside a worker. With one worker, `f` runs on the calling thread —
+/// the serial path is the same code.
+pub fn run_records<F>(data: &mut [f32], record_len: usize, workers: usize, f: F)
+where
+    F: Fn(Range<usize>, &mut [f32]) + Sync,
+{
+    assert!(record_len > 0, "record_len must be positive");
+    assert_eq!(
+        data.len() % record_len,
+        0,
+        "data length {} not a multiple of record length {}",
+        data.len(),
+        record_len
+    );
+    let n_records = data.len() / record_len;
+    let t = if in_worker() {
+        1
+    } else {
+        workers.clamp(1, n_records.max(1))
+    };
+    if t <= 1 {
+        f(0..n_records, data);
+        return;
+    }
+    let ranges = chunk_ranges(n_records, t);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest = data;
+        for r in ranges {
+            let take = r.len() * record_len;
+            let tmp = rest;
+            let (mine, tail) = tmp.split_at_mut(take);
+            rest = tail;
+            s.spawn(move || {
+                IN_WORKER.with(|w| w.set(true));
+                f(r, mine);
+            });
+        }
+    });
+}
+
+/// Deterministic parallel map-reduce over `0..n_tasks`: each worker folds
+/// its contiguous task range into a fresh accumulator (`init` + `work`),
+/// and the per-worker accumulators are merged **in worker order** — so a
+/// fixed thread count always reduces in the same order (bit-stable).
+pub fn run_reduce<A, I, W, M>(n_tasks: usize, workers: usize, init: I, work: W, mut merge: M) -> A
+where
+    A: Send,
+    I: Fn() -> A + Sync,
+    W: Fn(Range<usize>, &mut A) + Sync,
+    M: FnMut(&mut A, A),
+{
+    let t = if in_worker() {
+        1
+    } else {
+        workers.clamp(1, n_tasks.max(1))
+    };
+    if t <= 1 || n_tasks == 0 {
+        let mut acc = init();
+        if n_tasks > 0 {
+            work(0..n_tasks, &mut acc);
+        }
+        return acc;
+    }
+    let ranges = chunk_ranges(n_tasks, t);
+    let mut partials: Vec<A> = Vec::with_capacity(t);
+    std::thread::scope(|s| {
+        let init = &init;
+        let work = &work;
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .map(|r| {
+                s.spawn(move || {
+                    IN_WORKER.with(|w| w.set(true));
+                    let mut acc = init();
+                    work(r, &mut acc);
+                    acc
+                })
+            })
+            .collect();
+        for h in handles {
+            partials.push(h.join().expect("pool worker panicked"));
+        }
+    });
+    let mut iter = partials.into_iter();
+    let mut acc = iter.next().expect("at least one worker");
+    for p in iter {
+        merge(&mut acc, p);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for n in [0usize, 1, 2, 7, 8, 9, 100] {
+            for parts in [1usize, 2, 3, 4, 9] {
+                let ranges = chunk_ranges(n, parts);
+                let mut next = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, next, "contiguous");
+                    next = r.end;
+                }
+                assert_eq!(next, n, "covers 0..{n}");
+                if n > 0 {
+                    assert!(ranges.len() <= parts.max(1));
+                    assert!(ranges.iter().all(|r| !r.is_empty()));
+                    // balanced: sizes differ by at most 1
+                    let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+                    let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                    assert!(mx - mn <= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_records_writes_every_record() {
+        let mut data = vec![0f32; 7 * 3];
+        run_records(&mut data, 3, 4, |records, chunk| {
+            for (local, rec) in records.enumerate() {
+                for j in 0..3 {
+                    chunk[local * 3 + j] = (rec * 10 + j) as f32;
+                }
+            }
+        });
+        for rec in 0..7 {
+            for j in 0..3 {
+                assert_eq!(data[rec * 3 + j], (rec * 10 + j) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn run_records_serial_matches_parallel() {
+        let fill = |workers: usize| {
+            let mut data = vec![0f32; 13 * 5];
+            run_records(&mut data, 5, workers, |records, chunk| {
+                for (local, rec) in records.enumerate() {
+                    for j in 0..5 {
+                        chunk[local * 5 + j] = (rec * j) as f32 * 0.5;
+                    }
+                }
+            });
+            data
+        };
+        assert_eq!(fill(1), fill(4));
+    }
+
+    #[test]
+    fn run_reduce_deterministic_sum() {
+        let sum = |workers: usize| {
+            run_reduce(
+                1000,
+                workers,
+                || 0f64,
+                |r, acc| {
+                    for i in r {
+                        *acc += (i as f64).sqrt();
+                    }
+                },
+                |a, b| *a += b,
+            )
+        };
+        // Same worker count twice => bit-identical.
+        assert_eq!(sum(4).to_bits(), sum(4).to_bits());
+        // Different worker counts agree to fp tolerance.
+        assert!((sum(1) - sum(3)).abs() < 1e-6 * sum(1).abs());
+    }
+
+    #[test]
+    fn nested_parallelism_is_serialized() {
+        let mut outer = vec![0f32; 4];
+        run_records(&mut outer, 1, 4, |_, chunk| {
+            // Inside a worker the pool must refuse to fan out again.
+            assert!(in_worker());
+            assert_eq!(effective_threads(64), 1);
+            let mut inner = vec![0f32; 8];
+            run_records(&mut inner, 1, 4, |r, c| {
+                assert_eq!(r, 0..8, "nested call runs as one serial chunk");
+                c.fill(1.0);
+            });
+            chunk[0] = inner.iter().sum();
+        });
+        assert_eq!(outer, vec![8.0; 4]);
+    }
+
+    #[test]
+    fn threads_configurable() {
+        // Note: global state; keep assertions order-independent.
+        let before = threads();
+        set_threads(3);
+        assert_eq!(threads(), 3);
+        assert_eq!(effective_threads(2), 2);
+        assert_eq!(effective_threads(100), 3);
+        set_threads(before);
+    }
+}

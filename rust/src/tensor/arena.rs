@@ -1,0 +1,219 @@
+//! Thread-aware scratch-buffer arena (§Perf iteration 5).
+//!
+//! The conv/GEMM hot paths need transient buffers — per-tap gathers,
+//! transposed tap weights, the vijp channel-major workspace — that the
+//! seed implementation allocated as fresh [`Tensor`]s on every call,
+//! dominating the allocation-churn metric (`tracker::total_allocs`).
+//! This arena recycles those buffers process-wide so Moonwalk's Phase
+//! I/II/III sweeps run **allocation-free in steady state**: after the
+//! first step every `take` is a hit and the tracker records no new
+//! allocations.
+//!
+//! Concurrency: a single mutex-guarded free list shared by all threads.
+//! Pool workers take/return at most a few buffers per kernel call, so
+//! contention is negligible next to the multi-ms kernels. Which physical
+//! buffer a worker receives never affects results: [`take`] leaves the
+//! contents unspecified and every caller fully overwrites its lease,
+//! while accumulators use [`take_zeroed`].
+//!
+//! Accounting: a fresh allocation registers its capacity with the
+//! [`tracker`] (so peak-memory profiles still see scratch); a recycled
+//! hit does not re-register (the bytes are already live). Evicted or
+//! [`clear`]ed buffers release their bytes.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::Mutex;
+
+use crate::tensor::tracker;
+
+/// Max buffers kept on the free list; excess returns are freed.
+const MAX_POOLED: usize = 64;
+
+static POOL: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
+
+/// Arena misses (fresh allocations) since process start — the §Perf
+/// steady-state metric: after warm-up this should stop moving.
+static MISSES: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+/// Fresh allocations performed by the arena since process start.
+pub fn misses() -> usize {
+    MISSES.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+fn lock() -> std::sync::MutexGuard<'static, Vec<Vec<f32>>> {
+    match POOL.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// A scratch buffer leased from the arena; returns to the free list on
+/// drop. Derefs to `[f32]` of exactly the requested length.
+pub struct Scratch {
+    buf: Vec<f32>,
+}
+
+impl Deref for Scratch {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+impl DerefMut for Scratch {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.buf);
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut pool = lock();
+        if pool.len() < MAX_POOLED {
+            pool.push(buf);
+            return;
+        }
+        // Pool full: keep the larger buffer. Evicting the smallest pooled
+        // one (rather than always dropping the newcomer) prevents a full
+        // pool of small buffers from forcing the biggest leases — the
+        // most expensive ones — to miss on every step.
+        let smallest = pool
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, b)| b.capacity())
+            .map(|(i, b)| (i, b.capacity()));
+        match smallest {
+            Some((i, cap)) if cap < buf.capacity() => {
+                let evicted = pool.swap_remove(i);
+                tracker::free(evicted.capacity() * 4);
+                pool.push(buf);
+            }
+            _ => tracker::free(buf.capacity() * 4),
+        }
+    }
+}
+
+/// Lease a scratch buffer of `len` f32s with **unspecified contents**
+/// (recycled buffers keep stale data — callers must fully overwrite, or
+/// use [`take_zeroed`]). Best-fit over the free list; allocates (and
+/// tracker-registers) only on a miss.
+pub fn take(len: usize) -> Scratch {
+    if len == 0 {
+        return Scratch { buf: Vec::new() };
+    }
+    let reused = {
+        let mut pool = lock();
+        // Best fit: the smallest pooled buffer that is large enough, so
+        // big buffers stay available for big requests.
+        let mut best: Option<(usize, usize)> = None; // (index, capacity)
+        for (i, b) in pool.iter().enumerate() {
+            let cap = b.capacity();
+            if cap >= len && best.map_or(true, |(_, bc)| cap < bc) {
+                best = Some((i, cap));
+            }
+        }
+        best.map(|(i, _)| pool.swap_remove(i))
+    };
+    let mut buf = match reused {
+        Some(b) => b,
+        None => {
+            let b: Vec<f32> = Vec::with_capacity(len);
+            tracker::alloc(b.capacity() * 4);
+            MISSES.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            b
+        }
+    };
+    // Avoid the O(len) memset on the steady-state hit path: keep stale
+    // contents when shrinking, zero-extend (safe Rust requires it) when
+    // the recycled buffer's len is short of the request.
+    if buf.len() >= len {
+        buf.truncate(len);
+    } else {
+        buf.resize(len, 0.0);
+    }
+    Scratch { buf }
+}
+
+/// Lease a zero-filled scratch buffer (for accumulators).
+pub fn take_zeroed(len: usize) -> Scratch {
+    let mut s = take(len);
+    s.fill(0.0);
+    s
+}
+
+/// Drop every pooled buffer (releasing its tracked bytes). Mainly for
+/// tests that assert tracker balance.
+pub fn clear() {
+    let mut pool = lock();
+    for b in pool.drain(..) {
+        tracker::free(b.capacity() * 4);
+    }
+}
+
+/// Number of buffers currently pooled (diagnostics).
+pub fn pooled() -> usize {
+    lock().len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_sized_and_take_zeroed_is_zeroed() {
+        let s = take(37);
+        assert_eq!(s.len(), 37);
+        drop(s);
+        // A recycled buffer may carry stale data through `take`...
+        let mut s = take(37);
+        s.fill(7.0);
+        drop(s);
+        // ...but take_zeroed must always hand back zeros.
+        let z = take_zeroed(37);
+        assert_eq!(z.len(), 37);
+        assert!(z.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn recycle_avoids_fresh_allocations() {
+        // Warm: force one allocation of this (unusual) size.
+        let len = 12_345;
+        drop(take(len));
+        let misses0 = misses();
+        for _ in 0..100 {
+            let mut s = take(len);
+            s[0] = 1.0; // use it
+        }
+        // Unit tests run concurrently and share the process-global free
+        // list, so a neighbor can best-fit-steal this buffer in the gap
+        // between our drop and the next take — each steal costs one
+        // miss. Bound statistically: without recycling this loop alone
+        // records 100 misses; steals hitting the tiny gap more than a
+        // handful of times in 100 iterations is vanishingly unlikely.
+        assert!(
+            misses() - misses0 <= 10,
+            "steady-state takes should be (nearly) allocation-free: {} misses in 100 takes",
+            misses() - misses0
+        );
+    }
+
+    #[test]
+    fn distinct_leases_are_distinct_buffers() {
+        let mut a = take(16);
+        let mut b = take(16);
+        a[0] = 1.0;
+        b[0] = 2.0;
+        assert_eq!(a[0], 1.0);
+        assert_eq!(b[0], 2.0);
+    }
+
+    #[test]
+    fn zero_len_is_fine() {
+        let s = take(0);
+        assert_eq!(s.len(), 0);
+    }
+}

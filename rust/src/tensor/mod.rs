@@ -6,6 +6,7 @@
 //! can report peak live bytes — the reproduction's substitute for the
 //! paper's GPU memory measurements.
 
+pub mod arena;
 pub mod bitset;
 pub mod ops;
 pub mod tracker;

@@ -1,9 +1,16 @@
 //! Elementwise and linear-algebra primitives over [`Tensor`].
 //!
-//! `matmul` is the hot primitive (conv lowers to im2col + matmul); it uses a
-//! cache-blocked ikj loop with unchecked indexing. The §Perf pass iterates
-//! on this file — see EXPERIMENTS.md §Perf.
+//! `matmul` is the hot primitive (conv lowers to im2col + matmul). Three
+//! algorithms are available behind the [`GemmAlgo`] selector (the cuDNN
+//! fwd-algo-enum idiom): a `Scalar` reference triple loop, the
+//! cache-`Blocked` ikj kernel, and a row-`Parallel` variant that fans the
+//! output rows across the scoped worker pool (`runtime::pool`) — rows are
+//! disjoint, so the parallel result is bit-identical to the blocked one.
+//! Shape heuristics pick the algorithm; `MOONWALK_GEMM` /
+//! [`set_gemm_override`] force one. The §Perf pass iterates on this file —
+//! see EXPERIMENTS.md §Perf.
 
+use crate::runtime::pool;
 use crate::tensor::Tensor;
 
 // ----- elementwise -------------------------------------------------------
@@ -79,7 +86,104 @@ pub fn argmax(xs: &[f32]) -> usize {
 
 // ----- matmul --------------------------------------------------------------
 
-/// `C[m,n] = A[m,k] · B[k,n]`, cache-blocked.
+/// GEMM algorithm selector (the cuDNN `cudnnConvolutionFwdAlgo_t` idiom:
+/// explicit algorithm choice instead of one hardwired loop nest).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmAlgo {
+    /// Naive triple loop — the correctness reference.
+    Scalar,
+    /// Cache-blocked single-thread kernel (the seed's hot loop).
+    Blocked,
+    /// Row-blocked fan-out over the scoped worker pool. Output rows are
+    /// disjoint, so results are bit-identical to `Blocked`.
+    Parallel { threads: usize },
+}
+
+/// A worker needs at least this many output rows to amortize its spawn.
+const PAR_MIN_ROWS: usize = 16;
+/// Below this FLOP count (2·m·k·n) the kernel stays single-threaded.
+const PAR_MIN_FLOPS: f64 = 1.0e6;
+
+// Cached MOONWALK_GEMM override: 0 unresolved, 1 auto, 2/3/4 forced.
+static GEMM_OVERRIDE: std::sync::atomic::AtomicU8 = std::sync::atomic::AtomicU8::new(0);
+
+fn gemm_override() -> u8 {
+    use std::sync::atomic::Ordering;
+    let v = GEMM_OVERRIDE.load(Ordering::Relaxed);
+    if v != 0 {
+        return v;
+    }
+    let v = match std::env::var("MOONWALK_GEMM") {
+        Err(_) => 1,
+        Ok(raw) => match raw.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => 1,
+            "scalar" => 2,
+            "blocked" => 3,
+            "parallel" => 4,
+            other => {
+                // Warn exactly once (the result is cached): a perf knob
+                // that is silently ignored produces wrong measurements.
+                eprintln!(
+                    "warning: MOONWALK_GEMM=`{other}` not recognized \
+                     (auto|scalar|blocked|parallel); using auto"
+                );
+                1
+            }
+        },
+    };
+    GEMM_OVERRIDE.store(v, Ordering::Relaxed);
+    v
+}
+
+/// Force a GEMM algorithm globally: `"auto"`, `"scalar"`, `"blocked"` or
+/// `"parallel"` (the CLI's `--gemm`; `MOONWALK_GEMM` is the env spelling).
+pub fn set_gemm_override(name: &str) -> anyhow::Result<()> {
+    use std::sync::atomic::Ordering;
+    let v = match name {
+        "auto" => 1,
+        "scalar" => 2,
+        "blocked" => 3,
+        "parallel" => 4,
+        other => anyhow::bail!("unknown GEMM algorithm `{other}` (auto|scalar|blocked|parallel)"),
+    };
+    GEMM_OVERRIDE.store(v, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Pick a GEMM algorithm for a `[m,k]·[k,n]` product: forced override if
+/// set, otherwise `Parallel` when the pool has idle workers AND the shape
+/// is big enough to amortize them, else `Blocked`.
+pub fn select_gemm_algo(m: usize, k: usize, n: usize) -> GemmAlgo {
+    match gemm_override() {
+        2 => return GemmAlgo::Scalar,
+        3 => return GemmAlgo::Blocked,
+        _ => {}
+    }
+    let t_raw = pool::effective_threads(m);
+    if gemm_override() == 4 {
+        // Forced parallel: honor it whenever a fan-out is possible at
+        // all (the PAR_MIN_ROWS amortization clamp applies to the auto
+        // heuristic only — a forced knob that silently downgrades would
+        // corrupt measurements).
+        return if t_raw > 1 {
+            GemmAlgo::Parallel { threads: t_raw }
+        } else {
+            GemmAlgo::Blocked
+        };
+    }
+    let t = t_raw.min((m / PAR_MIN_ROWS).max(1));
+    if t <= 1 {
+        return GemmAlgo::Blocked;
+    }
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    if flops >= PAR_MIN_FLOPS {
+        GemmAlgo::Parallel { threads: t }
+    } else {
+        GemmAlgo::Blocked
+    }
+}
+
+/// `C[m,n] = A[m,k] · B[k,n]`, algorithm-selected.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(a.rank(), 2);
     assert_eq!(b.rank(), 2);
@@ -87,7 +191,7 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (k2, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2, "matmul inner dim {k} != {k2}");
     let mut c = Tensor::zeros(&[m, n]);
-    matmul_into(a.data(), b.data(), c.data_mut(), m, k, n);
+    matmul_into_auto(a.data(), b.data(), c.data_mut(), m, k, n);
     c
 }
 
@@ -99,22 +203,7 @@ pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
     let (k2, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2);
     let mut c = Tensor::zeros(&[m, n]);
-    let (ad, bd, cd) = (a.data(), b.data(), c.data_mut());
-    // c[i,j] += a[l,i] * b[l,j]: stream over l so both reads are rows.
-    for l in 0..k {
-        let arow = &ad[l * m..(l + 1) * m];
-        let brow = &bd[l * n..(l + 1) * n];
-        for i in 0..m {
-            let av = arow[i];
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut cd[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
-    }
+    matmul_tn_into_auto(a.data(), b.data(), c.data_mut(), k, m, n);
     c
 }
 
@@ -126,19 +215,133 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     let (n, k2) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2);
     let mut c = Tensor::zeros(&[m, n]);
-    let (ad, bd, cd) = (a.data(), b.data(), c.data_mut());
+    matmul_nt_into_auto(a.data(), b.data(), c.data_mut(), m, k, n);
+    c
+}
+
+// ----- algorithm-dispatched raw kernels -------------------------------------
+
+/// Dispatched `c += a·b` over raw slices (`c` pre-zeroed for assignment).
+pub fn matmul_into_auto(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    match select_gemm_algo(m, k, n) {
+        GemmAlgo::Scalar => matmul_scalar_into(a, b, c, m, k, n),
+        GemmAlgo::Blocked => matmul_into(a, b, c, m, k, n),
+        GemmAlgo::Parallel { threads } => matmul_into_parallel(a, b, c, m, k, n, threads),
+    }
+}
+
+/// Dispatched `c += a · bᵀ` over raw slices.
+pub fn matmul_nt_into_auto(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    match select_gemm_algo(m, k, n) {
+        GemmAlgo::Scalar => matmul_nt_scalar_into(a, b, c, m, k, n),
+        GemmAlgo::Blocked => matmul_nt_into(a, b, c, m, k, n),
+        GemmAlgo::Parallel { threads } => matmul_nt_into_parallel(a, b, c, m, k, n, threads),
+    }
+}
+
+/// Dispatched `c += aᵀ · b` over raw slices (`a` is `[k,m]`).
+pub fn matmul_tn_into_auto(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+    match select_gemm_algo(m, k, n) {
+        GemmAlgo::Scalar => matmul_tn_scalar_into(a, b, c, k, m, n),
+        GemmAlgo::Blocked => matmul_tn_into(a, b, c, k, m, n),
+        GemmAlgo::Parallel { threads } => matmul_tn_into_parallel(a, b, c, k, m, n, threads),
+    }
+}
+
+/// Row-parallel `c += a·b`: fan disjoint output-row blocks across
+/// `workers` pool threads. Bit-identical to [`matmul_into`] (each row is
+/// computed by the same kernel in the same order).
+pub fn matmul_into_parallel(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    workers: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * n);
+    pool::run_records(c, n, workers, |rows, chunk| {
+        matmul_into(&a[rows.start * k..rows.end * k], b, chunk, rows.len(), k, n);
+    });
+}
+
+/// Row-parallel `c += a · bᵀ`; bit-identical to [`matmul_nt_into`].
+pub fn matmul_nt_into_parallel(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    workers: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * n);
+    pool::run_records(c, n, workers, |rows, chunk| {
+        matmul_nt_into(&a[rows.start * k..rows.end * k], b, chunk, rows.len(), k, n);
+    });
+}
+
+/// Row-parallel `c += aᵀ · b` (`a` is `[k,m]`): each worker streams the
+/// full `k` axis but only its own output-row band, so no reduction is
+/// needed and results are bit-identical to [`matmul_tn_into`].
+pub fn matmul_tn_into_parallel(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    workers: usize,
+) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(c.len(), m * n);
+    pool::run_records(c, n, workers, |rows, chunk| {
+        matmul_tn_into_rows(a, b, chunk, k, m, n, rows.start, rows.end);
+    });
+}
+
+/// Reference kernel: naive i-j-l triple loop, `c += a·b`.
+pub fn matmul_scalar_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     for i in 0..m {
-        let arow = &ad[i * k..(i + 1) * k];
         for j in 0..n {
-            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = c[i * n + j];
+            for l in 0..k {
+                acc += a[i * k + l] * b[l * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+/// Reference kernel: naive `c += a · bᵀ` (the seed's unblocked matmul_nt).
+pub fn matmul_nt_scalar_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
             let mut acc = 0.0f32;
             for l in 0..k {
                 acc += arow[l] * brow[l];
             }
-            cd[i * n + j] = acc;
+            c[i * n + j] += acc;
         }
     }
-    c
+}
+
+/// Reference kernel: naive `c += aᵀ · b` (`a` is `[k,m]`).
+pub fn matmul_tn_scalar_into(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = c[i * n + j];
+            for l in 0..k {
+                acc += a[l * m + i] * b[l * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
 }
 
 /// Raw blocked matmul kernel: `c[m,n] += a[m,k] * b[k,n]` (c pre-zeroed by
@@ -202,20 +405,49 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
 }
 
 /// Raw kernel: `c[m,n] += a[m,k] · b[n,k]ᵀ` over slices (no allocation).
+///
+/// Cache-blocked like its siblings (the seed shipped this one as a naive
+/// i-j-l loop of strided dots): the `k` axis is processed in `BK`-sized
+/// blocks so the active `b` rows stay hot, and `j` is 4-way unrolled so
+/// each `a` element loaded feeds four independent dot-product chains.
 pub fn matmul_nt_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(c.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for l in 0..k {
-                acc += arow[l] * brow[l];
+    const BK: usize = 256;
+    for k0 in (0..k).step_by(BK) {
+        let k1 = (k0 + BK).min(k);
+        for i in 0..m {
+            let arow = &a[i * k + k0..i * k + k1];
+            let crow = &mut c[i * n..(i + 1) * n];
+            let mut j = 0;
+            while j + 4 <= n {
+                let b0 = &b[j * k + k0..j * k + k1];
+                let b1 = &b[(j + 1) * k + k0..(j + 1) * k + k1];
+                let b2 = &b[(j + 2) * k + k0..(j + 2) * k + k1];
+                let b3 = &b[(j + 3) * k + k0..(j + 3) * k + k1];
+                let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+                for (l, &av) in arow.iter().enumerate() {
+                    s0 += av * b0[l];
+                    s1 += av * b1[l];
+                    s2 += av * b2[l];
+                    s3 += av * b3[l];
+                }
+                crow[j] += s0;
+                crow[j + 1] += s1;
+                crow[j + 2] += s2;
+                crow[j + 3] += s3;
+                j += 4;
             }
-            crow[j] += acc;
+            while j < n {
+                let brow = &b[j * k + k0..j * k + k1];
+                let mut acc = 0.0f32;
+                for (l, &av) in arow.iter().enumerate() {
+                    acc += av * brow[l];
+                }
+                crow[j] += acc;
+                j += 1;
+            }
         }
     }
 }
@@ -225,19 +457,36 @@ pub fn matmul_tn_into(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n
     debug_assert_eq!(a.len(), k * m);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
-    // 4-way unroll over the streamed k axis so each c row is touched
-    // once per 4 contributions (§Perf iteration 3).
+    matmul_tn_into_rows(a, b, c, k, m, n, 0, m);
+}
+
+/// [`matmul_tn_into`] restricted to output rows `i0..i1` (`c` holds only
+/// that band) — the unit of work of the row-parallel dispatcher. 4-way
+/// unroll over the streamed k axis so each c row is touched once per 4
+/// contributions (§Perf iteration 3).
+fn matmul_tn_into_rows(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    i0: usize,
+    i1: usize,
+) {
+    let rows = i1 - i0;
+    debug_assert_eq!(c.len(), rows * n);
     let mut l = 0;
     while l + 4 <= k {
-        let a0 = &a[l * m..(l + 1) * m];
-        let a1 = &a[(l + 1) * m..(l + 2) * m];
-        let a2 = &a[(l + 2) * m..(l + 3) * m];
-        let a3 = &a[(l + 3) * m..(l + 4) * m];
+        let a0 = &a[l * m + i0..l * m + i1];
+        let a1 = &a[(l + 1) * m + i0..(l + 1) * m + i1];
+        let a2 = &a[(l + 2) * m + i0..(l + 2) * m + i1];
+        let a3 = &a[(l + 3) * m + i0..(l + 3) * m + i1];
         let b0 = &b[l * n..(l + 1) * n];
         let b1 = &b[(l + 1) * n..(l + 2) * n];
         let b2 = &b[(l + 2) * n..(l + 3) * n];
         let b3 = &b[(l + 3) * n..(l + 4) * n];
-        for i in 0..m {
+        for i in 0..rows {
             let (v0, v1, v2, v3) = (a0[i], a1[i], a2[i], a3[i]);
             let crow = &mut c[i * n..(i + 1) * n];
             for j in 0..n {
@@ -247,9 +496,9 @@ pub fn matmul_tn_into(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n
         l += 4;
     }
     while l < k {
-        let arow = &a[l * m..(l + 1) * m];
+        let arow = &a[l * m + i0..l * m + i1];
         let brow = &b[l * n..(l + 1) * n];
-        for i in 0..m {
+        for i in 0..rows {
             let av = arow[i];
             if av == 0.0 {
                 continue;
@@ -424,6 +673,107 @@ mod tests {
             }
         }
         assert_close(&c, &expect, 1e-5, "blocked matmul");
+    }
+
+    /// Satellite regression: the blocked `matmul_nt` must agree with the
+    /// naive scalar reference across shapes that exercise the k-blocking
+    /// boundary (k > 256) and the 4-way j-unroll remainders.
+    #[test]
+    fn matmul_nt_blocked_matches_scalar() {
+        let mut rng = Rng::new(7);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (8, 256, 8),
+            (5, 300, 6),
+            (7, 65, 9),
+            (4, 513, 5),
+            (2, 32, 4),
+        ] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[n, k], 1.0, &mut rng);
+            let mut c_ref = vec![0f32; m * n];
+            matmul_nt_scalar_into(a.data(), b.data(), &mut c_ref, m, k, n);
+            let mut c = vec![0f32; m * n];
+            matmul_nt_into(a.data(), b.data(), &mut c, m, k, n);
+            for (x, y) in c.iter().zip(&c_ref) {
+                assert!(
+                    (x - y).abs() <= 1e-4 * y.abs().max(1.0),
+                    "nt blocked vs scalar mismatch at {m}x{k}x{n}: {x} vs {y}"
+                );
+            }
+        }
+    }
+
+    /// Parallel row-blocked kernels must be bit-identical to the blocked
+    /// serial ones (disjoint rows, same per-row op order).
+    #[test]
+    fn parallel_kernels_bit_identical() {
+        let mut rng = Rng::new(8);
+        for &(m, k, n) in &[(1usize, 4usize, 4usize), (7, 5, 9), (64, 33, 17), (130, 64, 130)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let bt = transpose(&b);
+            let at = transpose(&a);
+            for workers in [2usize, 4] {
+                let mut c_s = vec![0f32; m * n];
+                matmul_into(a.data(), b.data(), &mut c_s, m, k, n);
+                let mut c_p = vec![0f32; m * n];
+                matmul_into_parallel(a.data(), b.data(), &mut c_p, m, k, n, workers);
+                assert_eq!(c_s, c_p, "nn {m}x{k}x{n} w={workers}");
+
+                let mut c_s = vec![0f32; m * n];
+                matmul_nt_into(a.data(), bt.data(), &mut c_s, m, k, n);
+                let mut c_p = vec![0f32; m * n];
+                matmul_nt_into_parallel(a.data(), bt.data(), &mut c_p, m, k, n, workers);
+                assert_eq!(c_s, c_p, "nt {m}x{k}x{n} w={workers}");
+
+                let mut c_s = vec![0f32; m * n];
+                matmul_tn_into(at.data(), b.data(), &mut c_s, k, m, n);
+                let mut c_p = vec![0f32; m * n];
+                matmul_tn_into_parallel(at.data(), b.data(), &mut c_p, k, m, n, workers);
+                assert_eq!(c_s, c_p, "tn {m}x{k}x{n} w={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_references_agree_with_blocked() {
+        let mut rng = Rng::new(9);
+        let (m, k, n) = (6usize, 70usize, 10usize);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let at = transpose(&a);
+        let mut c_blocked = vec![0f32; m * n];
+        matmul_into(a.data(), b.data(), &mut c_blocked, m, k, n);
+        let mut c_scalar = vec![0f32; m * n];
+        matmul_scalar_into(a.data(), b.data(), &mut c_scalar, m, k, n);
+        let mut c_tn = vec![0f32; m * n];
+        matmul_tn_scalar_into(at.data(), b.data(), &mut c_tn, k, m, n);
+        for ((x, y), z) in c_blocked.iter().zip(&c_scalar).zip(&c_tn) {
+            assert!((x - y).abs() <= 1e-4 * y.abs().max(1.0));
+            assert!((z - y).abs() <= 1e-4 * y.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn gemm_selection_respects_pool_nesting() {
+        // Inside a pool worker the selector must never pick Parallel.
+        let mut out = vec![0f32; 2];
+        crate::runtime::pool::run_records(&mut out, 1, 2, |_, chunk| {
+            match select_gemm_algo(4096, 64, 64) {
+                GemmAlgo::Parallel { .. } => chunk[0] = f32::NAN,
+                _ => chunk[0] = 1.0,
+            }
+        });
+        assert_eq!(out, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn gemm_selection_small_shapes_stay_serial() {
+        // Tiny products must not pay the fan-out cost regardless of the
+        // pool size (8x8x8 = 1k flops << threshold).
+        assert_eq!(select_gemm_algo(8, 8, 8), GemmAlgo::Blocked);
     }
 
     #[test]

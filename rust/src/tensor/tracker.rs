@@ -143,6 +143,36 @@ mod tests {
         assert!(profile.allocs >= 3);
     }
 
+    /// The parallel tensor runtime allocates from pool workers; the
+    /// tracker's atomics must stay balanced and the peak monotone under
+    /// concurrent alloc/free traffic. Unit tests in other modules run
+    /// concurrently and also allocate (outside `measure_lock`), so this
+    /// asserts bounded drift rather than exact equality: this test's own
+    /// traffic (4 threads × 400 × ~100 KiB) would drift far past the
+    /// slack if add/sub updates were being lost.
+    #[test]
+    fn concurrent_allocs_stay_balanced() {
+        let _guard = measure_lock();
+        let live0 = current() as i64;
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                s.spawn(move || {
+                    for i in 0..400usize {
+                        let tns = Tensor::zeros(&[16 * 1024 + t * 64 + i]);
+                        drop(tns);
+                    }
+                });
+            }
+        });
+        let drift = (current() as i64 - live0).abs();
+        assert!(
+            drift < (4 << 20),
+            "alloc/free drifted by {drift} bytes across threads"
+        );
+        // measure_lock is held, so nobody resets the peak under us.
+        assert!(peak() as i64 >= live0);
+    }
+
     #[test]
     fn fmt_bytes_units() {
         assert_eq!(fmt_bytes(512), "512 B");

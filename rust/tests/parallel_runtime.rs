@@ -1,0 +1,270 @@
+//! Parallel tensor runtime properties (§Perf iteration 5):
+//!
+//! 1. Every parallel kernel (GEMM variants, batch-parallel conv ops, the
+//!    vijp elimination in both regimes, Dense, whole gradient engines)
+//!    matches the single-threaded reference within 1e-5 across a grid of
+//!    shapes — including the `s + p < k` wavefront convolution.
+//! 2. Determinism: with a fixed `--threads`, two runs from the same seed
+//!    are **bit-identical**.
+//!
+//! The worker count is process-global, so these tests serialize through a
+//! local mutex and restore the previous setting on exit.
+
+use std::sync::Mutex;
+
+use moonwalk::autodiff::{Backprop, GradEngine, Moonwalk, MoonwalkOpts};
+use moonwalk::model::{build_cnn2d, SubmersiveCnn2dSpec};
+use moonwalk::nn::{Conv1d, Conv2d, Dense, Layer, MeanLoss, ResidualKind};
+use moonwalk::runtime::pool;
+use moonwalk::tensor::{assert_close, ops, rel_err, Tensor};
+use moonwalk::util::Rng;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Restores the pool's thread count on drop — panic-safe, so a failing
+/// assertion inside `with_threads` can't leak a pinned count into the
+/// rest of the file (the mutex deliberately ignores poisoning).
+struct ThreadGuard(usize);
+impl Drop for ThreadGuard {
+    fn drop(&mut self) {
+        pool::set_threads(self.0);
+    }
+}
+
+/// Run `f` with the pool pinned to `t` workers, restoring the previous
+/// setting afterwards even on panic (tests in this file serialize via
+/// `LOCK`).
+fn with_threads<T>(t: usize, f: impl FnOnce() -> T) -> T {
+    let _guard = ThreadGuard(pool::threads());
+    pool::set_threads(t);
+    f()
+}
+
+/// Forces the Parallel GEMM algorithm until dropped (panic-safe).
+struct ForcedParallelGemm;
+impl ForcedParallelGemm {
+    fn engage() -> ForcedParallelGemm {
+        ops::set_gemm_override("parallel").unwrap();
+        ForcedParallelGemm
+    }
+}
+impl Drop for ForcedParallelGemm {
+    fn drop(&mut self) {
+        let _ = ops::set_gemm_override("auto");
+    }
+}
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    match LOCK.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+#[test]
+fn gemm_grid_parallel_matches_serial() {
+    let _g = lock();
+    // Force the Parallel algorithm so even sub-threshold shapes exercise
+    // the fan-out path (auto would keep small grids on Blocked).
+    let _algo = ForcedParallelGemm::engage();
+    let mut rng = Rng::new(100);
+    for &(m, k, n) in &[
+        (1usize, 8usize, 8usize),
+        (17, 9, 5),
+        (64, 32, 32),
+        (130, 70, 33),
+        (256, 16, 64),
+    ] {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let at = ops::transpose(&a);
+        let bt = ops::transpose(&b);
+        let (c1, c1_tn, c1_nt) = with_threads(1, || {
+            (ops::matmul(&a, &b), ops::matmul_tn(&at, &b), ops::matmul_nt(&a, &bt))
+        });
+        for t in [2usize, 4] {
+            let (ct, ct_tn, ct_nt) = with_threads(t, || {
+                (ops::matmul(&a, &b), ops::matmul_tn(&at, &b), ops::matmul_nt(&a, &bt))
+            });
+            assert!(rel_err(&ct, &c1) <= 1e-5, "matmul {m}x{k}x{n} t={t}");
+            assert!(rel_err(&ct_tn, &c1_tn) <= 1e-5, "matmul_tn {m}x{k}x{n} t={t}");
+            assert!(rel_err(&ct_nt, &c1_nt) <= 1e-5, "matmul_nt {m}x{k}x{n} t={t}");
+        }
+    }
+}
+
+/// All four conv2d operators across fast-path, wavefront (`s+p<k`) and
+/// channel-reducing geometries.
+#[test]
+fn conv2d_ops_parallel_match_serial() {
+    let _g = lock();
+    // (k, s, p, cin, cout, hw)
+    for &(k, s, p, cin, cout, hw) in &[
+        (3usize, 2usize, 1usize, 4usize, 4usize, 9usize), // fast path
+        (5, 3, 2, 4, 4, 13),                              // s+p>=k boundary
+        (5, 3, 1, 3, 3, 13),                              // wavefront: s+p<k
+        (3, 2, 1, 6, 3, 9),                               // channel-reducing
+    ] {
+        let mut rng = Rng::new(7 + k as u64);
+        let conv = Conv2d::new_submersive(k, cin, cout, s, p, false, &mut rng);
+        let x = Tensor::randn(&[5, hw, hw, cin], 1.0, &mut rng);
+        let (y, res) = conv.forward_res(&x, ResidualKind::Minimal);
+        let g = Tensor::randn(y.shape(), 1.0, &mut rng);
+        let h = conv.vjp_input(&res, &g);
+
+        let (y1, vi1, vw1, vj1) = with_threads(1, || {
+            (
+                conv.forward(&x),
+                conv.vjp_input(&res, &g),
+                conv.vjp_params(&x, &g),
+                conv.vijp(&res, &h).unwrap(),
+            )
+        });
+        for t in [2usize, 4] {
+            let (yt, vit, vwt, vjt) = with_threads(t, || {
+                (
+                    conv.forward(&x),
+                    conv.vjp_input(&res, &g),
+                    conv.vjp_params(&x, &g),
+                    conv.vijp(&res, &h).unwrap(),
+                )
+            });
+            let tag = format!("conv2d k{k}s{s}p{p} {cin}->{cout} t={t}");
+            assert_close(&yt, &y1, 1e-5, &format!("{tag} fwd"));
+            assert_close(&vit, &vi1, 1e-5, &format!("{tag} vjp_input"));
+            for (a, b) in vwt.iter().zip(&vw1) {
+                assert_close(a, b, 1e-5, &format!("{tag} vjp_params"));
+            }
+            assert_close(&vjt, &vj1, 1e-5, &format!("{tag} vijp"));
+        }
+    }
+}
+
+#[test]
+fn conv1d_ops_parallel_match_serial() {
+    let _g = lock();
+    for &(k, s, p, cin, cout, l) in &[
+        (3usize, 2usize, 1usize, 4usize, 4usize, 11usize),
+        (5, 3, 1, 3, 3, 16), // wavefront geometry in 1-D
+    ] {
+        let mut rng = Rng::new(21 + k as u64);
+        let conv = Conv1d::new_submersive(k, cin, cout, s, p, &mut rng);
+        let x = Tensor::randn(&[6, l, cin], 1.0, &mut rng);
+        let (y, res) = conv.forward_res(&x, ResidualKind::Minimal);
+        let g = Tensor::randn(y.shape(), 1.0, &mut rng);
+        let h = conv.vjp_input(&res, &g);
+
+        let (y1, vi1, vw1, vj1) = with_threads(1, || {
+            (
+                conv.forward(&x),
+                conv.vjp_input(&res, &g),
+                conv.vjp_params(&x, &g),
+                conv.vijp(&res, &h).unwrap(),
+            )
+        });
+        for t in [3usize, 4] {
+            let (yt, vit, vwt, vjt) = with_threads(t, || {
+                (
+                    conv.forward(&x),
+                    conv.vjp_input(&res, &g),
+                    conv.vjp_params(&x, &g),
+                    conv.vijp(&res, &h).unwrap(),
+                )
+            });
+            let tag = format!("conv1d k{k}s{s}p{p} t={t}");
+            assert_close(&yt, &y1, 1e-5, &format!("{tag} fwd"));
+            assert_close(&vit, &vi1, 1e-5, &format!("{tag} vjp_input"));
+            for (a, b) in vwt.iter().zip(&vw1) {
+                assert_close(a, b, 1e-5, &format!("{tag} vjp_params"));
+            }
+            assert_close(&vjt, &vj1, 1e-5, &format!("{tag} vijp"));
+        }
+    }
+}
+
+#[test]
+fn dense_parallel_matches_serial() {
+    let _g = lock();
+    let _algo = ForcedParallelGemm::engage();
+    let mut rng = Rng::new(33);
+    let dense = Dense::new(48, 10, true, &mut rng);
+    let x = Tensor::randn(&[64, 48], 1.0, &mut rng);
+    let (y, res) = dense.forward_res(&x, ResidualKind::Minimal);
+    let g = Tensor::randn(y.shape(), 1.0, &mut rng);
+
+    let (y1, vi1, vw1) = with_threads(1, || {
+        (
+            dense.forward(&x),
+            dense.vjp_input(&res, &g),
+            dense.vjp_params(&x, &g),
+        )
+    });
+    let (y4, vi4, vw4) = with_threads(4, || {
+        (
+            dense.forward(&x),
+            dense.vjp_input(&res, &g),
+            dense.vjp_params(&x, &g),
+        )
+    });
+    assert_close(&y4, &y1, 1e-5, "dense fwd");
+    assert_close(&vi4, &vi1, 1e-5, "dense vjp_input");
+    for (a, b) in vw4.iter().zip(&vw1) {
+        assert_close(a, b, 1e-5, "dense vjp_params");
+    }
+}
+
+/// End-to-end: the Moonwalk engine on 4 threads reproduces its own
+/// 1-thread gradients to 1e-5 and Backprop's to engine tolerance.
+#[test]
+fn moonwalk_engine_parallel_matches_serial() {
+    let _g = lock();
+    let mut rng = Rng::new(55);
+    let spec = SubmersiveCnn2dSpec {
+        input_hw: 16,
+        depth: 3,
+        channels: 4,
+        cin: 2,
+        classes: 3,
+        ..Default::default()
+    };
+    let net = build_cnn2d(&spec, &mut rng);
+    let x = Tensor::randn(&[4, 16, 16, 2], 1.0, &mut rng);
+    let mw = Moonwalk::new(MoonwalkOpts::default());
+    let r1 = with_threads(1, || mw.compute(&net, &x, &MeanLoss).unwrap());
+    let r4 = with_threads(4, || mw.compute(&net, &x, &MeanLoss).unwrap());
+    assert!((r1.loss - r4.loss).abs() <= 1e-6);
+    for (a, b) in r1.grads.iter().flatten().zip(r4.grads.iter().flatten()) {
+        assert_close(b, a, 1e-5, "moonwalk grads 4 vs 1 thread");
+    }
+    let bp = with_threads(4, || Backprop.compute(&net, &x, &MeanLoss).unwrap());
+    for (a, b) in bp.grads.iter().flatten().zip(r4.grads.iter().flatten()) {
+        assert_close(b, a, 5e-3, "moonwalk(4t) vs backprop(4t)");
+    }
+}
+
+/// Same seed + fixed thread count ⇒ bit-identical outputs across runs
+/// (the determinism contract of the deterministic chunk partitioning and
+/// worker-ordered reductions).
+#[test]
+fn fixed_threads_runs_are_bit_identical() {
+    let _g = lock();
+    let run = || {
+        let mut rng = Rng::new(77);
+        let conv = Conv2d::new_submersive(3, 4, 4, 2, 1, false, &mut rng);
+        let x = Tensor::randn(&[5, 9, 9, 4], 1.0, &mut rng);
+        let (y, res) = conv.forward_res(&x, ResidualKind::Minimal);
+        let g = Tensor::randn(y.shape(), 1.0, &mut rng);
+        let h = conv.vjp_input(&res, &g);
+        let hp = conv.vijp(&res, &h).unwrap();
+        let dw = conv.vjp_params(&x, &g);
+        (y, h, hp, dw)
+    };
+    let (y_a, h_a, hp_a, dw_a) = with_threads(3, run);
+    let (y_b, h_b, hp_b, dw_b) = with_threads(3, run);
+    assert_eq!(y_a.data(), y_b.data(), "forward bit-identical");
+    assert_eq!(h_a.data(), h_b.data(), "vjp_input bit-identical");
+    assert_eq!(hp_a.data(), hp_b.data(), "vijp bit-identical");
+    for (a, b) in dw_a.iter().zip(&dw_b) {
+        assert_eq!(a.data(), b.data(), "vjp_params bit-identical");
+    }
+}
