@@ -18,9 +18,9 @@
 use moonwalk::autodiff::engine_by_name;
 use moonwalk::cli::Args;
 use moonwalk::model::{build_cnn2d, SubmersiveCnn2dSpec};
-use moonwalk::nn::{Conv2d, Layer, MeanLoss, ResidualKind};
+use moonwalk::nn::{Conv1d, Conv2d, Layer, MeanLoss, ResidualKind};
 use moonwalk::runtime::pool;
-use moonwalk::tensor::{tracker, Tensor};
+use moonwalk::tensor::{arena, tracker, Tensor};
 use moonwalk::util::json::Json;
 use moonwalk::util::timer::bench;
 use moonwalk::util::Rng;
@@ -93,6 +93,111 @@ fn main() -> anyhow::Result<()> {
             ("vijp_vjp_ratio", (vijp.median / vjp_in.median).into()),
         ]));
     }
+
+    // Small-kernel family (ISSUE 2): per-op costs *below* ~100 µs — the
+    // regime where PR 1's spawn-per-region scoped pool ate the parallel
+    // win and the persistent team is supposed to keep it. Compare
+    // `--threads 1` vs `--threads 4` medians: with cheap region dispatch
+    // the 4-thread column should be ≤ the 1-thread column even here
+    // (at worst neutral). The batch-1 rows exercise the spatial
+    // (row-band) conv paths.
+    println!("\nsmall kernels (medians in µs, threads={threads}):");
+    println!(
+        "{:<26} {:>10} {:>10} {:>10} {:>10}",
+        "config", "fwd_us", "vjp_in_us", "vjp_w_us", "vijp_us"
+    );
+    let small_iters = iters * 40;
+    let small_shapes: &[(usize, usize, usize, usize, usize, usize)] = &[
+        // (batch, hw, ch, k, s, p)
+        (4, 16, 8, 3, 2, 1),
+        (8, 16, 8, 3, 2, 1),
+        (1, 32, 8, 3, 2, 1),  // batch-1: spatial row-band paths
+        (1, 48, 12, 3, 2, 1), // batch-1, a bit larger
+    ];
+    let mut small_rows: Vec<Json> = Vec::new();
+    for &(n, hw, ch, k, s, p) in small_shapes {
+        let mut rng = Rng::new(2);
+        let conv = Conv2d::new_submersive(k, ch, ch, s, p, false, &mut rng);
+        let x = Tensor::randn(&[n, hw, hw, ch], 1.0, &mut rng);
+        let (y, res) = conv.forward_res(&x, ResidualKind::Minimal);
+        let g = Tensor::randn(y.shape(), 1.0, &mut rng);
+        let h = conv.vjp_input(&res, &g);
+        let fwd = bench(5, small_iters, || {
+            std::hint::black_box(conv.forward(&x));
+        });
+        let vjp_in = bench(5, small_iters, || {
+            std::hint::black_box(conv.vjp_input(&res, &g));
+        });
+        let vjp_w = bench(5, small_iters, || {
+            std::hint::black_box(conv.vjp_params(&x, &g));
+        });
+        let vijp = bench(5, small_iters, || {
+            std::hint::black_box(conv.vijp(&res, &h).unwrap());
+        });
+        let config = format!("{n}x{hw}x{hw}x{ch} k{k}s{s}p{p}");
+        println!(
+            "{:<26} {:>10.1} {:>10.1} {:>10.1} {:>10.1}",
+            config,
+            fwd.median * 1e6,
+            vjp_in.median * 1e6,
+            vjp_w.median * 1e6,
+            vijp.median * 1e6,
+        );
+        small_rows.push(Json::from_pairs(vec![
+            ("config", config.as_str().into()),
+            ("n", n.into()),
+            ("hw", hw.into()),
+            ("ch", ch.into()),
+            ("fwd_us", (fwd.median * 1e6).into()),
+            ("vjp_in_us", (vjp_in.median * 1e6).into()),
+            ("vjp_w_us", (vjp_w.median * 1e6).into()),
+            ("vijp_us", (vijp.median * 1e6).into()),
+        ]));
+    }
+    // Batch-1 fragment reconstruction (Alg. 3), the Moonwalk
+    // forward-reconstruction kernel the persistent pool de-serializes:
+    // (image, block) tasks fan out even at N = 1.
+    {
+        let mut rng = Rng::new(3);
+        let conv = Conv1d::new_fragmental(3, 16, 16, &mut rng);
+        let x = Tensor::randn(&[1, 256, 16], 1.0, &mut rng);
+        let (y, res) = conv.forward_res(&x, ResidualKind::Minimal);
+        let hp = Tensor::randn(y.shape(), 1.0, &mut rng);
+        let h = conv.vjp_input(&res, &hp);
+        let frag = conv.fragment_capture(&hp, 16).unwrap();
+        let rec = bench(5, small_iters, || {
+            std::hint::black_box(conv.fragment_reconstruct(&frag, &h).unwrap());
+        });
+        println!(
+            "{:<26} {:>10.1} (fragment_reconstruct, B=16)",
+            "1x256x16 conv1d k3",
+            rec.median * 1e6
+        );
+        small_rows.push(Json::from_pairs(vec![
+            ("config", "1x256x16 conv1d k3 frag_rec B16".into()),
+            ("frag_rec_us", (rec.median * 1e6).into()),
+        ]));
+    }
+    // Raw region-dispatch overhead: an (almost) empty region with one
+    // record per worker — the park/wake round trip the persistent team
+    // optimizes vs the scoped pool's spawn+join.
+    let dispatch_us = {
+        let t = pool::threads().max(2);
+        let mut sink = vec![0f32; t];
+        let d = bench(20, small_iters * 5, || {
+            pool::run_records(&mut sink, 1, t, |recs, chunk| {
+                for (local, rec) in recs.enumerate() {
+                    chunk[local] = rec as f32;
+                }
+            });
+        });
+        println!(
+            "region dispatch ({} shares): {:.2} µs median",
+            t,
+            d.median * 1e6
+        );
+        d.median * 1e6
+    };
 
     // Ablation 1 (DESIGN.md §10): anchor placement. The h₁ seed
     // checkpoints the cotangent *after* the stride-2 entry conv (s²
@@ -170,6 +275,19 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // Pool lifecycle + arena recycle-rate snapshot for the run (monotone
+    // process counters — diff across runs at equal workloads).
+    let pstats = pool::stats();
+    println!(
+        "\npool: regions={} wakes={} parks={} workers={} | arena: hits={} misses={}",
+        pstats.regions,
+        pstats.wakes,
+        pstats.parks,
+        pstats.workers_spawned,
+        arena::hits(),
+        arena::misses()
+    );
+
     // Machine-readable output for the perf-trajectory tracking (CI keeps
     // one BENCH_perf_ops.json per run; diff across commits).
     let json_path = args.get_or("json", "BENCH_perf_ops.json");
@@ -179,6 +297,24 @@ fn main() -> anyhow::Result<()> {
         ("quick", quick.into()),
         ("iters", iters.into()),
         ("rows", Json::Arr(rows)),
+        ("small_rows", Json::Arr(small_rows)),
+        ("dispatch_us", dispatch_us.into()),
+        (
+            "pool",
+            Json::from_pairs(vec![
+                ("regions", pstats.regions.into()),
+                ("wakes", pstats.wakes.into()),
+                ("parks", pstats.parks.into()),
+                ("workers_spawned", pstats.workers_spawned.into()),
+            ]),
+        ),
+        (
+            "arena",
+            Json::from_pairs(vec![
+                ("hits", arena::hits().into()),
+                ("misses", arena::misses().into()),
+            ]),
+        ),
         ("churn", Json::Arr(churn)),
     ]);
     std::fs::write(json_path, out.to_string())?;

@@ -7,7 +7,9 @@ use std::collections::BTreeMap;
 
 /// Apply the global runtime flags shared by every entry point:
 /// `--threads N` (worker-pool size) and `--gemm auto|scalar|blocked|parallel`
-/// (GEMM algorithm override). Call before any tensor work.
+/// (GEMM algorithm override). Call before any tensor work. The persistent
+/// worker team is prewarmed here so the first parallel region — often a
+/// sub-100 µs kernel in the benches — doesn't pay spawn latency.
 pub fn configure_runtime(args: &Args) -> anyhow::Result<()> {
     if let Some(t) = args.get_usize_opt("threads")? {
         crate::runtime::pool::set_threads(t);
@@ -15,6 +17,7 @@ pub fn configure_runtime(args: &Args) -> anyhow::Result<()> {
     if let Some(algo) = args.get("gemm") {
         crate::tensor::ops::set_gemm_override(algo)?;
     }
+    crate::runtime::pool::prewarm();
     Ok(())
 }
 

@@ -9,6 +9,7 @@ use crate::coordinator::data::TextureDataset;
 use crate::coordinator::optimizer::Optimizer;
 use crate::model::Network;
 use crate::nn::SoftmaxCrossEntropy;
+use crate::runtime::pool;
 use crate::tensor::tracker;
 use crate::util::json::Json;
 use crate::util::logging::JsonlWriter;
@@ -79,6 +80,7 @@ impl<'a> Trainer<'a> {
 
             self.optimizer.begin_step();
             let step_timer = Timer::start();
+            let pool0 = pool::stats();
             // The engine streams gradients internally; here they are
             // collected so the (aliasing-safe) apply happens after the
             // engine releases the network. The figure benches measure the
@@ -88,6 +90,7 @@ impl<'a> Trainer<'a> {
                 let engine = self.engine;
                 tracker::measure(|| engine.compute(net, &x, &loss))
             };
+            let pool1 = pool::stats();
             let result = result?;
             for (li, grads) in result.grads.iter().enumerate() {
                 if !grads.is_empty() {
@@ -108,7 +111,15 @@ impl<'a> Trainer<'a> {
                         ("allocs", prof.allocs.into()),
                         ("step_time_s", step_timer.elapsed_s().into()),
                         ("engine", self.engine.name().as_str().into()),
-                        ("threads", crate::runtime::pool::threads().into()),
+                        ("threads", pool::threads().into()),
+                        // Pool-lifecycle deltas for this step: parallel
+                        // regions dispatched, worker wake/park round
+                        // trips, plus the (monotone) team size — the
+                        // §Perf signal that region dispatch stays cheap.
+                        ("pool_regions", (pool1.regions - pool0.regions).into()),
+                        ("pool_wakes", (pool1.wakes - pool0.wakes).into()),
+                        ("pool_parks", (pool1.parks - pool0.parks).into()),
+                        ("pool_workers", pool1.workers_spawned.into()),
                     ]))?;
                 }
             }

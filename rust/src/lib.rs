@@ -20,8 +20,10 @@
 //!   plus a memory-budget planner that picks an engine for a budget.
 //! * [`coordinator`] — a config-driven trainer (optimizers, synthetic data
 //!   pipelines, JSONL metrics, sweeps).
-//! * [`runtime`] — the scoped worker pool behind the parallel tensor
-//!   runtime (`runtime::pool`, `--threads`), plus a PJRT client (gated
+//! * [`runtime`] — the persistent worker-thread pool behind the parallel
+//!   tensor runtime (`runtime::pool`, `--threads`; workers park between
+//!   regions, so even sub-100 µs kernels amortize dispatch), plus a PJRT
+//!   client (gated
 //!   behind the `xla` feature) that loads the AOT artifacts produced by
 //!   `python/compile/aot.py` (JAX/Pallas → HLO text) and executes them
 //!   from the Rust hot path; Python never runs at training time.

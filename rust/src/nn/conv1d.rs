@@ -25,6 +25,14 @@ use crate::util::Rng;
 
 use super::conv2d::DIAG_FLOOR;
 
+thread_local! {
+    /// Per-thread f64 workspace for the Alg.-3 block recurrence
+    /// (`fragment_reconstruct`). Pool workers are persistent, so this
+    /// amortizes to zero allocations in steady state — the f64 analogue
+    /// of the f32 `tensor::arena`.
+    static RECON_BUF: std::cell::RefCell<Vec<f64>> = std::cell::RefCell::new(Vec::new());
+}
+
 /// A channel-last 1-D convolution layer.
 pub struct Conv1d {
     /// Kernel `[k, Cin, Cout]`.
@@ -534,6 +542,14 @@ impl Layer for Conv1d {
     /// solving the tap-0 term):
     /// `h'[i+1,c'] = (h[i,c'] − Σ_{c''<c'} w[0,c',c''] h'[i+1,c'']
     ///               − Σ_{j≥1,c''} w[j,c',c''] h'[i+1−j,c'']) / w[0,c',c']`
+    ///
+    /// Blocks are independent by construction — exactly the parallelism
+    /// Alg. 3 exploits — so the `(image, block)` tasks fan out across
+    /// the persistent pool ([`pool::run_spans`]; every task writes a
+    /// disjoint span of `hp`). Each task runs the identical serial
+    /// recurrence, so parallel reconstruction is bit-identical to the
+    /// 1-thread kernel; the Moonwalk forward-reconstruction phase no
+    /// longer serializes at batch 1.
     fn fragment_reconstruct(
         &self,
         frag: &Fragment,
@@ -557,14 +573,32 @@ impl Layer for Conv1d {
         let hd = h_in.data();
         let wd = self.w.data();
         let sd = frag.slices.data();
-        // The in-block recurrence compounds rounding error over up to B
-        // steps, so accumulate in f64 (the kernel-side Pallas version
-        // relies on the same trick being unnecessary only for small B).
-        let mut buf = vec![0f64; block * cout];
+        // One span of hp per (image, block) task, in ascending order
+        // (the last block of each image may be short).
+        let mut spans: Vec<std::ops::Range<usize>> = Vec::with_capacity(n * n_blocks);
         for img in 0..n {
             for b in 0..n_blocks {
                 let lo_i = b * block;
                 let hi_i = ((b + 1) * block).min(lo);
+                spans.push((img * lo + lo_i) * cout..(img * lo + hi_i) * cout);
+            }
+        }
+        let workers = pool::effective_threads(n * n_blocks);
+        pool::run_spans(hp.data_mut(), &spans, workers, |task, out_block| {
+            let img = task / n_blocks;
+            let b = task % n_blocks;
+            let lo_i = b * block;
+            let hi_i = ((b + 1) * block).min(lo);
+            // The in-block recurrence compounds rounding error over up to
+            // B steps, so accumulate in f64 (the kernel-side Pallas
+            // version relies on the same trick being unnecessary only for
+            // small B). The workspace is thread-local: persistent pool
+            // workers live for the process, so after warm-up the
+            // reconstruction allocates nothing. Stale contents are fine —
+            // every row the recurrence reads is written first.
+            RECON_BUF.with(|cell| {
+                let mut buf = cell.borrow_mut();
+                buf.resize(block * cout, 0.0);
                 // 1) restore the stored k-1 prefix slices of this block
                 for r in 0..keep {
                     let i = lo_i + r;
@@ -576,8 +610,7 @@ impl Layer for Conv1d {
                         buf[r * cout + c] = sd[src + c] as f64;
                     }
                 }
-                // 2) roll the recurrence forward inside the block; blocks
-                // are independent (the parallelism Alg. 3 exploits).
+                // 2) roll the recurrence forward inside the block.
                 // h'[i,·] from the input-cotangent equation at i−1:
                 // h[i−1,c] = Σ_{j,c'} w[j,c,c'] h'[i−j, c']   (p = 1)
                 for i in lo_i + keep..hi_i {
@@ -602,17 +635,15 @@ impl Layer for Conv1d {
                         buf[r * cout + co] = acc / wd[co * cout + co] as f64;
                     }
                 }
-                // 3) write the block back in f32
-                let out = hp.data_mut();
-                for i in lo_i..hi_i {
-                    let dst = (img * lo + i) * cout;
-                    let r = i - lo_i;
+                // 3) write the block back in f32 (out_block is exactly
+                // this task's span of hp)
+                for r in 0..hi_i - lo_i {
                     for c in 0..cout {
-                        out[dst + c] = buf[r * cout + c] as f32;
+                        out_block[r * cout + c] = buf[r * cout + c] as f32;
                     }
                 }
-            }
-        }
+            });
+        });
         Ok(hp)
     }
 }

@@ -25,6 +25,14 @@ use crate::util::Rng;
 /// Minimum |diagonal tap| enforced by the submersive projection.
 pub const DIAG_FLOOR: f32 = 0.05;
 
+/// Minimum work — output elements × kernel taps (`H'·W'·Cout·k²`, i.e.
+/// FLOPs / (2·Cin)) — for the batch-1 spatial row-band paths to engage.
+/// Below it the whole kernel is dispatch-scale (a few µs) and a region
+/// fan-out would cost more than it saves; the same floor philosophy as
+/// `ops::PAR_MIN_FLOPS`, sized for the persistent pool's park/wake cost.
+/// Tiny tail layers of stride-2 stacks (H' = 2..4) stay serial.
+const SPATIAL_MIN_TAP_ELEMS: usize = 4096;
+
 /// A channel-last 2-D convolution layer.
 pub struct Conv2d {
     /// Kernel `[k, k, Cin, Cout]`.
@@ -125,21 +133,37 @@ impl Conv2d {
         wo: usize,
         buf: &mut [f32],
     ) {
+        self.gather_tap_rows(x, img, ki, kj, 0..ho, wo, buf);
+    }
+
+    /// [`Self::gather_tap`] restricted to output rows `rows` — the unit
+    /// of the batch-1 spatial (row-band) parallel paths, where each
+    /// worker gathers only its own band into per-worker arena scratch.
+    fn gather_tap_rows(
+        &self,
+        x: &Tensor,
+        img: usize,
+        ki: usize,
+        kj: usize,
+        rows: std::ops::Range<usize>,
+        wo: usize,
+        buf: &mut [f32],
+    ) {
         let (h, w, cin) = (x.shape()[1], x.shape()[2], self.cin);
         let (s, p) = (self.stride, self.pad);
-        debug_assert_eq!(buf.len(), ho * wo * cin);
+        debug_assert_eq!(buf.len(), rows.len() * wo * cin);
         let xd = x.data();
         let x_base = img * h * w * cin;
-        for a in 0..ho {
+        for (local, a) in rows.enumerate() {
             let ii = (s * a + ki) as isize - p as isize;
             if ii < 0 || ii as usize >= h {
-                buf[a * wo * cin..(a + 1) * wo * cin].fill(0.0);
+                buf[local * wo * cin..(local + 1) * wo * cin].fill(0.0);
                 continue;
             }
             let xrow = x_base + (ii as usize) * w * cin;
             for b in 0..wo {
                 let jj = (s * b + kj) as isize - p as isize;
-                let dst = (a * wo + b) * cin;
+                let dst = (local * wo + b) * cin;
                 if jj >= 0 && (jj as usize) < w {
                     let src = xrow + (jj as usize) * cin;
                     buf[dst..dst + cin].copy_from_slice(&xd[src..src + cin]);
@@ -154,8 +178,14 @@ impl Conv2d {
     /// `jvp_input` and `jvp_params`, which differ only in kernel/bias):
     /// per-tap gather + `[H'W',Cin]·[Cin,Cout]` matmuls. Images are
     /// independent, so the batch axis fans out across the worker pool
-    /// (each worker leases its own tap buffer from the arena); a
-    /// single-image batch instead lets the per-tap GEMM go row-parallel.
+    /// (each worker leases its own tap buffer from the arena). A
+    /// single-image batch has nothing to split on the batch axis, so it
+    /// partitions the *output rows* instead (spatial row-band
+    /// parallelism): each worker gathers only its band of a tap and runs
+    /// the banded GEMM. Output rows are computed by exactly the serial
+    /// kernel in the same tap order, so the banded result is
+    /// bit-identical to the serial one — and one region covers all `k²`
+    /// taps instead of dispatching a row-parallel GEMM per tap.
     fn conv_with(&self, x: &Tensor, wdata: &[f32], bias: Option<&Tensor>) -> Tensor {
         assert_eq!(x.rank(), 4, "conv2d expects [N,H,W,C]");
         assert_eq!(x.shape()[3], self.cin, "channel mismatch");
@@ -164,6 +194,34 @@ impl Conv2d {
         let (k, cin, cout) = (self.k, self.cin, self.cout);
         let mut out = Tensor::zeros(&[n, ho, wo, cout]);
         let img_out = ho * wo * cout;
+        let spatial = if n == 1 && img_out * k * k >= SPATIAL_MIN_TAP_ELEMS {
+            pool::effective_threads(ho)
+        } else {
+            1
+        };
+        if spatial > 1 {
+            pool::run_records(out.data_mut(), wo * cout, spatial, |rows, chunk| {
+                let band = rows.len();
+                let mut tap = arena::take(band * wo * cin);
+                for ki in 0..k {
+                    for kj in 0..k {
+                        self.gather_tap_rows(x, 0, ki, kj, rows.clone(), wo, &mut tap);
+                        let w_tap =
+                            &wdata[(ki * k + kj) * cin * cout..(ki * k + kj + 1) * cin * cout];
+                        ops::matmul_into_auto(&tap, w_tap, chunk, band * wo, cin, cout);
+                    }
+                }
+                if let Some(b) = bias {
+                    let bd = b.data();
+                    for row in chunk.chunks_mut(cout) {
+                        for (o, bv) in row.iter_mut().zip(bd) {
+                            *o += bv;
+                        }
+                    }
+                }
+            });
+            return out;
+        }
         let workers = pool::effective_threads(n);
         pool::run_records(out.data_mut(), img_out, workers, |imgs, chunk| {
             let mut tap = arena::take(ho * wo * cin);
@@ -366,6 +424,38 @@ impl Conv2d {
         }
     }
 
+    /// Accumulate `dw[ki,kj] += tap(rows)ᵀ · g(rows)` for one image's
+    /// output-row band — the shared inner kernel of both `vjp_params`
+    /// reductions (batch-parallel over images, batch-1 spatial over row
+    /// bands). `g_band` is the `[rows·W', Cout]` slice of the output
+    /// gradient matching `rows`; `acc` is the `[k,k,Cin,Cout]` flat
+    /// accumulator.
+    fn accumulate_dw_band(
+        &self,
+        x: &Tensor,
+        img: usize,
+        rows: std::ops::Range<usize>,
+        wo: usize,
+        g_band: &[f32],
+        acc: &mut [f32],
+    ) {
+        let (k, cin, cout) = (self.k, self.cin, self.cout);
+        let mut tap = arena::take(rows.len() * wo * cin);
+        for ki in 0..k {
+            for kj in 0..k {
+                self.gather_tap_rows(x, img, ki, kj, rows.clone(), wo, &mut tap);
+                ops::matmul_tn_into_auto(
+                    &tap,
+                    g_band,
+                    &mut acc[(ki * k + kj) * cin * cout..(ki * k + kj + 1) * cin * cout],
+                    rows.len() * wo,
+                    cin,
+                    cout,
+                );
+            }
+        }
+    }
+
     /// Spatially coupled vijp for one image (`s + p < k`): lexicographic
     /// wavefront whose dependencies point only to already-eliminated
     /// positions (a2 ≤ a, b2 ≤ b — guaranteed by `s > p`).
@@ -467,39 +557,48 @@ impl Layer for Conv2d {
         // range into a private dw accumulator; partials merge in worker
         // order, so a fixed thread count is bit-deterministic. The
         // accumulators come from the arena so they are tracker-visible
-        // and recycled (no per-call heap churn).
+        // and recycled (no per-call heap churn). Single-image batches
+        // fall back to spatial row-band partitioning: each worker
+        // contracts its band of output rows against its band of the tap
+        // gather. Like the batch reduction, the band merge reorders the
+        // position sum, so batch-1 parallel dw matches serial to fp
+        // tolerance (and is bit-stable at a fixed thread count).
+        fn merge_add(a: &mut arena::Scratch, b: arena::Scratch) {
+            for (av, bv) in a.iter_mut().zip(b.iter()) {
+                *av += *bv;
+            }
+        }
         let workers = pool::effective_threads(n);
-        let acc = pool::run_reduce(
-            n,
-            workers,
-            || arena::take_zeroed(wlen),
-            |imgs, acc| {
-                let mut tap = arena::take(ho * wo * cin);
-                for img in imgs {
-                    let g_img = &gd[img * img_g..(img + 1) * img_g];
-                    for ki in 0..k {
-                        for kj in 0..k {
-                            self.gather_tap(x, img, ki, kj, ho, wo, &mut tap);
-                            // dw[ki,kj] += tapᵀ · g
-                            ops::matmul_tn_into_auto(
-                                &tap,
-                                g_img,
-                                &mut acc[(ki * k + kj) * cin * cout
-                                    ..(ki * k + kj + 1) * cin * cout],
-                                ho * wo,
-                                cin,
-                                cout,
-                            );
-                        }
+        let spatial = if n == 1 && ho * wo * cout * k * k >= SPATIAL_MIN_TAP_ELEMS {
+            pool::effective_threads(ho)
+        } else {
+            1
+        };
+        let acc = if spatial > 1 {
+            pool::run_reduce(
+                ho,
+                spatial,
+                || arena::take_zeroed(wlen),
+                |rows, acc| {
+                    let g_band = &gd[rows.start * wo * cout..rows.end * wo * cout];
+                    self.accumulate_dw_band(x, 0, rows, wo, g_band, acc);
+                },
+                merge_add,
+            )
+        } else {
+            pool::run_reduce(
+                n,
+                workers,
+                || arena::take_zeroed(wlen),
+                |imgs, acc| {
+                    for img in imgs {
+                        let g_img = &gd[img * img_g..(img + 1) * img_g];
+                        self.accumulate_dw_band(x, img, 0..ho, wo, g_img, acc);
                     }
-                }
-            },
-            |a, b| {
-                for (av, bv) in a.iter_mut().zip(b.iter()) {
-                    *av += *bv;
-                }
-            },
-        );
+                },
+                merge_add,
+            )
+        };
         let mut dw = Tensor::zeros(&[k, k, cin, cout]);
         dw.data_mut().copy_from_slice(&acc);
         let mut grads = vec![dw];

@@ -3,6 +3,13 @@
 //! `Dout ≤ Din`); its vijp is the Moore–Penrose right-inverse
 //! `h' = (h·W)·(WᵀW)⁻¹`, computed by a dense Gram solve — illustrating
 //! the paper's point that vijp must be hand-derived per layer class (§7).
+//!
+//! Parallelism comes entirely through the auto-selected GEMM kernels
+//! (`ops::matmul*_into_auto`): with the persistent worker runtime the
+//! selection thresholds admit much smaller `[N, Din]·[Din, Dout]`
+//! products (region dispatch is a park/wake round-trip, not a thread
+//! spawn), so classifier heads parallelize even at small batch sizes —
+//! no layer-local pool code is needed here.
 
 use crate::nn::{
     Layer, LayerError, Residual, ResidualData, ResidualKind, Submersivity,

@@ -1,8 +1,12 @@
 //! Execution runtimes.
 //!
-//! * [`pool`] — the in-process scoped worker pool that powers the
-//!   parallel tensor kernels (row-blocked GEMM, batch-parallel conv ops,
-//!   Moonwalk phase loops). Std-only, deterministic partitioning.
+//! * [`pool`] — the in-process **persistent** worker runtime that powers
+//!   the parallel tensor kernels (row-blocked GEMM, batch- and
+//!   spatial-parallel conv ops, Moonwalk phase loops). Workers spawn
+//!   lazily, park between regions and receive per-region job
+//!   descriptors, so even sub-100 µs kernels amortize dispatch. Std-only,
+//!   deterministic partitioning, bit-identical to the PR 1 scoped pool
+//!   at fixed thread counts.
 //! * [`artifacts`] — manifest/loader for the AOT artifacts emitted by
 //!   `python/compile/aot.py` (JAX/Pallas programs lowered to HLO text).
 //! * [`pjrt`] — the PJRT client that compiles and executes those

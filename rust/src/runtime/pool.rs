@@ -1,36 +1,107 @@
-//! Scoped worker pool for data-parallel tensor kernels (§Perf iteration 5).
+//! Persistent worker-thread runtime for data-parallel tensor kernels
+//! (§Perf iterations 5–6).
 //!
-//! Design constraints, in order:
+//! PR 1 shipped a *scoped* pool: every parallel region spawned fresh
+//! `std::thread::scope` workers. That is fine at multi-ms conv/GEMM
+//! sizes but wasteful below ~100 µs — exactly the regime of Moonwalk's
+//! small per-layer vijp and fragment kernels. This revision keeps a
+//! **persistent team**: worker threads are spawned lazily on first use,
+//! park between regions (blocked on their job channel), and receive work
+//! through a per-region job descriptor. Dispatching a region is a
+//! channel send + condvar round-trip per worker instead of a thread
+//! spawn + join.
+//!
+//! Design constraints, in order (unchanged from PR 1 — the persistent
+//! pool must be a drop-in contract-preserving replacement):
 //!
 //! 1. **Determinism.** For a fixed thread count, every parallel kernel
-//!    must produce bit-identical results across runs. Work is therefore
-//!    split into *contiguous, deterministic* chunks ([`chunk_ranges`]) —
-//!    never work-stolen — and reductions fold per-worker partials in
-//!    worker order ([`run_reduce`]).
-//! 2. **Safety.** No `unsafe`, no lifetime erasure: workers are spawned
-//!    with [`std::thread::scope`], so they may borrow the caller's
-//!    tensors directly and are joined before the kernel returns. Spawn
-//!    cost (~tens of µs) is negligible against the multi-ms conv/GEMM
-//!    kernels this pool exists for; tiny kernels stay serial via the
-//!    shape heuristics in `tensor::ops`.
+//!    produces bit-identical results across runs *and* bit-identical
+//!    results to the PR 1 scoped pool: work is split into *contiguous,
+//!    deterministic* chunks ([`chunk_ranges`]) — never work-stolen — and
+//!    reductions fold per-share partials in share order ([`run_reduce`]).
+//!    Which OS thread executes a share never affects the values written.
+//! 2. **Safety.** The single `unsafe` surface is the lifetime erasure in
+//!    [`run_region`], which is sound because the submitting thread always
+//!    blocks on the region latch before returning (workers can never
+//!    observe the caller's borrows after the region ends — even when a
+//!    share panics). Everything above it (slice partitioning, partial
+//!    hand-off) uses safe `split_at_mut` walks and per-share `Mutex`
+//!    cells.
 //! 3. **No oversubscription.** A kernel running *inside* a worker (e.g.
 //!    a per-tap GEMM inside a batch-parallel convolution) sees
-//!    [`effective_threads`]` == 1` and runs serially.
+//!    [`effective_threads`]` == 1` and runs serially. The calling thread
+//!    executes share 0 of its own region *as* a worker (nested regions
+//!    stay serial there too, exactly as under the scoped pool where every
+//!    share ran on a spawned thread).
+//! 4. **Resilience.** A panicking share is caught on the worker, the
+//!    region latch still completes, the panic is re-raised on the
+//!    submitting thread, and the team keeps running — later regions are
+//!    unaffected (`tests/pool_stress.rs` proves it).
 //!
 //! Thread count resolution: explicit [`set_threads`] (the CLI's
 //! `--threads`) > `MOONWALK_THREADS` env var > available parallelism.
+//! [`set_threads`] may be called between regions at any time; shrinking
+//! leaves surplus workers parked, growing spawns on demand (or eagerly
+//! via [`prewarm`]). Lifecycle counters ([`stats`]) expose region /
+//! wake / park counts for the trainer's JSONL metrics.
 
+use std::any::Any;
 use std::cell::Cell;
 use std::ops::Range;
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Condvar, Mutex, MutexGuard};
 
 /// Global thread budget; 0 = not yet resolved.
 static THREADS: AtomicUsize = AtomicUsize::new(0);
 
 thread_local! {
-    /// Set inside pool workers so nested kernels stay serial.
+    /// Set inside pool workers (and on the caller while it runs its own
+    /// share) so nested kernels stay serial.
     static IN_WORKER: Cell<bool> = Cell::new(false);
 }
+
+// ----- lifecycle metrics ----------------------------------------------------
+
+/// Parallel regions dispatched (regions that actually woke workers).
+static REGIONS: AtomicUsize = AtomicUsize::new(0);
+/// Jobs handed to parked workers (one per non-caller share).
+static WAKES: AtomicUsize = AtomicUsize::new(0);
+/// Jobs completed — the worker returned to its parked state.
+static PARKS: AtomicUsize = AtomicUsize::new(0);
+/// Worker threads spawned over the process lifetime.
+static SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+/// Snapshot of the pool's lifecycle counters (monotone; log deltas).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Parallel regions dispatched (a region with `t` shares wakes
+    /// `t - 1` workers; the caller runs share 0 itself).
+    pub regions: usize,
+    /// Worker wake-ups (jobs sent to parked workers).
+    pub wakes: usize,
+    /// Worker parks (jobs completed; the worker re-blocked on its
+    /// channel). Absent worker failures — the overwhelmingly common
+    /// case — `parks == wakes` after every region returns; a job lost
+    /// to a dying worker counts as a wake but not a park.
+    pub parks: usize,
+    /// Worker threads spawned so far (they persist once spawned).
+    pub workers_spawned: usize,
+}
+
+/// Current lifecycle counters. The mean region fan-out since process
+/// start is `wakes / regions + 1`.
+pub fn stats() -> PoolStats {
+    PoolStats {
+        regions: REGIONS.load(Ordering::Relaxed),
+        wakes: WAKES.load(Ordering::Relaxed),
+        parks: PARKS.load(Ordering::Relaxed),
+        workers_spawned: SPAWNED.load(Ordering::Relaxed),
+    }
+}
+
+// ----- thread-count resolution ----------------------------------------------
 
 fn resolve_default() -> usize {
     if let Ok(v) = std::env::var("MOONWALK_THREADS") {
@@ -57,11 +128,31 @@ pub fn threads() -> usize {
 }
 
 /// Set the worker count explicitly (CLI `--threads`). Clamped to ≥ 1.
+/// Resizing between regions is cheap: shrinking leaves surplus workers
+/// parked on their channels; growing spawns lazily at the next region
+/// (or eagerly via [`prewarm`]).
 pub fn set_threads(n: usize) {
     THREADS.store(n.max(1), Ordering::Relaxed);
 }
 
-/// Is the current thread a pool worker?
+/// Pin the pool to `t` workers for the duration of `f`, restoring the
+/// previous setting afterwards even on panic. Test/bench helper — the
+/// thread count is process-global, so callers comparing counts should
+/// serialize (e.g. through a file-local mutex in test binaries).
+pub fn with_threads<T>(t: usize, f: impl FnOnce() -> T) -> T {
+    struct Guard(usize);
+    impl Drop for Guard {
+        fn drop(&mut self) {
+            set_threads(self.0);
+        }
+    }
+    let _guard = Guard(threads());
+    set_threads(t);
+    f()
+}
+
+/// Is the current thread a pool worker (or a caller inside its own
+/// region share)?
 pub fn in_worker() -> bool {
     IN_WORKER.with(|w| w.get())
 }
@@ -96,6 +187,324 @@ pub fn chunk_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
     out
 }
 
+// ----- the persistent team --------------------------------------------------
+
+/// Poison-tolerant lock (a panicking share must not brick the team).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Countdown latch a region waits on: workers decrement, the submitter
+/// blocks until zero. The decrement and the wake happen under one lock
+/// acquisition so the submitter cannot observe zero — and free the
+/// stack-allocated latch — while a worker still holds the condvar.
+/// The first panicking share parks its payload here so the submitter
+/// can re-raise the *original* panic (matching the scoped pool, where
+/// `thread::scope` propagated it), not a generic message.
+struct Latch {
+    remaining: Mutex<usize>,
+    all_done: Condvar,
+    panic_payload: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch {
+            remaining: Mutex::new(n),
+            all_done: Condvar::new(),
+            panic_payload: Mutex::new(None),
+        }
+    }
+
+    /// Mark one share complete. After the final call the latch may be
+    /// freed by the waiting submitter at any moment — no access after.
+    fn complete_one(&self) {
+        let mut left = lock(&self.remaining);
+        *left -= 1;
+        if *left == 0 {
+            self.all_done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut left = lock(&self.remaining);
+        while *left > 0 {
+            left = match self.all_done.wait(left) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+}
+
+/// Per-region job descriptor handed to a parked worker: which share of
+/// the region's closure to run, and the latch to report back to. The
+/// `'static` lifetimes are a fiction maintained by [`run_region`], which
+/// never returns before every job settled.
+struct Job {
+    task: &'static (dyn Fn(usize) + Sync),
+    latch: &'static Latch,
+    share: usize,
+    /// Set by the worker once the task was actually invoked. A job
+    /// dropped with `ran == false` never executed (its worker died with
+    /// the job queued, or dispatch failed) — its Drop records a failure
+    /// so the submitter panics instead of silently missing a share.
+    ran: bool,
+}
+
+/// Settling the latch lives in `Drop`, so it happens on **every** exit
+/// path: normal completion, a panic payload whose own `Drop` panics and
+/// unwinds past the worker's catch, and jobs still queued on a dying
+/// worker's channel (the `Receiver` drop drops them). A latch that never
+/// settles would deadlock its submitter forever — `run_region` must
+/// block for soundness.
+impl Drop for Job {
+    fn drop(&mut self) {
+        if self.ran {
+            // Only an executed job is a genuine wake→park round trip; a
+            // job dropped undispatched (or on a dying worker's channel)
+            // must not inflate the park count.
+            PARKS.fetch_add(1, Ordering::Relaxed);
+        } else {
+            let mut slot = lock(&self.latch.panic_payload);
+            if slot.is_none() {
+                *slot = Some(Box::new(
+                    "pool worker died before running this region share",
+                ));
+            }
+        }
+        // Last touch: after complete_one the submitter may free the latch.
+        self.latch.complete_one();
+    }
+}
+
+/// The team: one channel sender per spawned worker. Workers are spawned
+/// lazily, never exit, and park on `Receiver::recv` between jobs.
+static TEAM: Mutex<Vec<Sender<Job>>> = Mutex::new(Vec::new());
+
+fn worker_loop(rx: Receiver<Job>) {
+    IN_WORKER.with(|w| w.set(true));
+    while let Ok(mut job) = rx.recv() {
+        // Catch panics so one bad share cannot take the worker (and every
+        // later region scheduled on it) down; the submitter re-raises the
+        // first payload. The latch itself settles in `Job::drop`.
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| (job.task)(job.share)));
+        job.ran = true;
+        if let Err(payload) = result {
+            let mut slot = lock(&job.latch.panic_payload);
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+            // A discarded payload (a later panic of the same region)
+            // drops here; if its own Drop panics, the unwind still
+            // settles the latch via Job::drop below.
+        }
+        drop(job);
+    }
+    // All senders dropped — only happens at process teardown.
+}
+
+fn try_spawn_worker(idx: usize) -> Option<Sender<Job>> {
+    let (tx, rx) = channel::<Job>();
+    let spawned = std::thread::Builder::new()
+        .name(format!("moonwalk-pool-{idx}"))
+        .spawn(move || worker_loop(rx));
+    match spawned {
+        Ok(_) => {
+            SPAWNED.fetch_add(1, Ordering::Relaxed);
+            Some(tx)
+        }
+        Err(_) => None,
+    }
+}
+
+/// Grow the team to `needed` workers. Called *before* any job of the
+/// current region is in flight, so panicking on spawn failure here is
+/// safe (no worker holds borrows into the caller's frame yet).
+fn ensure_workers(team: &mut Vec<Sender<Job>>, needed: usize) {
+    while team.len() < needed {
+        let idx = team.len();
+        let tx = try_spawn_worker(idx).expect("failed to spawn pool worker");
+        team.push(tx);
+    }
+}
+
+/// Eagerly spawn the team for the current [`threads`] setting so the
+/// first parallel region doesn't pay spawn latency (the CLI calls this
+/// from `configure_runtime`). Purely an optimization — the team also
+/// grows lazily.
+pub fn prewarm() {
+    let t = threads();
+    if t > 1 {
+        let mut team = lock(&TEAM);
+        ensure_workers(&mut team, t - 1);
+    }
+}
+
+/// Execute `f(share)` for every `share in 0..parts`: shares `1..parts`
+/// on persistent workers, share 0 on the calling thread (marked as a
+/// worker for the duration, so nested regions stay serial). Returns only
+/// after **all** shares finished — also on panic, so `f` may freely
+/// borrow the caller's stack. Panics (caller's share first, then any
+/// worker share) are re-raised here after the region settles.
+fn run_region(parts: usize, f: &(dyn Fn(usize) + Sync)) {
+    if parts <= 1 || in_worker() {
+        // Degenerate or nested: run every share inline, in order.
+        for share in 0..parts.max(1) {
+            f(share);
+        }
+        return;
+    }
+    let extra = parts - 1;
+    let latch = Latch::new(extra);
+    // SAFETY: the only lifetime erasure in the runtime. `task` and
+    // `latch_ref` point into this stack frame; workers use them only
+    // while their job runs, every job completes (panics are caught)
+    // before `latch.wait()` returns, and this function never returns —
+    // or unwinds — before `latch.wait()` completes. Hence no worker can
+    // dereference either pointer after this frame dies.
+    let task: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+    let latch_ref: &'static Latch = unsafe { std::mem::transmute(&latch) };
+    {
+        let mut team = lock(&TEAM);
+        // Grow first: a spawn panic here happens before any job is in
+        // flight, so unwinding is safe.
+        ensure_workers(&mut team, extra);
+        for i in 0..extra {
+            let job = Job {
+                task,
+                latch: latch_ref,
+                share: i + 1,
+                ran: false,
+            };
+            match team[i].send(job) {
+                Ok(()) => {
+                    WAKES.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(returned) => {
+                    // The worker died (a panic escaped the catch, e.g. a
+                    // panicking panic payload). Replace it and
+                    // re-dispatch — the team self-heals. If even the
+                    // respawn fails (thread exhaustion), dropping the
+                    // job settles the latch with a never-ran failure and
+                    // the region panics cleanly below.
+                    if let Some(tx) = try_spawn_worker(i) {
+                        team[i] = tx;
+                        if team[i].send(returned.0).is_ok() {
+                            WAKES.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    REGIONS.fetch_add(1, Ordering::Relaxed);
+    // The caller runs share 0 as a worker: nested kernels must stay
+    // serial exactly as under the scoped pool, where every share ran on
+    // a spawned thread.
+    let prev = IN_WORKER.with(|w| w.replace(true));
+    let mine = std::panic::catch_unwind(AssertUnwindSafe(|| f(0)));
+    IN_WORKER.with(|w| w.set(prev));
+    // Always settle the region before unwinding: workers still hold
+    // borrows into this frame until the latch completes (Job::drop
+    // guarantees it completes on every path).
+    latch.wait();
+    let share_payload = lock(&latch.panic_payload).take();
+    match mine {
+        // The caller's own share panicking takes precedence; otherwise
+        // re-raise the first worker share's original payload.
+        Err(payload) => std::panic::resume_unwind(payload),
+        Ok(()) => {
+            if let Some(p) = share_payload {
+                std::panic::resume_unwind(p);
+            }
+        }
+    }
+}
+
+// ----- safe data-parallel entry points --------------------------------------
+
+/// Run `f(span_index, sub_slice)` over caller-specified sub-slices of
+/// `data`. `spans` must be ascending and non-overlapping (gaps are fine
+/// and stay untouched); this is checked. Spans are grouped into at most
+/// `workers` contiguous share groups via [`chunk_ranges`] — a share
+/// processes its spans in ascending span order, so the serial
+/// (`workers == 1`) execution order is the same code path. Used by
+/// kernels whose natural parallel unit is irregular (e.g. conv1d
+/// fragment blocks of unequal tail size).
+pub fn run_spans<T, F>(data: &mut [T], spans: &[Range<usize>], workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if spans.is_empty() {
+        return;
+    }
+    let mut prev_end = 0usize;
+    for (i, s) in spans.iter().enumerate() {
+        assert!(
+            s.start >= prev_end && s.end >= s.start,
+            "span {i} ({s:?}) is unsorted or overlaps its predecessor"
+        );
+        prev_end = s.end;
+    }
+    assert!(
+        prev_end <= data.len(),
+        "spans end at {prev_end} but data has {} elements",
+        data.len()
+    );
+    let t = if in_worker() {
+        1
+    } else {
+        workers.clamp(1, spans.len())
+    };
+    if t <= 1 {
+        // Serial: carve and call in one pass (same split walk as below).
+        let mut rest = data;
+        let mut consumed = 0usize;
+        for (i, s) in spans.iter().enumerate() {
+            let tmp = rest;
+            let (_gap, tmp) = tmp.split_at_mut(s.start - consumed);
+            let (mine, tail) = tmp.split_at_mut(s.end - s.start);
+            f(i, mine);
+            rest = tail;
+            consumed = s.end;
+        }
+        return;
+    }
+    // Carve every span out of `data` with a safe sequential split walk.
+    let mut slices: Vec<(usize, &mut [T])> = Vec::with_capacity(spans.len());
+    {
+        let mut rest = data;
+        let mut consumed = 0usize;
+        for (i, s) in spans.iter().enumerate() {
+            let tmp = rest;
+            let (_gap, tmp) = tmp.split_at_mut(s.start - consumed);
+            let (mine, tail) = tmp.split_at_mut(s.end - s.start);
+            slices.push((i, mine));
+            rest = tail;
+            consumed = s.end;
+        }
+    }
+    // Hand each share its own span group through a Mutex cell (locked
+    // exactly once, uncontended — shares touch only their own cell).
+    let groups = chunk_ranges(spans.len(), t);
+    let mut iter = slices.into_iter();
+    let shares: Vec<Mutex<Vec<(usize, &mut [T])>>> = groups
+        .iter()
+        .map(|g| Mutex::new(iter.by_ref().take(g.len()).collect()))
+        .collect();
+    run_region(shares.len(), &|share| {
+        let mut mine = lock(&shares[share]);
+        for (idx, slice) in mine.iter_mut() {
+            f(*idx, &mut **slice);
+        }
+    });
+}
+
 /// Run `f(record_range, records_slice)` over disjoint contiguous chunks of
 /// `data`, which holds `data.len() / record_len` records of `record_len`
 /// f32s each. `workers` is the requested parallelism (callers usually pass
@@ -125,26 +534,20 @@ where
         return;
     }
     let ranges = chunk_ranges(n_records, t);
-    std::thread::scope(|s| {
-        let f = &f;
-        let mut rest = data;
-        for r in ranges {
-            let take = r.len() * record_len;
-            let tmp = rest;
-            let (mine, tail) = tmp.split_at_mut(take);
-            rest = tail;
-            s.spawn(move || {
-                IN_WORKER.with(|w| w.set(true));
-                f(r, mine);
-            });
-        }
-    });
+    let spans: Vec<Range<usize>> = ranges
+        .iter()
+        .map(|r| r.start * record_len..r.end * record_len)
+        .collect();
+    // One span per share, so the grouping inside run_spans is 1:1 and the
+    // partitioning is exactly the scoped pool's.
+    run_spans(data, &spans, t, |i, chunk| f(ranges[i].clone(), chunk));
 }
 
-/// Deterministic parallel map-reduce over `0..n_tasks`: each worker folds
+/// Deterministic parallel map-reduce over `0..n_tasks`: each share folds
 /// its contiguous task range into a fresh accumulator (`init` + `work`),
-/// and the per-worker accumulators are merged **in worker order** — so a
-/// fixed thread count always reduces in the same order (bit-stable).
+/// and the per-share accumulators are merged **in share order** — so a
+/// fixed thread count always reduces in the same order (bit-stable, and
+/// bit-identical to the PR 1 scoped pool's worker-ordered merge).
 pub fn run_reduce<A, I, W, M>(n_tasks: usize, workers: usize, init: I, work: W, mut merge: M) -> A
 where
     A: Send,
@@ -165,27 +568,23 @@ where
         return acc;
     }
     let ranges = chunk_ranges(n_tasks, t);
-    let mut partials: Vec<A> = Vec::with_capacity(t);
-    std::thread::scope(|s| {
-        let init = &init;
-        let work = &work;
-        let handles: Vec<_> = ranges
-            .into_iter()
-            .map(|r| {
-                s.spawn(move || {
-                    IN_WORKER.with(|w| w.set(true));
-                    let mut acc = init();
-                    work(r, &mut acc);
-                    acc
-                })
-            })
-            .collect();
-        for h in handles {
-            partials.push(h.join().expect("pool worker panicked"));
-        }
+    // Per-share result cells; each share writes only its own slot.
+    let slots: Vec<Mutex<Option<A>>> = (0..t).map(|_| Mutex::new(None)).collect();
+    run_region(t, &|share| {
+        let mut acc = init();
+        work(ranges[share].clone(), &mut acc);
+        *lock(&slots[share]) = Some(acc);
     });
-    let mut iter = partials.into_iter();
-    let mut acc = iter.next().expect("at least one worker");
+    // A panicking share propagates out of run_region, so every slot is
+    // populated here. Merge in share (= task range) order.
+    let mut iter = slots.into_iter().map(|s| {
+        match s.into_inner() {
+            Ok(v) => v,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+        .expect("pool share completed without a result")
+    });
+    let mut acc = iter.next().expect("at least one share");
     for p in iter {
         merge(&mut acc, p);
     }
@@ -253,6 +652,30 @@ mod tests {
     }
 
     #[test]
+    fn run_spans_respects_gaps() {
+        // Spans with holes: untouched elements keep their sentinel.
+        let mut data = vec![-1f32; 12];
+        let spans = vec![1usize..3, 5..6, 8..12];
+        run_spans(&mut data, &spans, 3, |idx, chunk| {
+            for (o, c) in chunk.iter_mut().enumerate() {
+                *c = (idx * 100 + o) as f32;
+            }
+        });
+        let expect = vec![
+            -1.0, 0.0, 1.0, -1.0, -1.0, 100.0, -1.0, -1.0, 200.0, 201.0, 202.0, 203.0,
+        ];
+        assert_eq!(data, expect);
+        // Serial run is bit-identical.
+        let mut serial = vec![-1f32; 12];
+        run_spans(&mut serial, &spans, 1, |idx, chunk| {
+            for (o, c) in chunk.iter_mut().enumerate() {
+                *c = (idx * 100 + o) as f32;
+            }
+        });
+        assert_eq!(serial, data);
+    }
+
+    #[test]
     fn run_reduce_deterministic_sum() {
         let sum = |workers: usize| {
             run_reduce(
@@ -277,7 +700,7 @@ mod tests {
     fn nested_parallelism_is_serialized() {
         let mut outer = vec![0f32; 4];
         run_records(&mut outer, 1, 4, |_, chunk| {
-            // Inside a worker the pool must refuse to fan out again.
+            // Inside a share the pool must refuse to fan out again.
             assert!(in_worker());
             assert_eq!(effective_threads(64), 1);
             let mut inner = vec![0f32; 8];
@@ -291,6 +714,52 @@ mod tests {
     }
 
     #[test]
+    fn caller_is_not_marked_worker_between_regions() {
+        let mut data = vec![0f32; 4];
+        run_records(&mut data, 1, 4, |_, c| c.fill(1.0));
+        assert!(!in_worker(), "IN_WORKER must be restored after a region");
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_team_recovers() {
+        let boom = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut data = vec![0f32; 8];
+            run_records(&mut data, 1, 4, |records, _chunk| {
+                if records.start >= 4 {
+                    panic!("injected share panic");
+                }
+            });
+        }));
+        assert!(boom.is_err(), "worker panic must reach the caller");
+        // The team must still serve later regions, with correct results.
+        let mut data = vec![0f32; 16];
+        run_records(&mut data, 1, 4, |records, chunk| {
+            for (l, r) in records.enumerate() {
+                chunk[l] = r as f32;
+            }
+        });
+        let expect: Vec<f32> = (0..16).map(|r| r as f32).collect();
+        assert_eq!(data, expect);
+    }
+
+    #[test]
+    fn stats_count_regions_and_round_trips() {
+        // Unit tests share the process, so only check monotone growth of
+        // our own deltas (other tests may run concurrently).
+        let before = stats();
+        let mut data = vec![0f32; 64];
+        run_records(&mut data, 1, 4, |records, chunk| {
+            for (l, r) in records.enumerate() {
+                chunk[l] = r as f32;
+            }
+        });
+        let after = stats();
+        assert!(after.regions > before.regions, "region counted");
+        assert!(after.wakes >= before.wakes + 3, "3 workers woken");
+        assert!(after.workers_spawned >= 3, "team spawned");
+    }
+
+    #[test]
     fn threads_configurable() {
         // Note: global state; keep assertions order-independent.
         let before = threads();
@@ -299,5 +768,14 @@ mod tests {
         assert_eq!(effective_threads(2), 2);
         assert_eq!(effective_threads(100), 3);
         set_threads(before);
+    }
+
+    #[test]
+    fn with_threads_restores_on_panic() {
+        let before = threads();
+        let _ = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            with_threads(before + 5, || panic!("boom"));
+        }));
+        assert_eq!(threads(), before);
     }
 }

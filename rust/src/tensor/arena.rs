@@ -9,12 +9,14 @@
 //! first step every `take` is a hit and the tracker records no new
 //! allocations.
 //!
-//! Concurrency: a single mutex-guarded free list shared by all threads.
-//! Pool workers take/return at most a few buffers per kernel call, so
-//! contention is negligible next to the multi-ms kernels. Which physical
-//! buffer a worker receives never affects results: [`take`] leaves the
-//! contents unspecified and every caller fully overwrites its lease,
-//! while accumulators use [`take_zeroed`].
+//! Concurrency: a single mutex-guarded free list shared by all threads
+//! (the persistent pool's workers included — buffers migrate freely
+//! between workers, which keeps the list balanced when the team is
+//! resized via `pool::set_threads`). Pool workers take/return at most a
+//! few buffers per kernel call, so contention is negligible next to the
+//! kernels. Which physical buffer a worker receives never affects
+//! results: [`take`] leaves the contents unspecified and every caller
+//! fully overwrites its lease, while accumulators use [`take_zeroed`].
 //!
 //! Accounting: a fresh allocation registers its capacity with the
 //! [`tracker`] (so peak-memory profiles still see scratch); a recycled
@@ -35,9 +37,18 @@ static POOL: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
 /// steady-state metric: after warm-up this should stop moving.
 static MISSES: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
 
+/// Arena hits (recycled leases) since process start — together with
+/// [`misses`] this gives the recycle rate the perf harness reports.
+static HITS: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
 /// Fresh allocations performed by the arena since process start.
 pub fn misses() -> usize {
     MISSES.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// Recycled (allocation-free) leases since process start.
+pub fn hits() -> usize {
+    HITS.load(std::sync::atomic::Ordering::Relaxed)
 }
 
 fn lock() -> std::sync::MutexGuard<'static, Vec<Vec<f32>>> {
@@ -119,7 +130,10 @@ pub fn take(len: usize) -> Scratch {
         best.map(|(i, _)| pool.swap_remove(i))
     };
     let mut buf = match reused {
-        Some(b) => b,
+        Some(b) => {
+            HITS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            b
+        }
         None => {
             let b: Vec<f32> = Vec::with_capacity(len);
             tracker::alloc(b.capacity() * 4);

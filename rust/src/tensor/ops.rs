@@ -4,8 +4,9 @@
 //! algorithms are available behind the [`GemmAlgo`] selector (the cuDNN
 //! fwd-algo-enum idiom): a `Scalar` reference triple loop, the
 //! cache-`Blocked` ikj kernel, and a row-`Parallel` variant that fans the
-//! output rows across the scoped worker pool (`runtime::pool`) — rows are
-//! disjoint, so the parallel result is bit-identical to the blocked one.
+//! output rows across the persistent worker pool (`runtime::pool`) — rows
+//! are disjoint, so the parallel result is bit-identical to the blocked
+//! one.
 //! Shape heuristics pick the algorithm; `MOONWALK_GEMM` /
 //! [`set_gemm_override`] force one. The §Perf pass iterates on this file —
 //! see EXPERIMENTS.md §Perf.
@@ -99,10 +100,15 @@ pub enum GemmAlgo {
     Parallel { threads: usize },
 }
 
-/// A worker needs at least this many output rows to amortize its spawn.
-const PAR_MIN_ROWS: usize = 16;
+/// A worker needs at least this many output rows to amortize its share
+/// of region dispatch. Retuned down from 16 when the scoped pool became
+/// a persistent team (§Perf iteration 6): dispatch is a channel send +
+/// park/wake round-trip per worker (~single-digit µs), not a thread
+/// spawn, so much smaller row bands pay off.
+const PAR_MIN_ROWS: usize = 8;
 /// Below this FLOP count (2·m·k·n) the kernel stays single-threaded.
-const PAR_MIN_FLOPS: f64 = 1.0e6;
+/// Also retuned (1e6 → 2.5e5) for the persistent team's cheaper regions.
+const PAR_MIN_FLOPS: f64 = 2.5e5;
 
 // Cached MOONWALK_GEMM override: 0 unresolved, 1 auto, 2/3/4 forced.
 static GEMM_OVERRIDE: std::sync::atomic::AtomicU8 = std::sync::atomic::AtomicU8::new(0);
@@ -249,8 +255,8 @@ pub fn matmul_tn_into_auto(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usi
 }
 
 /// Row-parallel `c += a·b`: fan disjoint output-row blocks across
-/// `workers` pool threads. Bit-identical to [`matmul_into`] (each row is
-/// computed by the same kernel in the same order).
+/// `workers` persistent pool threads. Bit-identical to [`matmul_into`]
+/// (each row is computed by the same kernel in the same order).
 pub fn matmul_into_parallel(
     a: &[f32],
     b: &[f32],

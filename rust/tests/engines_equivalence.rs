@@ -3,6 +3,8 @@
 //! every architecture family it applies to (paper: Moonwalk computes
 //! *true* gradients, unlike projection methods).
 
+use std::sync::Mutex;
+
 use moonwalk::autodiff::{
     engine_by_name, Backprop, ForwardMode, GradEngine, Moonwalk, MoonwalkOpts, PureMoonwalk,
     RevBackprop, EXACT_ENGINES,
@@ -12,8 +14,19 @@ use moonwalk::model::{
     FragmentalCnn1dSpec, Network, SubmersiveCnn2dSpec,
 };
 use moonwalk::nn::{Loss, MeanLoss, SoftmaxCrossEntropy};
+use moonwalk::runtime::pool;
 use moonwalk::tensor::{rel_err, Tensor};
 use moonwalk::util::Rng;
+
+/// Serializes the tests that pin the (process-global) pool thread count.
+static THREAD_PIN: Mutex<()> = Mutex::new(());
+
+fn pin_lock() -> std::sync::MutexGuard<'static, ()> {
+    match THREAD_PIN.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
 
 fn assert_engines_match(
     net: &Network,
@@ -214,9 +227,103 @@ fn mixed_pool_mid_network() {
     assert_engines_match(&net, &x, &MeanLoss, &[&mw], 5e-3);
 }
 
+/// The full `EXACT_ENGINES` grid under the persistent pool: at
+/// `threads ∈ {1, 4}` every exact engine reproduces Backprop's gradients
+/// on the 2-D submersive CNN, and each engine's 4-thread gradients match
+/// its own 1-thread gradients to 1e-5 (the only cross-count
+/// reassociation is the worker-ordered `vjp_params` merge).
+#[test]
+fn exact_engines_grid_under_threads_1_and_4() {
+    let _pin = pin_lock();
+    let mut rng = Rng::new(20);
+    let spec = SubmersiveCnn2dSpec {
+        input_hw: 16,
+        depth: 3,
+        channels: 5,
+        cin: 2,
+        classes: 3,
+        ..Default::default()
+    };
+    let net = build_cnn2d(&spec, &mut rng);
+    let x = Tensor::randn(&[2, 16, 16, 2], 1.0, &mut rng);
+    let engines: Vec<Box<dyn GradEngine>> = EXACT_ENGINES
+        .iter()
+        .map(|n| engine_by_name(n, 4, 2, 0).unwrap())
+        .collect();
+    for t in [1usize, 4] {
+        pool::with_threads(t, || {
+            let refs: Vec<&dyn GradEngine> = engines.iter().map(|e| e.as_ref()).collect();
+            assert_engines_match(&net, &x, &MeanLoss, &refs, 5e-3);
+        });
+    }
+    for (name, engine) in EXACT_ENGINES.iter().zip(&engines) {
+        let r1 = pool::with_threads(1, || engine.compute(&net, &x, &MeanLoss).unwrap());
+        let r4 = pool::with_threads(4, || engine.compute(&net, &x, &MeanLoss).unwrap());
+        assert!(
+            (r1.loss - r4.loss).abs() <= 1e-6 * r1.loss.abs().max(1.0),
+            "{name}: loss diverged across thread counts"
+        );
+        for (li, (a, b)) in r1.grads.iter().zip(&r4.grads).enumerate() {
+            for (pi, (ga, gb)) in a.iter().zip(b).enumerate() {
+                let err = rel_err(gb, ga);
+                assert!(
+                    err <= 1e-5,
+                    "{name} layer {li} param {pi}: 4-thread vs 1-thread rel err {err}"
+                );
+            }
+        }
+    }
+}
+
+/// Moonwalk with fragmental checkpointing on the 1-D CNN, under the
+/// persistent pool at both thread counts: gradients match Backprop, and
+/// the 4-thread run matches the 1-thread run to 1e-5 (the fragment
+/// reconstruction itself is bit-identical — see
+/// `prop_fragment_reconstruct_parallel_bit_identical` — the residual
+/// reassociation comes from the worker-ordered `vjp_params` merge).
+#[test]
+fn fragmental_moonwalk_grid_under_threads_1_and_4() {
+    let _pin = pin_lock();
+    let mut rng = Rng::new(21);
+    let spec = FragmentalCnn1dSpec {
+        input_len: 64,
+        channels: 8,
+        depth: 3,
+        classes: 3,
+        ..Default::default()
+    };
+    let net = build_cnn1d_fragmental(&spec, &mut rng);
+    let x = Tensor::randn(&[2, 64, 3], 1.0, &mut rng);
+    let engine = Moonwalk::new(MoonwalkOpts {
+        fragment_block: Some(8),
+        ..Default::default()
+    });
+    for t in [1usize, 4] {
+        pool::with_threads(t, || {
+            // Tolerance per the block-8 recurrence bound documented in
+            // `fragmental_on_1d_cnn_all_blocks`.
+            assert_engines_match(&net, &x, &MeanLoss, &[&engine], 2e-2);
+        });
+    }
+    let r1 = pool::with_threads(1, || engine.compute(&net, &x, &MeanLoss).unwrap());
+    let r4 = pool::with_threads(4, || engine.compute(&net, &x, &MeanLoss).unwrap());
+    for (ga, gb) in r1.grads.iter().flatten().zip(r4.grads.iter().flatten()) {
+        let err = rel_err(gb, ga);
+        assert!(
+            err <= 1e-5,
+            "fragmental moonwalk: 4-thread vs 1-thread rel err {err}"
+        );
+    }
+}
+
 #[test]
 fn gradients_deterministic_across_runs() {
     // Engines are bit-deterministic (required for the AOT parity tests).
+    // Bit-equality needs a *fixed* thread count across the two runs, so
+    // pin it and serialize against the thread-pinning grid tests (the
+    // batch-1 input exercises the spatial row-band reductions, whose
+    // partitioning depends on the count).
+    let _pin = pin_lock();
     let mut rng = Rng::new(9);
     let spec = SubmersiveCnn2dSpec {
         input_hw: 16,
@@ -228,9 +335,11 @@ fn gradients_deterministic_across_runs() {
     let net = build_cnn2d(&spec, &mut rng);
     let x = Tensor::randn(&[1, 16, 16, 2], 1.0, &mut rng);
     let mw = Moonwalk::new(MoonwalkOpts::default());
-    let a = mw.compute(&net, &x, &MeanLoss).unwrap();
-    let b = mw.compute(&net, &x, &MeanLoss).unwrap();
-    for (ga, gb) in a.grads.iter().flatten().zip(b.grads.iter().flatten()) {
-        assert_eq!(ga.data(), gb.data());
-    }
+    pool::with_threads(4, || {
+        let a = mw.compute(&net, &x, &MeanLoss).unwrap();
+        let b = mw.compute(&net, &x, &MeanLoss).unwrap();
+        for (ga, gb) in a.grads.iter().flatten().zip(b.grads.iter().flatten()) {
+            assert_eq!(ga.data(), gb.data());
+        }
+    });
 }

@@ -1,0 +1,359 @@
+//! Randomized stress grid for the persistent worker runtime (ISSUE 2
+//! tentpole): interleaved regions of wildly varying task counts,
+//! resize-between-regions, oversubscription (tasks ≫ workers), and
+//! panic-in-worker recovery. **Every case asserts 1-thread vs N-thread
+//! bit-equality** — the payloads are chosen so their reductions are
+//! exactly associative (integer-valued sums, wrapping u64 arithmetic),
+//! hence any fixed partitioning must reproduce the serial bits, and
+//! disjoint-write fills are bit-equal by construction.
+//!
+//! The thread count is process-global, so every test serializes through
+//! a file-local mutex and pins counts via `pool::with_threads` (which
+//! restores the previous setting even on panic).
+
+use std::sync::Mutex;
+
+use moonwalk::runtime::pool;
+use moonwalk::util::Rng;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    match LOCK.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// FNV-style bit hash over f32 payloads (exact — compares bits).
+fn hash_f32(xs: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for x in xs {
+        h ^= x.to_bits() as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// One randomized "program": a fixed seed drives a sequence of
+/// interleaved parallel regions (fills, u64 reductions, f64
+/// integer-exact reductions, span kernels) and returns a trace of
+/// bit-exact digests. The trace must be identical at every thread count.
+fn run_program(seed: u64, threads: usize) -> Vec<u64> {
+    pool::with_threads(threads, || {
+        let mut rng = Rng::new(seed);
+        let mut trace: Vec<u64> = Vec::new();
+        for _ in 0..12 {
+            match rng.below(4) {
+                0 => {
+                    // Disjoint-write fill over records of random geometry.
+                    let n = 1 + rng.below(257);
+                    let rl = 1 + rng.below(7);
+                    let salt = (rng.next_u64() % 1000) as usize;
+                    let mut data = vec![0f32; n * rl];
+                    pool::run_records(&mut data, rl, threads, |recs, chunk| {
+                        for (local, rec) in recs.enumerate() {
+                            for j in 0..rl {
+                                chunk[local * rl + j] =
+                                    (((rec * 31 + j * 7 + salt) % 997) as f32).sqrt();
+                            }
+                        }
+                    });
+                    trace.push(hash_f32(&data));
+                }
+                1 => {
+                    // Oversubscribed u64 reduction: tasks ≫ workers;
+                    // wrapping adds are exactly associative, so the
+                    // merge order cannot change the result.
+                    let n = 1 + rng.below(5000);
+                    let salt = rng.next_u64();
+                    let sum = pool::run_reduce(
+                        n,
+                        threads,
+                        || 0u64,
+                        |r, acc| {
+                            for i in r {
+                                *acc = acc.wrapping_add(
+                                    (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ salt,
+                                );
+                            }
+                        },
+                        |a, b| *a = a.wrapping_add(b),
+                    );
+                    trace.push(sum);
+                }
+                2 => {
+                    // f64 reduction over small integers: every partial
+                    // sum stays well below 2^53, so fp addition is exact
+                    // and association-free — bit-equal at any count.
+                    let n = 1 + rng.below(2000);
+                    let sum = pool::run_reduce(
+                        n,
+                        threads,
+                        || 0f64,
+                        |r, acc| {
+                            for i in r {
+                                *acc += ((i * i) % 4096) as f64;
+                            }
+                        },
+                        |a, b| *a += b,
+                    );
+                    trace.push(sum.to_bits());
+                }
+                _ => {
+                    // Irregular spans with gaps (the fragment-block shape).
+                    let n_spans = 1 + rng.below(40);
+                    let mut spans = Vec::with_capacity(n_spans);
+                    let mut at = 0usize;
+                    for _ in 0..n_spans {
+                        at += rng.below(5); // gap
+                        let len = 1 + rng.below(9);
+                        spans.push(at..at + len);
+                        at += len;
+                    }
+                    let mut data = vec![-1f32; at + rng.below(4)];
+                    pool::run_spans(&mut data, &spans, threads, |idx, chunk| {
+                        for (o, c) in chunk.iter_mut().enumerate() {
+                            *c = ((idx * 131 + o * 17) % 509) as f32;
+                        }
+                    });
+                    trace.push(hash_f32(&data));
+                }
+            }
+        }
+        trace
+    })
+}
+
+#[test]
+fn stress_randomized_region_grid_bit_equal() {
+    let _g = lock();
+    let mut rng = Rng::new(0xa11c_e5ee);
+    for trial in 0..20 {
+        let seed = rng.next_u64();
+        let serial = run_program(seed, 1);
+        for &t in &[2usize, 3, 4, 8] {
+            let par = run_program(seed, t);
+            assert_eq!(
+                serial, par,
+                "trace diverged: trial {trial} seed {seed} threads {t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn resize_between_regions_matches_serial() {
+    let _g = lock();
+    // The same region sequence, once fully serial and once with the team
+    // resized 1 → N → 1 (and grown past its previous size) between
+    // regions; every region's output must be bit-identical.
+    let region = |i: usize, threads: usize| -> u64 {
+        let n = 64 + i * 37;
+        let mut data = vec![0f32; n];
+        pool::run_records(&mut data, 1, threads, |recs, chunk| {
+            for (local, rec) in recs.enumerate() {
+                chunk[local] = ((rec * 31 + i) as f32).sqrt();
+            }
+        });
+        hash_f32(&data)
+    };
+    let sizes = [1usize, 4, 1, 3, 8, 1, 2, 6, 1, 4];
+    let serial: Vec<u64> = pool::with_threads(1, || (0..sizes.len()).map(|i| region(i, 1)).collect());
+    let resized: Vec<u64> = {
+        let before = pool::threads();
+        let out = (0..sizes.len())
+            .map(|i| {
+                pool::set_threads(sizes[i]);
+                region(i, sizes[i])
+            })
+            .collect();
+        pool::set_threads(before);
+        out
+    };
+    assert_eq!(serial, resized, "resize-between-regions changed results");
+}
+
+#[test]
+fn oversubscription_extreme_tasks_per_worker() {
+    let _g = lock();
+    // 20_000 single-element records on a 2-worker team, plus a reduce
+    // with 50_000 tasks — far beyond the worker count.
+    let fill = |threads: usize| {
+        pool::with_threads(threads, || {
+            let mut data = vec![0f32; 20_000];
+            pool::run_records(&mut data, 1, threads, |recs, chunk| {
+                for (local, rec) in recs.enumerate() {
+                    chunk[local] = (rec % 4093) as f32;
+                }
+            });
+            hash_f32(&data)
+        })
+    };
+    assert_eq!(fill(1), fill(2));
+    assert_eq!(fill(1), fill(4));
+    let reduce = |threads: usize| {
+        pool::with_threads(threads, || {
+            pool::run_reduce(
+                50_000,
+                threads,
+                || 0u64,
+                |r, acc| {
+                    for i in r {
+                        *acc = acc.wrapping_add(i as u64);
+                    }
+                },
+                |a, b| *a = a.wrapping_add(b),
+            )
+        })
+    };
+    let expect = (50_000u64 - 1) * 50_000 / 2;
+    assert_eq!(reduce(1), expect);
+    assert_eq!(reduce(4), expect);
+}
+
+#[test]
+fn panic_in_worker_share_recovers() {
+    let _g = lock();
+    pool::with_threads(4, || {
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut data = vec![0f32; 64];
+            pool::run_records(&mut data, 1, 4, |recs, chunk| {
+                if recs.start >= 32 {
+                    panic!("injected worker panic");
+                }
+                for (local, rec) in recs.enumerate() {
+                    chunk[local] = rec as f32;
+                }
+            });
+        }));
+        assert!(boom.is_err(), "worker panic must propagate to the caller");
+        // The team recovers: later regions run and still match serial.
+        let run = |threads: usize| {
+            let mut data = vec![0f32; 97];
+            pool::run_records(&mut data, 1, threads, |recs, chunk| {
+                for (local, rec) in recs.enumerate() {
+                    chunk[local] = (rec as f32).sqrt();
+                }
+            });
+            hash_f32(&data)
+        };
+        assert_eq!(run(1), run(4), "post-panic regions must stay bit-equal");
+    });
+}
+
+#[test]
+fn panic_in_caller_share_recovers() {
+    let _g = lock();
+    pool::with_threads(4, || {
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut data = vec![0f32; 64];
+            pool::run_records(&mut data, 1, 4, |recs, _chunk| {
+                // Share 0 (records 0..16) runs on the calling thread.
+                if recs.start == 0 {
+                    panic!("injected caller-share panic");
+                }
+            });
+        }));
+        assert!(boom.is_err(), "caller-share panic must propagate");
+        // Workers were not poisoned by the caller's panic.
+        let mut data = vec![0f32; 64];
+        pool::run_records(&mut data, 1, 4, |recs, chunk| {
+            for (local, rec) in recs.enumerate() {
+                chunk[local] = rec as f32;
+            }
+        });
+        let expect: Vec<f32> = (0..64).map(|r| r as f32).collect();
+        assert_eq!(data, expect);
+    });
+}
+
+#[test]
+fn panic_in_reduce_share_recovers() {
+    let _g = lock();
+    pool::with_threads(4, || {
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool::run_reduce(
+                100,
+                4,
+                || 0u64,
+                |r, acc| {
+                    if r.start >= 50 {
+                        panic!("injected reduce panic");
+                    }
+                    for i in r {
+                        *acc += i as u64;
+                    }
+                },
+                |a, b| *a += b,
+            )
+        }));
+        assert!(boom.is_err(), "reduce panic must propagate");
+        let sum = pool::run_reduce(
+            100,
+            4,
+            || 0u64,
+            |r, acc| {
+                for i in r {
+                    *acc += i as u64;
+                }
+            },
+            |a, b| *a += b,
+        );
+        assert_eq!(sum, 99 * 100 / 2, "post-panic reduce must be exact");
+    });
+}
+
+#[test]
+fn interleaved_nested_kernels_stay_serial_and_exact() {
+    let _g = lock();
+    // A region whose shares run nested region calls: the nested calls
+    // must serialize (no worker re-entry) and the combined result must be
+    // bit-equal to the fully serial execution.
+    let run = |threads: usize| {
+        pool::with_threads(threads, || {
+            let mut data = vec![0f32; 24];
+            pool::run_records(&mut data, 1, threads, |recs, chunk| {
+                assert!(pool::effective_threads(1000) == 1 || !pool::in_worker());
+                for (local, rec) in recs.enumerate() {
+                    let mut inner = vec![0f32; 8];
+                    pool::run_records(&mut inner, 1, 4, |ir, ic| {
+                        for (l, i) in ir.enumerate() {
+                            ic[l] = ((rec * 8 + i) as f32).sqrt();
+                        }
+                    });
+                    chunk[local] = inner.iter().sum();
+                }
+            });
+            hash_f32(&data)
+        })
+    };
+    assert_eq!(run(1), run(3));
+    assert_eq!(run(1), run(4));
+}
+
+#[test]
+fn lifecycle_stats_settle_after_regions() {
+    let _g = lock();
+    pool::with_threads(4, || {
+        let before = pool::stats();
+        for _ in 0..5 {
+            let mut data = vec![0f32; 40];
+            pool::run_records(&mut data, 1, 4, |recs, chunk| {
+                for (local, rec) in recs.enumerate() {
+                    chunk[local] = rec as f32;
+                }
+            });
+        }
+        let after = pool::stats();
+        assert_eq!(after.regions - before.regions, 5, "5 regions dispatched");
+        assert_eq!(after.wakes - before.wakes, 15, "3 worker wakes per region");
+        // Every wake parks again before the region returns.
+        assert_eq!(
+            after.parks - before.parks,
+            15,
+            "all woken workers parked again"
+        );
+        assert!(after.workers_spawned >= 3);
+    });
+}

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 verify — the one-command CI entry point (see ROADMAP.md).
+#
+#   scripts/check.sh
+#
+# Builds the workspace in release mode, runs the full test suite
+# (unit + integration: parallel-runtime grids, pool stress, property
+# sweeps, engine equivalence), then the perf_ops --quick smoke, which
+# emits BENCH_perf_ops.json so the perf trajectory stays diffable
+# across commits. Exits non-zero on the first failure.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+cargo bench --bench perf_ops -- --quick
