@@ -4,7 +4,10 @@
 //! computational overhead".
 //!
 //! Also reports forward/vjp_w costs, the fast-path vs wavefront vijp
-//! split, and allocation churn (cold + steady-state) for the §Perf log.
+//! split, allocation churn (cold + steady-state), and the data-parallel
+//! replica-scaling family (`replicas_rows` in the JSON: step/reduce
+//! medians at replicas {1,2[,4]} — the streamed all-reduce's overlap
+//! signal) for the §Perf log.
 //!
 //! Flags (after `--`):
 //! * `--quick`      — 3 iterations instead of 15 (the tier-1 smoke run)
@@ -17,6 +20,7 @@
 
 use moonwalk::autodiff::engine_by_name;
 use moonwalk::cli::Args;
+use moonwalk::distributed::{split_batch, ReduceOp, ReplicaGroup, Shard};
 use moonwalk::model::{build_cnn2d, SubmersiveCnn2dSpec};
 use moonwalk::nn::{Conv1d, Conv2d, Layer, MeanLoss, ResidualKind};
 use moonwalk::runtime::pool;
@@ -275,6 +279,70 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // Replica-scaling family (ISSUE 3): one Moonwalk engine per replica
+    // over equal shards of a global batch, per-layer gradients
+    // all-reduced streamed. The overlap signal: `reduce_ms` is folded on
+    // the last-delivering replica's thread *inside* the step, so it must
+    // not show up additively in `step_ms` — compare replicas=1 vs N step
+    // medians against the reduce share. The tier-1 `--quick` smoke runs
+    // replicas {1, 2}; full runs add 4.
+    println!("\nreplica scaling (moonwalk, global batch 8):");
+    println!(
+        "{:<12} {:>12} {:>12} {:>14} {:>12}",
+        "replicas", "step_ms", "reduce_ms", "reduce/step", "steps/s"
+    );
+    let mut replica_rows: Vec<Json> = Vec::new();
+    {
+        let spec = SubmersiveCnn2dSpec {
+            input_hw: 32,
+            channels: 16,
+            depth: 3,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(4);
+        let net = build_cnn2d(&spec, &mut rng);
+        let x = Tensor::randn(&[8, 32, 32, 3], 1.0, &mut rng);
+        let engine = engine_by_name("moonwalk", 4, 0, 0)?;
+        let replica_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+        for &r in replica_counts {
+            let xs = split_batch(&x, r)?;
+            let shards: Vec<Shard<'_>> = xs
+                .iter()
+                .map(|x| Shard {
+                    x,
+                    loss: &MeanLoss,
+                })
+                .collect();
+            let group = ReplicaGroup::new(r)?;
+            // One probed step for the reduce-time share, then medians.
+            let probe = group.compute(&net, engine.as_ref(), &shards, ReduceOp::Mean)?;
+            let st = bench(1, iters.min(8), || {
+                std::hint::black_box(
+                    group
+                        .compute(&net, engine.as_ref(), &shards, ReduceOp::Mean)
+                        .unwrap(),
+                );
+            });
+            let overlap = probe.reduce_s / st.median.max(1e-12);
+            println!(
+                "{:<12} {:>12.3} {:>12.3} {:>14.3} {:>12.2}",
+                r,
+                st.median_ms(),
+                probe.reduce_s * 1e3,
+                overlap,
+                1.0 / st.median.max(1e-12)
+            );
+            replica_rows.push(Json::from_pairs(vec![
+                ("replicas", r.into()),
+                ("step_ms", st.median_ms().into()),
+                ("reduce_ms", (probe.reduce_s * 1e3).into()),
+                ("reduce_step_ratio", overlap.into()),
+                ("throughput_steps_per_s", (1.0 / st.median.max(1e-12)).into()),
+                ("loss", (probe.loss as f64).into()),
+            ]));
+        }
+    }
+
     // Pool lifecycle + arena recycle-rate snapshot for the run (monotone
     // process counters — diff across runs at equal workloads).
     let pstats = pool::stats();
@@ -298,6 +366,7 @@ fn main() -> anyhow::Result<()> {
         ("iters", iters.into()),
         ("rows", Json::Arr(rows)),
         ("small_rows", Json::Arr(small_rows)),
+        ("replicas_rows", Json::Arr(replica_rows)),
         ("dispatch_us", dispatch_us.into()),
         (
             "pool",

@@ -6,16 +6,22 @@
 use std::collections::BTreeMap;
 
 /// Apply the global runtime flags shared by every entry point:
-/// `--threads N` (worker-pool size) and `--gemm auto|scalar|blocked|parallel`
-/// (GEMM algorithm override). Call before any tensor work. The persistent
-/// worker team is prewarmed here so the first parallel region — often a
-/// sub-100 µs kernel in the benches — doesn't pay spawn latency.
+/// `--threads N` (worker-pool size), `--gemm auto|scalar|blocked|parallel`
+/// (GEMM algorithm override) and `--replicas N` (data-parallel replica
+/// count; `MOONWALK_REPLICAS` is the env spelling). Call before any
+/// tensor work. The persistent worker team is prewarmed here so the
+/// first parallel region — often a sub-100 µs kernel in the benches —
+/// doesn't pay spawn latency.
 pub fn configure_runtime(args: &Args) -> anyhow::Result<()> {
     if let Some(t) = args.get_usize_opt("threads")? {
         crate::runtime::pool::set_threads(t);
     }
     if let Some(algo) = args.get("gemm") {
         crate::tensor::ops::set_gemm_override(algo)?;
+    }
+    if let Some(r) = args.get_usize_opt("replicas")? {
+        anyhow::ensure!(r >= 1, "--replicas must be >= 1");
+        crate::distributed::set_replicas(r);
     }
     crate::runtime::pool::prewarm();
     Ok(())
@@ -152,6 +158,14 @@ mod tests {
         assert_eq!(a.get_usize_opt("depth").unwrap(), None);
         let bad = parse("bench --threads x");
         assert!(bad.get_usize_opt("threads").is_err());
+    }
+
+    #[test]
+    fn replicas_flag_parses() {
+        let a = parse("train --replicas 4");
+        assert_eq!(a.get_usize_opt("replicas").unwrap(), Some(4));
+        let bad = parse("train --replicas x");
+        assert!(bad.get_usize_opt("replicas").is_err());
     }
 
     #[test]

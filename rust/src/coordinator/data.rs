@@ -94,19 +94,32 @@ impl TextureDataset {
 
     /// A batch `[batch, hw, hw, cin]` + labels, by sample indices.
     pub fn batch(&self, indices: &[usize]) -> (Tensor, Vec<usize>) {
-        let hw = self.spec.hw;
-        let cin = self.spec.cin;
-        let per = hw * hw * cin;
+        let (data, labels) = self.batch_raw(indices);
+        (
+            Tensor::from_vec(data, &self.batch_shape(indices.len())),
+            labels,
+        )
+    }
+
+    /// [`Self::batch`]'s payload as plain (tracker-invisible) vectors —
+    /// for the prefetch pipeline's producer thread, which must not touch
+    /// the global allocation tracker while the training thread holds a
+    /// `tracker::measure` window open. Convert on the consuming thread
+    /// with `Tensor::from_vec(data, &batch_shape(n))` (zero-copy).
+    pub fn batch_raw(&self, indices: &[usize]) -> (Vec<f32>, Vec<usize>) {
+        let per = self.spec.hw * self.spec.hw * self.spec.cin;
         let mut data = Vec::with_capacity(indices.len() * per);
         let mut labels = Vec::with_capacity(indices.len());
         for &i in indices {
             data.extend_from_slice(&self.images[i]);
             labels.push(self.labels[i]);
         }
-        (
-            Tensor::from_vec(data, &[indices.len(), hw, hw, cin]),
-            labels,
-        )
+        (data, labels)
+    }
+
+    /// Tensor shape of an `n`-sample batch.
+    pub fn batch_shape(&self, n: usize) -> Vec<usize> {
+        vec![n, self.spec.hw, self.spec.hw, self.spec.cin]
     }
 
     /// Deterministic shuffled batch iterator for one epoch.
@@ -117,6 +130,17 @@ impl TextureDataset {
             .filter(|c| c.len() == batch)
             .map(|c| c.to_vec())
             .collect()
+    }
+
+    /// [`Self::epoch_batches`] on a **splittable per-epoch stream**: the
+    /// shuffle is drawn from `stream_seed(seed, epoch)` rather than a
+    /// live generator, so the result depends only on `(seed, epoch)` —
+    /// never on how much randomness the caller consumed before. This is
+    /// what lets sharded (`replicas = N`) and unsharded runs provably
+    /// draw the same global sample sequence (`distributed::pipeline`).
+    pub fn epoch_batches_seeded(&self, batch: usize, seed: u64, epoch: u64) -> Vec<Vec<usize>> {
+        let mut rng = Rng::new(crate::util::rng::stream_seed(seed, &[epoch]));
+        self.epoch_batches(batch, &mut rng)
     }
 
     /// Split off the last `frac` of samples as a test set.
@@ -199,6 +223,30 @@ mod tests {
         let (train, test) = ds.split(0.25);
         assert_eq!(train.len(), 15);
         assert_eq!(test.len(), 5);
+    }
+
+    #[test]
+    fn seeded_epochs_are_history_independent() {
+        let ds = TextureDataset::generate(
+            SyntheticSpec {
+                hw: 8,
+                ..Default::default()
+            },
+            12,
+        );
+        let fresh = ds.epoch_batches_seeded(4, 42, 3);
+        // Burn arbitrary randomness elsewhere — the seeded epoch must not
+        // care (this is exactly what `epoch_batches` cannot guarantee).
+        let mut rng = Rng::new(42);
+        for _ in 0..17 {
+            rng.next_u64();
+        }
+        assert_eq!(fresh, ds.epoch_batches_seeded(4, 42, 3));
+        // Distinct epochs reshuffle.
+        assert_ne!(fresh, ds.epoch_batches_seeded(4, 42, 4));
+        let mut all: Vec<usize> = fresh.into_iter().flatten().collect();
+        all.sort();
+        assert_eq!(all, (0..12).collect::<Vec<_>>());
     }
 
     #[test]

@@ -1,0 +1,388 @@
+//! Data-parallel replica sharding on top of the persistent worker pool.
+//!
+//! The scale-out seam the ROADMAP calls for: a [`ReplicaGroup`] runs one
+//! [`GradEngine`] per replica over disjoint sub-batches of a global
+//! batch, all on `runtime::pool`'s persistent team, and reduces
+//! gradients **per layer, streamed** through
+//! [`reduce::StreamingAllReduce`]: the moment every replica has emitted a
+//! layer (the paper's §4.3 streamed-gradient property), that layer is
+//! all-reduced on the delivering thread — overlapped with the other
+//! replicas' still-running sweeps — and handed to the caller's sink. No
+//! full gradient buffer is ever required, so the no-stored-activations
+//! property survives sharding.
+//!
+//! Scheduling: replicas fan out as one pool region, so each replica's
+//! engine runs with nested kernel parallelism suppressed — the batch
+//! axis *is* the parallel axis, exactly as it is for the batch-parallel
+//! conv kernels. With one replica the engine runs on the calling thread
+//! with full internal parallelism (the group is a no-op wrapper there).
+//! Determinism mirrors the pool's contract: fixed replica count + fixed
+//! thread count ⇒ bit-identical gradients run-to-run, because per-replica
+//! computation is deterministic and the reduce folds in replica order.
+//!
+//! A panicking replica is caught by the pool, re-raised on the submitting
+//! thread, and the team keeps serving later regions; an `Err` from a
+//! replica's engine aborts the step with that replica's error. Replica
+//! count resolution: explicit [`set_replicas`] (the CLI's `--replicas`) >
+//! `MOONWALK_REPLICAS` env var > 1.
+//!
+//! The companion [`pipeline`] module supplies the deterministic sharded
+//! batches (double-buffered prefetch); [`broadcast`] syncs replica-local
+//! parameter copies from a source network — in-process replicas normally
+//! share one `&Network`, but the broadcast is the construction-time sync
+//! step the future multi-process transport will reuse.
+
+pub mod pipeline;
+pub mod reduce;
+
+pub use reduce::{ReduceOp, StreamingAllReduce};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::autodiff::GradEngine;
+use crate::model::Network;
+use crate::nn::Loss;
+use crate::runtime::pool;
+use crate::tensor::Tensor;
+
+// ----- replica-count resolution ---------------------------------------------
+
+/// Global replica budget; 0 = not yet resolved.
+static REPLICAS: AtomicUsize = AtomicUsize::new(0);
+
+fn resolve_default() -> usize {
+    if let Ok(v) = std::env::var("MOONWALK_REPLICAS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    1
+}
+
+/// The configured replica count (resolving lazily on first use):
+/// [`set_replicas`] > `MOONWALK_REPLICAS` > 1.
+pub fn replicas() -> usize {
+    let r = REPLICAS.load(Ordering::Relaxed);
+    if r != 0 {
+        return r;
+    }
+    let r = resolve_default();
+    REPLICAS.store(r, Ordering::Relaxed);
+    r
+}
+
+/// Set the replica count explicitly (CLI `--replicas`). Clamped to ≥ 1.
+pub fn set_replicas(n: usize) {
+    REPLICAS.store(n.max(1), Ordering::Relaxed);
+}
+
+// ----- parameter broadcast ---------------------------------------------------
+
+/// Broadcast `src`'s parameters into every replica-local network copy
+/// (shape-checked, bit-exact). The group-construction sync step of a
+/// data-parallel setup.
+pub fn broadcast(src: &Network, locals: &mut [Network]) -> anyhow::Result<()> {
+    for (r, local) in locals.iter_mut().enumerate() {
+        local
+            .copy_params_from(src)
+            .map_err(|e| e.context(format!("broadcast to replica {r}")))?;
+    }
+    Ok(())
+}
+
+// ----- the replica group -----------------------------------------------------
+
+/// One replica's slice of a global step: its input shard and loss head
+/// (the loss holds shard-local targets).
+pub struct Shard<'a> {
+    pub x: &'a Tensor,
+    pub loss: &'a dyn Loss,
+}
+
+/// Loss/timing summary of one replicated gradient step.
+#[derive(Clone, Debug)]
+pub struct ReplicaStep {
+    /// Mean of the per-replica losses — the global-batch loss for equal
+    /// shards under a per-shard mean loss.
+    pub loss: f32,
+    /// Per-replica shard losses, in replica order.
+    pub replica_losses: Vec<f32>,
+    /// Wall-clock spent folding inside the streaming all-reduce (overlaps
+    /// the replicas' sweeps; compare against step time for the overlap
+    /// ratio the perf bench tracks).
+    pub reduce_s: f64,
+}
+
+/// [`ReplicaStep`] plus the collected reduced gradients (convenience
+/// mirror of [`GradEngine::compute`]).
+pub struct ReplicaResult {
+    pub loss: f32,
+    pub replica_losses: Vec<f32>,
+    /// Per-layer reduced gradients, aligned with `net.layers` (empty for
+    /// parameter-free layers).
+    pub grads: Vec<Vec<Tensor>>,
+    pub reduce_s: f64,
+}
+
+/// A fixed-size data-parallel replica group (see module docs).
+pub struct ReplicaGroup {
+    replicas: usize,
+}
+
+impl ReplicaGroup {
+    pub fn new(replicas: usize) -> anyhow::Result<ReplicaGroup> {
+        anyhow::ensure!(replicas >= 1, "replica count must be >= 1");
+        Ok(ReplicaGroup { replicas })
+    }
+
+    /// A group sized to `locals`, after broadcasting `src`'s parameters
+    /// into every replica-local copy (the multi-process seam; in-process
+    /// callers usually share one `&Network` and use [`ReplicaGroup::new`]).
+    pub fn new_synced(src: &Network, locals: &mut [Network]) -> anyhow::Result<ReplicaGroup> {
+        broadcast(src, locals)?;
+        ReplicaGroup::new(locals.len())
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Run `engine` once per replica over `shards` (one shard per
+    /// replica, replica order) and stream each layer's **reduced**
+    /// gradients to `sink(layer, grads)` the moment the last replica
+    /// emits that layer. `sink` is called from whichever replica thread
+    /// completes a layer — it must be `Sync`; calls for distinct layers
+    /// never overlap a call for the same layer.
+    pub fn compute_streaming(
+        &self,
+        net: &Network,
+        engine: &dyn GradEngine,
+        shards: &[Shard<'_>],
+        op: ReduceOp,
+        sink: &(dyn Fn(usize, Vec<Tensor>) + Sync),
+    ) -> anyhow::Result<ReplicaStep> {
+        anyhow::ensure!(
+            shards.len() == self.replicas,
+            "group has {} replicas but {} shards were supplied",
+            self.replicas,
+            shards.len()
+        );
+        if self.replicas == 1 {
+            // Single replica: run on the calling thread with full
+            // internal kernel parallelism (a region fan-out here would
+            // needlessly serialize the engine's own kernels).
+            let loss =
+                engine.compute_streaming(net, shards[0].x, shards[0].loss, &mut |li, g| {
+                    sink(li, g)
+                })?;
+            return Ok(ReplicaStep {
+                loss,
+                replica_losses: vec![loss],
+                reduce_s: 0.0,
+            });
+        }
+        // Oversubscription caveat: with more replicas than pool workers,
+        // a share runs its replicas *sequentially*, so an early
+        // replica's whole gradient set parks in the reducer until the
+        // late replicas deliver — peak memory degrades from
+        // one-layer-per-replica toward full-model-per-early-replica.
+        // Correctness and determinism are unaffected; warn once so the
+        // memory profile change is not silent.
+        if self.replicas > pool::threads() {
+            static WARNED: std::sync::Once = std::sync::Once::new();
+            WARNED.call_once(|| {
+                crate::log_warn!(
+                    "replicas ({}) exceed pool threads ({}): replicas run \
+                     sequentially per worker and early replicas' gradients \
+                     are parked until the reduce completes, raising peak \
+                     memory; prefer replicas <= threads",
+                    self.replicas,
+                    pool::threads()
+                );
+            });
+        }
+        let reducer = StreamingAllReduce::new(net.depth(), self.replicas, op);
+        // One pool region, one task per replica. Shares cover contiguous
+        // replica ranges, so the share-ordered merge below concatenates
+        // outcomes back in replica order.
+        let outcomes: Vec<(usize, anyhow::Result<f32>)> = pool::run_reduce(
+            self.replicas,
+            pool::effective_threads(self.replicas),
+            Vec::new,
+            |range, acc: &mut Vec<(usize, anyhow::Result<f32>)>| {
+                for r in range {
+                    let shard = &shards[r];
+                    let res =
+                        engine.compute_streaming(net, shard.x, shard.loss, &mut |li, g| {
+                            if let Some(reduced) = reducer.submit(li, r, g) {
+                                sink(li, reduced);
+                            }
+                        });
+                    acc.push((r, res));
+                }
+            },
+            |a, b| a.extend(b),
+        );
+        let mut replica_losses = Vec::with_capacity(self.replicas);
+        for (r, res) in outcomes {
+            match res {
+                Ok(l) => replica_losses.push(l),
+                Err(e) => return Err(e.context(format!("replica {r} failed"))),
+            }
+        }
+        let loss = replica_losses.iter().sum::<f32>() / replica_losses.len() as f32;
+        Ok(ReplicaStep {
+            loss,
+            replica_losses,
+            reduce_s: reducer.reduce_seconds(),
+        })
+    }
+
+    /// [`Self::compute_streaming`] collecting the reduced gradients.
+    pub fn compute(
+        &self,
+        net: &Network,
+        engine: &dyn GradEngine,
+        shards: &[Shard<'_>],
+        op: ReduceOp,
+    ) -> anyhow::Result<ReplicaResult> {
+        let grads: Mutex<Vec<Vec<Tensor>>> =
+            Mutex::new((0..net.depth()).map(|_| Vec::new()).collect());
+        let step = self.compute_streaming(net, engine, shards, op, &|li, g| {
+            crate::util::lock_ignore_poison(&grads)[li] = g;
+        })?;
+        let grads = match grads.into_inner() {
+            Ok(v) => v,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        Ok(ReplicaResult {
+            loss: step.loss,
+            replica_losses: step.replica_losses,
+            grads,
+            reduce_s: step.reduce_s,
+        })
+    }
+}
+
+/// Split a batched tensor into `parts` equal contiguous sub-batches along
+/// axis 0 (the in-process shard materializer used by benches and tests;
+/// the training path shards indices in [`pipeline::BatchPlan`] instead,
+/// before tensors are ever built).
+pub fn split_batch(x: &Tensor, parts: usize) -> anyhow::Result<Vec<Tensor>> {
+    anyhow::ensure!(parts >= 1, "parts must be >= 1");
+    anyhow::ensure!(x.rank() >= 1, "need a batch axis");
+    let n = x.shape()[0];
+    anyhow::ensure!(
+        n % parts == 0 && n >= parts,
+        "batch {n} is not divisible into {parts} shards"
+    );
+    let per = n / parts;
+    let rec: usize = x.shape()[1..].iter().product();
+    let mut shape = x.shape().to_vec();
+    shape[0] = per;
+    Ok((0..parts)
+        .map(|r| {
+            Tensor::from_vec(
+                x.data()[r * per * rec..(r + 1) * per * rec].to_vec(),
+                &shape,
+            )
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::Backprop;
+    use crate::model::{build_mlp, Network};
+    use crate::nn::MeanLoss;
+    use crate::util::Rng;
+
+    fn tiny_net(seed: u64) -> Network {
+        let mut rng = Rng::new(seed);
+        build_mlp(&[6, 5, 3], 0.1, &mut rng)
+    }
+
+    #[test]
+    fn single_replica_matches_plain_engine() {
+        let net = tiny_net(0);
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let reference = Backprop.compute(&net, &x, &MeanLoss).unwrap();
+        let group = ReplicaGroup::new(1).unwrap();
+        let shards = [Shard {
+            x: &x,
+            loss: &MeanLoss,
+        }];
+        let got = group
+            .compute(&net, &Backprop, &shards, ReduceOp::Mean)
+            .unwrap();
+        assert_eq!(got.loss, reference.loss);
+        for (a, b) in reference.grads.iter().zip(&got.grads) {
+            assert_eq!(a.len(), b.len());
+            for (ga, gb) in a.iter().zip(b) {
+                assert_eq!(ga.data(), gb.data(), "1-replica group must be identity");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_count_mismatch_rejected() {
+        let net = tiny_net(2);
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[2, 6], 1.0, &mut rng);
+        let group = ReplicaGroup::new(2).unwrap();
+        let shards = [Shard {
+            x: &x,
+            loss: &MeanLoss,
+        }];
+        assert!(group
+            .compute(&net, &Backprop, &shards, ReduceOp::Mean)
+            .is_err());
+    }
+
+    #[test]
+    fn split_batch_partitions() {
+        let x = Tensor::from_vec((0..12).map(|v| v as f32).collect(), &[4, 3]);
+        let parts = split_batch(&x, 2).unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].shape(), &[2, 3]);
+        assert_eq!(parts[0].data(), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(parts[1].data(), &[6.0, 7.0, 8.0, 9.0, 10.0, 11.0]);
+        assert!(split_batch(&x, 3).is_err());
+    }
+
+    #[test]
+    fn broadcast_syncs_params() {
+        let src = tiny_net(10);
+        let mut locals = vec![tiny_net(11), tiny_net(12)];
+        assert_ne!(
+            locals[0].layers[0].params()[0].data(),
+            src.layers[0].params()[0].data(),
+            "independent seeds must start out of sync"
+        );
+        let group = ReplicaGroup::new_synced(&src, &mut locals).unwrap();
+        assert_eq!(group.replicas(), 2);
+        for local in &locals {
+            for (ls, ld) in src.layers.iter().zip(&local.layers) {
+                for (ps, pd) in ls.params().iter().zip(ld.params()) {
+                    assert_eq!(ps.data(), pd.data(), "broadcast must be bit-exact");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn replica_count_resolution() {
+        // set_replicas wins and clamps.
+        let before = replicas();
+        set_replicas(3);
+        assert_eq!(replicas(), 3);
+        set_replicas(0);
+        assert_eq!(replicas(), 1);
+        set_replicas(before);
+    }
+}

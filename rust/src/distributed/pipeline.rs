@@ -1,0 +1,323 @@
+//! Async double-buffered data pipeline with deterministic sharding.
+//!
+//! A [`BatchPlan`] is the single source of truth for what every training
+//! step consumes: it draws each epoch's batch order from a **splittable
+//! per-epoch RNG stream** (`stream_seed(seed, epoch)` — never the
+//! caller's live RNG), so the global sample sequence is a pure function
+//! of `(dataset, batch, seed)`. Each global batch is then split into
+//! `replicas` disjoint, contiguous sub-batches. Because the global
+//! sequence never depends on the replica count, `replicas = 1` and
+//! `replicas = N` provably draw identical global batches — the
+//! precondition for the gradient-equivalence contract in
+//! `tests/distributed.rs`.
+//!
+//! [`Prefetcher`] runs the same plan on a scoped producer thread behind a
+//! capacity-1 rendezvous channel: while step `t` computes, the producer
+//! materializes and shards batch `t + 1` (the classic double buffer).
+//! Determinism is unaffected — the prefetched stream is the plan's
+//! stream, byte for byte; only the wall-clock overlap changes. The
+//! trainer logs the time it spent blocked on the channel as
+//! `prefetch_wait_s` (≈ 0 when the pipeline hides data latency).
+
+use std::sync::mpsc::{sync_channel, Receiver};
+
+use crate::coordinator::data::TextureDataset;
+use crate::tensor::Tensor;
+use crate::util::rng::stream_seed;
+use crate::util::{Rng, Timer};
+
+/// Everything one training step consumes, fully materialized.
+///
+/// Shard payloads are **raw, tracker-invisible** vectors: the producer
+/// thread gathers pixels/labels but never constructs a tracked `Tensor`,
+/// so a `tracker::measure` window open on the training thread sees no
+/// concurrent allocations from the pipeline — per-step `peak_mem_bytes`
+/// / `allocs` stay deterministic. Convert on the consuming thread with
+/// [`Self::into_shards`] (zero-copy; the tracker registration happens
+/// there, at a fixed point outside the measurement window).
+pub struct StepBatch {
+    /// 0-based global step index.
+    pub step: usize,
+    /// Epoch this batch was drawn from.
+    pub epoch: usize,
+    /// The global batch's sample indices, in draw order.
+    pub global_indices: Vec<usize>,
+    /// Per-replica raw `(pixels, labels)` shards: contiguous equal
+    /// splits of the global batch, in replica order.
+    pub raw_shards: Vec<(Vec<f32>, Vec<usize>)>,
+    /// Tensor shape of one shard's input, `[shard_batch, hw, hw, cin]`.
+    pub shard_shape: Vec<usize>,
+}
+
+impl StepBatch {
+    /// Materialize the per-replica `(input, labels)` tensors (zero-copy
+    /// move of the raw payloads; this is where the allocation tracker
+    /// first sees the batch).
+    pub fn into_shards(self) -> Vec<(Tensor, Vec<usize>)> {
+        let shape = self.shard_shape;
+        self.raw_shards
+            .into_iter()
+            .map(|(data, labels)| (Tensor::from_vec(data, &shape), labels))
+            .collect()
+    }
+}
+
+/// Deterministic batch/shard schedule over a dataset (see module docs).
+pub struct BatchPlan<'a> {
+    data: &'a TextureDataset,
+    batch: usize,
+    replicas: usize,
+    seed: u64,
+    next_epoch: usize,
+    queue_epoch: usize,
+    step: usize,
+    /// Remaining batches of the current epoch, reversed so `pop()` yields
+    /// them in draw order.
+    queue: Vec<Vec<usize>>,
+}
+
+impl<'a> BatchPlan<'a> {
+    pub fn new(
+        data: &'a TextureDataset,
+        batch: usize,
+        replicas: usize,
+        seed: u64,
+    ) -> anyhow::Result<BatchPlan<'a>> {
+        anyhow::ensure!(batch >= 1, "batch must be >= 1");
+        anyhow::ensure!(replicas >= 1, "replicas must be >= 1");
+        anyhow::ensure!(
+            batch % replicas == 0,
+            "global batch {batch} is not divisible by {replicas} replicas"
+        );
+        anyhow::ensure!(
+            data.len() >= batch,
+            "dataset has {} samples but the global batch is {batch}",
+            data.len()
+        );
+        Ok(BatchPlan {
+            data,
+            batch,
+            replicas,
+            seed,
+            next_epoch: 0,
+            queue_epoch: 0,
+            step: 0,
+            queue: Vec::new(),
+        })
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Per-replica sub-batch size.
+    pub fn shard_batch(&self) -> usize {
+        self.batch / self.replicas
+    }
+
+    /// Materialize the next step's global batch and its replica shards.
+    pub fn next_step(&mut self) -> StepBatch {
+        if self.queue.is_empty() {
+            let mut batches =
+                self.data
+                    .epoch_batches_seeded(self.batch, self.seed, self.next_epoch as u64);
+            batches.reverse(); // pop() takes them in epoch order
+            self.queue = batches;
+            self.queue_epoch = self.next_epoch;
+            self.next_epoch += 1;
+        }
+        let global_indices = self.queue.pop().expect("dataset holds >= one batch");
+        let per = self.shard_batch();
+        let raw_shards = global_indices
+            .chunks(per)
+            .map(|c| self.data.batch_raw(c))
+            .collect();
+        let step = self.step;
+        self.step += 1;
+        StepBatch {
+            step,
+            epoch: self.queue_epoch,
+            global_indices,
+            raw_shards,
+            shard_shape: self.data.batch_shape(per),
+        }
+    }
+}
+
+/// Per-replica augmentation/noise stream for a given epoch — the
+/// `seed ⊕ epoch ⊕ shard` splittable stream of the sharded pipeline.
+/// Replica-local randomness drawn from here is reproducible regardless
+/// of replica→thread scheduling or how much randomness other replicas
+/// consumed.
+pub fn shard_rng(seed: u64, epoch: u64, shard: u64) -> Rng {
+    Rng::new(stream_seed(seed, &[epoch, shard]))
+}
+
+/// Double-buffered producer over a [`BatchPlan`]: a scoped thread runs
+/// the plan and hands batches through a capacity-1 channel.
+pub struct Prefetcher {
+    rx: Receiver<StepBatch>,
+}
+
+impl Prefetcher {
+    /// Spawn the producer inside `scope`, generating exactly `steps`
+    /// batches (then exiting). Dropping the `Prefetcher` early unblocks a
+    /// producer stuck on a full channel (its send fails), so the scope
+    /// always joins.
+    pub fn spawn<'scope, 'env>(
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        mut plan: BatchPlan<'env>,
+        steps: usize,
+    ) -> Prefetcher {
+        let (tx, rx) = sync_channel::<StepBatch>(1);
+        scope.spawn(move || {
+            for _ in 0..steps {
+                if tx.send(plan.next_step()).is_err() {
+                    break; // consumer gone — stop producing
+                }
+            }
+        });
+        Prefetcher { rx }
+    }
+
+    /// Take the next prefetched batch, reporting the seconds this call
+    /// spent blocked on the producer (the pipeline-stall metric).
+    pub fn next(&self) -> anyhow::Result<(StepBatch, f64)> {
+        let t = Timer::start();
+        let batch = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("prefetch producer exited early"))?;
+        Ok((batch, t.elapsed_s()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::data::SyntheticSpec;
+
+    fn dataset(n: usize) -> TextureDataset {
+        TextureDataset::generate(
+            SyntheticSpec {
+                hw: 8,
+                cin: 1,
+                classes: 3,
+                noise: 0.1,
+                seed: 7,
+            },
+            n,
+        )
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_covers_epochs() {
+        let ds = dataset(12);
+        let run = || {
+            let mut plan = BatchPlan::new(&ds, 4, 2, 99).unwrap();
+            (0..7).map(|_| plan.next_step()).collect::<Vec<_>>()
+        };
+        let a = run();
+        let b = run();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.global_indices, y.global_indices);
+            assert_eq!(x.epoch, y.epoch);
+        }
+        // 12 samples / batch 4 = 3 steps per epoch; step 6 is epoch 2.
+        assert_eq!(a[2].epoch, 0);
+        assert_eq!(a[3].epoch, 1);
+        assert_eq!(a[6].epoch, 2);
+        // One epoch's batches partition the dataset.
+        let mut first_epoch: Vec<usize> = a[..3]
+            .iter()
+            .flat_map(|s| s.global_indices.clone())
+            .collect();
+        first_epoch.sort();
+        assert_eq!(first_epoch, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shards_partition_the_global_batch() {
+        let ds = dataset(16);
+        let mut plan = BatchPlan::new(&ds, 8, 4, 5).unwrap();
+        let sb = plan.next_step();
+        assert_eq!(sb.raw_shards.len(), 4);
+        assert_eq!(sb.shard_shape, vec![2, 8, 8, 1]);
+        let global_indices = sb.global_indices.clone();
+        let shards = sb.into_shards();
+        let mut rebuilt: Vec<usize> = Vec::new();
+        for (r, (x, labels)) in shards.iter().enumerate() {
+            assert_eq!(x.shape()[0], 2, "shard {r} batch");
+            assert_eq!(labels.len(), 2);
+            let idx = &global_indices[r * 2..(r + 1) * 2];
+            let (xr, lr) = ds.batch(idx);
+            assert_eq!(x.data(), xr.data(), "shard {r} pixels");
+            assert_eq!(labels, &lr, "shard {r} labels");
+            rebuilt.extend_from_slice(idx);
+        }
+        assert_eq!(rebuilt, global_indices);
+    }
+
+    #[test]
+    fn global_sequence_is_replica_count_invariant() {
+        let ds = dataset(12);
+        let seq = |replicas: usize| {
+            let mut plan = BatchPlan::new(&ds, 4, replicas, 321).unwrap();
+            (0..6).map(|_| plan.next_step().global_indices).collect::<Vec<_>>()
+        };
+        let one = seq(1);
+        assert_eq!(one, seq(2));
+        assert_eq!(one, seq(4));
+    }
+
+    #[test]
+    fn invalid_plans_rejected() {
+        let ds = dataset(6);
+        assert!(BatchPlan::new(&ds, 4, 3, 0).is_err(), "indivisible");
+        assert!(BatchPlan::new(&ds, 8, 1, 0).is_err(), "batch > dataset");
+        assert!(BatchPlan::new(&ds, 0, 1, 0).is_err(), "zero batch");
+    }
+
+    #[test]
+    fn prefetcher_streams_the_plan_unchanged() {
+        let ds = dataset(12);
+        let direct = {
+            let mut plan = BatchPlan::new(&ds, 4, 2, 11).unwrap();
+            (0..5).map(|_| plan.next_step()).collect::<Vec<_>>()
+        };
+        let prefetched: Vec<StepBatch> = std::thread::scope(|scope| {
+            let plan = BatchPlan::new(&ds, 4, 2, 11).unwrap();
+            let pf = Prefetcher::spawn(scope, plan, 5);
+            (0..5).map(|_| pf.next().unwrap().0).collect()
+        });
+        for (d, p) in direct.iter().zip(&prefetched) {
+            assert_eq!(d.step, p.step);
+            assert_eq!(d.global_indices, p.global_indices);
+            assert_eq!(d.shard_shape, p.shard_shape);
+            for ((dx, dl), (px, pl)) in d.raw_shards.iter().zip(&p.raw_shards) {
+                assert_eq!(dx, px);
+                assert_eq!(dl, pl);
+            }
+        }
+    }
+
+    #[test]
+    fn early_drop_does_not_wedge_the_scope() {
+        let ds = dataset(12);
+        std::thread::scope(|scope| {
+            let plan = BatchPlan::new(&ds, 4, 1, 3).unwrap();
+            let pf = Prefetcher::spawn(scope, plan, 1000);
+            let _ = pf.next().unwrap();
+            // pf drops here with the producer mid-stream; scope must join.
+        });
+    }
+
+    #[test]
+    fn shard_rng_streams_are_stable_and_distinct() {
+        let a1 = shard_rng(1, 2, 3).next_u64();
+        let a2 = shard_rng(1, 2, 3).next_u64();
+        assert_eq!(a1, a2);
+        assert_ne!(a1, shard_rng(1, 2, 4).next_u64());
+        assert_ne!(a1, shard_rng(1, 3, 3).next_u64());
+    }
+}

@@ -1,0 +1,237 @@
+//! Streaming deterministic all-reduce over per-layer gradient sets.
+//!
+//! The paper's mixed-mode sweep makes a layer's parameter gradient
+//! available the moment its Phase-III step finishes (§4.3: gradients
+//! "need not be stored simultaneously"). [`StreamingAllReduce`] exploits
+//! exactly that property for data parallelism: every replica submits each
+//! layer's gradient as its engine streams it, and the reduction for a
+//! layer fires **on the thread that delivers the last contribution** —
+//! overlapped with the other replicas' still-running vijp sweeps instead
+//! of waiting for full gradient buffers. Peak footprint is bounded by the
+//! in-flight layers' per-replica parts: with replicas running in
+//! lockstep (replicas ≤ pool workers, the intended configuration) that
+//! is about one layer-gradient per replica. When replicas oversubscribe
+//! the pool they serialize per worker and an early replica's whole
+//! gradient set parks here until the stragglers deliver — still correct
+//! and deterministic, but the memory bound degrades (`ReplicaGroup`
+//! warns once in that configuration).
+//!
+//! Determinism contract (mirrors `runtime::pool`'s): the fold is
+//! **replica-ordered**, never arrival-ordered — partials are parked in a
+//! per-replica slot and summed `0, 1, …, R−1` once all `R` arrived, so a
+//! fixed replica count gives bit-identical results run-to-run regardless
+//! of thread scheduling. [`ReduceOp::Mean`] divides by the replica count
+//! after the ordered sum; for power-of-two counts the division is exact,
+//! so exactly-associative payloads (small integers) reduce bit-equal
+//! across replica counts too (`tests/distributed.rs`).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::tensor::Tensor;
+use crate::util::{lock_ignore_poison as lock, Timer};
+
+/// How per-replica gradients combine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceOp {
+    /// Plain replica-ordered sum.
+    Sum,
+    /// Replica-ordered sum scaled by `1/replicas` — the data-parallel
+    /// average that makes N equal shards equivalent to the single-replica
+    /// full-batch gradient under a per-shard mean loss.
+    Mean,
+}
+
+/// One layer's partial gradients, parked until every replica reported.
+struct LayerSlot {
+    parts: Vec<Option<Vec<Tensor>>>,
+    got: usize,
+}
+
+/// The share-ordered streaming reducer for one gradient step. Cheap to
+/// construct (one `Option` per layer); build a fresh one per step.
+pub struct StreamingAllReduce {
+    replicas: usize,
+    op: ReduceOp,
+    slots: Mutex<Vec<Option<LayerSlot>>>,
+    /// Nanoseconds spent inside gradient folds (the overlap metric the
+    /// trainer logs as `reduce_s`).
+    reduce_ns: AtomicU64,
+    /// Layers fully reduced so far.
+    reduced: AtomicUsize,
+}
+
+impl StreamingAllReduce {
+    /// A reducer for `depth` layers across `replicas` participants.
+    pub fn new(depth: usize, replicas: usize, op: ReduceOp) -> StreamingAllReduce {
+        assert!(replicas >= 1, "need at least one replica");
+        StreamingAllReduce {
+            replicas,
+            op,
+            slots: Mutex::new((0..depth).map(|_| None).collect()),
+            reduce_ns: AtomicU64::new(0),
+            reduced: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Submit one replica's gradients for one layer. Returns the reduced
+    /// gradients once the final replica's contribution for that layer
+    /// arrives (on *that* submitter's thread), `None` before. Each
+    /// (layer, replica) pair may be submitted exactly once; payload
+    /// arity/shape must agree across replicas (asserted at fold time).
+    pub fn submit(
+        &self,
+        layer: usize,
+        replica: usize,
+        grads: Vec<Tensor>,
+    ) -> Option<Vec<Tensor>> {
+        assert!(replica < self.replicas, "replica {replica} out of range");
+        let slot_parts = {
+            let mut slots = lock(&self.slots);
+            assert!(layer < slots.len(), "layer {layer} out of range");
+            let slot = slots[layer].get_or_insert_with(|| LayerSlot {
+                parts: (0..self.replicas).map(|_| None).collect(),
+                got: 0,
+            });
+            assert!(
+                slot.parts[replica].is_none(),
+                "duplicate submission for layer {layer} from replica {replica}"
+            );
+            slot.parts[replica] = Some(grads);
+            slot.got += 1;
+            if slot.got < self.replicas {
+                return None;
+            }
+            // Complete: take the slot out so its memory is released the
+            // moment the fold finishes, and fold *outside* the lock so
+            // other layers keep streaming through meanwhile.
+            slots[layer].take().expect("slot just filled").parts
+        };
+        let t = Timer::start();
+        let mut parts = slot_parts.into_iter().map(|p| p.expect("counted part"));
+        let mut acc = parts.next().expect("replicas >= 1");
+        for part in parts {
+            assert_eq!(
+                acc.len(),
+                part.len(),
+                "layer {layer}: gradient arity differs across replicas"
+            );
+            for (a, b) in acc.iter_mut().zip(&part) {
+                assert_eq!(
+                    a.shape(),
+                    b.shape(),
+                    "layer {layer}: gradient shape differs across replicas"
+                );
+                for (x, y) in a.data_mut().iter_mut().zip(b.data()) {
+                    *x += y;
+                }
+            }
+        }
+        if self.op == ReduceOp::Mean && self.replicas > 1 {
+            let inv = 1.0 / self.replicas as f32;
+            for a in acc.iter_mut() {
+                for x in a.data_mut() {
+                    *x *= inv;
+                }
+            }
+        }
+        self.reduce_ns
+            .fetch_add((t.elapsed_s() * 1e9) as u64, Ordering::Relaxed);
+        self.reduced.fetch_add(1, Ordering::Relaxed);
+        Some(acc)
+    }
+
+    /// Wall-clock spent folding, summed over all completed layers.
+    pub fn reduce_seconds(&self) -> f64 {
+        self.reduce_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Layers fully reduced so far.
+    pub fn reduced_layers(&self) -> usize {
+        self.reduced.load(Ordering::Relaxed)
+    }
+
+    /// Layers with at least one pending (un-reduced) contribution — zero
+    /// after a healthy step; non-zero means a replica died mid-stream.
+    pub fn pending_layers(&self) -> usize {
+        lock(&self.slots).iter().filter(|s| s.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grad(vals: &[f32]) -> Vec<Tensor> {
+        vec![Tensor::from_vec(vals.to_vec(), &[vals.len()])]
+    }
+
+    #[test]
+    fn reduces_in_replica_order_when_complete() {
+        let r = StreamingAllReduce::new(2, 3, ReduceOp::Sum);
+        assert!(r.submit(1, 2, grad(&[1.0, 2.0])).is_none());
+        assert!(r.submit(1, 0, grad(&[10.0, 20.0])).is_none());
+        assert_eq!(r.pending_layers(), 1);
+        let out = r.submit(1, 1, grad(&[100.0, 200.0])).expect("complete");
+        assert_eq!(out[0].data(), &[111.0, 222.0]);
+        assert_eq!(r.pending_layers(), 0);
+        assert_eq!(r.reduced_layers(), 1);
+    }
+
+    #[test]
+    fn mean_divides_by_replicas() {
+        let r = StreamingAllReduce::new(1, 4, ReduceOp::Mean);
+        for rep in 0..3 {
+            assert!(r.submit(0, rep, grad(&[8.0])).is_none());
+        }
+        let out = r.submit(0, 3, grad(&[8.0])).unwrap();
+        assert_eq!(out[0].data(), &[8.0], "mean of equal parts is exact");
+    }
+
+    #[test]
+    fn single_replica_is_identity() {
+        let r = StreamingAllReduce::new(1, 1, ReduceOp::Mean);
+        let out = r.submit(0, 0, grad(&[3.5, -1.25])).unwrap();
+        assert_eq!(out[0].data(), &[3.5, -1.25]);
+    }
+
+    #[test]
+    fn arrival_order_does_not_change_bits() {
+        let fold = |order: &[usize]| {
+            let r = StreamingAllReduce::new(1, 3, ReduceOp::Sum);
+            let mut out = None;
+            for &rep in order {
+                // Distinct, order-sensitive-if-misfolded payloads.
+                let v = [(rep as f32 + 1.0) * 0.1, (rep as f32 + 1.0) * 100.0];
+                if let Some(g) = r.submit(0, rep, grad(&v)) {
+                    out = Some(g);
+                }
+            }
+            out.expect("all replicas submitted")
+        };
+        let a = fold(&[0, 1, 2]);
+        let b = fold(&[2, 0, 1]);
+        assert_eq!(a[0].data(), b[0].data(), "fold must be replica-ordered");
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate submission")]
+    fn duplicate_submission_panics() {
+        let r = StreamingAllReduce::new(1, 2, ReduceOp::Sum);
+        let _ = r.submit(0, 0, grad(&[1.0]));
+        let _ = r.submit(0, 0, grad(&[1.0]));
+    }
+
+    #[test]
+    fn empty_gradsets_reduce_to_empty() {
+        // Parameter-free layers stream empty sets uniformly.
+        let r = StreamingAllReduce::new(1, 2, ReduceOp::Mean);
+        assert!(r.submit(0, 1, Vec::new()).is_none());
+        let out = r.submit(0, 0, Vec::new()).unwrap();
+        assert!(out.is_empty());
+    }
+}

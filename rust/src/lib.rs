@@ -20,6 +20,17 @@
 //!   plus a memory-budget planner that picks an engine for a budget.
 //! * [`coordinator`] — a config-driven trainer (optimizers, synthetic data
 //!   pipelines, JSONL metrics, sweeps).
+//! * [`distributed`] — data-parallel replica sharding on top of the
+//!   worker pool: a `ReplicaGroup` runs one gradient engine per replica
+//!   over disjoint sub-batches and all-reduces gradients **per layer,
+//!   streamed** (share-ordered and deterministic — fixed replica count ⇒
+//!   bit-identical results), so the paper's streamed-gradient property
+//!   (§4.3) survives sharding; `distributed::pipeline` adds the async
+//!   double-buffered data loader with splittable `seed ⊕ epoch ⊕ shard`
+//!   RNG streams (replicas = 1 and replicas = N draw identical global
+//!   batches). `--replicas` / `MOONWALK_REPLICAS` select the replica
+//!   count; this is the in-process seam the multi-process transport and
+//!   multi-backend dispatch will plug into.
 //! * [`runtime`] — the persistent worker-thread pool behind the parallel
 //!   tensor runtime (`runtime::pool`, `--threads`; workers park between
 //!   regions, so even sub-100 µs kernels amortize dispatch), plus a PJRT
@@ -37,6 +48,7 @@
 pub mod autodiff;
 pub mod cli;
 pub mod coordinator;
+pub mod distributed;
 pub mod memsim;
 pub mod model;
 pub mod nn;

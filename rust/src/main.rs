@@ -16,6 +16,11 @@
 //!   (default: `MOONWALK_THREADS` env var, else available parallelism).
 //! * `--gemm auto|scalar|blocked|parallel` — force a GEMM algorithm
 //!   (default auto; `MOONWALK_GEMM` is the env spelling).
+//! * `--replicas N` — data-parallel replica count for `train`: the
+//!   global batch is sharded N ways, one gradient engine runs per
+//!   replica on the worker pool, and per-layer gradients are all-reduced
+//!   streamed (default: `MOONWALK_REPLICAS` env var, else 1). The batch
+//!   size must be divisible by N.
 
 use moonwalk::autodiff::{engine_by_name, Backprop, GradEngine, EXACT_ENGINES};
 use moonwalk::cli::Args;
@@ -59,6 +64,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.constrained,
     );
     let mut trainer = Trainer::new(&mut net, engine.as_ref(), opt);
+    trainer.replicas = moonwalk::distributed::replicas();
     let metrics = args.get("metrics").map(std::path::PathBuf::from);
     let report = trainer.train(
         &train,
@@ -69,14 +75,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         metrics.as_deref(),
     )?;
     println!(
-        "engine={} steps={} final_loss={:.4} train_acc={:.3} test_acc={:.3} peak_mem={} time={:.1}s",
+        "engine={} steps={} replicas={} final_loss={:.4} train_acc={:.3} test_acc={:.3} \
+         peak_mem={} time={:.1}s reduce={:.2}s prefetch_wait={:.2}s",
         engine.name(),
         report.steps,
+        report.replicas,
         report.final_loss,
         report.train_accuracy,
         report.test_accuracy,
         tracker::fmt_bytes(report.peak_mem_bytes),
-        report.total_time_s
+        report.total_time_s,
+        report.reduce_time_s,
+        report.prefetch_wait_s
     );
     Ok(())
 }
@@ -269,7 +279,7 @@ fn main() {
         other => {
             eprintln!(
                 "usage: moonwalk <train|gradcheck|audit|plan|sweep> [--config cfg.json] \
-                 [--threads N] [--gemm auto|scalar|blocked|parallel] ...\n\
+                 [--threads N] [--gemm auto|scalar|blocked|parallel] [--replicas N] ...\n\
                  (got {other:?}; see README.md)"
             );
             std::process::exit(2);

@@ -66,6 +66,39 @@ impl Network {
         }
     }
 
+    /// Copy every parameter tensor from `src`, shape-checked and
+    /// bit-exact — the data-parallel **parameter broadcast** that puts a
+    /// replica-local copy in sync with the source model at
+    /// `distributed::ReplicaGroup` construction.
+    pub fn copy_params_from(&mut self, src: &Network) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.depth() == src.depth(),
+            "depth mismatch: {} vs {}",
+            self.depth(),
+            src.depth()
+        );
+        for (li, (dst, s)) in self.layers.iter_mut().zip(&src.layers).enumerate() {
+            let sp = s.params();
+            let mut dp = dst.params_mut();
+            anyhow::ensure!(
+                dp.len() == sp.len(),
+                "layer {li}: parameter arity mismatch ({} vs {})",
+                dp.len(),
+                sp.len()
+            );
+            for (pi, (d, sv)) in dp.iter_mut().zip(&sp).enumerate() {
+                anyhow::ensure!(
+                    d.shape() == sv.shape(),
+                    "layer {li} param {pi}: shape {:?} vs {:?}",
+                    d.shape(),
+                    sv.shape()
+                );
+                d.data_mut().copy_from_slice(sv.data());
+            }
+        }
+        Ok(())
+    }
+
     /// Flat gradient-shaped zero buffers, aligned with layer params.
     pub fn zero_grads(&self) -> Vec<Vec<Tensor>> {
         self.layers
@@ -280,6 +313,26 @@ mod tests {
         let mut rng = Rng::new(4);
         let net = build_mlp(&[10, 8, 6], 0.1, &mut rng);
         assert_eq!(net.n_params(), 10 * 8 + 8 + 8 * 6 + 6);
+    }
+
+    #[test]
+    fn copy_params_from_broadcasts_bit_exact() {
+        let mut rng_a = Rng::new(20);
+        let mut rng_b = Rng::new(21);
+        let src = build_mlp(&[6, 5, 3], 0.1, &mut rng_a);
+        let mut dst = build_mlp(&[6, 5, 3], 0.1, &mut rng_b);
+        assert_ne!(src.layers[0].params()[0].data(), dst.layers[0].params()[0].data());
+        dst.copy_params_from(&src).unwrap();
+        for (ls, ld) in src.layers.iter().zip(&dst.layers) {
+            for (ps, pd) in ls.params().iter().zip(ld.params()) {
+                assert_eq!(ps.data(), pd.data());
+            }
+        }
+        // Architecture mismatch is rejected.
+        let mut other = build_mlp(&[6, 4, 3], 0.1, &mut rng_a);
+        assert!(other.copy_params_from(&src).is_err());
+        let mut shallow = build_mlp(&[6, 3], 0.1, &mut rng_a);
+        assert!(shallow.copy_params_from(&src).is_err());
     }
 
     #[test]

@@ -278,6 +278,77 @@ impl Conv2d {
         let gd = g.data();
         let img_in = h * w * cin;
         let img_g = ho * wo * cout;
+        // Single-image batches fall back to spatial parallelism over
+        // **input-row bands** (banded accumulation): the scatter's tap
+        // overlap means output (= input-gradient) rows, not g rows, are
+        // the disjoint unit. Each worker owns a contiguous band of input
+        // rows and, per tap, replays exactly the g rows a with
+        // `s·a + ki − p` inside its band — the same (ki,kj,a,b) visit
+        // order as the serial scatter restricted to the band, and the
+        // banded GEMM computes tmp rows with the serial kernels' per-row
+        // arithmetic, so the result is bit-identical to the serial path.
+        let spatial = if n == 1 && ho * wo * cout * k * k >= SPATIAL_MIN_TAP_ELEMS {
+            pool::effective_threads(h)
+        } else {
+            1
+        };
+        if spatial > 1 {
+            pool::run_records(out.data_mut(), w * cin, spatial, |rows, chunk| {
+                let band = rows.len();
+                // Any tap maps at most this many g rows into the band.
+                let max_rows = ((band - 1) / s + 1).min(ho);
+                let mut tmp = arena::take(max_rows * wo * cin);
+                for ki in 0..k {
+                    for kj in 0..k {
+                        // a-range with ii = s·a + ki − p in [rows.start,
+                        // rows.end): solve the band bounds for a.
+                        let lo = rows.start as isize + p as isize - ki as isize;
+                        let hi = rows.end as isize - 1 + p as isize - ki as isize;
+                        if hi < 0 {
+                            continue;
+                        }
+                        let a_lo = if lo <= 0 {
+                            0
+                        } else {
+                            (lo as usize + s - 1) / s
+                        };
+                        let a_hi = (hi as usize / s).min(ho - 1);
+                        if a_lo > a_hi {
+                            continue;
+                        }
+                        let rows_g = a_hi - a_lo + 1;
+                        let t = &mut tmp[..rows_g * wo * cin];
+                        t.fill(0.0);
+                        ops::matmul_into_auto(
+                            &gd[a_lo * wo * cout..(a_hi + 1) * wo * cout],
+                            &wt[(ki * k + kj) * cout * cin..(ki * k + kj + 1) * cout * cin],
+                            t,
+                            rows_g * wo,
+                            cout,
+                            cin,
+                        );
+                        for (local_a, a) in (a_lo..=a_hi).enumerate() {
+                            // s·a ≥ rows.start + p − ki by construction,
+                            // so ii is in-band (and in-bounds).
+                            let ii = s * a + ki - p;
+                            let dst_row = (ii - rows.start) * w * cin;
+                            for b in 0..wo {
+                                let jj = (s * b + kj) as isize - p as isize;
+                                if jj < 0 || jj as usize >= w {
+                                    continue;
+                                }
+                                let src = (local_a * wo + b) * cin;
+                                let dst = dst_row + (jj as usize) * cin;
+                                for c in 0..cin {
+                                    chunk[dst + c] += t[src + c];
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+            return out;
+        }
         let workers = pool::effective_threads(n);
         pool::run_records(out.data_mut(), img_in, workers, |imgs, chunk| {
             let mut tmp = arena::take(ho * wo * cin);

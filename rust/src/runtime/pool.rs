@@ -51,7 +51,9 @@ use std::ops::Range;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Condvar, Mutex, MutexGuard};
+use std::sync::{Condvar, Mutex};
+
+use crate::util::lock_ignore_poison as lock;
 
 /// Global thread budget; 0 = not yet resolved.
 static THREADS: AtomicUsize = AtomicUsize::new(0);
@@ -188,14 +190,6 @@ pub fn chunk_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
 }
 
 // ----- the persistent team --------------------------------------------------
-
-/// Poison-tolerant lock (a panicking share must not brick the team).
-fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    match m.lock() {
-        Ok(g) => g,
-        Err(poisoned) => poisoned.into_inner(),
-    }
-}
 
 /// Countdown latch a region waits on: workers decrement, the submitter
 /// blocks until zero. The decrement and the wake happen under one lock

@@ -13,3 +13,16 @@ pub mod timer;
 pub use json::Json;
 pub use rng::Rng;
 pub use timer::Timer;
+
+/// Poison-tolerant mutex lock, shared by every process-global structure
+/// (worker pool, streaming reducer, gradient collectors): a panicking
+/// holder — e.g. an injected test panic on a pool worker — must not
+/// brick later users of the lock.
+pub fn lock_ignore_poison<T>(
+    m: &std::sync::Mutex<T>,
+) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}

@@ -22,6 +22,21 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Derive a splittable stream seed from a base seed and a list of stream
+/// labels — the distributed pipeline's "seed ⊕ epoch ⊕ shard" streams.
+/// Each label is golden-ratio-spread and diffused through SplitMix64, so
+/// neighbouring `(epoch, shard)` pairs yield decorrelated streams while
+/// the result stays a pure function of `(seed, labels)` — independent of
+/// how much randomness any live generator has consumed.
+pub fn stream_seed(seed: u64, labels: &[u64]) -> u64 {
+    let mut acc = seed;
+    for &label in labels {
+        let mut s = acc ^ label.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        acc = splitmix64(&mut s);
+    }
+    acc
+}
+
 impl Rng {
     /// Create a generator from a 64-bit seed (stream id fixed).
     pub fn new(seed: u64) -> Self {
@@ -192,6 +207,15 @@ mod tests {
         sorted.sort();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
         assert_ne!(v, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stream_seed_is_pure_and_label_sensitive() {
+        assert_eq!(stream_seed(5, &[1, 2]), stream_seed(5, &[1, 2]));
+        assert_ne!(stream_seed(5, &[1, 2]), stream_seed(5, &[2, 1]));
+        assert_ne!(stream_seed(5, &[1, 2]), stream_seed(6, &[1, 2]));
+        assert_ne!(stream_seed(5, &[0]), stream_seed(5, &[1]));
+        assert_eq!(stream_seed(7, &[]), 7, "no labels = base seed");
     }
 
     #[test]

@@ -331,6 +331,44 @@ fn prop_spatial_conv2d_batch1_parallel_matches_serial() {
     });
 }
 
+/// Batch-1 `transpose_conv` (the `vjp_input` scatter) parallelizes over
+/// **input-row bands** with banded accumulation — the first ROADMAP
+/// follow-up of the persistent-runtime PR. Unlike the band-reduced
+/// `vjp_params`, the banded scatter visits every (tap, position)
+/// contribution of an output element in exactly the serial order, so the
+/// parallel result must be **bit-identical** to the serial one at every
+/// thread count (and trivially bit-stable).
+#[test]
+fn prop_spatial_conv2d_batch1_transpose_conv_bit_identical() {
+    let _pin = pin_lock();
+    for_random_cases(950, 25, |rng| {
+        let (conv, xb) = random_submersive_conv2d(rng);
+        let cin = xb.shape()[3];
+        let (k, s, p, cout) = (conv.k, conv.stride, conv.pad, conv.cout);
+        // Size past the spatial minimum-work floor, as in the
+        // forward/vjp_params property above.
+        let per = cout * k * k;
+        let mut ho = 4usize;
+        while ho * ho * per < 4096 {
+            ho += 1;
+        }
+        let hw = s * (ho - 1) + k - 2 * p;
+        let x = Tensor::randn(&[1, hw, hw, cin], 1.0, rng);
+        let (y, res) = conv.forward_res(&x, ResidualKind::Minimal);
+        let g = Tensor::randn(y.shape(), 1.0, rng);
+        let h1 = pool::with_threads(1, || conv.vjp_input(&res, &g));
+        for t in [2usize, 4] {
+            let ht = pool::with_threads(t, || conv.vjp_input(&res, &g));
+            assert_eq!(
+                h1.data(),
+                ht.data(),
+                "{} t={t}: banded transpose_conv must be bit-identical",
+                conv.name()
+            );
+        }
+    });
+}
+
 /// Pooling vijp right-inverse for random even geometries.
 #[test]
 fn prop_pool_vijp() {

@@ -5,12 +5,16 @@
 #
 # Builds the workspace in release mode, runs the full test suite
 # (unit + integration: parallel-runtime grids, pool stress, property
-# sweeps, engine equivalence), then the perf_ops --quick smoke, which
-# emits BENCH_perf_ops.json so the perf trajectory stays diffable
+# sweeps, engine equivalence, distributed replica sharding), re-runs the
+# distributed suite as a dedicated invocation so replica-sharding
+# failures stay visible at the end of CI output, then the perf_ops
+# --quick smoke, which emits BENCH_perf_ops.json (including the
+# replicas {1,2} scaling rows) so the perf trajectory stays diffable
 # across commits. Exits non-zero on the first failure.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo build --release
 cargo test -q
+cargo test -q --test distributed
 cargo bench --bench perf_ops -- --quick
