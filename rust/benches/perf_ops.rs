@@ -4,10 +4,13 @@
 //! computational overhead".
 //!
 //! Also reports forward/vjp_w costs, the fast-path vs wavefront vijp
-//! split, allocation churn (cold + steady-state), and the data-parallel
+//! split, allocation churn (cold + steady-state), the data-parallel
 //! replica-scaling family (`replicas_rows` in the JSON: step/reduce
 //! medians at replicas {1,2[,4]} — the streamed all-reduce's overlap
-//! signal) for the §Perf log.
+//! signal) and the transport-overhead family (`transport_rows`:
+//! local vs unix-socket worker subprocesses at equal replica counts)
+//! for the §Perf log. The full field-by-field schema of the emitted
+//! `BENCH_perf_ops.json` lives in `docs/BENCH_SCHEMA.md`.
 //!
 //! Flags (after `--`):
 //! * `--quick`      — 3 iterations instead of 15 (the tier-1 smoke run)
@@ -343,6 +346,108 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // Transport-overhead family (ISSUE 4): the same replicated step
+    // through the in-process transport vs one worker subprocess per
+    // replica over unix sockets. `broadcast_ms` is the per-step
+    // parameter upload the remote transport adds; `step_ms` includes
+    // shard upload + compute + streamed gradient download. Compare the
+    // local and unix rows at equal replica counts for the
+    // process-boundary cost (the gradients themselves are bit-identical
+    // across the two transports — tests/transport.rs).
+    println!("\ntransport overhead (moonwalk, global batch 8):");
+    println!(
+        "{:<10} {:>9} {:>14} {:>12} {:>12} {:>12}",
+        "transport", "replicas", "broadcast_ms", "step_ms", "reduce_ms", "steps/s"
+    );
+    let mut transport_rows: Vec<Json> = Vec::new();
+    {
+        use moonwalk::distributed::transport::{
+            EngineSpec, LocalTransport, LossSpec, ShardSpec, Transport, UnixTransport,
+            UnixTransportOpts,
+        };
+        use moonwalk::model::config::Config;
+        let cfg = Config::from_json(
+            &Json::parse(
+                r#"{"arch": "cnn2d", "depth": 3, "channels": 16, "input_hw": 32,
+                    "cin": 3, "classes": 8, "seed": 4}"#,
+            )
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        )?;
+        let mut rng = Rng::new(cfg.seed);
+        let net = cfg.build_network(&mut rng);
+        let x = Tensor::randn(&[8, 32, 32, 3], 1.0, &mut rng);
+        let engine = engine_by_name("moonwalk", cfg.block, cfg.checkpoint_every, cfg.seed)?;
+        // The worker subprocess is the real binary; absent (e.g. a
+        // lib-only build) the unix rows are skipped, not failed.
+        let worker_bin: Option<&str> = option_env!("CARGO_BIN_EXE_moonwalk");
+        let replica_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+        for transport_name in ["local", "unix"] {
+            for &r in replica_counts {
+                let mut transport: Box<dyn Transport> = match transport_name {
+                    "local" => Box::new(LocalTransport::new(r)),
+                    _ => {
+                        let Some(bin) = worker_bin else {
+                            println!("unix       {r:>9} (skipped: no worker binary)");
+                            continue;
+                        };
+                        let mut opts = UnixTransportOpts::new(
+                            r,
+                            cfg.to_json().to_string(),
+                            EngineSpec::new("moonwalk"),
+                        );
+                        opts.worker_bin = Some(std::path::PathBuf::from(bin));
+                        match UnixTransport::spawn(opts) {
+                            Ok(t) => Box::new(t),
+                            Err(e) => {
+                                println!("unix       {r:>9} (skipped: {e})");
+                                continue;
+                            }
+                        }
+                    }
+                };
+                let xs = split_batch(&x, r)?;
+                let bcast = bench(1, iters.min(8), || {
+                    transport.broadcast(&net).unwrap();
+                });
+                let shards: Vec<ShardSpec<'_>> = xs
+                    .iter()
+                    .map(|x| ShardSpec {
+                        x,
+                        loss: LossSpec::Mean,
+                    })
+                    .collect();
+                let run_step = |t: &mut dyn Transport| {
+                    t.step(&net, engine.as_ref(), &shards, ReduceOp::Mean, &|_, g| {
+                        drop(g)
+                    })
+                    .unwrap()
+                };
+                let probe = run_step(transport.as_mut());
+                let st = bench(1, iters.min(8), || {
+                    std::hint::black_box(run_step(transport.as_mut()));
+                });
+                println!(
+                    "{:<10} {:>9} {:>14.3} {:>12.3} {:>12.3} {:>12.2}",
+                    transport_name,
+                    r,
+                    bcast.median_ms(),
+                    st.median_ms(),
+                    probe.reduce_s * 1e3,
+                    1.0 / st.median.max(1e-12)
+                );
+                transport_rows.push(Json::from_pairs(vec![
+                    ("transport", transport_name.into()),
+                    ("replicas", r.into()),
+                    ("broadcast_ms", bcast.median_ms().into()),
+                    ("step_ms", st.median_ms().into()),
+                    ("reduce_ms", (probe.reduce_s * 1e3).into()),
+                    ("throughput_steps_per_s", (1.0 / st.median.max(1e-12)).into()),
+                    ("loss", (probe.loss as f64).into()),
+                ]));
+            }
+        }
+    }
+
     // Pool lifecycle + arena recycle-rate snapshot for the run (monotone
     // process counters — diff across runs at equal workloads).
     let pstats = pool::stats();
@@ -367,6 +472,7 @@ fn main() -> anyhow::Result<()> {
         ("rows", Json::Arr(rows)),
         ("small_rows", Json::Arr(small_rows)),
         ("replicas_rows", Json::Arr(replica_rows)),
+        ("transport_rows", Json::Arr(transport_rows)),
         ("dispatch_us", dispatch_us.into()),
         (
             "pool",

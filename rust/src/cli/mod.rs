@@ -7,11 +7,13 @@ use std::collections::BTreeMap;
 
 /// Apply the global runtime flags shared by every entry point:
 /// `--threads N` (worker-pool size), `--gemm auto|scalar|blocked|parallel`
-/// (GEMM algorithm override) and `--replicas N` (data-parallel replica
-/// count; `MOONWALK_REPLICAS` is the env spelling). Call before any
-/// tensor work. The persistent worker team is prewarmed here so the
-/// first parallel region — often a sub-100 µs kernel in the benches —
-/// doesn't pay spawn latency.
+/// (GEMM algorithm override), `--replicas N` (data-parallel replica
+/// count; `MOONWALK_REPLICAS` is the env spelling) and
+/// `--transport local|unix` (where replicas execute — in-process on the
+/// pool or one worker subprocess each; `MOONWALK_TRANSPORT` is the env
+/// spelling). Call before any tensor work. The persistent worker team is
+/// prewarmed here so the first parallel region — often a sub-100 µs
+/// kernel in the benches — doesn't pay spawn latency.
 pub fn configure_runtime(args: &Args) -> anyhow::Result<()> {
     if let Some(t) = args.get_usize_opt("threads")? {
         crate::runtime::pool::set_threads(t);
@@ -22,6 +24,11 @@ pub fn configure_runtime(args: &Args) -> anyhow::Result<()> {
     if let Some(r) = args.get_usize_opt("replicas")? {
         anyhow::ensure!(r >= 1, "--replicas must be >= 1");
         crate::distributed::set_replicas(r);
+    }
+    if let Some(t) = args.get("transport") {
+        crate::distributed::transport::set_kind(
+            crate::distributed::transport::TransportKind::parse(t)?,
+        );
     }
     crate::runtime::pool::prewarm();
     Ok(())
@@ -166,6 +173,18 @@ mod tests {
         assert_eq!(a.get_usize_opt("replicas").unwrap(), Some(4));
         let bad = parse("train --replicas x");
         assert!(bad.get_usize_opt("replicas").is_err());
+    }
+
+    #[test]
+    fn transport_flag_parses() {
+        let a = parse("train --transport unix --replicas 2");
+        assert_eq!(a.get("transport"), Some("unix"));
+        // The worker mode's hidden flags parse as flag/switch mix.
+        let w = parse("--replica-worker --connect /tmp/x.sock --replica 1");
+        assert!(w.has("replica-worker"));
+        assert_eq!(w.get("connect"), Some("/tmp/x.sock"));
+        assert_eq!(w.get_usize("replica", 0).unwrap(), 1);
+        assert_eq!(w.subcommand, None);
     }
 
     #[test]

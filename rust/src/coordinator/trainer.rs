@@ -7,10 +7,17 @@
 //! [`crate::distributed::ReplicaGroup`]: each step's global batch is
 //! sharded by the deterministic [`BatchPlan`] (so any replica count draws
 //! the same global sample sequence), one engine instance runs per replica
-//! on the persistent pool, and per-layer gradients are all-reduced
-//! streamed — the reduce overlaps the replicas' sweeps, and the JSONL log
-//! records `reduce_s` / `prefetch_wait_s` next to the pool-lifecycle
-//! deltas so the overlap is visible per step.
+//! on the group's **transport** — in-process on the persistent pool by
+//! default, or one worker subprocess per replica under
+//! `--transport unix` — and per-layer gradients are all-reduced
+//! streamed. The reduce overlaps the replicas' sweeps, and the JSONL log
+//! records `reduce_s` / `prefetch_wait_s` / `transport` next to the
+//! pool-lifecycle deltas so the overlap is visible per step.
+//!
+//! Each step starts with the group's parameter sync ([`ReplicaGroup::sync`])
+//! — a no-op in-process, a full parameter upload (and dead-worker
+//! respawn) over a remote transport — so the optimizer's latest update
+//! is what every replica differentiates.
 
 use std::path::Path;
 
@@ -18,9 +25,9 @@ use crate::autodiff::GradEngine;
 use crate::coordinator::data::TextureDataset;
 use crate::coordinator::optimizer::Optimizer;
 use crate::distributed::pipeline::{BatchPlan, Prefetcher};
-use crate::distributed::{ReduceOp, ReplicaGroup, Shard};
+use crate::distributed::transport::{LossSpec, ShardSpec, Transport};
+use crate::distributed::{ReduceOp, ReplicaGroup};
 use crate::model::Network;
-use crate::nn::SoftmaxCrossEntropy;
 use crate::runtime::pool;
 use crate::tensor::tracker;
 use crate::util::json::Json;
@@ -39,6 +46,8 @@ pub struct TrainReport {
     pub total_time_s: f64,
     /// Replica count the run was sharded across.
     pub replicas: usize,
+    /// Transport the replicas executed on (`"local"`, `"unix"`).
+    pub transport: String,
     /// Total seconds spent folding in the streamed all-reduce.
     pub reduce_time_s: f64,
     /// Total seconds the step loop was blocked waiting on the prefetcher.
@@ -54,6 +63,13 @@ pub struct Trainer<'a> {
     /// Data-parallel replica count (1 = plain single-stream training).
     /// The global batch must be divisible by it.
     pub replicas: usize,
+    /// Replica transport override. `None` executes replicas in-process;
+    /// `Some` routes them through the given transport (e.g. a spawned
+    /// `UnixTransport`), whose replica count must equal [`Self::replicas`].
+    /// A successful `train` hands the transport back here afterwards, so
+    /// repeated runs reuse the same workers; a run that fails mid-training
+    /// drops it (remote workers are torn down with it).
+    pub transport: Option<Box<dyn Transport>>,
 }
 
 impl<'a> Trainer<'a> {
@@ -68,6 +84,7 @@ impl<'a> Trainer<'a> {
             optimizer,
             log_every: 10,
             replicas: 1,
+            transport: None,
         }
     }
 
@@ -86,7 +103,24 @@ impl<'a> Trainer<'a> {
         metrics: Option<&Path>,
     ) -> anyhow::Result<TrainReport> {
         let replicas = self.replicas.max(1);
-        let group = ReplicaGroup::new(replicas)?;
+        // A lent transport is taken for the run and handed back at the
+        // end (see below), so repeated train() calls keep their worker
+        // subprocesses instead of silently falling back to in-process.
+        let (group, restore_transport) = match self.transport.take() {
+            Some(t) => {
+                if t.replicas() != replicas {
+                    let n = t.replicas();
+                    self.transport = Some(t);
+                    anyhow::bail!(
+                        "transport executes {n} replicas but the trainer is \
+                         configured for {replicas}"
+                    );
+                }
+                (ReplicaGroup::with_transport(t)?, true)
+            }
+            None => (ReplicaGroup::new(replicas)?, false),
+        };
+        let transport_name = group.transport_name();
         // One stream seed drives the whole run's data order; BatchPlan
         // derives each epoch's shuffle from (seed, epoch), so the
         // sequence is replica-count invariant.
@@ -110,19 +144,23 @@ impl<'a> Trainer<'a> {
                 let (step_batch, prefetch_wait_s) = prefetch.next()?;
                 prefetch_total_s += prefetch_wait_s;
                 let epoch = step_batch.epoch;
+                // Push the optimizer's latest parameters to every
+                // replica before the step: a no-op in-process, the full
+                // upload (+ dead-worker respawn) over a remote
+                // transport. Outside the measurement window, so remote
+                // serialization never skews the step's memory profile.
+                group.sync(self.net)?;
                 // Tensor materialization happens here, on this thread,
                 // *before* the measurement window opens — the producer
                 // only ever built raw (tracker-invisible) payloads, so
                 // per-step peak/alloc profiles stay deterministic.
                 let shard_tensors = step_batch.into_shards();
-                let losses: Vec<SoftmaxCrossEntropy> = shard_tensors
+                let shards: Vec<ShardSpec<'_>> = shard_tensors
                     .iter()
-                    .map(|(_, labels)| SoftmaxCrossEntropy::new(labels.clone()))
-                    .collect();
-                let shards: Vec<Shard<'_>> = shard_tensors
-                    .iter()
-                    .zip(&losses)
-                    .map(|((x, _), loss)| Shard { x, loss })
+                    .map(|(x, labels)| ShardSpec {
+                        x,
+                        loss: LossSpec::SoftmaxXent(labels),
+                    })
                     .collect();
 
                 self.optimizer.begin_step();
@@ -136,7 +174,7 @@ impl<'a> Trainer<'a> {
                 let (result, prof) = {
                     let net = &*self.net;
                     let engine = self.engine;
-                    tracker::measure(|| group.compute(net, engine, &shards, ReduceOp::Mean))
+                    tracker::measure(|| group.step(net, engine, &shards, ReduceOp::Mean))
                 };
                 let pool1 = pool::stats();
                 let result = result?;
@@ -162,12 +200,14 @@ impl<'a> Trainer<'a> {
                             ("engine", self.engine.name().as_str().into()),
                             ("threads", pool::threads().into()),
                             // Replica-sharding signals: how many replicas
-                            // this step fanned across, how long the
-                            // streamed all-reduce folds took (overlapped
-                            // with the sweeps — compare to step_time_s),
-                            // and how long the loop waited on the data
-                            // pipeline (≈ 0 when prefetch hides it).
+                            // this step fanned across, which transport
+                            // executed them, how long the streamed
+                            // all-reduce folds took (overlapped with the
+                            // sweeps — compare to step_time_s), and how
+                            // long the loop waited on the data pipeline
+                            // (≈ 0 when prefetch hides it).
                             ("replicas", replicas.into()),
+                            ("transport", transport_name.as_str().into()),
                             ("shard_batch", (batch / replicas).into()),
                             ("reduce_s", result.reduce_s.into()),
                             ("prefetch_wait_s", prefetch_wait_s.into()),
@@ -193,6 +233,9 @@ impl<'a> Trainer<'a> {
 
         let train_accuracy = self.evaluate(train, batch);
         let test_accuracy = self.evaluate(test, batch);
+        if restore_transport {
+            self.transport = Some(group.into_transport());
+        }
         Ok(TrainReport {
             steps,
             final_loss: *loss_curve.last().unwrap_or(&f32::NAN),
@@ -202,6 +245,7 @@ impl<'a> Trainer<'a> {
             peak_mem_bytes: peak_mem,
             total_time_s: timer.elapsed_s(),
             replicas,
+            transport: transport_name,
             reduce_time_s: reduce_total_s,
             prefetch_wait_s: prefetch_total_s,
         })
@@ -218,7 +262,7 @@ impl<'a> Trainer<'a> {
         for chunk in idx.chunks(batch) {
             let (x, labels) = data.batch(chunk);
             let y = self.net.forward(&x);
-            let loss = SoftmaxCrossEntropy::new(labels);
+            let loss = crate::nn::SoftmaxCrossEntropy::new(labels);
             correct += loss.accuracy(&y) * chunk.len() as f32;
             count += chunk.len();
         }
@@ -283,6 +327,7 @@ mod tests {
         assert!(rep.final_loss.is_finite());
         assert!(rep.peak_mem_bytes > 0);
         assert_eq!(rep.replicas, 1);
+        assert_eq!(rep.transport, "local");
     }
 
     #[test]
@@ -303,9 +348,23 @@ mod tests {
         let first = Json::parse(text.lines().next().unwrap()).unwrap();
         assert_eq!(first.req_usize("replicas").unwrap(), 2);
         assert_eq!(first.req_usize("shard_batch").unwrap(), 2);
+        assert_eq!(first.req_str("transport").unwrap(), "local");
         assert!(first.get("reduce_s").as_f64().is_some());
         assert!(first.get("prefetch_wait_s").as_f64().is_some());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mismatched_transport_replicas_rejected() {
+        use crate::distributed::transport::LocalTransport;
+        let (mut net, train, test) = tiny_setup(10);
+        let opt = Optimizer::new(OptimizerKind::Sgd, 1e-3, &net, false);
+        let engine = Backprop;
+        let mut t = Trainer::new(&mut net, &engine, opt);
+        t.replicas = 2;
+        t.transport = Some(Box::new(LocalTransport::new(4)));
+        let mut rng = Rng::new(11);
+        assert!(t.train(&train, &test, 4, 2, &mut rng, None).is_err());
     }
 
     #[test]

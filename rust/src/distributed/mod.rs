@@ -1,41 +1,57 @@
-//! Data-parallel replica sharding on top of the persistent worker pool.
+//! Data-parallel replica sharding on top of the persistent worker pool,
+//! with pluggable execution transports.
 //!
 //! The scale-out seam the ROADMAP calls for: a [`ReplicaGroup`] runs one
 //! [`GradEngine`] per replica over disjoint sub-batches of a global
-//! batch, all on `runtime::pool`'s persistent team, and reduces
-//! gradients **per layer, streamed** through
+//! batch and reduces gradients **per layer, streamed** through
 //! [`reduce::StreamingAllReduce`]: the moment every replica has emitted a
 //! layer (the paper's §4.3 streamed-gradient property), that layer is
-//! all-reduced on the delivering thread — overlapped with the other
-//! replicas' still-running sweeps — and handed to the caller's sink. No
-//! full gradient buffer is ever required, so the no-stored-activations
-//! property survives sharding.
+//! all-reduced — overlapped with the other replicas' still-running
+//! sweeps — and handed to the caller's sink. No full gradient buffer is
+//! ever required, so the no-stored-activations property survives
+//! sharding.
 //!
-//! Scheduling: replicas fan out as one pool region, so each replica's
-//! engine runs with nested kernel parallelism suppressed — the batch
-//! axis *is* the parallel axis, exactly as it is for the batch-parallel
-//! conv kernels. With one replica the engine runs on the calling thread
-//! with full internal parallelism (the group is a no-op wrapper there).
-//! Determinism mirrors the pool's contract: fixed replica count + fixed
-//! thread count ⇒ bit-identical gradients run-to-run, because per-replica
-//! computation is deterministic and the reduce folds in replica order.
+//! **Where replicas execute is a [`transport::Transport`]**: in-process
+//! on the worker pool ([`transport::LocalTransport`], the default) or in
+//! one worker subprocess per replica over unix-domain sockets
+//! ([`transport::UnixTransport`], `--transport unix`). Every contract
+//! below is transport-independent; `tests/transport.rs` proves the unix
+//! transport bit-identical to the in-process path at equal replica
+//! counts.
 //!
-//! A panicking replica is caught by the pool, re-raised on the submitting
-//! thread, and the team keeps serving later regions; an `Err` from a
-//! replica's engine aborts the step with that replica's error. Replica
-//! count resolution: explicit [`set_replicas`] (the CLI's `--replicas`) >
-//! `MOONWALK_REPLICAS` env var > 1.
+//! In-process scheduling: replicas fan out as one pool region, so each
+//! replica's engine runs with nested kernel parallelism suppressed — the
+//! batch axis *is* the parallel axis, exactly as it is for the
+//! batch-parallel conv kernels. With one replica the engine runs on the
+//! calling thread with full internal parallelism (the group is a no-op
+//! wrapper there). Determinism mirrors the pool's contract: fixed
+//! replica count + fixed thread count ⇒ bit-identical gradients
+//! run-to-run, because per-replica computation is deterministic and the
+//! reduce folds in replica order.
+//!
+//! A panicking replica is caught by the pool, re-raised on the
+//! submitting thread, and the team keeps serving later regions; an `Err`
+//! from a replica's engine aborts the step with that replica's error (a
+//! *subprocess* replica that dies surfaces the same way — a step error
+//! naming the replica). Replica count resolution: explicit
+//! [`set_replicas`] (the CLI's `--replicas`) > `MOONWALK_REPLICAS` env
+//! var > 1.
 //!
 //! The companion [`pipeline`] module supplies the deterministic sharded
 //! batches (double-buffered prefetch); [`broadcast`] syncs replica-local
 //! parameter copies from a source network — in-process replicas normally
-//! share one `&Network`, but the broadcast is the construction-time sync
-//! step the future multi-process transport will reuse.
+//! share one `&Network`, and the same seam is what
+//! [`transport::Transport::broadcast`] carries across the process
+//! boundary.
+
+#![deny(missing_docs)]
 
 pub mod pipeline;
 pub mod reduce;
+pub mod transport;
 
 pub use reduce::{ReduceOp, StreamingAllReduce};
+pub use transport::{Transport, TransportKind};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -43,8 +59,9 @@ use std::sync::Mutex;
 use crate::autodiff::GradEngine;
 use crate::model::Network;
 use crate::nn::Loss;
-use crate::runtime::pool;
 use crate::tensor::Tensor;
+
+use transport::{LocalTransport, ShardSpec};
 
 // ----- replica-count resolution ---------------------------------------------
 
@@ -96,9 +113,13 @@ pub fn broadcast(src: &Network, locals: &mut [Network]) -> anyhow::Result<()> {
 // ----- the replica group -----------------------------------------------------
 
 /// One replica's slice of a global step: its input shard and loss head
-/// (the loss holds shard-local targets).
+/// (the loss holds shard-local targets). This is the borrow-based
+/// in-process view; [`transport::ShardSpec`] is the transport-portable
+/// twin.
 pub struct Shard<'a> {
+    /// The replica-local input batch.
     pub x: &'a Tensor,
+    /// The loss head evaluated on this shard.
     pub loss: &'a dyn Loss,
 }
 
@@ -119,23 +140,66 @@ pub struct ReplicaStep {
 /// [`ReplicaStep`] plus the collected reduced gradients (convenience
 /// mirror of [`GradEngine::compute`]).
 pub struct ReplicaResult {
+    /// Mean of the per-replica losses.
     pub loss: f32,
+    /// Per-replica shard losses, in replica order.
     pub replica_losses: Vec<f32>,
     /// Per-layer reduced gradients, aligned with `net.layers` (empty for
     /// parameter-free layers).
     pub grads: Vec<Vec<Tensor>>,
+    /// Wall-clock spent folding inside the streaming all-reduce.
     pub reduce_s: f64,
 }
 
-/// A fixed-size data-parallel replica group (see module docs).
+/// A fixed-size data-parallel replica group executing on a pluggable
+/// [`Transport`] (see module docs).
+///
+/// # Example
+///
+/// ```
+/// use moonwalk::autodiff::Backprop;
+/// use moonwalk::distributed::{split_batch, ReduceOp, ReplicaGroup, Shard};
+/// use moonwalk::model::build_mlp;
+/// use moonwalk::nn::MeanLoss;
+/// use moonwalk::tensor::Tensor;
+/// use moonwalk::util::Rng;
+///
+/// let mut rng = Rng::new(0);
+/// let net = build_mlp(&[4, 3], 0.1, &mut rng);
+/// let x = Tensor::randn(&[2, 4], 1.0, &mut rng);
+/// let xs = split_batch(&x, 2)?;
+/// let shards: Vec<Shard<'_>> = xs.iter().map(|x| Shard { x, loss: &MeanLoss }).collect();
+/// let group = ReplicaGroup::new(2)?;
+/// let out = group.compute(&net, &Backprop, &shards, ReduceOp::Mean)?;
+/// assert_eq!(out.replica_losses.len(), 2);
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub struct ReplicaGroup {
     replicas: usize,
+    transport: Mutex<Box<dyn Transport>>,
 }
 
 impl ReplicaGroup {
+    /// An in-process group of `replicas` replicas (the
+    /// [`LocalTransport`] path).
     pub fn new(replicas: usize) -> anyhow::Result<ReplicaGroup> {
         anyhow::ensure!(replicas >= 1, "replica count must be >= 1");
-        Ok(ReplicaGroup { replicas })
+        Ok(ReplicaGroup {
+            replicas,
+            transport: Mutex::new(Box::new(LocalTransport::new(replicas))),
+        })
+    }
+
+    /// A group executing on an explicit transport (sized by it). Call
+    /// [`Self::sync`] before the first [`Self::step`] so remote replicas
+    /// hold the coordinator's parameters.
+    pub fn with_transport(transport: Box<dyn Transport>) -> anyhow::Result<ReplicaGroup> {
+        let replicas = transport.replicas();
+        anyhow::ensure!(replicas >= 1, "transport must execute >= 1 replica");
+        Ok(ReplicaGroup {
+            replicas,
+            transport: Mutex::new(transport),
+        })
     }
 
     /// A group sized to `locals`, after broadcasting `src`'s parameters
@@ -146,16 +210,44 @@ impl ReplicaGroup {
         ReplicaGroup::new(locals.len())
     }
 
+    /// The fixed replica count of this group.
     pub fn replicas(&self) -> usize {
         self.replicas
+    }
+
+    /// Dissolve the group, handing its transport back (so a caller that
+    /// lent a transport for one run — e.g. the trainer — can reuse it
+    /// for the next without respawning workers).
+    pub fn into_transport(self) -> Box<dyn Transport> {
+        match self.transport.into_inner() {
+            Ok(t) => t,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// The active transport's name (`"local"`, `"unix"`), for metrics.
+    pub fn transport_name(&self) -> String {
+        crate::util::lock_ignore_poison(&self.transport).name()
+    }
+
+    /// Synchronize every replica's parameters with `net` through the
+    /// transport's broadcast seam. A no-op in-process; for remote
+    /// transports this must run after every parameter update (and after
+    /// a failed step — it is also what respawns dead workers).
+    pub fn sync(&self, net: &Network) -> anyhow::Result<()> {
+        crate::util::lock_ignore_poison(&self.transport).broadcast(net)
     }
 
     /// Run `engine` once per replica over `shards` (one shard per
     /// replica, replica order) and stream each layer's **reduced**
     /// gradients to `sink(layer, grads)` the moment the last replica
-    /// emits that layer. `sink` is called from whichever replica thread
-    /// completes a layer — it must be `Sync`; calls for distinct layers
-    /// never overlap a call for the same layer.
+    /// emits that layer. `sink` is called from whichever replica (or
+    /// transport reader) thread completes a layer — it must be `Sync`;
+    /// calls for distinct layers never overlap a call for the same layer.
+    ///
+    /// This is the borrow-based **in-process** API (it always executes
+    /// locally, regardless of the group's transport); the trainer's
+    /// transport-routed twin is [`Self::step_streaming`].
     pub fn compute_streaming(
         &self,
         net: &Network,
@@ -164,81 +256,7 @@ impl ReplicaGroup {
         op: ReduceOp,
         sink: &(dyn Fn(usize, Vec<Tensor>) + Sync),
     ) -> anyhow::Result<ReplicaStep> {
-        anyhow::ensure!(
-            shards.len() == self.replicas,
-            "group has {} replicas but {} shards were supplied",
-            self.replicas,
-            shards.len()
-        );
-        if self.replicas == 1 {
-            // Single replica: run on the calling thread with full
-            // internal kernel parallelism (a region fan-out here would
-            // needlessly serialize the engine's own kernels).
-            let loss =
-                engine.compute_streaming(net, shards[0].x, shards[0].loss, &mut |li, g| {
-                    sink(li, g)
-                })?;
-            return Ok(ReplicaStep {
-                loss,
-                replica_losses: vec![loss],
-                reduce_s: 0.0,
-            });
-        }
-        // Oversubscription caveat: with more replicas than pool workers,
-        // a share runs its replicas *sequentially*, so an early
-        // replica's whole gradient set parks in the reducer until the
-        // late replicas deliver — peak memory degrades from
-        // one-layer-per-replica toward full-model-per-early-replica.
-        // Correctness and determinism are unaffected; warn once so the
-        // memory profile change is not silent.
-        if self.replicas > pool::threads() {
-            static WARNED: std::sync::Once = std::sync::Once::new();
-            WARNED.call_once(|| {
-                crate::log_warn!(
-                    "replicas ({}) exceed pool threads ({}): replicas run \
-                     sequentially per worker and early replicas' gradients \
-                     are parked until the reduce completes, raising peak \
-                     memory; prefer replicas <= threads",
-                    self.replicas,
-                    pool::threads()
-                );
-            });
-        }
-        let reducer = StreamingAllReduce::new(net.depth(), self.replicas, op);
-        // One pool region, one task per replica. Shares cover contiguous
-        // replica ranges, so the share-ordered merge below concatenates
-        // outcomes back in replica order.
-        let outcomes: Vec<(usize, anyhow::Result<f32>)> = pool::run_reduce(
-            self.replicas,
-            pool::effective_threads(self.replicas),
-            Vec::new,
-            |range, acc: &mut Vec<(usize, anyhow::Result<f32>)>| {
-                for r in range {
-                    let shard = &shards[r];
-                    let res =
-                        engine.compute_streaming(net, shard.x, shard.loss, &mut |li, g| {
-                            if let Some(reduced) = reducer.submit(li, r, g) {
-                                sink(li, reduced);
-                            }
-                        });
-                    acc.push((r, res));
-                }
-            },
-            |a, b| a.extend(b),
-        );
-        let mut replica_losses = Vec::with_capacity(self.replicas);
-        for (r, res) in outcomes {
-            match res {
-                Ok(l) => replica_losses.push(l),
-                Err(e) => return Err(e.context(format!("replica {r} failed"))),
-            }
-        }
-        let loss = replica_losses.iter().sum::<f32>() / replica_losses.len() as f32;
-        Ok(ReplicaStep {
-            loss,
-            replica_losses,
-            reduce_s: reducer.reduce_seconds(),
-        })
+        transport::local::fanout_streaming(self.replicas, net, engine, shards, op, sink)
     }
 
     /// [`Self::compute_streaming`] collecting the reduced gradients.
@@ -252,6 +270,46 @@ impl ReplicaGroup {
         let grads: Mutex<Vec<Vec<Tensor>>> =
             Mutex::new((0..net.depth()).map(|_| Vec::new()).collect());
         let step = self.compute_streaming(net, engine, shards, op, &|li, g| {
+            crate::util::lock_ignore_poison(&grads)[li] = g;
+        })?;
+        let grads = match grads.into_inner() {
+            Ok(v) => v,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        Ok(ReplicaResult {
+            loss: step.loss,
+            replica_losses: step.replica_losses,
+            grads,
+            reduce_s: step.reduce_s,
+        })
+    }
+
+    /// Transport-routed streaming step: like [`Self::compute_streaming`]
+    /// but executing wherever the group's transport runs its replicas
+    /// (in-process or worker subprocesses), with the loss given as a
+    /// serializable [`transport::LossSpec`].
+    pub fn step_streaming(
+        &self,
+        net: &Network,
+        engine: &dyn GradEngine,
+        shards: &[ShardSpec<'_>],
+        op: ReduceOp,
+        sink: &(dyn Fn(usize, Vec<Tensor>) + Sync),
+    ) -> anyhow::Result<ReplicaStep> {
+        crate::util::lock_ignore_poison(&self.transport).step(net, engine, shards, op, sink)
+    }
+
+    /// [`Self::step_streaming`] collecting the reduced gradients.
+    pub fn step(
+        &self,
+        net: &Network,
+        engine: &dyn GradEngine,
+        shards: &[ShardSpec<'_>],
+        op: ReduceOp,
+    ) -> anyhow::Result<ReplicaResult> {
+        let grads: Mutex<Vec<Vec<Tensor>>> =
+            Mutex::new((0..net.depth()).map(|_| Vec::new()).collect());
+        let step = self.step_streaming(net, engine, shards, op, &|li, g| {
             crate::util::lock_ignore_poison(&grads)[li] = g;
         })?;
         let grads = match grads.into_inner() {
@@ -313,6 +371,7 @@ mod tests {
         let x = Tensor::randn(&[4, 6], 1.0, &mut rng);
         let reference = Backprop.compute(&net, &x, &MeanLoss).unwrap();
         let group = ReplicaGroup::new(1).unwrap();
+        assert_eq!(group.transport_name(), "local");
         let shards = [Shard {
             x: &x,
             loss: &MeanLoss,
@@ -325,6 +384,43 @@ mod tests {
             assert_eq!(a.len(), b.len());
             for (ga, gb) in a.iter().zip(b) {
                 assert_eq!(ga.data(), gb.data(), "1-replica group must be identity");
+            }
+        }
+    }
+
+    #[test]
+    fn step_via_local_transport_matches_compute() {
+        use crate::distributed::transport::LossSpec;
+        let net = tiny_net(1);
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let xs = split_batch(&x, 2).unwrap();
+        let group = ReplicaGroup::new(2).unwrap();
+        group.sync(&net).unwrap();
+        let shards: Vec<Shard<'_>> = xs
+            .iter()
+            .map(|x| Shard {
+                x,
+                loss: &MeanLoss,
+            })
+            .collect();
+        let reference = group
+            .compute(&net, &Backprop, &shards, ReduceOp::Mean)
+            .unwrap();
+        let specs: Vec<transport::ShardSpec<'_>> = xs
+            .iter()
+            .map(|x| transport::ShardSpec {
+                x,
+                loss: LossSpec::Mean,
+            })
+            .collect();
+        let routed = group
+            .step(&net, &Backprop, &specs, ReduceOp::Mean)
+            .unwrap();
+        assert_eq!(routed.loss.to_bits(), reference.loss.to_bits());
+        for (a, b) in reference.grads.iter().zip(&routed.grads) {
+            for (ga, gb) in a.iter().zip(b) {
+                assert_eq!(ga.data(), gb.data(), "transport-routed step identical");
             }
         }
     }

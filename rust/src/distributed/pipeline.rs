@@ -77,6 +77,9 @@ pub struct BatchPlan<'a> {
 }
 
 impl<'a> BatchPlan<'a> {
+    /// A plan drawing global batches of `batch` samples from `data`,
+    /// split into `replicas` shards, with the whole sample sequence a
+    /// pure function of `seed`.
     pub fn new(
         data: &'a TextureDataset,
         batch: usize,
@@ -106,6 +109,7 @@ impl<'a> BatchPlan<'a> {
         })
     }
 
+    /// The replica count every global batch is split across.
     pub fn replicas(&self) -> usize {
         self.replicas
     }

@@ -74,6 +74,7 @@ impl StreamingAllReduce {
         }
     }
 
+    /// The participant count this reducer waits for per layer.
     pub fn replicas(&self) -> usize {
         self.replicas
     }

@@ -1,0 +1,218 @@
+//! The in-process transport: replicas fan out as one persistent-pool
+//! region, exactly the PR 3 `ReplicaGroup` execution path, now behind
+//! the [`Transport`] trait.
+//!
+//! Scheduling: with one replica the engine runs inline on the calling
+//! thread with full internal kernel parallelism; with N replicas each
+//! replica runs inside a pool share with nested kernel parallelism
+//! suppressed (the batch axis *is* the parallel axis). The streamed
+//! all-reduce fires on the last-delivering replica's thread, overlapped
+//! with the other replicas' still-running sweeps.
+
+use crate::autodiff::GradEngine;
+use crate::distributed::{ReduceOp, ReplicaStep, Shard, StreamingAllReduce};
+use crate::model::Network;
+use crate::nn::Loss;
+use crate::runtime::pool;
+use crate::tensor::Tensor;
+
+use super::{submit_to_sink, ShardSpec, Transport};
+
+/// The in-process replica fan-out (see module docs). One [`GradEngine`]
+/// execution per replica on the persistent pool, per-layer gradients
+/// reduced in replica order the moment the last replica emits them.
+///
+/// This is the engine room shared by
+/// [`ReplicaGroup::compute_streaming`](crate::distributed::ReplicaGroup::compute_streaming)
+/// and [`LocalTransport::step`]: the borrow-based `Shard` API and the
+/// transport's serializable [`ShardSpec`] API both land here, so the two
+/// are bit-identical by construction.
+pub(crate) fn fanout_streaming(
+    replicas: usize,
+    net: &Network,
+    engine: &dyn GradEngine,
+    shards: &[Shard<'_>],
+    op: ReduceOp,
+    sink: &(dyn Fn(usize, Vec<Tensor>) + Sync),
+) -> anyhow::Result<ReplicaStep> {
+    anyhow::ensure!(
+        shards.len() == replicas,
+        "group has {} replicas but {} shards were supplied",
+        replicas,
+        shards.len()
+    );
+    if replicas == 1 {
+        // Single replica: run on the calling thread with full internal
+        // kernel parallelism (a region fan-out here would needlessly
+        // serialize the engine's own kernels).
+        let loss = engine.compute_streaming(net, shards[0].x, shards[0].loss, &mut |li, g| {
+            sink(li, g)
+        })?;
+        return Ok(ReplicaStep {
+            loss,
+            replica_losses: vec![loss],
+            reduce_s: 0.0,
+        });
+    }
+    // Oversubscription caveat: with more replicas than pool workers, a
+    // share runs its replicas *sequentially*, so an early replica's
+    // whole gradient set parks in the reducer until the late replicas
+    // deliver — peak memory degrades from one-layer-per-replica toward
+    // full-model-per-early-replica. Correctness and determinism are
+    // unaffected; warn once so the memory profile change is not silent.
+    if replicas > pool::threads() {
+        static WARNED: std::sync::Once = std::sync::Once::new();
+        WARNED.call_once(|| {
+            crate::log_warn!(
+                "replicas ({}) exceed pool threads ({}): replicas run \
+                 sequentially per worker and early replicas' gradients \
+                 are parked until the reduce completes, raising peak \
+                 memory; prefer replicas <= threads",
+                replicas,
+                pool::threads()
+            );
+        });
+    }
+    let reducer = StreamingAllReduce::new(net.depth(), replicas, op);
+    // One pool region, one task per replica. Shares cover contiguous
+    // replica ranges, so the share-ordered merge below concatenates
+    // outcomes back in replica order.
+    let outcomes: Vec<(usize, anyhow::Result<f32>)> = pool::run_reduce(
+        replicas,
+        pool::effective_threads(replicas),
+        Vec::new,
+        |range, acc: &mut Vec<(usize, anyhow::Result<f32>)>| {
+            for r in range {
+                let shard = &shards[r];
+                let res = engine.compute_streaming(net, shard.x, shard.loss, &mut |li, g| {
+                    submit_to_sink(&reducer, li, r, g, sink)
+                });
+                acc.push((r, res));
+            }
+        },
+        |a, b| a.extend(b),
+    );
+    let mut replica_losses = Vec::with_capacity(replicas);
+    for (r, res) in outcomes {
+        match res {
+            Ok(l) => replica_losses.push(l),
+            Err(e) => return Err(e.context(format!("replica {r} failed"))),
+        }
+    }
+    let loss = replica_losses.iter().sum::<f32>() / replica_losses.len() as f32;
+    Ok(ReplicaStep {
+        loss,
+        replica_losses,
+        reduce_s: reducer.reduce_seconds(),
+    })
+}
+
+/// In-process transport: the current (PR 3) replica path. Replicas share
+/// the caller's `&Network`, so [`Transport::broadcast`] is a no-op.
+pub struct LocalTransport {
+    replicas: usize,
+}
+
+impl LocalTransport {
+    /// A local transport executing `replicas` in-process replicas.
+    pub fn new(replicas: usize) -> LocalTransport {
+        LocalTransport {
+            replicas: replicas.max(1),
+        }
+    }
+}
+
+impl Transport for LocalTransport {
+    fn name(&self) -> String {
+        "local".into()
+    }
+
+    fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    fn broadcast(&mut self, _net: &Network) -> anyhow::Result<()> {
+        // In-process replicas read the live `&Network`; nothing to copy.
+        Ok(())
+    }
+
+    fn step(
+        &mut self,
+        net: &Network,
+        engine: &dyn GradEngine,
+        shards: &[ShardSpec<'_>],
+        op: ReduceOp,
+        sink: &(dyn Fn(usize, Vec<Tensor>) + Sync),
+    ) -> anyhow::Result<ReplicaStep> {
+        // Materialize the loss heads, then run the exact borrow-based
+        // fan-out `ReplicaGroup::compute_streaming` uses.
+        let losses: Vec<Box<dyn Loss>> = shards.iter().map(|s| s.loss.build()).collect();
+        let borrowed: Vec<Shard<'_>> = shards
+            .iter()
+            .zip(&losses)
+            .map(|(s, l)| Shard {
+                x: s.x,
+                loss: l.as_ref(),
+            })
+            .collect();
+        fanout_streaming(self.replicas, net, engine, &borrowed, op, sink)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    use crate::autodiff::Backprop;
+    use crate::distributed::transport::LossSpec;
+    use crate::distributed::{split_batch, ReplicaGroup};
+    use crate::model::build_mlp;
+    use crate::nn::MeanLoss;
+    use crate::util::Rng;
+
+    #[test]
+    fn local_transport_matches_replica_group_bitwise() {
+        let mut rng = Rng::new(10);
+        let net = build_mlp(&[6, 5, 3], 0.1, &mut rng);
+        let x = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let xs = split_batch(&x, 2).unwrap();
+        // Reference: the borrow-based group API.
+        let shards: Vec<Shard<'_>> = xs
+            .iter()
+            .map(|x| Shard {
+                x,
+                loss: &MeanLoss,
+            })
+            .collect();
+        let group = ReplicaGroup::new(2).unwrap();
+        let reference = group
+            .compute(&net, &Backprop, &shards, ReduceOp::Mean)
+            .unwrap();
+        // Same step through the transport trait.
+        let mut t = LocalTransport::new(2);
+        t.broadcast(&net).unwrap();
+        let specs: Vec<ShardSpec<'_>> = xs
+            .iter()
+            .map(|x| ShardSpec {
+                x,
+                loss: LossSpec::Mean,
+            })
+            .collect();
+        let grads: Mutex<Vec<Vec<Tensor>>> =
+            Mutex::new((0..net.depth()).map(|_| Vec::new()).collect());
+        let step = t
+            .step(&net, &Backprop, &specs, ReduceOp::Mean, &|li, g| {
+                crate::util::lock_ignore_poison(&grads)[li] = g;
+            })
+            .unwrap();
+        assert_eq!(step.loss.to_bits(), reference.loss.to_bits());
+        let grads = grads.into_inner().unwrap();
+        for (a, b) in reference.grads.iter().zip(&grads) {
+            assert_eq!(a.len(), b.len());
+            for (ga, gb) in a.iter().zip(b) {
+                assert_eq!(ga.data(), gb.data(), "trait path must be bit-identical");
+            }
+        }
+    }
+}

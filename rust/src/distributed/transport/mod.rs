@@ -1,0 +1,255 @@
+//! Pluggable replica transports: where a [`crate::distributed::ReplicaGroup`]'s
+//! replicas actually execute.
+//!
+//! PR 3 built the data-parallel seams — parameter broadcast and a
+//! replica-ordered streamed gradient all-reduce — entirely in-process.
+//! This module makes both seams **transport-shaped**: a [`Transport`]
+//! runs one gradient engine per replica *somewhere* (same process,
+//! worker subprocesses, a future PJRT device mesh) and feeds per-layer
+//! gradients back through the same [`StreamingAllReduce`] fold, so every
+//! contract the in-process path established survives the process
+//! boundary:
+//!
+//! * **Replica-ordered reduce ⇒ bit-determinism.** Partials fold in
+//!   replica order, never arrival order, so a fixed replica count is
+//!   bit-identical run-to-run on every transport.
+//! * **[`ReduceOp::Mean`] fp-equivalence.** N replicas at batch B/N stay
+//!   ≤ 1e-5 from one replica at batch B, transport-independent.
+//! * **Streamed layers.** A layer reduces the moment its last
+//!   contribution arrives — over a socket exactly as over a channel —
+//!   so no transport ever buffers a full gradient set per replica.
+//!
+//! Two std-only implementations ship today: [`LocalTransport`] (the
+//! in-process pool fan-out PR 3 landed, refactored behind the trait) and
+//! [`UnixTransport`] (one worker **subprocess** per replica, speaking
+//! the [`wire`] format over `std::os::unix::net` sockets). The active
+//! kind resolves like every other runtime knob: CLI `--transport` >
+//! `MOONWALK_TRANSPORT` env var > `local`.
+//!
+//! # Example
+//!
+//! The trait in action with the in-process transport (the unix transport
+//! has the same shape but needs a spawned coordinator, see
+//! [`UnixTransport`]):
+//!
+//! ```
+//! use moonwalk::autodiff::Backprop;
+//! use moonwalk::distributed::transport::{LocalTransport, LossSpec, ShardSpec, Transport};
+//! use moonwalk::distributed::ReduceOp;
+//! use moonwalk::model::build_mlp;
+//! use moonwalk::tensor::Tensor;
+//! use moonwalk::util::Rng;
+//!
+//! let mut rng = Rng::new(0);
+//! let net = build_mlp(&[4, 3], 0.1, &mut rng);
+//! let x = Tensor::randn(&[2, 4], 1.0, &mut rng);
+//! let mut transport = LocalTransport::new(1);
+//! transport.broadcast(&net)?; // no-op in-process; param upload on unix
+//! let shards = [ShardSpec { x: &x, loss: LossSpec::Mean }];
+//! let step = transport.step(&net, &Backprop, &shards, ReduceOp::Mean, &|_layer, _grads| {})?;
+//! assert!(step.loss.is_finite());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+pub mod local;
+pub mod unix;
+pub mod wire;
+pub mod worker;
+
+pub use local::LocalTransport;
+pub use unix::{EngineSpec, UnixTransport, UnixTransportOpts};
+pub use wire::WireLoss;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::autodiff::GradEngine;
+use crate::distributed::{ReduceOp, ReplicaStep, StreamingAllReduce};
+use crate::model::Network;
+use crate::tensor::Tensor;
+
+/// A serializable description of one replica's loss head. The local
+/// transport materializes it in-process; the unix transport ships it to
+/// the worker as a [`WireLoss`].
+#[derive(Clone, Debug)]
+pub enum LossSpec<'a> {
+    /// Mean of all network outputs ([`crate::nn::MeanLoss`]).
+    Mean,
+    /// Softmax cross-entropy against these integer targets
+    /// ([`crate::nn::SoftmaxCrossEntropy`]).
+    SoftmaxXent(&'a [usize]),
+}
+
+impl<'a> LossSpec<'a> {
+    /// Materialize the concrete in-process loss head. Delegates to
+    /// [`WireLoss::build`] so the local and remote paths construct the
+    /// loss through one code path — a divergence here would break the
+    /// local-vs-unix bit-equality contract.
+    pub fn build(&self) -> Box<dyn crate::nn::Loss> {
+        self.to_wire().build()
+    }
+
+    /// The owned wire-format twin of this spec.
+    pub fn to_wire(&self) -> WireLoss {
+        match self {
+            LossSpec::Mean => WireLoss::Mean,
+            LossSpec::SoftmaxXent(t) => WireLoss::SoftmaxXent(t.to_vec()),
+        }
+    }
+}
+
+/// One replica's slice of a global step in transport-portable form: the
+/// input shard plus a loss *description* (rather than a live `&dyn Loss`,
+/// which cannot cross a process boundary).
+pub struct ShardSpec<'a> {
+    /// The replica-local input batch.
+    pub x: &'a Tensor,
+    /// The loss head to evaluate on this shard.
+    pub loss: LossSpec<'a>,
+}
+
+/// Where and how a replica group executes its replicas (see module docs).
+///
+/// Implementations must preserve the distributed contracts: per-layer
+/// gradients reduced in replica order through [`StreamingAllReduce`]
+/// semantics, `sink` invoked once per parameterized layer with the fully
+/// reduced tensors, and failures surfaced as step errors that name the
+/// replica.
+pub trait Transport: Send {
+    /// Human-readable transport name (`"local"`, `"unix"`), recorded in
+    /// metrics so runs are attributable.
+    fn name(&self) -> String;
+
+    /// Fixed replica count this transport executes.
+    fn replicas(&self) -> usize;
+
+    /// Synchronize every replica's parameters with `net` — the broadcast
+    /// seam. In-process replicas share `net` by reference (no-op); remote
+    /// transports upload the full parameter set and **must** be called
+    /// again after every parameter update, and after any step error (a
+    /// broadcast is also what respawns dead remote workers).
+    fn broadcast(&mut self, net: &Network) -> anyhow::Result<()>;
+
+    /// Run one replicated gradient step: one engine execution per
+    /// replica over `shards` (replica order), per-layer gradients
+    /// all-reduced with `op` and streamed to `sink(layer, grads)` the
+    /// moment each layer's last contribution arrives. `sink` is called
+    /// from transport-internal threads and must be `Sync`.
+    ///
+    /// `engine` is authoritative for the local transport; remote
+    /// transports run the engine they were configured with at spawn time
+    /// (the caller is responsible for keeping the two consistent).
+    fn step(
+        &mut self,
+        net: &Network,
+        engine: &dyn GradEngine,
+        shards: &[ShardSpec<'_>],
+        op: ReduceOp,
+        sink: &(dyn Fn(usize, Vec<Tensor>) + Sync),
+    ) -> anyhow::Result<ReplicaStep>;
+}
+
+// ----- transport-kind resolution ---------------------------------------------
+
+/// Which transport family a run uses (CLI `--transport`, env
+/// `MOONWALK_TRANSPORT`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process replicas on the persistent worker pool.
+    Local,
+    /// One worker subprocess per replica over unix-domain sockets.
+    Unix,
+}
+
+impl TransportKind {
+    /// Parse a CLI/env spelling (`"local"` / `"unix"`).
+    pub fn parse(s: &str) -> anyhow::Result<TransportKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "local" | "in-process" => Ok(TransportKind::Local),
+            "unix" | "unix-socket" => Ok(TransportKind::Unix),
+            other => anyhow::bail!("unknown transport `{other}` (local|unix)"),
+        }
+    }
+}
+
+/// Global transport selection; 0 = unresolved.
+static KIND: AtomicU8 = AtomicU8::new(0);
+
+fn resolve_default() -> TransportKind {
+    if let Ok(v) = std::env::var("MOONWALK_TRANSPORT") {
+        if let Ok(k) = TransportKind::parse(&v) {
+            return k;
+        }
+        crate::log_warn!("MOONWALK_TRANSPORT=`{v}` not recognized (local|unix); using local");
+    }
+    TransportKind::Local
+}
+
+/// The configured transport kind (resolving lazily on first use):
+/// [`set_kind`] > `MOONWALK_TRANSPORT` > [`TransportKind::Local`].
+pub fn kind() -> TransportKind {
+    match KIND.load(Ordering::Relaxed) {
+        1 => TransportKind::Local,
+        2 => TransportKind::Unix,
+        _ => {
+            let k = resolve_default();
+            set_kind(k);
+            k
+        }
+    }
+}
+
+/// Select the transport kind explicitly (the CLI's `--transport`).
+pub fn set_kind(k: TransportKind) {
+    KIND.store(
+        match k {
+            TransportKind::Local => 1,
+            TransportKind::Unix => 2,
+        },
+        Ordering::Relaxed,
+    );
+}
+
+/// Shared reducer-driving helper for transports: submit one replica's
+/// layer gradients and forward the reduced result to the sink when this
+/// submission completes the layer.
+pub(crate) fn submit_to_sink(
+    reducer: &StreamingAllReduce,
+    layer: usize,
+    replica: usize,
+    grads: Vec<Tensor>,
+    sink: &(dyn Fn(usize, Vec<Tensor>) + Sync),
+) {
+    if let Some(reduced) = reducer.submit(layer, replica, grads) {
+        sink(layer, reduced);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses_and_sets() {
+        assert_eq!(TransportKind::parse("local").unwrap(), TransportKind::Local);
+        assert_eq!(TransportKind::parse("UNIX").unwrap(), TransportKind::Unix);
+        assert_eq!(
+            TransportKind::parse("unix-socket").unwrap(),
+            TransportKind::Unix
+        );
+        assert!(TransportKind::parse("tcp").is_err());
+        let before = kind();
+        set_kind(TransportKind::Unix);
+        assert_eq!(kind(), TransportKind::Unix);
+        set_kind(before);
+    }
+
+    #[test]
+    fn loss_spec_builds_and_converts() {
+        let targets = [1usize, 0, 2];
+        let spec = LossSpec::SoftmaxXent(&targets);
+        assert_eq!(spec.to_wire(), WireLoss::SoftmaxXent(vec![1, 0, 2]));
+        let head = spec.build();
+        assert_eq!(head.name(), "softmax_xent");
+        assert_eq!(LossSpec::Mean.build().name(), "mean");
+    }
+}

@@ -1,0 +1,536 @@
+//! The multi-process wire format: length-prefixed framed messages with a
+//! version byte, carrying tensors as `layer id + shape + little-endian
+//! f32 payload`.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Exactness.** f32 payloads travel as raw little-endian bits, so a
+//!    round trip is the identity on every value (including NaN payload
+//!    bits) — the precondition for the transport bit-equality contract
+//!    in `tests/transport.rs`.
+//! 2. **Std-only.** No serde on the offline image; the codec is a small
+//!    hand-rolled cursor over `[tag u8][len u32 LE][payload]` frames.
+//! 3. **Streaming.** Gradient uploads are one frame per layer, flushed
+//!    as the engine emits them, so the coordinator's streamed all-reduce
+//!    overlaps the worker's still-running sweep exactly like the
+//!    in-process path.
+//!
+//! Writers borrow ([`write_params`], [`write_step`], [`write_grad`]);
+//! the reader returns an owned [`Msg`]. Every reader validates frame
+//! length against [`MAX_FRAME`] so a corrupt peer cannot trigger an
+//! unbounded allocation.
+
+use std::io::{self, Read, Write};
+
+use crate::tensor::Tensor;
+
+/// Protocol version; bumped on any incompatible framing change. Carried
+/// in the [`Msg::Hello`] handshake and checked by both peers.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Handshake magic preceding the version byte (`b"MWTP"` — MoonWalk
+/// TransPort), so a stray connection is rejected immediately.
+pub const MAGIC: [u8; 4] = *b"MWTP";
+
+/// Upper bound on a single frame's payload (1 GiB). Step and gradient
+/// frames scale with one shard / one layer's tensors; the parameter
+/// broadcast is one frame for the whole model, so **writers enforce the
+/// bound too** (the framing layer errors cleanly instead of truncating
+/// the length prefix and desyncing the stream) — a > 1 GiB-parameter model
+/// needs a chunked params frame before it can use this transport.
+pub const MAX_FRAME: u32 = 1 << 30;
+
+// Frame tags (one byte on the wire).
+const TAG_HELLO: u8 = 1;
+const TAG_INIT: u8 = 2;
+const TAG_PARAMS: u8 = 3;
+const TAG_STEP: u8 = 4;
+const TAG_GRAD: u8 = 5;
+const TAG_STEP_DONE: u8 = 6;
+const TAG_ERROR: u8 = 7;
+const TAG_SHUTDOWN: u8 = 8;
+
+/// A serializable loss head — the subset of [`crate::nn::Loss`] choices
+/// a remote replica can reconstruct from bytes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireLoss {
+    /// [`crate::nn::MeanLoss`]: mean of all network outputs.
+    Mean,
+    /// [`crate::nn::SoftmaxCrossEntropy`] with these integer targets.
+    SoftmaxXent(Vec<usize>),
+}
+
+impl WireLoss {
+    /// Materialize the concrete loss head this spec describes.
+    pub fn build(&self) -> Box<dyn crate::nn::Loss> {
+        match self {
+            WireLoss::Mean => Box::new(crate::nn::MeanLoss),
+            WireLoss::SoftmaxXent(targets) => {
+                Box::new(crate::nn::SoftmaxCrossEntropy::new(targets.clone()))
+            }
+        }
+    }
+}
+
+/// One decoded protocol message (the owned, reader-side view).
+#[derive(Debug)]
+pub enum Msg {
+    /// Worker → coordinator handshake: protocol version + replica id.
+    Hello {
+        /// The worker's [`WIRE_VERSION`].
+        version: u8,
+        /// Which replica slot this connection serves.
+        replica: u32,
+    },
+    /// Coordinator → worker: one JSON blob with the model/engine/runtime
+    /// configuration the worker should build before its first step.
+    Init {
+        /// JSON text (`{"config": {..}, "engine": {..}, "threads": n}`).
+        config: String,
+    },
+    /// Coordinator → worker: full parameter broadcast, one tensor list
+    /// per layer in layer order (empty lists for parameter-free layers).
+    Params {
+        /// `layers[layer][param]`, aligned with the network's layers.
+        layers: Vec<Vec<Tensor>>,
+    },
+    /// Coordinator → worker: one gradient step over one shard.
+    Step {
+        /// The replica-local input shard.
+        x: Tensor,
+        /// The loss head to evaluate on this shard.
+        loss: WireLoss,
+    },
+    /// Worker → coordinator: one layer's parameter gradients, streamed
+    /// the moment the worker's engine emits them.
+    Grad {
+        /// Layer index the gradients belong to.
+        layer: u32,
+        /// One tensor per parameter of that layer.
+        grads: Vec<Tensor>,
+    },
+    /// Worker → coordinator: the step finished; every `Grad` frame for
+    /// it has already been sent.
+    StepDone {
+        /// The shard-local loss value.
+        loss: f32,
+    },
+    /// Worker → coordinator: the step failed cleanly (engine error).
+    Error {
+        /// Human-readable failure description.
+        message: String,
+    },
+    /// Coordinator → worker: exit the serve loop and terminate.
+    Shutdown,
+}
+
+// ----- primitive encoders ----------------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_tensor(buf: &mut Vec<u8>, t: &Tensor) {
+    buf.push(t.rank() as u8);
+    for &d in t.shape() {
+        put_u32(buf, d as u32);
+    }
+    buf.reserve(t.len() * 4);
+    for &v in t.data() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+// ----- primitive decoders ----------------------------------------------------
+
+/// Bounds-checked little-endian reader over one frame's payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "wire frame truncated",
+            ));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32(&mut self) -> io::Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn tensor(&mut self) -> io::Result<Tensor> {
+        let rank = self.u8()? as usize;
+        if rank > 8 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "tensor rank exceeds the wire limit",
+            ));
+        }
+        let mut shape = Vec::with_capacity(rank);
+        let mut n: usize = 1;
+        for _ in 0..rank {
+            let d = self.u32()? as usize;
+            n = n.saturating_mul(d);
+            shape.push(d);
+        }
+        if n.saturating_mul(4) > MAX_FRAME as usize {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "tensor payload exceeds the frame limit",
+            ));
+        }
+        let raw = self.take(n * 4)?;
+        let mut data = Vec::with_capacity(n);
+        for c in raw.chunks_exact(4) {
+            data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(Tensor::from_vec(data, &shape))
+    }
+
+    fn finish(self) -> io::Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "wire frame has trailing bytes",
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ----- framing ---------------------------------------------------------------
+
+fn write_frame(w: &mut impl Write, tag: u8, payload: &[u8]) -> io::Result<()> {
+    if payload.len() > MAX_FRAME as usize {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!(
+                "frame of {} bytes exceeds the {MAX_FRAME} wire limit",
+                payload.len()
+            ),
+        ));
+    }
+    w.write_all(&[tag])?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)
+}
+
+/// Read one message, blocking. A clean EOF before any byte of a frame
+/// surfaces as [`io::ErrorKind::UnexpectedEof`] — the coordinator maps
+/// that onto "worker died" / the worker onto "coordinator gone".
+pub fn read_msg(r: &mut impl Read) -> io::Result<Msg> {
+    let mut head = [0u8; 5];
+    r.read_exact(&mut head)?;
+    let tag = head[0];
+    let len = u32::from_le_bytes([head[1], head[2], head[3], head[4]]);
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("wire frame of {len} bytes exceeds the {MAX_FRAME} limit"),
+        ));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    let mut c = Cursor::new(&payload);
+    let msg = match tag {
+        TAG_HELLO => {
+            let magic = c.take(4)?;
+            if magic != MAGIC {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "bad handshake magic",
+                ));
+            }
+            Msg::Hello {
+                version: c.u8()?,
+                replica: c.u32()?,
+            }
+        }
+        TAG_INIT => {
+            let raw = c.take(len as usize)?;
+            Msg::Init {
+                config: String::from_utf8(raw.to_vec()).map_err(|_| {
+                    io::Error::new(io::ErrorKind::InvalidData, "init config is not UTF-8")
+                })?,
+            }
+        }
+        TAG_PARAMS => {
+            let n_layers = c.u32()? as usize;
+            let mut layers = Vec::with_capacity(n_layers);
+            for _ in 0..n_layers {
+                let n_params = c.u32()? as usize;
+                let mut params = Vec::with_capacity(n_params);
+                for _ in 0..n_params {
+                    params.push(c.tensor()?);
+                }
+                layers.push(params);
+            }
+            Msg::Params { layers }
+        }
+        TAG_STEP => {
+            let kind = c.u8()?;
+            let loss = match kind {
+                0 => WireLoss::Mean,
+                1 => {
+                    let n = c.u32()? as usize;
+                    let mut targets = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        targets.push(c.u32()? as usize);
+                    }
+                    WireLoss::SoftmaxXent(targets)
+                }
+                other => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("unknown loss kind {other}"),
+                    ))
+                }
+            };
+            Msg::Step {
+                x: c.tensor()?,
+                loss,
+            }
+        }
+        TAG_GRAD => {
+            let layer = c.u32()?;
+            let n = c.u32()? as usize;
+            let mut grads = Vec::with_capacity(n);
+            for _ in 0..n {
+                grads.push(c.tensor()?);
+            }
+            Msg::Grad { layer, grads }
+        }
+        TAG_STEP_DONE => Msg::StepDone { loss: c.f32()? },
+        TAG_ERROR => {
+            let raw = c.take(len as usize)?;
+            Msg::Error {
+                message: String::from_utf8_lossy(raw).into_owned(),
+            }
+        }
+        TAG_SHUTDOWN => Msg::Shutdown,
+        other => {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unknown wire tag {other}"),
+            ))
+        }
+    };
+    // Error frames may legitimately consume everything; others must too.
+    match &msg {
+        Msg::Init { .. } | Msg::Error { .. } => Ok(msg),
+        _ => {
+            c.finish()?;
+            Ok(msg)
+        }
+    }
+}
+
+/// Write the worker→coordinator handshake.
+pub fn write_hello(w: &mut impl Write, replica: u32) -> io::Result<()> {
+    let mut buf = Vec::with_capacity(9);
+    buf.extend_from_slice(&MAGIC);
+    buf.push(WIRE_VERSION);
+    put_u32(&mut buf, replica);
+    write_frame(w, TAG_HELLO, &buf)
+}
+
+/// Write the coordinator→worker init blob (JSON text).
+pub fn write_init(w: &mut impl Write, config_json: &str) -> io::Result<()> {
+    write_frame(w, TAG_INIT, config_json.as_bytes())
+}
+
+/// Write a full parameter broadcast: one tensor list per layer, aligned
+/// with the network's layers (empty for parameter-free layers).
+pub fn write_params(w: &mut impl Write, layers: &[Vec<&Tensor>]) -> io::Result<()> {
+    let mut buf = Vec::new();
+    put_u32(&mut buf, layers.len() as u32);
+    for params in layers {
+        put_u32(&mut buf, params.len() as u32);
+        for p in params {
+            put_tensor(&mut buf, p);
+        }
+    }
+    write_frame(w, TAG_PARAMS, &buf)
+}
+
+/// Write one gradient-step request: the replica's input shard and the
+/// loss head it should evaluate.
+pub fn write_step(w: &mut impl Write, x: &Tensor, loss: &WireLoss) -> io::Result<()> {
+    let mut buf = Vec::new();
+    match loss {
+        WireLoss::Mean => buf.push(0),
+        WireLoss::SoftmaxXent(targets) => {
+            buf.push(1);
+            put_u32(&mut buf, targets.len() as u32);
+            for &t in targets {
+                put_u32(&mut buf, t as u32);
+            }
+        }
+    }
+    put_tensor(&mut buf, x);
+    write_frame(w, TAG_STEP, &buf)
+}
+
+/// Write one layer's streamed gradient upload.
+pub fn write_grad(w: &mut impl Write, layer: u32, grads: &[Tensor]) -> io::Result<()> {
+    let mut buf = Vec::new();
+    put_u32(&mut buf, layer);
+    put_u32(&mut buf, grads.len() as u32);
+    for g in grads {
+        put_tensor(&mut buf, g);
+    }
+    write_frame(w, TAG_GRAD, &buf)
+}
+
+/// Write the step-completion record carrying the shard-local loss.
+pub fn write_step_done(w: &mut impl Write, loss: f32) -> io::Result<()> {
+    write_frame(w, TAG_STEP_DONE, &loss.to_le_bytes())
+}
+
+/// Write a clean worker-side failure report.
+pub fn write_error(w: &mut impl Write, message: &str) -> io::Result<()> {
+    write_frame(w, TAG_ERROR, message.as_bytes())
+}
+
+/// Write the shutdown request that ends a worker's serve loop.
+pub fn write_shutdown(w: &mut impl Write) -> io::Result<()> {
+    write_frame(w, TAG_SHUTDOWN, &[])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(write: impl FnOnce(&mut Vec<u8>)) -> Msg {
+        let mut buf = Vec::new();
+        write(&mut buf);
+        let mut r = buf.as_slice();
+        let msg = read_msg(&mut r).expect("decode");
+        assert!(r.is_empty(), "frame fully consumed");
+        msg
+    }
+
+    #[test]
+    fn hello_roundtrip() {
+        match roundtrip(|w| write_hello(w, 7).unwrap()) {
+            Msg::Hello { version, replica } => {
+                assert_eq!(version, WIRE_VERSION);
+                assert_eq!(replica, 7);
+            }
+            other => panic!("wrong msg {other:?}"),
+        }
+    }
+
+    #[test]
+    fn params_roundtrip_exact_bits() {
+        let t1 = Tensor::from_vec(vec![1.5, -0.0, f32::MIN_POSITIVE], &[3]);
+        let t2 = Tensor::from_vec(vec![4.0; 6], &[2, 3]);
+        let layers: Vec<Vec<&Tensor>> = vec![vec![&t1, &t2], vec![]];
+        match roundtrip(|w| write_params(w, &layers).unwrap()) {
+            Msg::Params { layers } => {
+                assert_eq!(layers.len(), 2);
+                assert_eq!(layers[0].len(), 2);
+                assert!(layers[1].is_empty());
+                assert_eq!(layers[0][0].shape(), &[3]);
+                for (a, b) in layers[0][0].data().iter().zip(t1.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "bit-exact payload");
+                }
+                assert_eq!(layers[0][1].shape(), &[2, 3]);
+            }
+            other => panic!("wrong msg {other:?}"),
+        }
+    }
+
+    #[test]
+    fn step_roundtrip_with_losses() {
+        let x = Tensor::from_vec(vec![0.25; 8], &[2, 4]);
+        for loss in [WireLoss::Mean, WireLoss::SoftmaxXent(vec![0, 3, 1])] {
+            match roundtrip(|w| write_step(w, &x, &loss).unwrap()) {
+                Msg::Step { x: got, loss: gl } => {
+                    assert_eq!(got.shape(), x.shape());
+                    assert_eq!(got.data(), x.data());
+                    assert_eq!(gl, loss);
+                }
+                other => panic!("wrong msg {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn grad_and_done_roundtrip() {
+        let g = Tensor::from_vec(vec![1.0, 2.0], &[2]);
+        match roundtrip(|w| write_grad(w, 5, std::slice::from_ref(&g)).unwrap()) {
+            Msg::Grad { layer, grads } => {
+                assert_eq!(layer, 5);
+                assert_eq!(grads.len(), 1);
+                assert_eq!(grads[0].data(), g.data());
+            }
+            other => panic!("wrong msg {other:?}"),
+        }
+        match roundtrip(|w| write_step_done(w, -0.5).unwrap()) {
+            Msg::StepDone { loss } => assert_eq!(loss, -0.5),
+            other => panic!("wrong msg {other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_and_shutdown_roundtrip() {
+        match roundtrip(|w| write_error(w, "boom").unwrap()) {
+            Msg::Error { message } => assert_eq!(message, "boom"),
+            other => panic!("wrong msg {other:?}"),
+        }
+        assert!(matches!(
+            roundtrip(|w| write_shutdown(w).unwrap()),
+            Msg::Shutdown
+        ));
+    }
+
+    #[test]
+    fn truncated_and_oversized_frames_rejected() {
+        let mut buf = Vec::new();
+        write_hello(&mut buf, 1).unwrap();
+        buf.pop(); // truncate
+        assert!(read_msg(&mut buf.as_slice()).is_err());
+        // Oversized length prefix.
+        let bad = [TAG_GRAD, 0xff, 0xff, 0xff, 0xff];
+        assert!(read_msg(&mut bad.as_slice()).is_err());
+        // Unknown tag.
+        let unk = [99u8, 0, 0, 0, 0];
+        assert!(read_msg(&mut unk.as_slice()).is_err());
+    }
+
+    #[test]
+    fn scalar_tensor_roundtrip() {
+        // Rank-0 tensors must survive (shape [], one element).
+        let x = Tensor::scalar(2.5);
+        match roundtrip(|w| write_step(w, &x, &WireLoss::Mean).unwrap()) {
+            Msg::Step { x: got, .. } => {
+                assert_eq!(got.rank(), 0);
+                assert_eq!(got.item(), 2.5);
+            }
+            other => panic!("wrong msg {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! The replica worker: what runs inside each subprocess the
+//! [`UnixTransport`](super::UnixTransport) spawns.
+//!
+//! The binary re-invokes itself as
+//! `moonwalk --replica-worker --connect <socket> --replica <r>`; this
+//! module is that mode's whole life: connect, handshake, build the
+//! configured network + engine from the init blob, then serve
+//! `Params` / `Step` frames until `Shutdown` or EOF.
+//!
+//! Per step the worker runs its engine's streaming API and uploads each
+//! layer's gradients **the moment the engine emits them** (one flushed
+//! frame per layer), so the coordinator's streamed all-reduce overlaps
+//! this worker's still-running sweep. A clean engine `Err` is reported
+//! as an `Error` frame (the worker keeps serving); a panic takes the
+//! process down and surfaces coordinator-side as an EOF step error
+//! naming this replica — the subprocess mirror of the in-process
+//! panic-re-raise path.
+//!
+//! Determinism: the init blob pins the worker's pool thread count
+//! (default 1), putting every kernel on the same serial code path an
+//! in-process replica uses when its nested parallelism is suppressed —
+//! this is what makes unix-vs-local gradients bit-identical.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::os::unix::net::UnixStream;
+
+use crate::autodiff::engine_by_name;
+use crate::cli::Args;
+use crate::model::config::Config;
+use crate::runtime::pool;
+use crate::util::json::Json;
+use crate::util::Rng;
+
+use super::wire::{self, Msg};
+
+/// Run the worker protocol over an established stream until `Shutdown`
+/// or EOF. Split from [`run`] so tests can drive a worker over an
+/// in-process socketpair without spawning a subprocess.
+pub fn serve(stream: UnixStream, replica: usize) -> anyhow::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    wire::write_hello(&mut writer, replica as u32)?;
+    writer.flush()?;
+
+    // Init: architecture + engine + runtime configuration.
+    let init = match wire::read_msg(&mut reader)? {
+        Msg::Init { config } => config,
+        other => anyhow::bail!("replica {replica}: expected init, got {other:?}"),
+    };
+    let init = Json::parse(&init).map_err(|e| anyhow::anyhow!("bad init JSON: {e}"))?;
+    let cfg = Config::from_json(init.get("config"))?;
+    let espec = init.get("engine");
+    let engine = engine_by_name(
+        espec.opt_str("name", &cfg.engine),
+        espec.opt_usize("block", cfg.block),
+        espec.opt_usize("checkpoint_segments", cfg.checkpoint_every),
+        espec.opt_usize("seed", cfg.seed as usize) as u64,
+    )?;
+    // Pin the pool before any tensor work: serial kernels by default,
+    // matching an in-process replica's suppressed nested parallelism.
+    pool::set_threads(init.opt_usize("threads", 1).max(1));
+    // Architecture skeleton only — the first Params frame overwrites
+    // every parameter bit-exactly.
+    let mut rng = Rng::new(cfg.seed);
+    let mut net = cfg.build_network(&mut rng);
+
+    loop {
+        match wire::read_msg(&mut reader) {
+            Ok(Msg::Params { layers }) => {
+                net.import_params(&layers)
+                    .map_err(|e| e.context(format!("replica {replica}: param import")))?;
+            }
+            Ok(Msg::Step { x, loss }) => {
+                let head = loss.build();
+                // Stream each layer's gradients as the engine emits
+                // them; an I/O failure mid-stream aborts the step (the
+                // coordinator is gone or closing).
+                let mut io_err: Option<std::io::Error> = None;
+                let result = engine.compute_streaming(&net, &x, head.as_ref(), &mut |li, g| {
+                    if io_err.is_none() {
+                        let send = wire::write_grad(&mut writer, li as u32, &g)
+                            .and_then(|_| writer.flush());
+                        if let Err(e) = send {
+                            io_err = Some(e);
+                        }
+                    }
+                });
+                if let Some(e) = io_err {
+                    return Err(anyhow::anyhow!(
+                        "replica {replica}: gradient upload failed: {e}"
+                    ));
+                }
+                match result {
+                    Ok(loss_val) => wire::write_step_done(&mut writer, loss_val)?,
+                    Err(e) => wire::write_error(&mut writer, &format!("{e:#}"))?,
+                }
+                writer.flush()?;
+            }
+            Ok(Msg::Shutdown) => return Ok(()),
+            Ok(other) => anyhow::bail!("replica {replica}: unexpected {other:?}"),
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                // Coordinator dropped the connection (e.g. its process
+                // ended without a shutdown frame): exit quietly.
+                return Ok(());
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// The `--replica-worker` subprocess entry point: connect to the
+/// coordinator socket named by `--connect` and [`serve`] the protocol.
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("--replica-worker needs --connect <socket>"))?;
+    let replica = args.get_usize("replica", 0)?;
+    let stream = UnixStream::connect(path)
+        .map_err(|e| anyhow::anyhow!("connecting to coordinator at {path}: {e}"))?;
+    serve(stream, replica)
+}

@@ -20,17 +20,22 @@
 //!   plus a memory-budget planner that picks an engine for a budget.
 //! * [`coordinator`] — a config-driven trainer (optimizers, synthetic data
 //!   pipelines, JSONL metrics, sweeps).
-//! * [`distributed`] — data-parallel replica sharding on top of the
-//!   worker pool: a `ReplicaGroup` runs one gradient engine per replica
-//!   over disjoint sub-batches and all-reduces gradients **per layer,
-//!   streamed** (share-ordered and deterministic — fixed replica count ⇒
-//!   bit-identical results), so the paper's streamed-gradient property
-//!   (§4.3) survives sharding; `distributed::pipeline` adds the async
-//!   double-buffered data loader with splittable `seed ⊕ epoch ⊕ shard`
-//!   RNG streams (replicas = 1 and replicas = N draw identical global
-//!   batches). `--replicas` / `MOONWALK_REPLICAS` select the replica
-//!   count; this is the in-process seam the multi-process transport and
-//!   multi-backend dispatch will plug into.
+//! * [`distributed`] — data-parallel replica sharding behind pluggable
+//!   **transports**: a `ReplicaGroup` runs one gradient engine per
+//!   replica over disjoint sub-batches and all-reduces gradients **per
+//!   layer, streamed** (replica-ordered and deterministic — fixed
+//!   replica count ⇒ bit-identical results), so the paper's
+//!   streamed-gradient property (§4.3) survives sharding. Where the
+//!   replicas execute is a `distributed::transport::Transport`:
+//!   in-process on the worker pool (default) or one worker
+//!   **subprocess** per replica over unix-domain sockets
+//!   (`--transport unix`), bit-identical to each other at equal replica
+//!   counts. `distributed::pipeline` adds the async double-buffered
+//!   data loader with splittable `seed ⊕ epoch ⊕ shard` RNG streams
+//!   (replicas = 1 and replicas = N draw identical global batches).
+//!   `--replicas` / `MOONWALK_REPLICAS` select the replica count; the
+//!   transport seam is where multi-backend (native / PJRT) dispatch
+//!   plugs in next.
 //! * [`runtime`] — the persistent worker-thread pool behind the parallel
 //!   tensor runtime (`runtime::pool`, `--threads`; workers park between
 //!   regions, so even sub-100 µs kernels amortize dispatch), plus a PJRT
@@ -41,6 +46,20 @@
 //! * [`util`] / [`cli`] — in-tree substrates (JSON codec, PCG64 RNG, CLI
 //!   parser, timing harness) since the offline build has no access to
 //!   serde/clap/criterion/rand.
+//!
+//! # Module tour
+//!
+//! Data flows bottom-up: [`tensor`] kernels are scheduled by
+//! [`runtime::pool`]; [`nn`] layers compose them into the four
+//! differential operators; [`autodiff`] engines sequence those operators
+//! into gradient strategies; [`model`] stacks layers into networks;
+//! [`coordinator`] trains them; [`distributed`] replicates the whole
+//! thing across pool shares or worker subprocesses. `docs/ARCHITECTURE.md`
+//! is the narrative version of this map — paper equation → module — and
+//! names the three runtime invariant contracts (deterministic
+//! partitioning, tracker-invisible prefetch, replica-ordered reduction)
+//! with the tests that enforce each. `docs/BENCH_SCHEMA.md` documents
+//! every field of the `BENCH_perf_ops.json` the tier-1 perf smoke emits.
 //!
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.

@@ -18,12 +18,24 @@
 //!   (default auto; `MOONWALK_GEMM` is the env spelling).
 //! * `--replicas N` — data-parallel replica count for `train`: the
 //!   global batch is sharded N ways, one gradient engine runs per
-//!   replica on the worker pool, and per-layer gradients are all-reduced
-//!   streamed (default: `MOONWALK_REPLICAS` env var, else 1). The batch
-//!   size must be divisible by N.
+//!   replica, and per-layer gradients are all-reduced streamed
+//!   (default: `MOONWALK_REPLICAS` env var, else 1). The batch size
+//!   must be divisible by N.
+//! * `--transport local|unix` — where `train`'s replicas execute:
+//!   in-process on the worker pool (default) or one worker
+//!   **subprocess** per replica over unix-domain sockets
+//!   (`MOONWALK_TRANSPORT` is the env spelling). The unix transport
+//!   gives each replica its own process memory budget; gradients are
+//!   bit-identical to the in-process transport at the same replica
+//!   count.
+//!
+//! Hidden mode: `--replica-worker --connect <socket> --replica <r>` is
+//! the subprocess entry the unix transport spawns; it is not part of the
+//! user-facing CLI surface.
 
 use moonwalk::autodiff::{engine_by_name, Backprop, GradEngine, EXACT_ENGINES};
 use moonwalk::cli::Args;
+use moonwalk::distributed::transport::{EngineSpec, TransportKind, UnixTransport, UnixTransportOpts};
 use moonwalk::coordinator::{Optimizer, OptimizerKind, SyntheticSpec, TextureDataset, Trainer};
 use moonwalk::model::config::{ArchKind, Config};
 use moonwalk::memsim;
@@ -65,6 +77,24 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     );
     let mut trainer = Trainer::new(&mut net, engine.as_ref(), opt);
     trainer.replicas = moonwalk::distributed::replicas();
+    // Route replicas through worker subprocesses when asked: the workers
+    // rebuild this config's architecture, receive a parameter broadcast
+    // each step, and stream per-layer gradients back over the socket.
+    // Honored at any replica count — even one subprocess buys a separate
+    // process memory budget.
+    if moonwalk::distributed::transport::kind() == TransportKind::Unix {
+        let opts = UnixTransportOpts::new(
+            trainer.replicas,
+            cfg.to_json().to_string(),
+            EngineSpec {
+                name: cfg.engine.clone(),
+                block: cfg.block,
+                checkpoint_segments: cfg.checkpoint_every,
+                seed: cfg.seed,
+            },
+        );
+        trainer.transport = Some(Box::new(UnixTransport::spawn(opts)?));
+    }
     let metrics = args.get("metrics").map(std::path::PathBuf::from);
     let report = trainer.train(
         &train,
@@ -75,11 +105,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         metrics.as_deref(),
     )?;
     println!(
-        "engine={} steps={} replicas={} final_loss={:.4} train_acc={:.3} test_acc={:.3} \
-         peak_mem={} time={:.1}s reduce={:.2}s prefetch_wait={:.2}s",
+        "engine={} steps={} replicas={} transport={} final_loss={:.4} train_acc={:.3} \
+         test_acc={:.3} peak_mem={} time={:.1}s reduce={:.2}s prefetch_wait={:.2}s",
         engine.name(),
         report.steps,
         report.replicas,
+        report.transport,
         report.final_loss,
         report.train_accuracy,
         report.test_accuracy,
@@ -266,6 +297,16 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // Hidden subprocess mode (spawned by the unix transport): serve the
+    // replica-worker protocol and exit. Runs before configure_runtime —
+    // the worker pins its own pool size from the coordinator's init blob.
+    if args.has("replica-worker") {
+        if let Err(e) = moonwalk::distributed::transport::worker::run(&args) {
+            eprintln!("replica worker error: {e:#}");
+            std::process::exit(1);
+        }
+        return;
+    }
     if let Err(e) = moonwalk::cli::configure_runtime(&args) {
         eprintln!("error: {e}");
         std::process::exit(2);
@@ -279,7 +320,8 @@ fn main() {
         other => {
             eprintln!(
                 "usage: moonwalk <train|gradcheck|audit|plan|sweep> [--config cfg.json] \
-                 [--threads N] [--gemm auto|scalar|blocked|parallel] [--replicas N] ...\n\
+                 [--threads N] [--gemm auto|scalar|blocked|parallel] [--replicas N] \
+                 [--transport local|unix] ...\n\
                  (got {other:?}; see README.md)"
             );
             std::process::exit(2);

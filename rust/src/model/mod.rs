@@ -99,6 +99,50 @@ impl Network {
         Ok(())
     }
 
+    /// Owned snapshot of every parameter tensor, one list per layer
+    /// (empty for parameter-free layers) — the inverse of
+    /// [`Self::import_params`], shaped like the wire-format parameter
+    /// payload. The live broadcast path borrows parameters directly
+    /// (`distributed::transport`); this owned form is for snapshots,
+    /// tests and future checkpointing.
+    pub fn export_params(&self) -> Vec<Vec<Tensor>> {
+        self.layers
+            .iter()
+            .map(|l| l.params().iter().map(|p| (*p).clone()).collect())
+            .collect()
+    }
+
+    /// Install `params[layer][param]` into this network, shape-checked
+    /// and bit-exact — the receiving half of the wire-format parameter
+    /// broadcast (the decoded twin of [`Self::copy_params_from`]).
+    pub fn import_params(&mut self, params: &[Vec<Tensor>]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            params.len() == self.depth(),
+            "depth mismatch: {} layers vs {} parameter lists",
+            self.depth(),
+            params.len()
+        );
+        for (li, (dst, src)) in self.layers.iter_mut().zip(params).enumerate() {
+            let mut dp = dst.params_mut();
+            anyhow::ensure!(
+                dp.len() == src.len(),
+                "layer {li}: parameter arity mismatch ({} vs {})",
+                dp.len(),
+                src.len()
+            );
+            for (pi, (d, sv)) in dp.iter_mut().zip(src).enumerate() {
+                anyhow::ensure!(
+                    d.shape() == sv.shape(),
+                    "layer {li} param {pi}: shape {:?} vs {:?}",
+                    d.shape(),
+                    sv.shape()
+                );
+                d.data_mut().copy_from_slice(sv.data());
+            }
+        }
+        Ok(())
+    }
+
     /// Flat gradient-shaped zero buffers, aligned with layer params.
     pub fn zero_grads(&self) -> Vec<Vec<Tensor>> {
         self.layers
@@ -333,6 +377,26 @@ mod tests {
         assert!(other.copy_params_from(&src).is_err());
         let mut shallow = build_mlp(&[6, 3], 0.1, &mut rng_a);
         assert!(shallow.copy_params_from(&src).is_err());
+    }
+
+    #[test]
+    fn export_import_roundtrip() {
+        let mut rng_a = Rng::new(30);
+        let mut rng_b = Rng::new(31);
+        let src = build_mlp(&[6, 5, 3], 0.1, &mut rng_a);
+        let mut dst = build_mlp(&[6, 5, 3], 0.1, &mut rng_b);
+        let exported = src.export_params();
+        assert_eq!(exported.len(), src.depth());
+        dst.import_params(&exported).unwrap();
+        for (ls, ld) in src.layers.iter().zip(&dst.layers) {
+            for (ps, pd) in ls.params().iter().zip(ld.params()) {
+                assert_eq!(ps.data(), pd.data(), "roundtrip must be bit-exact");
+            }
+        }
+        // Mismatched shapes are rejected.
+        let mut other = build_mlp(&[6, 4, 3], 0.1, &mut rng_a);
+        assert!(other.import_params(&exported).is_err());
+        assert!(dst.import_params(&exported[..1].to_vec()).is_err());
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Artifact manifest: `artifacts/manifest.json` describes every compiled
 //! op — its HLO file, input/output shapes and role — plus the flagship
 //! model configuration the artifacts were lowered for. Produced by
-//! `python/compile/aot.py`; consumed by [`crate::runtime::PjrtRuntime`].
+//! `python/compile/aot.py`; consumed by `runtime::pjrt::PjrtRuntime` (behind the `xla` feature).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

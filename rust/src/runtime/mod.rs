@@ -9,7 +9,7 @@
 //!   at fixed thread counts.
 //! * [`artifacts`] — manifest/loader for the AOT artifacts emitted by
 //!   `python/compile/aot.py` (JAX/Pallas programs lowered to HLO text).
-//! * [`pjrt`] — the PJRT client that compiles and executes those
+//! * `pjrt` — the PJRT client that compiles and executes those
 //!   artifacts from the Rust hot path. Gated behind the `xla` feature
 //!   because it needs the vendored `xla` crate, which not every build
 //!   image carries; the default build is pure-std + anyhow/thiserror.

@@ -21,7 +21,7 @@
 //!    reductions fold per-share partials in share order ([`run_reduce`]).
 //!    Which OS thread executes a share never affects the values written.
 //! 2. **Safety.** The single `unsafe` surface is the lifetime erasure in
-//!    [`run_region`], which is sound because the submitting thread always
+//!    `run_region`, which is sound because the submitting thread always
 //!    blocks on the region latch before returning (workers can never
 //!    observe the caller's borrows after the region ends — even when a
 //!    share panics). Everything above it (slice partitioning, partial
@@ -44,6 +44,8 @@
 //! leaves surplus workers parked, growing spawns on demand (or eagerly
 //! via [`prewarm`]). Lifecycle counters ([`stats`]) expose region /
 //! wake / park counts for the trainer's JSONL metrics.
+
+#![deny(missing_docs)]
 
 use std::any::Any;
 use std::cell::Cell;
@@ -542,6 +544,25 @@ where
 /// and the per-share accumulators are merged **in share order** — so a
 /// fixed thread count always reduces in the same order (bit-stable, and
 /// bit-identical to the PR 1 scoped pool's worker-ordered merge).
+///
+/// ```
+/// use moonwalk::runtime::pool;
+///
+/// // Sum 0..100 across up to 4 workers; the share-ordered merge makes
+/// // the result identical to the serial fold.
+/// let sum = pool::run_reduce(
+///     100,
+///     4,
+///     || 0u64,
+///     |range, acc| {
+///         for i in range {
+///             *acc += i as u64;
+///         }
+///     },
+///     |a, b| *a += b,
+/// );
+/// assert_eq!(sum, 4950);
+/// ```
 pub fn run_reduce<A, I, W, M>(n_tasks: usize, workers: usize, init: I, work: W, mut merge: M) -> A
 where
     A: Send,

@@ -1,0 +1,462 @@
+//! Multi-process transport contract (ISSUE 4):
+//!
+//! 1. **Wire format** — randomized message round trips are bit-exact
+//!    (f32 payloads travel as raw little-endian bits).
+//! 2. **Transport equivalence** — the unix-socket transport at
+//!    replicas = 2 produces gradients **bit-identical** to the
+//!    in-process transport at the same replica count (worker
+//!    subprocesses run the same serial kernel paths as
+//!    nested-suppressed in-process replicas, and the coordinator folds
+//!    both in replica order), and fp-equivalent (≤ 1e-5) to
+//!    replicas = 1 across the exact-engine grid.
+//! 3. **Failure semantics** — a worker killed out from under the
+//!    coordinator fails that step with an error naming the replica, and
+//!    the next broadcast respawns it so the group keeps serving.
+//! 4. **End-to-end** — the trainer runs whole steps (param broadcast +
+//!    sharded compute + streamed reduce) through worker subprocesses.
+//!
+//! Worker subprocesses are the real `moonwalk` binary
+//! (`CARGO_BIN_EXE_moonwalk`) re-invoked in its hidden
+//! `--replica-worker` mode. Tests that pin the process-global pool
+//! thread count serialize through a local mutex (same pattern as the
+//! other suites).
+
+use std::sync::Mutex;
+
+use moonwalk::autodiff::{engine_by_name, EXACT_ENGINES};
+use moonwalk::distributed::transport::{
+    EngineSpec, LossSpec, ShardSpec, Transport, UnixTransport, UnixTransportOpts, WireLoss,
+};
+use moonwalk::distributed::{split_batch, ReduceOp, ReplicaGroup};
+use moonwalk::model::config::Config;
+use moonwalk::model::Network;
+use moonwalk::nn::SoftmaxCrossEntropy;
+use moonwalk::runtime::pool;
+use moonwalk::tensor::{rel_err, Tensor};
+use moonwalk::util::json::Json;
+use moonwalk::util::Rng;
+
+/// Serializes the tests that pin the (process-global) pool thread count.
+static THREAD_PIN: Mutex<()> = Mutex::new(());
+
+fn pin_lock() -> std::sync::MutexGuard<'static, ()> {
+    match THREAD_PIN.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// The tiny CNN the equivalence grid runs on, as a `Config` so the
+/// worker subprocesses can rebuild the identical architecture.
+fn tiny_cfg(seed: u64) -> Config {
+    Config::from_json(
+        &Json::parse(&format!(
+            r#"{{"arch": "cnn2d", "depth": 2, "channels": 5, "input_hw": 16,
+                 "cin": 2, "classes": 4, "alpha": 0.1, "constrained": true,
+                 "seed": {seed}}}"#
+        ))
+        .unwrap(),
+    )
+    .unwrap()
+}
+
+fn tiny_net(cfg: &Config) -> Network {
+    let mut rng = Rng::new(cfg.seed);
+    cfg.build_network(&mut rng)
+}
+
+/// A spawned unix transport for `replicas` workers of `cfg` + `engine`,
+/// pointed at the built `moonwalk` binary.
+fn unix_transport(cfg: &Config, engine: EngineSpec, replicas: usize) -> UnixTransport {
+    let mut opts = UnixTransportOpts::new(replicas, cfg.to_json().to_string(), engine);
+    opts.worker_bin = Some(std::path::PathBuf::from(env!("CARGO_BIN_EXE_moonwalk")));
+    UnixTransport::spawn(opts).expect("spawn unix transport")
+}
+
+/// Run one collected step through any transport.
+fn step_collect(
+    t: &mut dyn Transport,
+    net: &Network,
+    engine: &dyn moonwalk::autodiff::GradEngine,
+    xs: &[Tensor],
+    labels: &[usize],
+    op: ReduceOp,
+) -> anyhow::Result<(f32, Vec<Vec<Tensor>>)> {
+    let per = labels.len() / xs.len();
+    let shards: Vec<ShardSpec<'_>> = xs
+        .iter()
+        .enumerate()
+        .map(|(r, x)| ShardSpec {
+            x,
+            loss: LossSpec::SoftmaxXent(&labels[r * per..(r + 1) * per]),
+        })
+        .collect();
+    let grads: Mutex<Vec<Vec<Tensor>>> =
+        Mutex::new((0..net.depth()).map(|_| Vec::new()).collect());
+    let step = t.step(net, engine, &shards, op, &|li, g| {
+        grads.lock().unwrap()[li] = g;
+    })?;
+    Ok((step.loss, grads.into_inner().unwrap()))
+}
+
+// ---------------------------------------------------------------------------
+// 1. Wire-format round trips
+// ---------------------------------------------------------------------------
+
+/// Randomized round-trip property: every message family survives
+/// encode→decode bit-exactly — shapes, labels, and raw f32 payload bits
+/// (including negative zero and subnormals).
+#[test]
+fn wire_roundtrip_randomized_property() {
+    use moonwalk::distributed::transport::wire;
+    let mut rng = Rng::new(42);
+    for trial in 0..40 {
+        let rank = rng.below(4) + 1;
+        let shape: Vec<usize> = (0..rank).map(|_| rng.below(5) + 1).collect();
+        let n: usize = shape.iter().product();
+        // Payload mixes exact small integers with awkward fp values.
+        let data: Vec<f32> = (0..n)
+            .map(|i| match i % 4 {
+                0 => (rng.below(64) as f32) - 32.0,
+                1 => -0.0,
+                2 => f32::MIN_POSITIVE * (i as f32 + 1.0),
+                _ => (rng.uniform() as f32) * 1e3,
+            })
+            .collect();
+        let t = Tensor::from_vec(data, &shape);
+
+        // Step frame (tensor + labels).
+        let labels: Vec<usize> = (0..rng.below(6) + 1).map(|_| rng.below(10)).collect();
+        let loss = if trial % 2 == 0 {
+            WireLoss::Mean
+        } else {
+            WireLoss::SoftmaxXent(labels.clone())
+        };
+        let mut buf = Vec::new();
+        wire::write_step(&mut buf, &t, &loss).unwrap();
+        match wire::read_msg(&mut buf.as_slice()).unwrap() {
+            wire::Msg::Step { x, loss: got } => {
+                assert_eq!(x.shape(), t.shape(), "trial {trial}: shape");
+                for (a, b) in x.data().iter().zip(t.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "trial {trial}: payload bits");
+                }
+                assert_eq!(got, loss, "trial {trial}: loss spec");
+            }
+            other => panic!("trial {trial}: wrong message {other:?}"),
+        }
+
+        // Grad frame (multi-tensor).
+        let g2 = Tensor::from_vec(vec![0.5; 3], &[3]);
+        let grads = vec![t.clone(), g2];
+        let mut buf = Vec::new();
+        wire::write_grad(&mut buf, trial as u32, &grads).unwrap();
+        match wire::read_msg(&mut buf.as_slice()).unwrap() {
+            wire::Msg::Grad { layer, grads: got } => {
+                assert_eq!(layer, trial as u32);
+                assert_eq!(got.len(), 2);
+                for (a, b) in got[0].data().iter().zip(t.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("trial {trial}: wrong message {other:?}"),
+        }
+
+        // Params frame (two layers, second parameter-free).
+        let layers: Vec<Vec<&Tensor>> = vec![vec![&t], vec![]];
+        let mut buf = Vec::new();
+        wire::write_params(&mut buf, &layers).unwrap();
+        match wire::read_msg(&mut buf.as_slice()).unwrap() {
+            wire::Msg::Params { layers: got } => {
+                assert_eq!(got.len(), 2);
+                assert_eq!(got[0][0].shape(), t.shape());
+                assert!(got[1].is_empty());
+            }
+            other => panic!("trial {trial}: wrong message {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Transport equivalence
+// ---------------------------------------------------------------------------
+
+/// Unix-socket replicas = 2 must be **bit-identical** to in-process
+/// replicas = 2: per-replica computation runs the same serial kernel
+/// paths (worker threads pinned to 1 ⇔ nested suppression in-process),
+/// payloads travel bit-exactly, and both transports fold the same
+/// replica-ordered reduce.
+#[test]
+fn unix_bit_identical_to_local_at_equal_replicas() {
+    let _pin = pin_lock();
+    let cfg = tiny_cfg(0);
+    let net = tiny_net(&cfg);
+    let mut rng = Rng::new(1);
+    let x = Tensor::randn(&[4, 16, 16, 2], 1.0, &mut rng);
+    let labels = vec![0usize, 3, 1, 2];
+    let xs = split_batch(&x, 2).unwrap();
+    for name in ["backprop", "moonwalk"] {
+        let engine = engine_by_name(name, cfg.block, cfg.checkpoint_every, cfg.seed).unwrap();
+        // In-process reference at replicas = 2 (nested suppression).
+        let group = ReplicaGroup::new(2).unwrap();
+        let (local_loss, local_grads) = pool::with_threads(4, || {
+            let shards: Vec<ShardSpec<'_>> = xs
+                .iter()
+                .enumerate()
+                .map(|(r, x)| ShardSpec {
+                    x,
+                    loss: LossSpec::SoftmaxXent(&labels[r * 2..(r + 1) * 2]),
+                })
+                .collect();
+            let out = group
+                .step(&net, engine.as_ref(), &shards, ReduceOp::Mean)
+                .unwrap();
+            (out.loss, out.grads)
+        });
+        // The same step through worker subprocesses.
+        let mut unix = unix_transport(&cfg, EngineSpec::new(name), 2);
+        unix.broadcast(&net).unwrap();
+        let (unix_loss, unix_grads) =
+            step_collect(&mut unix, &net, engine.as_ref(), &xs, &labels, ReduceOp::Mean)
+                .unwrap();
+        assert_eq!(
+            unix_loss.to_bits(),
+            local_loss.to_bits(),
+            "{name}: loss must be bit-identical across transports"
+        );
+        for (li, (a, b)) in local_grads.iter().zip(&unix_grads).enumerate() {
+            assert_eq!(a.len(), b.len(), "{name} layer {li}: gradient arity");
+            for (pi, (ga, gb)) in a.iter().zip(b).enumerate() {
+                assert_eq!(ga.shape(), gb.shape(), "{name} layer {li} param {pi}");
+                for (va, vb) in ga.data().iter().zip(gb.data()) {
+                    assert_eq!(
+                        va.to_bits(),
+                        vb.to_bits(),
+                        "{name} layer {li} param {pi}: unix vs local bits"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Unix replicas = 2 is fp-equivalent (≤ 1e-5) to in-process
+/// replicas = 1 at the same effective batch for every exact engine —
+/// the transport extension of the PR 3 equivalence grid.
+#[test]
+fn unix_replicas_match_single_replica_for_exact_engines() {
+    let _pin = pin_lock();
+    let cfg = tiny_cfg(2);
+    let net = tiny_net(&cfg);
+    let mut rng = Rng::new(3);
+    let x = Tensor::randn(&[4, 16, 16, 2], 1.0, &mut rng);
+    let labels = vec![1usize, 2, 0, 3];
+    let xs = split_batch(&x, 2).unwrap();
+    for name in EXACT_ENGINES {
+        let engine = engine_by_name(name, 4, 2, 0).unwrap();
+        let full_loss = SoftmaxCrossEntropy::new(labels.clone());
+        let reference = pool::with_threads(4, || {
+            ReplicaGroup::new(1)
+                .unwrap()
+                .compute(
+                    &net,
+                    engine.as_ref(),
+                    &[moonwalk::distributed::Shard {
+                        x: &x,
+                        loss: &full_loss,
+                    }],
+                    ReduceOp::Mean,
+                )
+                .unwrap()
+        });
+        let spec = EngineSpec {
+            name: name.to_string(),
+            block: 4,
+            checkpoint_segments: 2,
+            seed: 0,
+        };
+        let mut unix = unix_transport(&cfg, spec, 2);
+        unix.broadcast(&net).unwrap();
+        let (loss, grads) =
+            step_collect(&mut unix, &net, engine.as_ref(), &xs, &labels, ReduceOp::Mean)
+                .unwrap();
+        assert!(
+            (loss - reference.loss).abs() <= 1e-5 * reference.loss.abs().max(1.0),
+            "{name}: loss {loss} vs {}",
+            reference.loss
+        );
+        for (li, (a, b)) in reference.grads.iter().zip(&grads).enumerate() {
+            assert_eq!(a.len(), b.len(), "{name} layer {li}: arity");
+            for (pi, (ga, gb)) in a.iter().zip(b).enumerate() {
+                let err = rel_err(gb, ga);
+                assert!(
+                    err <= 1e-5,
+                    "{name} layer {li} param {pi}: rel err {err} > 1e-5"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. Failure semantics
+// ---------------------------------------------------------------------------
+
+/// A worker killed out from under the coordinator fails the step with an
+/// error naming the replica; the next broadcast respawns it and the
+/// group serves the following step with correct (bit-identical) results.
+#[test]
+fn worker_death_fails_step_then_group_recovers() {
+    let _pin = pin_lock();
+    let cfg = tiny_cfg(4);
+    let net = tiny_net(&cfg);
+    let mut rng = Rng::new(5);
+    let x = Tensor::randn(&[4, 16, 16, 2], 1.0, &mut rng);
+    let labels = vec![0usize, 1, 2, 3];
+    let xs = split_batch(&x, 2).unwrap();
+    let engine = engine_by_name("backprop", 4, 0, 0).unwrap();
+    let mut unix = unix_transport(&cfg, EngineSpec::new("backprop"), 2);
+    unix.broadcast(&net).unwrap();
+    let (loss0, grads0) =
+        step_collect(&mut unix, &net, engine.as_ref(), &xs, &labels, ReduceOp::Mean).unwrap();
+
+    // Kill replica 1's subprocess without telling the transport, so the
+    // failure is discovered mid-step exactly as a real crash would be.
+    assert!(unix.worker_ids()[1].is_some(), "replica 1 alive");
+    unix.simulate_worker_crash(1).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(50));
+
+    let err = step_collect(&mut unix, &net, engine.as_ref(), &xs, &labels, ReduceOp::Mean)
+        .expect_err("step against a dead worker must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("replica 1"), "error should name the replica: {msg}");
+
+    // Recovery: broadcast respawns the dead worker and re-uploads the
+    // parameters; the next step matches the pre-crash one bit-for-bit.
+    unix.broadcast(&net).unwrap();
+    assert!(unix.worker_ids().iter().all(|p| p.is_some()), "respawned");
+    let (loss1, grads1) =
+        step_collect(&mut unix, &net, engine.as_ref(), &xs, &labels, ReduceOp::Mean).unwrap();
+    assert_eq!(loss1.to_bits(), loss0.to_bits(), "post-recovery loss");
+    for (a, b) in grads0.iter().zip(&grads1) {
+        for (ga, gb) in a.iter().zip(b) {
+            assert_eq!(ga.data(), gb.data(), "post-recovery grads bit-identical");
+        }
+    }
+}
+
+/// The coordinator's own fault-injection kill marks the replica
+/// unsynced: stepping without a broadcast is rejected up front, and a
+/// broadcast restores service.
+#[test]
+fn kill_worker_requires_rebroadcast_before_stepping() {
+    let _pin = pin_lock();
+    let cfg = tiny_cfg(6);
+    let net = tiny_net(&cfg);
+    let mut rng = Rng::new(7);
+    let x = Tensor::randn(&[2, 16, 16, 2], 1.0, &mut rng);
+    let labels = vec![0usize, 3];
+    let xs = split_batch(&x, 2).unwrap();
+    let engine = engine_by_name("backprop", 4, 0, 0).unwrap();
+    let mut unix = unix_transport(&cfg, EngineSpec::new("backprop"), 2);
+    unix.broadcast(&net).unwrap();
+    unix.kill_worker(0).unwrap();
+    let err = step_collect(&mut unix, &net, engine.as_ref(), &xs, &labels, ReduceOp::Mean)
+        .expect_err("unsynced group must refuse to step");
+    assert!(format!("{err:#}").contains("broadcast"), "{err:#}");
+    unix.broadcast(&net).unwrap();
+    step_collect(&mut unix, &net, engine.as_ref(), &xs, &labels, ReduceOp::Mean)
+        .expect("group must serve again after rebroadcast");
+}
+
+// ---------------------------------------------------------------------------
+// 4. End-to-end training through subprocesses
+// ---------------------------------------------------------------------------
+
+/// The full trainer loop — per-step parameter broadcast, sharded
+/// compute in worker subprocesses, streamed reduce, optimizer apply —
+/// runs end-to-end over the unix transport and records it in the
+/// metrics.
+#[test]
+fn trainer_end_to_end_over_unix_transport() {
+    use moonwalk::coordinator::{Optimizer, OptimizerKind, SyntheticSpec, TextureDataset, Trainer};
+    let _pin = pin_lock();
+    let cfg = tiny_cfg(8);
+    let mut net = tiny_net(&cfg);
+    let data = TextureDataset::generate(
+        SyntheticSpec {
+            hw: 16,
+            cin: 2,
+            classes: 4,
+            noise: 0.15,
+            seed: 8,
+        },
+        40,
+    );
+    let (train, test) = data.split(0.2);
+    let engine = engine_by_name("moonwalk", cfg.block, cfg.checkpoint_every, cfg.seed).unwrap();
+    let opt = Optimizer::new(OptimizerKind::Sgd, 1e-3, &net, false);
+    let unix = unix_transport(&cfg, EngineSpec::new("moonwalk"), 2);
+    let mut trainer = Trainer::new(&mut net, engine.as_ref(), opt);
+    trainer.replicas = 2;
+    trainer.log_every = 1;
+    trainer.transport = Some(Box::new(unix));
+    let dir = std::env::temp_dir().join("moonwalk_transport_e2e_test");
+    let path = dir.join("metrics.jsonl");
+    let mut rng = Rng::new(9);
+    let report = trainer
+        .train(&train, &test, 4, 3, &mut rng, Some(&path))
+        .unwrap();
+    assert_eq!(report.replicas, 2);
+    assert_eq!(report.transport, "unix");
+    assert!(report.final_loss.is_finite());
+    let text = std::fs::read_to_string(&path).unwrap();
+    let first = Json::parse(text.lines().next().unwrap()).unwrap();
+    assert_eq!(first.req_str("transport").unwrap(), "unix");
+    assert_eq!(first.req_usize("replicas").unwrap(), 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The trainer over the unix transport draws the same data sequence and
+/// produces a finite, comparable loss curve to the in-process transport
+/// (fp-equivalent updates ⇒ closely tracking losses).
+#[test]
+fn trainer_unix_matches_local_loss_curve() {
+    use moonwalk::coordinator::{Optimizer, OptimizerKind, SyntheticSpec, TextureDataset, Trainer};
+    let _pin = pin_lock();
+    let cfg = tiny_cfg(10);
+    let data = TextureDataset::generate(
+        SyntheticSpec {
+            hw: 16,
+            cin: 2,
+            classes: 4,
+            noise: 0.15,
+            seed: 10,
+        },
+        40,
+    );
+    let (train, test) = data.split(0.2);
+    let run = |transport: Option<Box<dyn Transport>>| {
+        let mut net = tiny_net(&cfg);
+        let engine =
+            engine_by_name("backprop", cfg.block, cfg.checkpoint_every, cfg.seed).unwrap();
+        let opt = Optimizer::new(OptimizerKind::Sgd, 1e-3, &net, false);
+        let mut trainer = Trainer::new(&mut net, engine.as_ref(), opt);
+        trainer.replicas = 2;
+        trainer.transport = transport;
+        let mut rng = Rng::new(11);
+        trainer.train(&train, &test, 4, 4, &mut rng, None).unwrap()
+    };
+    let local = run(None);
+    let unix = run(Some(Box::new(unix_transport(
+        &cfg,
+        EngineSpec::new("backprop"),
+        2,
+    ))));
+    assert_eq!(local.loss_curve.len(), unix.loss_curve.len());
+    for (step, (a, b)) in local.loss_curve.iter().zip(&unix.loss_curve).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-4 * a.abs().max(1.0),
+            "step {step}: local {a} vs unix {b}"
+        );
+    }
+}
