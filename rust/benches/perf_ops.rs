@@ -7,10 +7,13 @@
 //! split, allocation churn (cold + steady-state), the data-parallel
 //! replica-scaling family (`replicas_rows` in the JSON: step/reduce
 //! medians at replicas {1,2[,4]} — the streamed all-reduce's overlap
-//! signal) and the transport-overhead family (`transport_rows`:
+//! signal), the transport-overhead family (`transport_rows`:
 //! local vs unix-socket worker subprocesses at equal replica counts)
-//! for the §Perf log. The full field-by-field schema of the emitted
-//! `BENCH_perf_ops.json` lives in `docs/BENCH_SCHEMA.md`.
+//! and the budgeted-planner family (`planner_rows`: the per-layer
+//! mixed-strategy plan vs the best whole-network engine across a byte
+//! budget sweep — predicted and measured peaks plus the budget
+//! invariant) for the §Perf log. The full field-by-field schema of the
+//! emitted `BENCH_perf_ops.json` lives in `docs/BENCH_SCHEMA.md`.
 //!
 //! Flags (after `--`):
 //! * `--quick`      — 3 iterations instead of 15 (the tier-1 smoke run)
@@ -448,6 +451,112 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // Budgeted-planner family (ISSUE 5): sweep byte budgets on the
+    // fragmental 1-D net — the architecture where per-layer strategy
+    // mixing (fragment-block search + selective checkpoints) separates
+    // from whole-network engine selection — and compare the compiled
+    // per-layer plan against `memsim::plan`'s best single engine at the
+    // same budget, predicted *and* measured. `beats_single` marks budget
+    // points where the mixed plan wins on predicted peak bytes at
+    // equal-or-better predicted time (the memory/depth frontier claim);
+    // `planned_measured_peak` vs the budget is the budget invariant,
+    // live.
+    println!("\nbudgeted per-layer planner (fragmental 1-D, batch 2):");
+    println!(
+        "{:<12} {:<26} {:>12} {:>10} {:>12} {:>12} {:>10} {:>6}",
+        "budget", "mix", "planned_pk", "t_units", "measured_pk", "single_pk", "single_t", "beats"
+    );
+    let mut planner_rows: Vec<Json> = Vec::new();
+    {
+        use moonwalk::autodiff::PlannedEngine;
+        use moonwalk::model::{build_cnn1d_fragmental, FragmentalCnn1dSpec};
+        use moonwalk::plan;
+        // Depth 8: deep enough that BackpropCkpt's √L memory does not
+        // fit at the tight end of the sweep, so the mixed plan's
+        // fragment-block search has a 5×fwd single-engine baseline to
+        // beat there (see `mixed_plan_beats_single_engine_at_some_budget`).
+        let spec = FragmentalCnn1dSpec {
+            input_len: 128,
+            channels: 8,
+            depth: 8,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(5);
+        let net = build_cnn1d_fragmental(&spec, &mut rng);
+        let in_shape = [2usize, 128, 3];
+        let x = Tensor::randn(&in_shape, 1.0, &mut rng);
+        let probes = plan::probe_network(&net, &in_shape, plan::DEFAULT_FRAG_BLOCKS)?;
+        let costs: Vec<moonwalk::memsim::LayerCost> =
+            probes.iter().map(|p| p.cost.clone()).collect();
+        let input_elems: usize = in_shape.iter().product();
+        let fwd_flops: f64 = costs.iter().map(|c| c.flops).sum();
+        let frontier = plan::build_frontier(&probes);
+        let lo = frontier.min_peak();
+        let hi = moonwalk::memsim::predict_memory(&moonwalk::memsim::Method::Backprop, &costs)
+            .max(frontier.max_useful_peak())
+            .max(lo + 1);
+        let fracs: &[usize] = if quick { &[0, 4, 8] } else { &[0, 2, 4, 6, 8] };
+        for &f in fracs {
+            let budget = lo + (hi - lo) * f / 8;
+            let compiled = match frontier.select(&probes, Some(budget)) {
+                Ok(p) => p,
+                Err(_) => continue,
+            };
+            let single = moonwalk::memsim::plan(&costs, budget, true, input_elems);
+            // Measured: one tracked + timed gradient computation of the
+            // planned engine under this budget (grad-free accounting,
+            // dropping sink — the paper's memory metric).
+            let engine = PlannedEngine::with_budget(Some(budget));
+            engine.prepare(&net, &in_shape)?;
+            let (measured_peak, step_s, _loss) = moonwalk::coordinator::sweep::measure_engine(
+                &engine,
+                &net,
+                &x,
+                &MeanLoss,
+                1,
+                iters.min(5),
+            )?;
+            let planned_t = compiled.time_units / fwd_flops.max(1.0);
+            let (single_label, single_peak, single_t) = match &single {
+                Some((m, mem, t)) => (m.label(), *mem, *t / fwd_flops.max(1.0)),
+                None => ("none".to_string(), 0, 0.0),
+            };
+            // No single engine fitting is NOT a win by default — the
+            // acceptance gate requires beating a real baseline.
+            let beats = single
+                .as_ref()
+                .map(|&(_, mem, t)| {
+                    compiled.planned_peak < mem && compiled.time_units <= t
+                })
+                .unwrap_or(false);
+            println!(
+                "{:<12} {:<26} {:>12} {:>10.2} {:>12} {:>12} {:>10.2} {:>6}",
+                tracker::fmt_bytes(budget),
+                compiled.mix(),
+                tracker::fmt_bytes(compiled.planned_peak),
+                planned_t,
+                tracker::fmt_bytes(measured_peak),
+                tracker::fmt_bytes(single_peak),
+                single_t,
+                beats
+            );
+            planner_rows.push(Json::from_pairs(vec![
+                ("budget", budget.into()),
+                ("mix", compiled.mix().as_str().into()),
+                ("planned_peak", compiled.planned_peak.into()),
+                ("conservative_peak", compiled.conservative_peak.into()),
+                ("planned_time_fwd_units", planned_t.into()),
+                ("planned_step_ms", (step_s * 1e3).into()),
+                ("planned_measured_peak", measured_peak.into()),
+                ("budget_respected", (measured_peak <= budget).into()),
+                ("single_engine", single_label.as_str().into()),
+                ("single_peak", single_peak.into()),
+                ("single_time_fwd_units", single_t.into()),
+                ("beats_single", beats.into()),
+            ]));
+        }
+    }
+
     // Pool lifecycle + arena recycle-rate snapshot for the run (monotone
     // process counters — diff across runs at equal workloads).
     let pstats = pool::stats();
@@ -473,6 +582,7 @@ fn main() -> anyhow::Result<()> {
         ("small_rows", Json::Arr(small_rows)),
         ("replicas_rows", Json::Arr(replica_rows)),
         ("transport_rows", Json::Arr(transport_rows)),
+        ("planner_rows", Json::Arr(planner_rows)),
         ("dispatch_us", dispatch_us.into()),
         (
             "pool",

@@ -12,6 +12,7 @@
 //! | Pure-forward      | [`pure_moonwalk`]| §4.4          |
 //! | Moonwalk+ckpt     | [`moonwalk`] (segments opt) | §11 |
 //! | Moonwalk+fragmental | [`moonwalk`] (block opt)  | §5.1 |
+//! | Planned (budgeted per-layer mix) | [`planned`] | §4–5 + §11 |
 //!
 //! All engines produce **exact** gradients (bitwise-comparable to Backprop
 //! up to fp reassociation) except ProjForward, which is an unbiased but
@@ -22,6 +23,7 @@ pub mod backprop;
 pub mod checkpointed;
 pub mod forward_mode;
 pub mod moonwalk;
+pub mod planned;
 pub mod proj_forward;
 pub mod pure_moonwalk;
 pub mod rev_backprop;
@@ -30,6 +32,7 @@ pub use backprop::Backprop;
 pub use checkpointed::CheckpointedBackprop;
 pub use forward_mode::ForwardMode;
 pub use moonwalk::{Moonwalk, MoonwalkOpts};
+pub use planned::{PlanOpts, PlannedEngine};
 pub use proj_forward::ProjForward;
 pub use pure_moonwalk::PureMoonwalk;
 pub use rev_backprop::RevBackprop;
@@ -63,6 +66,14 @@ pub trait GradEngine: Send + Sync {
         sink: &mut dyn FnMut(usize, Vec<Tensor>),
     ) -> anyhow::Result<f32>;
 
+    /// Predicted peak extra bytes of this engine's compiled execution
+    /// plan, when it has one (the budgeted [`PlannedEngine`] after its
+    /// first plan compiles; `None` for every fixed-strategy engine).
+    /// The trainer logs it beside the measured per-step peak.
+    fn planned_peak_bytes(&self) -> Option<usize> {
+        None
+    }
+
     /// Convenience wrapper collecting all gradients (used by equivalence
     /// tests and simple training loops).
     fn compute(&self, net: &Network, x0: &Tensor, loss: &dyn Loss) -> anyhow::Result<GradResult> {
@@ -79,7 +90,9 @@ pub trait GradEngine: Send + Sync {
 
 /// Instantiate an engine by its config name. Recognized names:
 /// `backprop`, `backprop_ckpt`, `forward`, `projforward`, `revbackprop`,
-/// `moonwalk`, `pure_moonwalk`, `moonwalk_ckpt`, `moonwalk_frag`.
+/// `moonwalk`, `pure_moonwalk`, `moonwalk_ckpt`, `moonwalk_frag`,
+/// `planned` (budgeted per-layer mix; budget from `MOONWALK_BUDGET` —
+/// the CLI's `--budget` constructs it with an explicit budget instead).
 pub fn engine_by_name(
     name: &str,
     block: usize,
@@ -102,6 +115,7 @@ pub fn engine_by_name(
             fragment_block: Some(block),
             ..Default::default()
         })),
+        "planned" => Box::new(PlannedEngine::new(PlanOpts::from_env())),
         other => anyhow::bail!("unknown gradient engine `{other}`"),
     })
 }
@@ -113,4 +127,5 @@ pub const EXACT_ENGINES: &[&str] = &[
     "moonwalk",
     "moonwalk_ckpt",
     "moonwalk_frag",
+    "planned",
 ];

@@ -1,0 +1,388 @@
+//! **PlannedEngine** — Moonwalk's Phase I–III structure executing a
+//! *compiled per-layer plan* (`crate::plan`) instead of the
+//! network-global [`super::MoonwalkOpts`] decisions.
+//!
+//! Where [`super::Moonwalk`] derives one rule for the whole chain
+//! (fragment everything fragmental at one block size, checkpoint every
+//! break), this engine executes whatever mixed strategy the budgeted
+//! planner chose per layer:
+//!
+//! * `Vijp` — Phase III recovers the output cotangent with vijp
+//!   (Eq. 9); nothing stored.
+//! * `Fragment { block }` — Phase II captures §5.1 slices at the
+//!   layer's own block size; Phase III reconstructs (Alg. 3).
+//! * `Residual(Full)` — Phase II checkpoints the full output cotangent
+//!   (§4.1); Phase III skips the vijp sweep for this layer entirely.
+//! * `Residual(Minimal)` — nothing kept, the cotangent chain breaks
+//!   (parameter-free layers only); the next `Residual(Full)` re-anchors
+//!   it — the paper's h₁-seed placement falls out of the planner.
+//!
+//! The plan is compiled lazily from a calibration probe of the concrete
+//! input shape on first use and cached per shape (recompiled when the
+//! shape changes). Probing never touches global tracker state, so lazy
+//! compilation is safe inside an open `tracker::measure` window and
+//! deterministic across runs and replicas — the same (network, shape,
+//! budget) always executes the same plan. Like every engine, gradients
+//! stream layer-by-layer in Phase-III (forward) order, so the engine
+//! drops into `ReplicaGroup`/`Transport` unchanged.
+//!
+//! With an **unbounded** budget the planner checkpoints every cotangent,
+//! which makes this engine's gradients *bit-identical* to Backprop's:
+//! Phase II walks the identical `vjp_input` chain, the checkpoints are
+//! the identical per-layer output cotangents, and Phase III's
+//! recomputed activations are bit-equal to the tape Backprop stored
+//! (`tests/planner.rs` proves the bit-equality).
+
+use std::sync::Mutex;
+
+use crate::autodiff::GradEngine;
+use crate::model::Network;
+use crate::nn::{Fragment, Loss, ResidualKind};
+use crate::plan::{self, CompiledPlan, ResidualTier, Strategy};
+use crate::tensor::Tensor;
+use crate::util::lock_ignore_poison as lock;
+
+/// Construction options for [`PlannedEngine`].
+#[derive(Clone, Debug)]
+pub struct PlanOpts {
+    /// Peak-bytes budget the plan must respect (`None` = unbounded,
+    /// which compiles the fastest — all-checkpoint — plan).
+    pub budget: Option<usize>,
+    /// Fragmental block-size candidates the calibration probe measures
+    /// per layer (the planner searches among them).
+    pub frag_blocks: Vec<usize>,
+}
+
+impl Default for PlanOpts {
+    fn default() -> PlanOpts {
+        PlanOpts {
+            budget: None,
+            frag_blocks: plan::DEFAULT_FRAG_BLOCKS.to_vec(),
+        }
+    }
+}
+
+impl PlanOpts {
+    /// Resolve options from the environment: `MOONWALK_BUDGET` (bytes)
+    /// sets the budget when parseable (the env spelling of the CLI's
+    /// `--budget`). This is how `engine_by_name("planned")` — and the
+    /// replica worker subprocesses it spawns — pick up the budget
+    /// without a dedicated constructor argument.
+    pub fn from_env() -> PlanOpts {
+        let mut opts = PlanOpts::default();
+        if let Ok(v) = std::env::var("MOONWALK_BUDGET") {
+            match v.trim().parse::<usize>() {
+                Ok(b) if b > 0 => opts.budget = Some(b),
+                _ => {
+                    crate::log_warn!(
+                        "MOONWALK_BUDGET=`{v}` is not a positive byte count; ignoring"
+                    );
+                }
+            }
+        }
+        opts
+    }
+}
+
+/// A compiled plan cached for one concrete (network, input shape) pair.
+/// The network is identified by a per-layer fingerprint — the cache must
+/// not serve a plan compiled for a *different* architecture that happens
+/// to share the input shape and depth.
+struct CachedPlan {
+    in_shape: Vec<usize>,
+    fingerprint: Vec<(String, usize)>,
+    plan: CompiledPlan,
+    probes: Vec<plan::LayerProbe>,
+}
+
+/// Per-layer identity the plan cache is keyed on: layer labels carry the
+/// full geometry (kernel/stride/pad/channels), parameter counts catch
+/// the rest.
+fn net_fingerprint(net: &Network) -> Vec<(String, usize)> {
+    net.layers
+        .iter()
+        .map(|l| (l.name(), l.n_params()))
+        .collect()
+}
+
+/// The budgeted mixed-strategy gradient engine (see module docs).
+pub struct PlannedEngine {
+    /// Budget and probe options the plans are compiled under.
+    pub opts: PlanOpts,
+    cache: Mutex<Option<CachedPlan>>,
+}
+
+/// What Phase II parked for Phase III under the compiled plan.
+enum Aid {
+    None,
+    Fragment(Fragment),
+    Checkpoint(Tensor),
+}
+
+impl PlannedEngine {
+    /// An engine compiling plans under `opts`.
+    pub fn new(opts: PlanOpts) -> PlannedEngine {
+        PlannedEngine {
+            opts,
+            cache: Mutex::new(None),
+        }
+    }
+
+    /// Convenience constructor: default probe candidates, explicit
+    /// budget (`None` = unbounded).
+    pub fn with_budget(budget: Option<usize>) -> PlannedEngine {
+        PlannedEngine::new(PlanOpts {
+            budget,
+            ..Default::default()
+        })
+    }
+
+    /// Compile (or fetch the cached) plan for `net` on `in_shape` and
+    /// return a copy — the eager entry the CLI and tests use to print
+    /// the plan table and warm the cache *outside* any measurement
+    /// window.
+    pub fn prepare(&self, net: &Network, in_shape: &[usize]) -> anyhow::Result<CompiledPlan> {
+        let mut cache = lock(&self.cache);
+        let fingerprint = net_fingerprint(net);
+        if let Some(c) = cache.as_ref() {
+            if c.in_shape == in_shape && c.fingerprint == fingerprint {
+                return Ok(c.plan.clone());
+            }
+        }
+        let probes = plan::probe_network(net, in_shape, &self.opts.frag_blocks)?;
+        let compiled = plan::compile(&probes, self.opts.budget)?;
+        let out = compiled.clone();
+        *cache = Some(CachedPlan {
+            in_shape: in_shape.to_vec(),
+            fingerprint,
+            plan: compiled,
+            probes,
+        });
+        Ok(out)
+    }
+
+    /// The probe's summary table for the cached/compiled plan (compiles
+    /// if needed) — what `moonwalk train --engine planned` prints. Uses
+    /// the probes cached beside the plan; no re-probing.
+    pub fn plan_table(&self, net: &Network, in_shape: &[usize]) -> anyhow::Result<String> {
+        let compiled = self.prepare(net, in_shape)?;
+        let cache = lock(&self.cache);
+        let cached = cache.as_ref().expect("prepare just populated the cache");
+        Ok(plan::summary_table(&compiled, &cached.probes))
+    }
+}
+
+impl GradEngine for PlannedEngine {
+    fn name(&self) -> String {
+        match self.opts.budget {
+            Some(b) => format!("planned(budget={b})"),
+            None => "planned".into(),
+        }
+    }
+
+    fn planned_peak_bytes(&self) -> Option<usize> {
+        lock(&self.cache).as_ref().map(|c| c.plan.planned_peak)
+    }
+
+    fn compute_streaming(
+        &self,
+        net: &Network,
+        x0: &Tensor,
+        loss: &dyn Loss,
+        sink: &mut dyn FnMut(usize, Vec<Tensor>),
+    ) -> anyhow::Result<f32> {
+        let compiled = self.prepare(net, x0.shape())?;
+        anyhow::ensure!(
+            compiled.decisions.len() == net.depth(),
+            "plan depth {} does not match network depth {}",
+            compiled.decisions.len(),
+            net.depth()
+        );
+
+        // Phase I: forward with minimal residuals only (identical to
+        // Moonwalk — the plan only changes what Phase II preserves).
+        let mut residuals = Vec::with_capacity(net.depth());
+        let mut x = x0.clone();
+        for layer in &net.layers {
+            let (y, res) = layer.forward_res(&x, ResidualKind::Minimal);
+            residuals.push(Some(res));
+            x = y;
+        }
+        let loss_val = loss.value(&x);
+
+        // Phase II: reverse cotangent sweep, parking per-layer aids as
+        // the plan dictates. The next cotangent is computed *before* a
+        // checkpoint parks `h`, so the checkpoint is a move, not a clone
+        // — bit-identical, one fewer live activation per checkpointed
+        // layer, and no copy (this is the all-layers case at an
+        // unbounded budget).
+        let mut aids: Vec<Aid> = (0..net.depth()).map(|_| Aid::None).collect();
+        let mut h = loss.grad(&x);
+        drop(x);
+        for (i, layer) in net.layers.iter().enumerate().rev() {
+            let res = residuals[i].take().expect("consumed once");
+            let h_next = layer.vjp_input(&res, &h);
+            aids[i] = match compiled.decisions[i].strategy {
+                Strategy::Vijp | Strategy::Residual(ResidualTier::Minimal) => Aid::None,
+                Strategy::Fragment { block } => {
+                    Aid::Fragment(layer.fragment_capture(&h, block).map_err(|e| {
+                        anyhow::anyhow!("planned fragment capture failed at layer {i}: {e}")
+                    })?)
+                }
+                Strategy::Residual(ResidualTier::Full) => Aid::Checkpoint(h),
+            };
+            h = h_next;
+        }
+
+        // Phase III: forward sweep — recompute activations, obtain each
+        // layer's output cotangent per its strategy, emit parameter
+        // gradients, drop everything before moving on.
+        let mut x = x0.clone();
+        let mut h = Some(h);
+        for (i, layer) in net.layers.iter().enumerate() {
+            let (y, res) = layer.forward_res(&x, ResidualKind::Minimal);
+            let strategy = compiled.decisions[i].strategy;
+            // Take the input cotangent out of the chain slot so it drops
+            // the moment the output cotangent exists — `vjp_params`'s
+            // scratch leases must not stack on top of a cotangent the
+            // layer no longer needs (the planner's conservative transient
+            // bound counts on this).
+            let h_in = h.take();
+            let h_out = match (std::mem::replace(&mut aids[i], Aid::None), strategy) {
+                (Aid::Checkpoint(ck), _) => Some(ck),
+                (Aid::Fragment(frag), _) => {
+                    let h_in = h_in.as_ref().ok_or_else(|| {
+                        anyhow::anyhow!("planned fragment at layer {i} needs an intact chain")
+                    })?;
+                    Some(layer.fragment_reconstruct(&frag, h_in).map_err(|e| {
+                        anyhow::anyhow!("planned reconstruction failed at layer {i}: {e}")
+                    })?)
+                }
+                (Aid::None, Strategy::Residual(ResidualTier::Minimal)) => None,
+                (Aid::None, _) => {
+                    let h_in = h_in.as_ref().ok_or_else(|| {
+                        anyhow::anyhow!("planned vijp at layer {i} needs an intact chain")
+                    })?;
+                    Some(layer.vijp(&res, h_in).map_err(|e| {
+                        anyhow::anyhow!("planned Phase III vijp failed at layer {i}: {e}")
+                    })?)
+                }
+            };
+            drop(h_in);
+            if layer.n_params() > 0 {
+                let h_out = h_out
+                    .as_ref()
+                    .expect("validated plans anchor parameterized layers");
+                sink(i, layer.vjp_params(&x, h_out));
+            }
+            x = y;
+            h = h_out;
+        }
+        Ok(loss_val)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::Backprop;
+    use crate::model::{build_cnn2d, SubmersiveCnn2dSpec};
+    use crate::nn::MeanLoss;
+    use crate::tensor::assert_close;
+    use crate::util::Rng;
+
+    fn small_net(seed: u64, depth: usize) -> (Network, Tensor) {
+        let mut rng = Rng::new(seed);
+        let spec = SubmersiveCnn2dSpec {
+            input_hw: 16,
+            depth,
+            channels: 4,
+            cin: 2,
+            classes: 3,
+            ..Default::default()
+        };
+        let net = build_cnn2d(&spec, &mut rng);
+        let x = Tensor::randn(&[2, 16, 16, 2], 1.0, &mut rng);
+        (net, x)
+    }
+
+    #[test]
+    fn unbounded_plan_is_bit_identical_to_backprop() {
+        let (net, x) = small_net(0, 3);
+        let bp = Backprop.compute(&net, &x, &MeanLoss).unwrap();
+        let engine = PlannedEngine::with_budget(None);
+        let got = engine.compute(&net, &x, &MeanLoss).unwrap();
+        assert_eq!(bp.loss.to_bits(), got.loss.to_bits());
+        for (a, b) in bp.grads.iter().flatten().zip(got.grads.iter().flatten()) {
+            assert_eq!(a.data(), b.data(), "all-checkpoint plan must equal backprop");
+        }
+    }
+
+    #[test]
+    fn tight_budget_matches_backprop_to_tolerance() {
+        let (net, x) = small_net(1, 3);
+        let probes = plan::probe_network(&net, x.shape(), plan::DEFAULT_FRAG_BLOCKS).unwrap();
+        let frontier = plan::build_frontier(&probes);
+        let engine = PlannedEngine::with_budget(Some(frontier.min_peak()));
+        let bp = Backprop.compute(&net, &x, &MeanLoss).unwrap();
+        let got = engine.compute(&net, &x, &MeanLoss).unwrap();
+        assert!((bp.loss - got.loss).abs() < 1e-6);
+        for (li, (a, b)) in bp.grads.iter().zip(&got.grads).enumerate() {
+            for (ga, gb) in a.iter().zip(b) {
+                assert_close(gb, ga, 5e-3, &format!("layer {li}"));
+            }
+        }
+    }
+
+    #[test]
+    fn streams_in_forward_order_and_reports_peak() {
+        let (net, x) = small_net(2, 2);
+        let engine = PlannedEngine::with_budget(None);
+        assert!(engine.planned_peak_bytes().is_none(), "no plan before first use");
+        let mut order = Vec::new();
+        engine
+            .compute_streaming(&net, &x, &MeanLoss, &mut |i, _| order.push(i))
+            .unwrap();
+        let mut sorted = order.clone();
+        sorted.sort();
+        assert_eq!(order, sorted, "planned engine streams forward");
+        assert!(engine.planned_peak_bytes().unwrap() > 0);
+    }
+
+    #[test]
+    fn plan_recompiles_on_network_change() {
+        let (net_a, x) = small_net(5, 2);
+        let engine = PlannedEngine::with_budget(None);
+        engine.prepare(&net_a, x.shape()).unwrap();
+        let peak_a = engine.planned_peak_bytes().unwrap();
+        // Same depth and input shape, different channel width — the
+        // fingerprint must keep the cache from serving net_a's plan.
+        let mut rng = Rng::new(6);
+        let spec = SubmersiveCnn2dSpec {
+            input_hw: 16,
+            depth: 2,
+            channels: 6,
+            cin: 2,
+            classes: 3,
+            ..Default::default()
+        };
+        let net_b = crate::model::build_cnn2d(&spec, &mut rng);
+        assert_eq!(net_a.depth(), net_b.depth());
+        engine.prepare(&net_b, x.shape()).unwrap();
+        let peak_b = engine.planned_peak_bytes().unwrap();
+        assert_ne!(peak_a, peak_b, "different architecture must re-plan");
+    }
+
+    #[test]
+    fn plan_recompiles_on_shape_change() {
+        let (net, x) = small_net(3, 2);
+        let engine = PlannedEngine::with_budget(None);
+        engine.prepare(&net, x.shape()).unwrap();
+        let peak_a = engine.planned_peak_bytes().unwrap();
+        let mut rng = Rng::new(9);
+        let x2 = Tensor::randn(&[4, 16, 16, 2], 1.0, &mut rng);
+        engine.compute(&net, &x2, &MeanLoss).unwrap();
+        let peak_b = engine.planned_peak_bytes().unwrap();
+        assert!(peak_b > peak_a, "doubled batch must re-plan with larger peaks");
+    }
+}

@@ -52,6 +52,11 @@ pub struct TrainReport {
     pub reduce_time_s: f64,
     /// Total seconds the step loop was blocked waiting on the prefetcher.
     pub prefetch_wait_s: f64,
+    /// Predicted peak extra bytes of the engine's compiled execution
+    /// plan (`GradEngine::planned_peak_bytes`) — `None` for
+    /// fixed-strategy engines, `Some` for the budgeted `PlannedEngine`.
+    /// Compare against [`Self::peak_mem_bytes`], the measured peak.
+    pub planned_peak_bytes: Option<usize>,
 }
 
 /// Classification trainer binding a network, engine, optimizer and data.
@@ -211,6 +216,17 @@ impl<'a> Trainer<'a> {
                             ("shard_batch", (batch / replicas).into()),
                             ("reduce_s", result.reduce_s.into()),
                             ("prefetch_wait_s", prefetch_wait_s.into()),
+                            // Execution-planner signals: the compiled
+                            // plan's predicted peak (0 when the engine
+                            // has no plan) next to this step's measured
+                            // peak — the budget invariant is
+                            // measured_peak staying at or under the
+                            // `--budget` the plan was compiled for.
+                            (
+                                "planned_peak",
+                                self.engine.planned_peak_bytes().unwrap_or(0).into(),
+                            ),
+                            ("measured_peak", prof.peak_extra_bytes.into()),
                             // Pool-lifecycle deltas for this step:
                             // parallel regions dispatched, worker
                             // wake/park round trips, plus the (monotone)
@@ -248,6 +264,7 @@ impl<'a> Trainer<'a> {
             transport: transport_name,
             reduce_time_s: reduce_total_s,
             prefetch_wait_s: prefetch_total_s,
+            planned_peak_bytes: self.engine.planned_peak_bytes(),
         })
     }
 
@@ -393,6 +410,10 @@ mod tests {
         assert!(text.lines().count() >= 3);
         let first = Json::parse(text.lines().next().unwrap()).unwrap();
         assert!(first.get("loss").as_f64().is_some());
+        // Planner signals: measured peak always present; planned peak is
+        // 0 for fixed-strategy engines like Backprop.
+        assert!(first.req_usize("measured_peak").unwrap() > 0);
+        assert_eq!(first.req_usize("planned_peak").unwrap(), 0);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -24,12 +24,35 @@
 //! after the ordered sum; for power-of-two counts the division is exact,
 //! so exactly-associative payloads (small integers) reduce bit-equal
 //! across replica counts too (`tests/distributed.rs`).
+//!
+//! **Gradient-bucket fusion.** A deep stack of layers with few
+//! parameters each (biases, small convs) pays one reducer round trip —
+//! lock, park, count — per layer per replica.
+//! [`StreamingAllReduce::with_buckets`]
+//! coalesces consecutive small-parameter layers into one bucket: a
+//! bucket completes when *every member layer* has arrived from *every
+//! replica*, then folds its members layer-by-layer (the identical
+//! replica-ordered arithmetic — bucketing changes delivery batching,
+//! never values, so bucketed results are **bit-identical** to
+//! unbucketed ones; `tests/distributed.rs` proves it). Parameter-free
+//! layers are never submitted by any engine, so they always form
+//! never-completing singleton buckets; layers at or above the bucket
+//! threshold stay singletons too, preserving the streamed
+//! fire-on-last-contribution latency where it matters. The parked-bytes
+//! bound grows by at most one bucket's parameter payload per replica.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::tensor::Tensor;
 use crate::util::{lock_ignore_poison as lock, Timer};
+
+/// Default byte threshold for [`StreamingAllReduce::with_buckets`]:
+/// consecutive layers whose parameter payloads are each below this are
+/// coalesced until the bucket reaches it. 16 KiB ≈ a 4k-parameter layer
+/// — far below any conv tap tensor, so real conv/dense layers stay
+/// singleton-streamed.
+pub const DEFAULT_BUCKET_BYTES: usize = 16 * 1024;
 
 /// How per-replica gradients combine.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -42,18 +65,26 @@ pub enum ReduceOp {
     Mean,
 }
 
-/// One layer's partial gradients, parked until every replica reported.
-struct LayerSlot {
-    parts: Vec<Option<Vec<Tensor>>>,
+/// One bucket's partial gradients, parked until every member layer has
+/// reported from every replica. `parts[member][replica]` holds one
+/// layer's per-replica payload.
+struct BucketSlot {
+    parts: Vec<Vec<Option<Vec<Tensor>>>>,
     got: usize,
 }
 
 /// The share-ordered streaming reducer for one gradient step. Cheap to
-/// construct (one `Option` per layer); build a fresh one per step.
+/// construct (one `Option` per bucket); build a fresh one per step.
 pub struct StreamingAllReduce {
     replicas: usize,
     op: ReduceOp,
-    slots: Mutex<Vec<Option<LayerSlot>>>,
+    /// Bucket member lists (layer indices) and the inverse maps.
+    members: Vec<Vec<usize>>,
+    /// `bucket_of[layer]` — the bucket a layer belongs to.
+    bucket_of: Vec<usize>,
+    /// `member_pos[layer]` — the layer's index inside its bucket.
+    member_pos: Vec<usize>,
+    slots: Mutex<Vec<Option<BucketSlot>>>,
     /// Nanoseconds spent inside gradient folds (the overlap metric the
     /// trainer logs as `reduce_s`).
     reduce_ns: AtomicU64,
@@ -61,14 +92,90 @@ pub struct StreamingAllReduce {
     reduced: AtomicUsize,
 }
 
+/// Greedy coalescing of consecutive small-parameter layers (see module
+/// docs): parameter-free layers and layers at/above `min_bucket_bytes`
+/// stay singletons; the rest accumulate until a bucket reaches the
+/// threshold.
+fn bucket_groups(layer_bytes: &[usize], min_bucket_bytes: usize) -> Vec<Vec<usize>> {
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut open: Vec<usize> = Vec::new();
+    let mut open_bytes = 0usize;
+    for (i, &bytes) in layer_bytes.iter().enumerate() {
+        if bytes == 0 {
+            // Never submitted by any engine — must not gate a bucket.
+            groups.push(vec![i]);
+        } else if bytes >= min_bucket_bytes {
+            if !open.is_empty() {
+                groups.push(std::mem::take(&mut open));
+                open_bytes = 0;
+            }
+            groups.push(vec![i]);
+        } else {
+            open.push(i);
+            open_bytes += bytes;
+            if open_bytes >= min_bucket_bytes {
+                groups.push(std::mem::take(&mut open));
+                open_bytes = 0;
+            }
+        }
+    }
+    if !open.is_empty() {
+        groups.push(open);
+    }
+    groups
+}
+
 impl StreamingAllReduce {
-    /// A reducer for `depth` layers across `replicas` participants.
+    /// A reducer for `depth` layers across `replicas` participants, one
+    /// singleton bucket per layer (every layer fires the moment its last
+    /// replica contribution arrives).
     pub fn new(depth: usize, replicas: usize, op: ReduceOp) -> StreamingAllReduce {
+        StreamingAllReduce::from_groups((0..depth).map(|i| vec![i]).collect(), replicas, op)
+    }
+
+    /// A reducer with gradient-bucket fusion: `layer_bytes[i]` is layer
+    /// `i`'s parameter-gradient payload in bytes, and consecutive layers
+    /// below `min_bucket_bytes` coalesce into shared buckets (see module
+    /// docs). Bucketing is a delivery-batching optimization only — the
+    /// per-layer fold arithmetic is unchanged, so reduced values are
+    /// bit-identical to an unbucketed reducer's.
+    pub fn with_buckets(
+        layer_bytes: &[usize],
+        replicas: usize,
+        op: ReduceOp,
+        min_bucket_bytes: usize,
+    ) -> StreamingAllReduce {
+        StreamingAllReduce::from_groups(
+            bucket_groups(layer_bytes, min_bucket_bytes),
+            replicas,
+            op,
+        )
+    }
+
+    fn from_groups(
+        members: Vec<Vec<usize>>,
+        replicas: usize,
+        op: ReduceOp,
+    ) -> StreamingAllReduce {
         assert!(replicas >= 1, "need at least one replica");
+        let depth: usize = members.iter().map(|m| m.len()).sum();
+        let mut bucket_of = vec![usize::MAX; depth];
+        let mut member_pos = vec![usize::MAX; depth];
+        for (b, group) in members.iter().enumerate() {
+            for (pos, &layer) in group.iter().enumerate() {
+                assert!(layer < depth && bucket_of[layer] == usize::MAX);
+                bucket_of[layer] = b;
+                member_pos[layer] = pos;
+            }
+        }
+        let buckets = members.len();
         StreamingAllReduce {
             replicas,
             op,
-            slots: Mutex::new((0..depth).map(|_| None).collect()),
+            members,
+            bucket_of,
+            member_pos,
+            slots: Mutex::new((0..buckets).map(|_| None).collect()),
             reduce_ns: AtomicU64::new(0),
             reduced: AtomicUsize::new(0),
         }
@@ -79,71 +186,113 @@ impl StreamingAllReduce {
         self.replicas
     }
 
+    /// Number of reduce buckets (== depth for an unbucketed reducer).
+    pub fn bucket_count(&self) -> usize {
+        self.members.len()
+    }
+
     /// Submit one replica's gradients for one layer. Returns the reduced
-    /// gradients once the final replica's contribution for that layer
-    /// arrives (on *that* submitter's thread), `None` before. Each
+    /// layers this submission completed — empty while the layer's bucket
+    /// still waits on other contributions, the bucket's full member list
+    /// (ascending layer order, reduced payloads) once this was the last
+    /// one; the fold runs on *this* submitter's thread. Each
     /// (layer, replica) pair may be submitted exactly once; payload
     /// arity/shape must agree across replicas (asserted at fold time).
+    pub fn submit_bucketed(
+        &self,
+        layer: usize,
+        replica: usize,
+        grads: Vec<Tensor>,
+    ) -> Vec<(usize, Vec<Tensor>)> {
+        assert!(replica < self.replicas, "replica {replica} out of range");
+        assert!(
+            layer < self.bucket_of.len(),
+            "layer {layer} out of range"
+        );
+        let bucket = self.bucket_of[layer];
+        let pos = self.member_pos[layer];
+        let n_members = self.members[bucket].len();
+        let slot_parts = {
+            let mut slots = lock(&self.slots);
+            let slot = slots[bucket].get_or_insert_with(|| BucketSlot {
+                parts: (0..n_members)
+                    .map(|_| (0..self.replicas).map(|_| None).collect())
+                    .collect(),
+                got: 0,
+            });
+            assert!(
+                slot.parts[pos][replica].is_none(),
+                "duplicate submission for layer {layer} from replica {replica}"
+            );
+            slot.parts[pos][replica] = Some(grads);
+            slot.got += 1;
+            if slot.got < n_members * self.replicas {
+                return Vec::new();
+            }
+            // Complete: take the slot out so its memory is released the
+            // moment the fold finishes, and fold *outside* the lock so
+            // other buckets keep streaming through meanwhile.
+            slots[bucket].take().expect("slot just filled").parts
+        };
+        let t = Timer::start();
+        let mut out = Vec::with_capacity(n_members);
+        for (pos, layer_parts) in slot_parts.into_iter().enumerate() {
+            let member_layer = self.members[bucket][pos];
+            let mut parts = layer_parts.into_iter().map(|p| p.expect("counted part"));
+            let mut acc = parts.next().expect("replicas >= 1");
+            for part in parts {
+                assert_eq!(
+                    acc.len(),
+                    part.len(),
+                    "layer {member_layer}: gradient arity differs across replicas"
+                );
+                for (a, b) in acc.iter_mut().zip(&part) {
+                    assert_eq!(
+                        a.shape(),
+                        b.shape(),
+                        "layer {member_layer}: gradient shape differs across replicas"
+                    );
+                    for (x, y) in a.data_mut().iter_mut().zip(b.data()) {
+                        *x += y;
+                    }
+                }
+            }
+            if self.op == ReduceOp::Mean && self.replicas > 1 {
+                let inv = 1.0 / self.replicas as f32;
+                for a in acc.iter_mut() {
+                    for x in a.data_mut() {
+                        *x *= inv;
+                    }
+                }
+            }
+            out.push((member_layer, acc));
+        }
+        out.sort_by_key(|(layer, _)| *layer);
+        self.reduce_ns
+            .fetch_add((t.elapsed_s() * 1e9) as u64, Ordering::Relaxed);
+        self.reduced.fetch_add(out.len(), Ordering::Relaxed);
+        out
+    }
+
+    /// Singleton-bucket convenience form of [`Self::submit_bucketed`]:
+    /// `Some(reduced)` when this submission completed the layer, `None`
+    /// before. Panics on reducers built with multi-layer buckets — those
+    /// deliver several layers per completion, so callers must use
+    /// [`Self::submit_bucketed`].
     pub fn submit(
         &self,
         layer: usize,
         replica: usize,
         grads: Vec<Tensor>,
     ) -> Option<Vec<Tensor>> {
-        assert!(replica < self.replicas, "replica {replica} out of range");
-        let slot_parts = {
-            let mut slots = lock(&self.slots);
-            assert!(layer < slots.len(), "layer {layer} out of range");
-            let slot = slots[layer].get_or_insert_with(|| LayerSlot {
-                parts: (0..self.replicas).map(|_| None).collect(),
-                got: 0,
-            });
-            assert!(
-                slot.parts[replica].is_none(),
-                "duplicate submission for layer {layer} from replica {replica}"
-            );
-            slot.parts[replica] = Some(grads);
-            slot.got += 1;
-            if slot.got < self.replicas {
-                return None;
-            }
-            // Complete: take the slot out so its memory is released the
-            // moment the fold finishes, and fold *outside* the lock so
-            // other layers keep streaming through meanwhile.
-            slots[layer].take().expect("slot just filled").parts
-        };
-        let t = Timer::start();
-        let mut parts = slot_parts.into_iter().map(|p| p.expect("counted part"));
-        let mut acc = parts.next().expect("replicas >= 1");
-        for part in parts {
-            assert_eq!(
-                acc.len(),
-                part.len(),
-                "layer {layer}: gradient arity differs across replicas"
-            );
-            for (a, b) in acc.iter_mut().zip(&part) {
-                assert_eq!(
-                    a.shape(),
-                    b.shape(),
-                    "layer {layer}: gradient shape differs across replicas"
-                );
-                for (x, y) in a.data_mut().iter_mut().zip(b.data()) {
-                    *x += y;
-                }
-            }
-        }
-        if self.op == ReduceOp::Mean && self.replicas > 1 {
-            let inv = 1.0 / self.replicas as f32;
-            for a in acc.iter_mut() {
-                for x in a.data_mut() {
-                    *x *= inv;
-                }
-            }
-        }
-        self.reduce_ns
-            .fetch_add((t.elapsed_s() * 1e9) as u64, Ordering::Relaxed);
-        self.reduced.fetch_add(1, Ordering::Relaxed);
-        Some(acc)
+        assert!(
+            layer < self.bucket_of.len() && self.members[self.bucket_of[layer]].len() == 1,
+            "submit() requires a singleton bucket for layer {layer}; \
+             use submit_bucketed() on fused reducers"
+        );
+        let mut out = self.submit_bucketed(layer, replica, grads);
+        debug_assert!(out.len() <= 1);
+        out.pop().map(|(_, g)| g)
     }
 
     /// Wall-clock spent folding, summed over all completed layers.
@@ -159,7 +308,16 @@ impl StreamingAllReduce {
     /// Layers with at least one pending (un-reduced) contribution — zero
     /// after a healthy step; non-zero means a replica died mid-stream.
     pub fn pending_layers(&self) -> usize {
-        lock(&self.slots).iter().filter(|s| s.is_some()).count()
+        lock(&self.slots)
+            .iter()
+            .filter_map(|s| s.as_ref())
+            .map(|slot| {
+                slot.parts
+                    .iter()
+                    .filter(|m| m.iter().any(|p| p.is_some()))
+                    .count()
+            })
+            .sum()
     }
 }
 
@@ -234,5 +392,88 @@ mod tests {
         assert!(r.submit(0, 1, Vec::new()).is_none());
         let out = r.submit(0, 0, Vec::new()).unwrap();
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn bucket_groups_coalesce_small_layers_only() {
+        // bytes: zero-param layers singleton, big layers singleton,
+        // consecutive small layers fused until the threshold.
+        let groups = bucket_groups(&[0, 100, 100, 4096, 0, 100, 100], 256);
+        assert_eq!(
+            groups,
+            vec![
+                vec![0],
+                vec![1, 2], // closed by the big layer 3
+                vec![3],
+                vec![4],
+                vec![5, 6], // tail flush
+            ]
+        );
+        // Threshold closes a bucket as soon as it is reached.
+        let groups = bucket_groups(&[100, 200, 100, 100], 256);
+        assert_eq!(groups, vec![vec![0, 1], vec![2, 3]]);
+    }
+
+    #[test]
+    fn bucketed_fold_bit_identical_to_unbucketed() {
+        // Same submissions through a fused reducer and a singleton one:
+        // the delivered payloads must be bit-identical per layer, only
+        // the delivery batching differs.
+        let bytes = [8usize, 8, 8]; // all below the threshold -> one bucket
+        let payload = |layer: usize, rep: usize| {
+            grad(&[
+                0.1 * (layer as f32 + 1.0) + rep as f32,
+                100.0 / (layer as f32 + 3.0) - rep as f32,
+            ])
+        };
+        let plain = StreamingAllReduce::new(3, 2, ReduceOp::Mean);
+        let mut expect: Vec<Option<Vec<Tensor>>> = vec![None, None, None];
+        for layer in 0..3 {
+            for rep in 0..2 {
+                if let Some(g) = plain.submit(layer, rep, payload(layer, rep)) {
+                    expect[layer] = Some(g);
+                }
+            }
+        }
+        let fused = StreamingAllReduce::with_buckets(&bytes, 2, ReduceOp::Mean, 64);
+        assert_eq!(fused.bucket_count(), 1);
+        let mut delivered = 0usize;
+        for layer in 0..3 {
+            for rep in 0..2 {
+                for (li, g) in fused.submit_bucketed(layer, rep, payload(layer, rep)) {
+                    let e = expect[li].as_ref().unwrap();
+                    assert_eq!(g.len(), e.len());
+                    for (a, b) in g.iter().zip(e) {
+                        assert_eq!(a.data(), b.data(), "layer {li}: fused fold diverged");
+                    }
+                    delivered += 1;
+                }
+            }
+        }
+        assert_eq!(delivered, 3, "whole bucket delivered on the last submission");
+        assert_eq!(fused.reduced_layers(), 3);
+        assert_eq!(fused.pending_layers(), 0);
+    }
+
+    #[test]
+    fn bucket_waits_for_every_member_and_replica() {
+        let fused = StreamingAllReduce::with_buckets(&[8, 8], 2, ReduceOp::Sum, 64);
+        assert!(fused.submit_bucketed(0, 0, grad(&[1.0])).is_empty());
+        assert!(fused.submit_bucketed(1, 0, grad(&[2.0])).is_empty());
+        assert!(fused.submit_bucketed(0, 1, grad(&[3.0])).is_empty());
+        assert_eq!(fused.pending_layers(), 2);
+        let out = fused.submit_bucketed(1, 1, grad(&[4.0]));
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].0, 0);
+        assert_eq!(out[0].1[0].data(), &[4.0]);
+        assert_eq!(out[1].0, 1);
+        assert_eq!(out[1].1[0].data(), &[6.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "singleton bucket")]
+    fn submit_rejected_on_fused_reducers() {
+        let fused = StreamingAllReduce::with_buckets(&[8, 8], 1, ReduceOp::Sum, 64);
+        let _ = fused.submit(0, 0, grad(&[1.0]));
     }
 }

@@ -10,7 +10,7 @@
 //! with the other replicas' still-running sweeps.
 
 use crate::autodiff::GradEngine;
-use crate::distributed::{ReduceOp, ReplicaStep, Shard, StreamingAllReduce};
+use crate::distributed::{ReduceOp, ReplicaStep, Shard};
 use crate::model::Network;
 use crate::nn::Loss;
 use crate::runtime::pool;
@@ -73,7 +73,11 @@ pub(crate) fn fanout_streaming(
             );
         });
     }
-    let reducer = StreamingAllReduce::new(net.depth(), replicas, op);
+    // Bucketed reducer: consecutive small-parameter layers coalesce into
+    // one reduce bucket (bit-identical values, fewer round trips — see
+    // `reduce` module docs); sized conv/dense layers stay
+    // fire-on-last-contribution singletons.
+    let reducer = super::reducer_for(net, replicas, op);
     // One pool region, one task per replica. Shares cover contiguous
     // replica ranges, so the share-ordered merge below concatenates
     // outcomes back in replica order.

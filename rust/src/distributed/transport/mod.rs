@@ -210,8 +210,9 @@ pub fn set_kind(k: TransportKind) {
 }
 
 /// Shared reducer-driving helper for transports: submit one replica's
-/// layer gradients and forward the reduced result to the sink when this
-/// submission completes the layer.
+/// layer gradients and forward every layer this submission completes to
+/// the sink — one layer for singleton buckets, the full member list
+/// (ascending layer order) when it closes a fused bucket.
 pub(crate) fn submit_to_sink(
     reducer: &StreamingAllReduce,
     layer: usize,
@@ -219,9 +220,28 @@ pub(crate) fn submit_to_sink(
     grads: Vec<Tensor>,
     sink: &(dyn Fn(usize, Vec<Tensor>) + Sync),
 ) {
-    if let Some(reduced) = reducer.submit(layer, replica, grads) {
-        sink(layer, reduced);
+    for (li, reduced) in reducer.submit_bucketed(layer, replica, grads) {
+        sink(li, reduced);
     }
+}
+
+/// The transports' shared reducer construction: gradient-bucket fusion
+/// over the network's per-layer parameter payloads at the default
+/// threshold ([`crate::distributed::reduce::DEFAULT_BUCKET_BYTES`]).
+/// Both transports build their per-step reducer here so the fusion map
+/// — and therefore delivery batching — is identical across them.
+pub(crate) fn reducer_for(
+    net: &Network,
+    replicas: usize,
+    op: ReduceOp,
+) -> StreamingAllReduce {
+    let layer_bytes: Vec<usize> = net.layers.iter().map(|l| l.n_params() * 4).collect();
+    StreamingAllReduce::with_buckets(
+        &layer_bytes,
+        replicas,
+        op,
+        crate::distributed::reduce::DEFAULT_BUCKET_BYTES,
+    )
 }
 
 #[cfg(test)]

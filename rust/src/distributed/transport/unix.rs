@@ -40,7 +40,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
 use crate::autodiff::GradEngine;
-use crate::distributed::{ReduceOp, ReplicaStep, StreamingAllReduce};
+use crate::distributed::{ReduceOp, ReplicaStep};
 use crate::model::Network;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
@@ -433,9 +433,11 @@ impl Transport for UnixTransport {
             }
         }
         // Drain all connections concurrently, feeding the shared
-        // replica-ordered reducer; each layer's fold fires on the reader
-        // thread that delivers the last contribution.
-        let reducer = StreamingAllReduce::new(net.depth(), replicas, op);
+        // replica-ordered reducer (bucket-fused exactly like the local
+        // transport's, so delivery batching matches across transports);
+        // each bucket's fold fires on the reader thread that delivers
+        // the last contribution.
+        let reducer = super::reducer_for(net, replicas, op);
         let outcomes: Vec<Result<f32, StepFailure>> = std::thread::scope(|scope| {
             let handles: Vec<_> = self
                 .conns

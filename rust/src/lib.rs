@@ -18,6 +18,14 @@
 //!   **fragmental gradient checkpointing** (paper §5.1).
 //! * [`memsim`] — the analytic time/memory model of the paper's Table 1
 //!   plus a memory-budget planner that picks an engine for a budget.
+//! * [`plan`] — the **budgeted per-layer execution planner**: a
+//!   calibration probe measures each layer's residual tiers on the
+//!   concrete input shape, a Pareto DP assigns every layer a strategy
+//!   (`vijp` / fragmental capture with a searched block size / full or
+//!   minimal cotangent residual) minimizing predicted step time under a
+//!   peak-bytes budget, and [`autodiff::PlannedEngine`] executes the
+//!   compiled mix in the Moonwalk Phase I–III structure (`--budget` /
+//!   `MOONWALK_BUDGET`, `--engine planned`).
 //! * [`coordinator`] — a config-driven trainer (optimizers, synthetic data
 //!   pipelines, JSONL metrics, sweeps).
 //! * [`distributed`] — data-parallel replica sharding behind pluggable
@@ -52,7 +60,9 @@
 //! Data flows bottom-up: [`tensor`] kernels are scheduled by
 //! [`runtime::pool`]; [`nn`] layers compose them into the four
 //! differential operators; [`autodiff`] engines sequence those operators
-//! into gradient strategies; [`model`] stacks layers into networks;
+//! into gradient strategies; [`plan`] compiles a *per-layer* strategy
+//! mix under a byte budget for [`autodiff::PlannedEngine`] to execute;
+//! [`model`] stacks layers into networks;
 //! [`coordinator`] trains them; [`distributed`] replicates the whole
 //! thing across pool shares or worker subprocesses. `docs/ARCHITECTURE.md`
 //! is the narrative version of this map — paper equation → module — and
@@ -71,6 +81,7 @@ pub mod distributed;
 pub mod memsim;
 pub mod model;
 pub mod nn;
+pub mod plan;
 pub mod runtime;
 pub mod tensor;
 pub mod util;

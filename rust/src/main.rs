@@ -6,8 +6,10 @@
 //! * `gradcheck --config cfg.json` — verify every applicable engine
 //!   produces Backprop's gradients on the configured network.
 //! * `audit     --config cfg.json` — per-layer submersivity report.
-//! * `plan      --config cfg.json --budget-mb N` — Table-1 model +
-//!   planner: predicted memory/time per method, chosen engine.
+//! * `plan      --config cfg.json --budget-mb N [--budget BYTES]` —
+//!   Table-1 model + planner: predicted memory/time per method, chosen
+//!   whole-network engine, and the **per-layer mixed-strategy plan**
+//!   (`plan::compile`) for the same budget.
 //! * `sweep     --config cfg.json --depths 1,2,..` — memory/time sweep
 //!   (the Fig. 2 / Fig. 3 measurement, printable without cargo bench).
 //!
@@ -28,6 +30,14 @@
 //!   gives each replica its own process memory budget; gradients are
 //!   bit-identical to the in-process transport at the same replica
 //!   count.
+//! * `--engine NAME` — override the config's gradient engine for
+//!   `train` (any `autodiff::engine_by_name` name, plus `planned`).
+//! * `--budget BYTES` — peak-memory budget for the `planned` engine
+//!   (`kb`/`mb`/`gb` suffixes accepted; `MOONWALK_BUDGET` is the env
+//!   spelling, plain bytes): a calibration probe measures the per-layer
+//!   residual tiers on the configured shape and the planner compiles a
+//!   per-layer strategy mix whose predicted peak respects the budget.
+//!   `train --engine planned` prints the plan table before training.
 //!
 //! Hidden mode: `--replica-worker --connect <socket> --replica <r>` is
 //! the subprocess entry the unix transport spawns; it is not part of the
@@ -51,13 +61,58 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    let cfg = load_config(args)?;
+    let mut cfg = load_config(args)?;
     if cfg.arch != ArchKind::Cnn2d {
         anyhow::bail!("train currently supports the cnn2d classifier configs");
     }
+    // `--engine` overrides the config (the `--budget` knob pairs with
+    // `--engine planned`, so the config file need not change per run).
+    if let Some(name) = args.get("engine") {
+        cfg.engine = name.to_string();
+    }
     let mut rng = Rng::new(cfg.seed);
     let mut net = cfg.build_network(&mut rng);
-    let engine = engine_by_name(&cfg.engine, cfg.block, cfg.checkpoint_every, cfg.seed)?;
+    let replicas_for_shape = moonwalk::distributed::replicas().max(1);
+    let engine: Box<dyn GradEngine> = if cfg.engine == "planned" {
+        let budget = moonwalk::cli::budget_bytes(args)?;
+        let planned = moonwalk::autodiff::PlannedEngine::new(moonwalk::autodiff::PlanOpts {
+            budget,
+            ..Default::default()
+        });
+        // Plans are per concrete input shape: each replica differentiates
+        // a shard of the global batch, so compile for the shard shape and
+        // print the table before training (this also warms the plan cache
+        // outside the trainer's per-step measurement window).
+        anyhow::ensure!(
+            cfg.batch % replicas_for_shape == 0,
+            "batch {} is not divisible into {replicas_for_shape} replicas",
+            cfg.batch
+        );
+        let mut shard_shape = cfg.input_shape();
+        shard_shape[0] = cfg.batch / replicas_for_shape;
+        // Replica worker subprocesses rebuild the engine from its name
+        // via `engine_by_name("planned")`, which reads MOONWALK_BUDGET —
+        // export the flag's value so `--transport unix` workers compile
+        // the identical plan.
+        if let Some(b) = budget {
+            std::env::set_var("MOONWALK_BUDGET", b.to_string());
+        }
+        let compiled = planned.prepare(&net, &shard_shape)?;
+        println!("execution plan (shard shape {shard_shape:?}):");
+        print!("{}", planned.plan_table(&net, &shard_shape)?);
+        println!(
+            "budget={} planned_peak={} conservative_peak={}",
+            match budget {
+                Some(b) => tracker::fmt_bytes(b),
+                None => "unbounded".into(),
+            },
+            tracker::fmt_bytes(compiled.planned_peak),
+            tracker::fmt_bytes(compiled.conservative_peak)
+        );
+        Box::new(planned)
+    } else {
+        engine_by_name(&cfg.engine, cfg.block, cfg.checkpoint_every, cfg.seed)?
+    };
     let data = TextureDataset::generate(
         SyntheticSpec {
             classes: cfg.classes,
@@ -106,7 +161,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     )?;
     println!(
         "engine={} steps={} replicas={} transport={} final_loss={:.4} train_acc={:.3} \
-         test_acc={:.3} peak_mem={} time={:.1}s reduce={:.2}s prefetch_wait={:.2}s",
+         test_acc={:.3} peak_mem={} time={:.1}s reduce={:.2}s prefetch_wait={:.2}s{}",
         engine.name(),
         report.steps,
         report.replicas,
@@ -117,7 +172,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         tracker::fmt_bytes(report.peak_mem_bytes),
         report.total_time_s,
         report.reduce_time_s,
-        report.prefetch_wait_s
+        report.prefetch_wait_s,
+        match report.planned_peak_bytes {
+            Some(p) => format!(" planned_peak={}", tracker::fmt_bytes(p)),
+            None => String::new(),
+        }
     );
     Ok(())
 }
@@ -247,6 +306,17 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
             tracker::fmt_bytes(budget)
         ),
     }
+
+    // The per-layer mixed-strategy plan for the same budget (`--budget`
+    // overrides `--budget-mb` for this section when given): calibration
+    // probe + Pareto DP, the `--engine planned` execution plan.
+    let layer_budget = moonwalk::cli::budget_bytes(args)?.unwrap_or(budget);
+    let probes = moonwalk::plan::probe_network(&net, &in_shape, moonwalk::plan::DEFAULT_FRAG_BLOCKS)?;
+    println!("\nper-layer execution plan (budget {}):", tracker::fmt_bytes(layer_budget));
+    match moonwalk::plan::compile(&probes, Some(layer_budget)) {
+        Ok(compiled) => print!("{}", moonwalk::plan::summary_table(&compiled, &probes)),
+        Err(e) => println!("  no per-layer plan fits: {e}"),
+    }
     Ok(())
 }
 
@@ -321,7 +391,7 @@ fn main() {
             eprintln!(
                 "usage: moonwalk <train|gradcheck|audit|plan|sweep> [--config cfg.json] \
                  [--threads N] [--gemm auto|scalar|blocked|parallel] [--replicas N] \
-                 [--transport local|unix] ...\n\
+                 [--transport local|unix] [--engine NAME] [--budget BYTES] ...\n\
                  (got {other:?}; see README.md)"
             );
             std::process::exit(2);

@@ -31,6 +31,20 @@ pub struct LayerCost {
     pub flops: f64,
     pub submersive: bool,
     pub fragmental_ok: bool,
+    /// Does the layer's vijp avoid the sequential spatial wavefront
+    /// (`Submersivity::Submersive { fast_path }`)? The per-layer planner
+    /// (`crate::plan`) charges wavefront vijps extra time.
+    pub fast_vijp: bool,
+}
+
+/// Bytes of the §5.1 fragmental cotangent checkpoint for a layer whose
+/// output cotangent occupies `act_bytes`: the first `k − 1` slices of
+/// each block of `block` positions. The analytic twin of
+/// `Layer::fragment_capture`'s storage (which additionally rounds the
+/// tail block up — the calibration probe in `crate::plan` measures that
+/// exactly).
+pub fn fragment_checkpoint_bytes(act_bytes: usize, block: usize, k: usize) -> usize {
+    act_bytes * (k.saturating_sub(1)) / block.max(1)
 }
 
 /// Profile a network on a concrete input shape by running each layer's
@@ -45,6 +59,10 @@ pub fn profile(net: &Network, in_shape: &[usize]) -> anyhow::Result<Vec<LayerCos
         let mx = residual_bytes(&res_min);
         let full = residual_bytes(&res_full);
         let sub = layer.submersivity();
+        let (submersive, fast_vijp) = match &sub {
+            Submersivity::Submersive { fast_path } => (true, *fast_path),
+            Submersivity::NonSubmersive { .. } => (false, false),
+        };
         costs.push(LayerCost {
             name: layer.name(),
             mx,
@@ -53,7 +71,7 @@ pub fn profile(net: &Network, in_shape: &[usize]) -> anyhow::Result<Vec<LayerCos
             in_bytes: x.bytes(),
             d_params: layer.n_params(),
             flops: layer.flops_estimate(x.shape()),
-            submersive: sub.is_submersive(),
+            submersive,
             fragmental_ok: matches!(
                 sub,
                 Submersivity::NonSubmersive {
@@ -61,6 +79,7 @@ pub fn profile(net: &Network, in_shape: &[usize]) -> anyhow::Result<Vec<LayerCos
                     ..
                 }
             ),
+            fast_vijp,
         });
         x = y;
     }
@@ -139,7 +158,7 @@ pub fn predict_memory(method: &Method, costs: &[LayerCost]) -> usize {
                 // vijp continues the chain for free
             } else if chain_ok && c.fragmental_ok && frag_block.is_some() {
                 let (block, k) = frag_block.unwrap();
-                total += c.act_bytes * (k - 1) / block;
+                total += fragment_checkpoint_bytes(c.act_bytes, block, k);
             } else if c.d_params > 0 {
                 // anchor: checkpoint this layer's output cotangent
                 total += c.act_bytes;

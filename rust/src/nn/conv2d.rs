@@ -418,6 +418,32 @@ impl Conv2d {
         let img_h = hh * ww * cin;
         let img_hp = ho * wo * cout;
         let fast = self.vijp_fast_path();
+        // Batch-1 spatial fast path: with no spatial coupling (Alg. 2)
+        // every output position is solved independently, so a
+        // single-image batch partitions the *output rows* into bands —
+        // each worker gathers its band's pivot rows and runs the
+        // identical per-position triangular solve, making the banded
+        // result bit-identical to the serial one. The wavefront regime
+        // stays serial at batch 1 (its positions couple). Same
+        // minimum-work floor philosophy as the other row-band paths.
+        let spatial = if n == 1 && fast && img_hp * self.k * self.k >= SPATIAL_MIN_TAP_ELEMS {
+            pool::effective_threads(ho)
+        } else {
+            1
+        };
+        if spatial > 1 {
+            let ranges = pool::chunk_ranges(ho, spatial);
+            let spans: Vec<std::ops::Range<usize>> = ranges
+                .iter()
+                .map(|r| r.start * wo * cout..r.end * wo * cout)
+                .collect();
+            pool::run_spans(hp.data_mut(), &spans, spatial, |band, chunk| {
+                let rows = ranges[band].clone();
+                let mut cols = arena::take(cout * rows.len() * wo);
+                self.vijp_rows_fast(hd, chunk, &mut cols, ww, rows, wo);
+            });
+            return Ok(hp);
+        }
         // Images are independent in both regimes (even the wavefront only
         // couples positions *within* an image), so the batch axis fans
         // out across the worker pool.
@@ -453,14 +479,33 @@ impl Conv2d {
         ho: usize,
         wo: usize,
     ) {
+        self.vijp_rows_fast(h_img, hp_img, cols, ww, 0..ho, wo);
+    }
+
+    /// [`Self::vijp_img_fast`] restricted to output rows `rows` — the
+    /// unit of the batch-1 spatial fast path. `hp_band` is the
+    /// `[rows·W', Cout]` output slice for the band, `cols` its
+    /// `[Cout, rows·W']` channel-major workspace. Each position's
+    /// gather/solve/scatter arithmetic is independent of the banding, so
+    /// any band partition is bit-identical to the full-image call.
+    fn vijp_rows_fast(
+        &self,
+        h_img: &[f32],
+        hp_band: &mut [f32],
+        cols: &mut [f32],
+        ww: usize,
+        rows: std::ops::Range<usize>,
+        wo: usize,
+    ) {
         let (k, s, p, cin, cout) = (self.k, self.stride, self.pad, self.cin, self.cout);
         let wd = self.w.data();
-        let npos = ho * wo;
+        let npos = rows.len() * wo;
+        let hp_img = hp_band;
         // Gather pivot rows hs[a,b,co] = h[s·a, s·b, co].
-        for a in 0..ho {
+        for (local, a) in rows.enumerate() {
             for b in 0..wo {
                 let src = ((s * a) * ww + s * b) * cin;
-                let pos = a * wo + b;
+                let pos = local * wo + b;
                 for co in 0..cout {
                     cols[co * npos + pos] = h_img[src + co];
                 }

@@ -1,0 +1,46 @@
+//! Budgeted per-layer execution planning — the `--budget <bytes>` knob.
+//!
+//! The paper's core move is choosing, per layer, how much residual state
+//! to keep: nothing for submersive layers (vijp recovers the cotangent,
+//! Eq. 9), fragmental slices for non-submersive layers that support
+//! them (§5.1), and full cotangent checkpoints otherwise (§4.1). The
+//! whole-network planner in [`crate::memsim`] picks **one** engine for
+//! the whole chain; this module mixes strategies *per layer*, which is
+//! where the real memory/time Pareto frontier lives (cf. Beaumont et
+//! al., *Optimal checkpointing for heterogeneous chains*, which solves
+//! the analogous per-layer-under-budget problem for classic activation
+//! checkpointing).
+//!
+//! Three pieces:
+//!
+//! * [`probe`] — the calibration probe: per-layer residual tiers
+//!   *measured* on the concrete input shape (one forward per tier, one
+//!   `fragment_capture` per candidate block), carried beside the
+//!   analytic [`crate::memsim::LayerCost`] so predicted-vs-measured
+//!   drift is visible in the plan report.
+//! * [`planner`] — the Pareto DP over the layer chain: per layer one of
+//!   `Vijp` / `Fragment { block }` / `Residual(Full | Minimal)`,
+//!   minimizing predicted step time subject to a peak-bytes budget. The
+//!   frontier is budget-independent (build once, select per budget),
+//!   which makes budget monotonicity exact.
+//! * [`crate::autodiff::PlannedEngine`] — executes a compiled plan in
+//!   the Moonwalk Phase I–III structure, streaming gradients layer by
+//!   layer like every other engine, so it drops into
+//!   `ReplicaGroup`/`Transport` unchanged.
+//!
+//! The budget invariant: a selected plan's
+//! [`planner::CompiledPlan::conservative_peak`] never exceeds the
+//! budget, and the conservative transient bound is what makes the
+//! engine's *measured* `tracker` peak respect the budget too —
+//! `rust/tests/planner.rs` enforces both halves.
+
+#![deny(missing_docs)]
+
+pub mod planner;
+pub mod probe;
+
+pub use planner::{
+    build_frontier, compile, summary_table, validate, CompiledPlan, LayerDecision, PlanFrontier,
+    ResidualTier, Strategy,
+};
+pub use probe::{probe_network, FragmentProbe, LayerProbe, DEFAULT_FRAG_BLOCKS};

@@ -1,0 +1,212 @@
+//! Calibration probe: per-layer residual-tier measurements on a concrete
+//! input shape.
+//!
+//! The analytic Table-1 model ([`crate::memsim::profile`]) predicts each
+//! layer's residual tiers from static accounting. The probe *measures*
+//! them instead, by constructing the real objects the gradient engines
+//! keep alive — one forward per residual tier plus one
+//! [`crate::nn::Layer::fragment_capture`] per candidate block — and
+//! reading off exactly the byte counts those objects register with
+//! [`crate::tensor::tracker`] (every `Tensor`/`BitTensor`/index payload
+//! registers its bytes on construction; `tests/planner.rs` cross-checks
+//! the probe's numbers against live `tracker::current()` deltas while
+//! the residuals are held). Both views ride in one [`LayerProbe`] so the
+//! planner's report can show predicted-vs-measured drift per layer —
+//! the analytic fragment formula, for instance, ignores the rounded-up
+//! tail block that the real capture stores.
+//!
+//! The probe deliberately avoids the *global* tracker state
+//! (`measure`/`reset_peak`/`measure_lock`): it may run lazily inside an
+//! open `tracker::measure` window (the trainer's first step, a replica
+//! worker), where taking the measurement lock would deadlock and
+//! resetting the peak would corrupt the caller's profile. Determinism
+//! matters for the same reason — plans compiled from a probe must be
+//! identical across runs and replicas, so every number here is a pure
+//! function of the network and input shape.
+
+use crate::memsim::{self, LayerCost};
+use crate::model::Network;
+use crate::nn::{residual_bytes, ResidualKind};
+use crate::tensor::Tensor;
+
+/// Candidate fragmental block sizes the probe measures by default
+/// (superset of the whole-network planner's `{8, 16}` candidates — the
+/// per-layer search is exactly where larger blocks start to pay).
+pub const DEFAULT_FRAG_BLOCKS: &[usize] = &[8, 16, 32];
+
+/// One measured fragmental-capture candidate for a layer.
+#[derive(Clone, Debug)]
+pub struct FragmentProbe {
+    /// Block size `B` handed to `fragment_capture`.
+    pub block: usize,
+    /// Bytes the captured [`crate::nn::Fragment`] actually holds
+    /// (tracker-registered payload of its slice tensor).
+    pub bytes: usize,
+    /// The analytic prediction ([`memsim::fragment_checkpoint_bytes`])
+    /// for the same block — kept beside the measurement so the plan
+    /// report can show the drift (tail-block rounding).
+    pub predicted_bytes: usize,
+}
+
+/// Per-layer calibration record: the analytic [`LayerCost`] beside the
+/// measured residual tiers.
+#[derive(Clone, Debug)]
+pub struct LayerProbe {
+    /// Analytic Table-1 costs for this layer on the probed shape.
+    pub cost: LayerCost,
+    /// Measured bytes of the `Minimal` residual (what Moonwalk Phase I
+    /// keeps: sign bits, argmax indices — zero for conv/dense).
+    pub measured_mx: usize,
+    /// Measured *additional* bytes of the `Full` residual over `Minimal`
+    /// (what Backprop's tape adds per layer).
+    pub measured_m_theta: usize,
+    /// Measured output-activation bytes (= the bytes of a full output
+    /// cotangent checkpoint for this layer).
+    pub measured_act: usize,
+    /// Measured fragmental candidates (empty when the layer does not
+    /// support §5.1 capture).
+    pub fragments: Vec<FragmentProbe>,
+}
+
+impl LayerProbe {
+    /// The measured bytes of the cheapest fragmental candidate, if any.
+    pub fn best_fragment(&self) -> Option<&FragmentProbe> {
+        self.fragments.iter().min_by_key(|f| f.bytes)
+    }
+}
+
+/// Probe every layer of `net` on `in_shape`: one forward per residual
+/// tier, plus one `fragment_capture` per applicable `frag_blocks`
+/// candidate. Returns one [`LayerProbe`] per layer, in layer order.
+///
+/// Cost: two forward passes over the network plus the captures — plan
+/// time, not training-hot-path time. Safe to call inside an open
+/// `tracker::measure` window (see module docs), though the transient
+/// probe tensors will then show up in that window's profile.
+pub fn probe_network(
+    net: &Network,
+    in_shape: &[usize],
+    frag_blocks: &[usize],
+) -> anyhow::Result<Vec<LayerProbe>> {
+    anyhow::ensure!(net.depth() > 0, "cannot probe an empty network");
+    let costs = memsim::profile(net, in_shape)?;
+    let mut probes = Vec::with_capacity(net.depth());
+    let mut x = Tensor::zeros(in_shape);
+    for (layer, cost) in net.layers.iter().zip(costs) {
+        let (y, res_min) = layer.forward_res(&x, ResidualKind::Minimal);
+        let (_, res_full) = layer.forward_res(&x, ResidualKind::Full);
+        let measured_mx = residual_bytes(&res_min);
+        let measured_full = residual_bytes(&res_full);
+        let mut fragments = Vec::new();
+        if cost.fragmental_ok {
+            // The captured cotangent has the layer's *output* shape; a
+            // zero tensor is enough — capture stores slices, its byte
+            // count depends only on geometry.
+            let h_out = Tensor::zeros(y.shape());
+            for &block in frag_blocks {
+                if let Ok(frag) = layer.fragment_capture(&h_out, block) {
+                    fragments.push(FragmentProbe {
+                        block,
+                        bytes: frag.slices.bytes(),
+                        predicted_bytes: memsim::fragment_checkpoint_bytes(
+                            y.bytes(),
+                            block,
+                            kernel_taps(&cost),
+                        ),
+                    });
+                }
+            }
+        }
+        probes.push(LayerProbe {
+            measured_mx,
+            measured_m_theta: measured_full.saturating_sub(measured_mx),
+            measured_act: y.bytes(),
+            fragments,
+            cost,
+        });
+        x = y;
+    }
+    Ok(probes)
+}
+
+/// Best-effort kernel width for the analytic fragment formula, recovered
+/// from the layer label (`conv1d(k=3,...)`); the measured bytes are
+/// authoritative, this only feeds the predicted-vs-measured column.
+fn kernel_taps(cost: &LayerCost) -> usize {
+    cost.name
+        .split("k=")
+        .nth(1)
+        .and_then(|rest| {
+            rest.split(|c: char| !c.is_ascii_digit())
+                .next()
+                .and_then(|d| d.parse::<usize>().ok())
+        })
+        .unwrap_or(3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{build_cnn1d_fragmental, build_cnn2d, FragmentalCnn1dSpec, SubmersiveCnn2dSpec};
+    use crate::util::Rng;
+
+    #[test]
+    fn probe_matches_analytic_tiers_on_cnn2d() {
+        let mut rng = Rng::new(0);
+        let spec = SubmersiveCnn2dSpec {
+            input_hw: 16,
+            depth: 2,
+            channels: 4,
+            cin: 2,
+            ..Default::default()
+        };
+        let net = build_cnn2d(&spec, &mut rng);
+        let probes = probe_network(&net, &[2, 16, 16, 2], DEFAULT_FRAG_BLOCKS).unwrap();
+        assert_eq!(probes.len(), net.depth());
+        for p in &probes {
+            // memsim::profile computes the same tiers from the same
+            // objects, so measured and analytic must agree exactly here;
+            // the probe's value is catching any future divergence.
+            assert_eq!(p.measured_mx, p.cost.mx, "{}", p.cost.name);
+            assert_eq!(p.measured_m_theta, p.cost.m_theta, "{}", p.cost.name);
+            assert_eq!(p.measured_act, p.cost.act_bytes, "{}", p.cost.name);
+            // The 2-D net has no fragmental layers.
+            assert!(p.fragments.is_empty());
+        }
+    }
+
+    #[test]
+    fn probe_measures_fragment_candidates_on_cnn1d() {
+        let mut rng = Rng::new(1);
+        let spec = FragmentalCnn1dSpec {
+            input_len: 64,
+            channels: 8,
+            depth: 2,
+            ..Default::default()
+        };
+        let net = build_cnn1d_fragmental(&spec, &mut rng);
+        let probes = probe_network(&net, &[2, 64, 3], DEFAULT_FRAG_BLOCKS).unwrap();
+        let frag_layers: Vec<&LayerProbe> =
+            probes.iter().filter(|p| p.cost.fragmental_ok).collect();
+        assert_eq!(frag_layers.len(), 2, "one probe per fragmental conv");
+        for p in frag_layers {
+            assert!(!p.fragments.is_empty(), "{}", p.cost.name);
+            // Larger blocks store fewer slices.
+            for w in p.fragments.windows(2) {
+                assert!(w[0].block < w[1].block);
+                assert!(w[0].bytes >= w[1].bytes);
+            }
+            // Measured vs analytic agree when the block divides the
+            // length (64 here), i.e. no tail rounding.
+            for f in &p.fragments {
+                if 64 % f.block == 0 {
+                    assert_eq!(f.bytes, f.predicted_bytes, "{} B={}", p.cost.name, f.block);
+                }
+            }
+            assert_eq!(
+                p.best_fragment().unwrap().block,
+                *DEFAULT_FRAG_BLOCKS.last().unwrap()
+            );
+        }
+    }
+}

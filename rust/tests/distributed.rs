@@ -109,6 +109,59 @@ fn allreduce_bit_equal_across_replica_counts() {
     }
 }
 
+/// Gradient-bucket fusion (ROADMAP follow-up): coalescing consecutive
+/// small-parameter layers into one reduce bucket changes delivery
+/// batching only — exactly-associative payloads reduce **bit-equal**
+/// across replica counts {1, 2, 4} and against the unbucketed reducer,
+/// with the whole bucket delivered on the last contribution.
+#[test]
+fn bucketed_allreduce_bit_equal_one_vs_n_replicas() {
+    let depth = 4usize;
+    // All layers below the threshold -> buckets {0..=2} (threshold hit)
+    // and the tail {3}.
+    let layer_bytes = [48usize, 48, 48, 48];
+    let global = |layer: usize| -> Vec<f32> {
+        (0..6).map(|e| (layer * 48 + e * 2 + 4) as f32).collect()
+    };
+    let reduce_with = |replicas: usize, bucketed: bool| -> Vec<Vec<f32>> {
+        let r = if bucketed {
+            StreamingAllReduce::with_buckets(&layer_bytes, replicas, ReduceOp::Mean, 128)
+        } else {
+            StreamingAllReduce::new(depth, replicas, ReduceOp::Mean)
+        };
+        if bucketed {
+            assert_eq!(r.bucket_count(), 2, "expected {{0,1,2}} and {{3}}");
+        }
+        let mut out: Vec<Option<Vec<f32>>> = vec![None; depth];
+        for layer in 0..depth {
+            for rep in 0..replicas {
+                let t = Tensor::from_vec(global(layer), &[6]);
+                for (li, g) in r.submit_bucketed(layer, rep, vec![t.clone()]) {
+                    assert!(out[li].is_none(), "layer {li} delivered twice");
+                    out[li] = Some(g[0].data().to_vec());
+                }
+            }
+        }
+        assert_eq!(r.reduced_layers(), depth);
+        assert_eq!(r.pending_layers(), 0);
+        out.into_iter().map(|o| o.expect("layer reduced")).collect()
+    };
+    let reference = reduce_with(1, false);
+    for replicas in [1usize, 2, 4] {
+        let fused = reduce_with(replicas, true);
+        for (layer, (a, b)) in reference.iter().zip(&fused).enumerate() {
+            assert_eq!(
+                a, b,
+                "layer {layer}: bucketed replicas={replicas} must be bit-equal"
+            );
+        }
+    }
+    // And the reduced payloads equal the exact global mean.
+    for (layer, a) in reference.iter().enumerate() {
+        assert_eq!(a, &global(layer));
+    }
+}
+
 // ---------------------------------------------------------------------------
 // 2. Gradient equivalence across the exact-engine grid
 // ---------------------------------------------------------------------------

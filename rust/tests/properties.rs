@@ -369,6 +369,52 @@ fn prop_spatial_conv2d_batch1_transpose_conv_bit_identical() {
     });
 }
 
+/// Batch-1 **vijp** spatial fast path (the last open PR-1 follow-up):
+/// with no spatial coupling (`s + p ≥ k`, Alg. 2) every output position
+/// solves independently, so the row-band fan-out via `pool::run_spans`
+/// must be **bit-identical** to the serial elimination at every thread
+/// count — the gather/solve/scatter arithmetic per position is the same
+/// code restricted to a band. Inputs are sized past the spatial
+/// minimum-work floor so the banded path actually engages; the
+/// wavefront regime (`s + p < k`) stays serial at batch 1 and is
+/// covered by the existing right-inverse properties.
+#[test]
+fn prop_spatial_conv2d_batch1_vijp_bit_identical() {
+    let _pin = pin_lock();
+    for_random_cases(1000, 25, |rng| {
+        let (conv, xb) = random_submersive_conv2d(rng);
+        if !conv.vijp_fast_path() {
+            return; // spatially coupled: no banded path to compare
+        }
+        let cin = xb.shape()[3];
+        let (k, s, p, cout) = (conv.k, conv.stride, conv.pad, conv.cout);
+        // Size past the floor exactly as the sibling spatial properties.
+        let per = cout * k * k;
+        let mut ho = 4usize;
+        while ho * ho * per < 4096 {
+            ho += 1;
+        }
+        let hw = s * (ho - 1) + k - 2 * p;
+        let x = Tensor::randn(&[1, hw, hw, cin], 1.0, rng);
+        let (y, res) = conv.forward_res(&x, ResidualKind::Minimal);
+        let hp = Tensor::randn(y.shape(), 1.0, rng);
+        let h = conv.vjp_input(&res, &hp);
+        let serial = pool::with_threads(1, || conv.vijp(&res, &h).unwrap());
+        for t in [2usize, 4] {
+            let par = pool::with_threads(t, || conv.vijp(&res, &h).unwrap());
+            assert_eq!(
+                serial.data(),
+                par.data(),
+                "{} t={t}: banded vijp must be bit-identical",
+                conv.name()
+            );
+        }
+        // And it still inverts vjp_input on the row space (the Moonwalk
+        // correctness oracle), banded or not.
+        assert!(rel_err(&serial, &hp) < 5e-2, "{}", conv.name());
+    });
+}
+
 /// Pooling vijp right-inverse for random even geometries.
 #[test]
 fn prop_pool_vijp() {
