@@ -9,10 +9,12 @@
 //! medians at replicas {1,2[,4]} — the streamed all-reduce's overlap
 //! signal), the transport-overhead family (`transport_rows`:
 //! local vs unix-socket worker subprocesses at equal replica counts)
-//! and the budgeted-planner family (`planner_rows`: the per-layer
+//! the budgeted-planner family (`planner_rows`: the per-layer
 //! mixed-strategy plan vs the best whole-network engine across a byte
 //! budget sweep — predicted and measured peaks plus the budget
-//! invariant) for the §Perf log. The full field-by-field schema of the
+//! invariant) and the fault-injection recovery smoke (`fault_rows`:
+//! killed / hung worker detect-respawn-replay cycle time vs the clean
+//! step) for the §Perf log. The full field-by-field schema of the
 //! emitted `BENCH_perf_ops.json` lives in `docs/BENCH_SCHEMA.md`.
 //!
 //! Flags (after `--`):
@@ -557,6 +559,105 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // Fault-injection smoke (ISSUE 6): the supervised unix transport's
+    // end-to-end recovery cycle — detect a killed / hung worker, respawn
+    // it, re-upload parameters and replay the step — timed against the
+    // clean step (`fault = none`). Runs in `--quick` too: this *is* the
+    // tier-1 fault smoke. Skipped gracefully without a worker binary.
+    println!("\nfault-injection recovery (unix, moonwalk, replicas 2):");
+    println!(
+        "{:<10} {:>14} {:>9} {:>10}",
+        "fault", "recovery_ms", "retries", "failovers"
+    );
+    let mut fault_rows: Vec<Json> = Vec::new();
+    {
+        use moonwalk::distributed::transport::{
+            Deadlines, EngineSpec, FaultPlan, LossSpec, ShardSpec, UnixTransport,
+            UnixTransportOpts,
+        };
+        use moonwalk::distributed::RetryPolicy;
+        use moonwalk::model::config::Config;
+        use std::time::{Duration, Instant};
+        let cfg = Config::from_json(
+            &Json::parse(
+                r#"{"arch": "cnn2d", "depth": 2, "channels": 8, "input_hw": 16,
+                    "cin": 2, "classes": 4, "seed": 6}"#,
+            )
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        )?;
+        let mut rng = Rng::new(cfg.seed);
+        let net = cfg.build_network(&mut rng);
+        let x = Tensor::randn(&[4, 16, 16, 2], 1.0, &mut rng);
+        let xs = split_batch(&x, 2)?;
+        let engine = engine_by_name("moonwalk", cfg.block, cfg.checkpoint_every, cfg.seed)?;
+        match option_env!("CARGO_BIN_EXE_moonwalk") {
+            None => println!("(skipped: no worker binary)"),
+            Some(bin) => {
+                // Short heartbeat so the hung-worker row measures the
+                // supervisor's grace floor, not the 120 s default.
+                let deadlines = Deadlines {
+                    accept: Duration::from_secs(30),
+                    hello: Duration::from_secs(10),
+                    step: Some(Duration::from_secs(60)),
+                    heartbeat_ms: 50,
+                };
+                for fault in ["none", "kill:1@0", "hang:1@0"] {
+                    let mut opts = UnixTransportOpts::new(
+                        2,
+                        cfg.to_json().to_string(),
+                        EngineSpec::new("moonwalk"),
+                    );
+                    opts.worker_bin = Some(std::path::PathBuf::from(bin));
+                    opts.deadlines = deadlines;
+                    if fault != "none" {
+                        opts.faults = FaultPlan::parse(fault)?;
+                    }
+                    let transport = match UnixTransport::spawn(opts) {
+                        Ok(t) => t,
+                        Err(e) => {
+                            println!("{fault:<10} (skipped: {e})");
+                            continue;
+                        }
+                    };
+                    let group = ReplicaGroup::with_transport(Box::new(transport))?;
+                    group.sync(&net)?;
+                    let shards: Vec<ShardSpec<'_>> = xs
+                        .iter()
+                        .map(|x| ShardSpec {
+                            x,
+                            loss: LossSpec::Mean,
+                        })
+                        .collect();
+                    let policy = RetryPolicy {
+                        retries: 2,
+                        backoff_ms: 5,
+                        failover: false,
+                    };
+                    let t0 = Instant::now();
+                    let (res, stats) = group.step_retrying(
+                        &net,
+                        engine.as_ref(),
+                        &shards,
+                        ReduceOp::Mean,
+                        policy,
+                    )?;
+                    let recovery_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    println!(
+                        "{:<10} {:>14.3} {:>9} {:>10}",
+                        fault, recovery_ms, stats.retries, stats.failovers
+                    );
+                    fault_rows.push(Json::from_pairs(vec![
+                        ("fault", fault.into()),
+                        ("recovery_ms", recovery_ms.into()),
+                        ("retries", stats.retries.into()),
+                        ("failovers", stats.failovers.into()),
+                        ("loss", (res.loss as f64).into()),
+                    ]));
+                }
+            }
+        }
+    }
+
     // Pool lifecycle + arena recycle-rate snapshot for the run (monotone
     // process counters — diff across runs at equal workloads).
     let pstats = pool::stats();
@@ -583,6 +684,7 @@ fn main() -> anyhow::Result<()> {
         ("replicas_rows", Json::Arr(replica_rows)),
         ("transport_rows", Json::Arr(transport_rows)),
         ("planner_rows", Json::Arr(planner_rows)),
+        ("fault_rows", Json::Arr(fault_rows)),
         ("dispatch_us", dispatch_us.into()),
         (
             "pool",

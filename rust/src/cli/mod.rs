@@ -9,9 +9,20 @@ use std::collections::BTreeMap;
 /// `--threads N` (worker-pool size), `--gemm auto|scalar|blocked|parallel`
 /// (GEMM algorithm override), `--replicas N` (data-parallel replica
 /// count; `MOONWALK_REPLICAS` is the env spelling) and
-/// `--transport local|unix` (where replicas execute — in-process on the
-/// pool or one worker subprocess each; `MOONWALK_TRANSPORT` is the env
-/// spelling). The per-run `--budget` knob is *not* global state — resolve
+/// `--transport local|unix|tcp` (where replicas execute — in-process on
+/// the pool or one worker subprocess each; `MOONWALK_TRANSPORT` is the
+/// env spelling).
+///
+/// Supervision knobs for the socket transports (env spellings
+/// `MOONWALK_STEP_TIMEOUT` / `MOONWALK_ACCEPT_TIMEOUT` /
+/// `MOONWALK_HELLO_TIMEOUT`, seconds, and `MOONWALK_HEARTBEAT_MS`):
+/// `--step-timeout S` (per-step compute deadline; `0` waits forever),
+/// `--accept-timeout S` (worker spawn/accept + param-upload write
+/// deadline), `--hello-timeout S` (handshake read deadline) and
+/// `--heartbeat-ms MS` (worker liveness ticks while computing; `0`
+/// disables, leaving only the step deadline to catch hangs).
+///
+/// The per-run `--budget` knob is *not* global state — resolve
 /// it with [`budget_bytes`] where an engine is built. Call before any
 /// tensor work. The persistent worker team is prewarmed here so the
 /// first parallel region — often a sub-100 µs kernel in the benches —
@@ -31,6 +42,33 @@ pub fn configure_runtime(args: &Args) -> anyhow::Result<()> {
         crate::distributed::transport::set_kind(
             crate::distributed::transport::TransportKind::parse(t)?,
         );
+    }
+    {
+        use crate::distributed::transport::supervisor;
+        if let Some(s) = args.get("step-timeout") {
+            let secs: f64 = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--step-timeout expects seconds, got `{s}`"))?;
+            anyhow::ensure!(secs >= 0.0, "--step-timeout must be >= 0 (0 disables)");
+            supervisor::set_step_timeout_secs(secs);
+        }
+        if let Some(s) = args.get("accept-timeout") {
+            let secs: f64 = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--accept-timeout expects seconds, got `{s}`"))?;
+            anyhow::ensure!(secs > 0.0, "--accept-timeout must be positive");
+            supervisor::set_accept_timeout_secs(secs);
+        }
+        if let Some(s) = args.get("hello-timeout") {
+            let secs: f64 = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--hello-timeout expects seconds, got `{s}`"))?;
+            anyhow::ensure!(secs > 0.0, "--hello-timeout must be positive");
+            supervisor::set_hello_timeout_secs(secs);
+        }
+        if let Some(ms) = args.get_usize_opt("heartbeat-ms")? {
+            supervisor::set_heartbeat_ms(ms as u64);
+        }
     }
     crate::runtime::pool::prewarm();
     Ok(())
@@ -223,6 +261,15 @@ mod tests {
         assert_eq!(w.get("connect"), Some("/tmp/x.sock"));
         assert_eq!(w.get_usize("replica", 0).unwrap(), 1);
         assert_eq!(w.subcommand, None);
+    }
+
+    #[test]
+    fn supervision_flags_validated() {
+        // All three fail before any global knob is stored, so this test
+        // cannot pollute the process-wide supervision state.
+        assert!(configure_runtime(&parse("train --step-timeout abc")).is_err());
+        assert!(configure_runtime(&parse("train --accept-timeout 0")).is_err());
+        assert!(configure_runtime(&parse("train --heartbeat-ms x")).is_err());
     }
 
     #[test]

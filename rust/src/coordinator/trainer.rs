@@ -26,10 +26,10 @@ use crate::coordinator::data::TextureDataset;
 use crate::coordinator::optimizer::Optimizer;
 use crate::distributed::pipeline::{BatchPlan, Prefetcher};
 use crate::distributed::transport::{LossSpec, ShardSpec, Transport};
-use crate::distributed::{ReduceOp, ReplicaGroup};
+use crate::distributed::{ReduceOp, ReplicaGroup, RetryPolicy, StepStats};
 use crate::model::Network;
 use crate::runtime::pool;
-use crate::tensor::tracker;
+use crate::tensor::{tracker, Tensor};
 use crate::util::json::Json;
 use crate::util::logging::JsonlWriter;
 use crate::util::{Rng, Timer};
@@ -57,6 +57,13 @@ pub struct TrainReport {
     /// fixed-strategy engines, `Some` for the budgeted `PlannedEngine`.
     /// Compare against [`Self::peak_mem_bytes`], the measured peak.
     pub planned_peak_bytes: Option<usize>,
+    /// Total failed step attempts that were retried under the trainer's
+    /// [`RetryPolicy`] (0 on a fault-free run).
+    pub retries: usize,
+    /// Total failovers — elastic membership shrinks onto surviving
+    /// workers after a retry budget was exhausted (0 on a fault-free
+    /// run).
+    pub failovers: usize,
 }
 
 /// Classification trainer binding a network, engine, optimizer and data.
@@ -75,6 +82,20 @@ pub struct Trainer<'a> {
     /// repeated runs reuse the same workers; a run that fails mid-training
     /// drops it (remote workers are torn down with it).
     pub transport: Option<Box<dyn Transport>>,
+    /// How step failures are handled: each failed attempt is re-synced
+    /// and replayed bit-exactly (optimizer state untouched, partial
+    /// gradient deliveries discarded), and with `failover` enabled an
+    /// exhausted retry budget shrinks the elastic membership onto the
+    /// survivors instead of aborting the run. The default retries twice
+    /// without failover.
+    pub retry: RetryPolicy,
+    /// Micro-steps accumulated per optimizer step (≥ 1). With `K > 1`
+    /// each optimizer step draws `K` consecutive global batches,
+    /// **sum**-reduces their gradients ([`ReduceOp::Sum`]) and scales by
+    /// `1 / (replicas · K)` before applying — the effective batch is
+    /// `batch · K` at the per-step memory footprint of `batch`. `K = 1`
+    /// (the default) keeps the original mean-reduced path bit-exactly.
+    pub grad_accum: usize,
 }
 
 impl<'a> Trainer<'a> {
@@ -90,14 +111,26 @@ impl<'a> Trainer<'a> {
             log_every: 10,
             replicas: 1,
             transport: None,
+            retry: RetryPolicy::default(),
+            grad_accum: 1,
         }
     }
 
-    /// Train for `steps` mini-batch steps, logging to `metrics` (JSONL)
+    /// Train for `steps` optimizer steps, logging to `metrics` (JSONL)
     /// when given. `batch` is the **global** batch; with `replicas = N`
     /// each replica computes on `batch / N` samples and gradients are
     /// mean-reduced, so the update equals the single-replica one at the
-    /// same effective batch (up to fp reassociation).
+    /// same effective batch (up to fp reassociation). With
+    /// [`Self::grad_accum`]` = K > 1` each optimizer step accumulates
+    /// `K` consecutive micro-batches (sum-reduced, scaled by
+    /// `1 / (N · K)`), for an effective batch of `batch · K`.
+    ///
+    /// Step failures (worker death, hangs past the heartbeat grace,
+    /// exceeded step deadlines) are retried under [`Self::retry`]:
+    /// partial gradient deliveries are discarded, dead workers are
+    /// respawned and re-synced, and the identical batch is replayed —
+    /// so a recovered run's loss curve is bit-identical to a fault-free
+    /// one.
     pub fn train(
         &mut self,
         train: &TextureDataset,
@@ -130,6 +163,7 @@ impl<'a> Trainer<'a> {
         // derives each epoch's shuffle from (seed, epoch), so the
         // sequence is replica-count invariant.
         let data_seed = rng.next_u64();
+        let accum = self.grad_accum.max(1);
         let plan = BatchPlan::new(train, batch, replicas, data_seed)?;
         let mut writer = match metrics {
             Some(p) => Some(JsonlWriter::create(p)?),
@@ -139,68 +173,133 @@ impl<'a> Trainer<'a> {
         let mut peak_mem = 0usize;
         let mut reduce_total_s = 0f64;
         let mut prefetch_total_s = 0f64;
+        let mut retries_total = 0usize;
+        let mut failovers_total = 0usize;
+        let heartbeat_ms = group.heartbeat_ms();
         let timer = Timer::start();
         let depth = self.net.depth();
         // The prefetch producer lives for the duration of the step loop:
         // it materializes and shards batch t+1 while step t computes.
         std::thread::scope(|scope| -> anyhow::Result<()> {
-            let prefetch = Prefetcher::spawn(scope, plan, steps);
+            let prefetch = Prefetcher::spawn(scope, plan, steps * accum);
             for step in 1..=steps {
-                let (step_batch, prefetch_wait_s) = prefetch.next()?;
-                prefetch_total_s += prefetch_wait_s;
-                let epoch = step_batch.epoch;
                 // Push the optimizer's latest parameters to every
                 // replica before the step: a no-op in-process, the full
                 // upload (+ dead-worker respawn) over a remote
                 // transport. Outside the measurement window, so remote
                 // serialization never skews the step's memory profile.
+                // Parameters don't change between micro-steps, so one
+                // sync covers the whole accumulation window.
                 group.sync(self.net)?;
-                // Tensor materialization happens here, on this thread,
-                // *before* the measurement window opens — the producer
-                // only ever built raw (tracker-invisible) payloads, so
-                // per-step peak/alloc profiles stay deterministic.
-                let shard_tensors = step_batch.into_shards();
-                let shards: Vec<ShardSpec<'_>> = shard_tensors
-                    .iter()
-                    .map(|(x, labels)| ShardSpec {
-                        x,
-                        loss: LossSpec::SoftmaxXent(labels),
-                    })
-                    .collect();
-
                 self.optimizer.begin_step();
                 let step_timer = Timer::start();
                 let pool0 = pool::stats();
-                // The group streams reduced per-layer gradients; they are
-                // collected here so the (aliasing-safe) apply happens
-                // after the engines release the network. The figure
-                // benches measure the paper's grad-free accounting with a
-                // dropping sink instead.
-                let (result, prof) = {
-                    let net = &*self.net;
-                    let engine = self.engine;
-                    tracker::measure(|| group.step(net, engine, &shards, ReduceOp::Mean))
-                };
-                let pool1 = pool::stats();
-                let result = result?;
-                for (li, grads) in result.grads.iter().enumerate() {
-                    if !grads.is_empty() {
+                let mut epoch = 0usize;
+                let mut step_loss = 0f32;
+                let mut step_reduce_s = 0f64;
+                let mut step_peak = 0usize;
+                let mut step_allocs = 0usize;
+                let mut step_stats = StepStats::default();
+                let mut step_prefetch_s = 0f64;
+                // K > 1 accumulates sum-reduced micro-gradients here;
+                // K = 1 applies each layer directly (the original path).
+                let mut acc: Vec<Vec<Tensor>> = (0..depth).map(|_| Vec::new()).collect();
+                let op = if accum == 1 { ReduceOp::Mean } else { ReduceOp::Sum };
+                for micro in 0..accum {
+                    let (step_batch, prefetch_wait_s) = prefetch.next()?;
+                    prefetch_total_s += prefetch_wait_s;
+                    step_prefetch_s += prefetch_wait_s;
+                    if micro == 0 {
+                        epoch = step_batch.epoch;
+                    }
+                    // Tensor materialization happens here, on this
+                    // thread, *before* the measurement window opens —
+                    // the producer only ever built raw
+                    // (tracker-invisible) payloads, so per-step
+                    // peak/alloc profiles stay deterministic.
+                    let shard_tensors = step_batch.into_shards();
+                    let shards: Vec<ShardSpec<'_>> = shard_tensors
+                        .iter()
+                        .map(|(x, labels)| ShardSpec {
+                            x,
+                            loss: LossSpec::SoftmaxXent(labels),
+                        })
+                        .collect();
+                    // The group streams reduced per-layer gradients;
+                    // they are collected here so the (aliasing-safe)
+                    // apply happens after the engines release the
+                    // network. The figure benches measure the paper's
+                    // grad-free accounting with a dropping sink instead.
+                    let (out, prof) = {
+                        let net = &*self.net;
+                        let engine = self.engine;
+                        let retry = self.retry;
+                        tracker::measure(|| group.step_retrying(net, engine, &shards, op, retry))
+                    };
+                    let (result, stats) = out?;
+                    step_stats.retries += stats.retries;
+                    step_stats.failovers += stats.failovers;
+                    debug_assert_eq!(result.grads.len(), depth);
+                    step_loss += result.loss;
+                    step_reduce_s += result.reduce_s;
+                    step_peak = step_peak.max(prof.peak_extra_bytes);
+                    step_allocs += prof.allocs;
+                    if accum == 1 {
+                        for (li, grads) in result.grads.iter().enumerate() {
+                            if !grads.is_empty() {
+                                self.optimizer.apply_layer(self.net, li, grads);
+                            }
+                        }
+                    } else {
+                        for (li, grads) in result.grads.into_iter().enumerate() {
+                            if grads.is_empty() {
+                                continue;
+                            }
+                            if acc[li].is_empty() {
+                                acc[li] = grads;
+                            } else {
+                                for (a, g) in acc[li].iter_mut().zip(&grads) {
+                                    for (av, gv) in a.data_mut().iter_mut().zip(g.data()) {
+                                        *av += *gv;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                if accum > 1 {
+                    // Sum over replicas × micro-steps of per-shard-mean
+                    // gradients; 1/(N·K) turns that into the mean over
+                    // the effective batch.
+                    let scale = 1.0 / (replicas * accum) as f32;
+                    for (li, grads) in acc.iter_mut().enumerate() {
+                        if grads.is_empty() {
+                            continue;
+                        }
+                        for g in grads.iter_mut() {
+                            for v in g.data_mut() {
+                                *v *= scale;
+                            }
+                        }
                         self.optimizer.apply_layer(self.net, li, grads);
                     }
                 }
-                debug_assert_eq!(result.grads.len(), depth);
-                reduce_total_s += result.reduce_s;
-                peak_mem = peak_mem.max(prof.peak_extra_bytes);
-                loss_curve.push(result.loss);
+                let pool1 = pool::stats();
+                let step_loss = step_loss / accum as f32;
+                retries_total += step_stats.retries;
+                failovers_total += step_stats.failovers;
+                reduce_total_s += step_reduce_s;
+                peak_mem = peak_mem.max(step_peak);
+                loss_curve.push(step_loss);
 
                 if let Some(w) = writer.as_mut() {
                     if step % self.log_every == 0 || step == steps {
                         w.write(&Json::from_pairs(vec![
                             ("step", step.into()),
                             ("epoch", epoch.into()),
-                            ("loss", (result.loss as f64).into()),
-                            ("peak_mem_bytes", prof.peak_extra_bytes.into()),
-                            ("allocs", prof.allocs.into()),
+                            ("loss", (step_loss as f64).into()),
+                            ("peak_mem_bytes", step_peak.into()),
+                            ("allocs", step_allocs.into()),
                             ("step_time_s", step_timer.elapsed_s().into()),
                             ("engine", self.engine.name().as_str().into()),
                             ("threads", pool::threads().into()),
@@ -214,8 +313,19 @@ impl<'a> Trainer<'a> {
                             ("replicas", replicas.into()),
                             ("transport", transport_name.as_str().into()),
                             ("shard_batch", (batch / replicas).into()),
-                            ("reduce_s", result.reduce_s.into()),
-                            ("prefetch_wait_s", prefetch_wait_s.into()),
+                            ("grad_accum", accum.into()),
+                            ("reduce_s", step_reduce_s.into()),
+                            ("prefetch_wait_s", step_prefetch_s.into()),
+                            // Fault-tolerance signals: failed attempts
+                            // replayed this step, membership shrinks
+                            // onto survivors, how many executors are
+                            // live, and the transport's heartbeat
+                            // interval (0 = no heartbeats). All zeros /
+                            // full membership on a healthy run.
+                            ("retries", step_stats.retries.into()),
+                            ("failovers", step_stats.failovers.into()),
+                            ("members", group.members().into()),
+                            ("heartbeat_ms", (heartbeat_ms as usize).into()),
                             // Execution-planner signals: the compiled
                             // plan's predicted peak (0 when the engine
                             // has no plan) next to this step's measured
@@ -226,7 +336,7 @@ impl<'a> Trainer<'a> {
                                 "planned_peak",
                                 self.engine.planned_peak_bytes().unwrap_or(0).into(),
                             ),
-                            ("measured_peak", prof.peak_extra_bytes.into()),
+                            ("measured_peak", step_peak.into()),
                             // Pool-lifecycle deltas for this step:
                             // parallel regions dispatched, worker
                             // wake/park round trips, plus the (monotone)
@@ -265,6 +375,8 @@ impl<'a> Trainer<'a> {
             reduce_time_s: reduce_total_s,
             prefetch_wait_s: prefetch_total_s,
             planned_peak_bytes: self.engine.planned_peak_bytes(),
+            retries: retries_total,
+            failovers: failovers_total,
         })
     }
 
@@ -414,6 +526,58 @@ mod tests {
         // 0 for fixed-strategy engines like Backprop.
         assert!(first.req_usize("measured_peak").unwrap() > 0);
         assert_eq!(first.req_usize("planned_peak").unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn grad_accum_matches_equivalent_global_batch() {
+        // (batch 4, grad_accum 2) and (batch 8, grad_accum 1) consume the
+        // identical sample sequence (the epoch shuffle is batch-size
+        // invariant) and apply mathematically equal updates, so their
+        // loss curves agree up to fp reassociation.
+        let run = |batch: usize, accum: usize| {
+            let (mut net, train, test) = tiny_setup(20);
+            let opt = Optimizer::new(OptimizerKind::Sgd, 1e-3, &net, false);
+            let engine = Backprop;
+            let mut t = Trainer::new(&mut net, &engine, opt);
+            t.grad_accum = accum;
+            let mut rng = Rng::new(21);
+            t.train(&train, &test, batch, 4, &mut rng, None).unwrap()
+        };
+        let big = run(8, 1);
+        let acc = run(4, 2);
+        assert_eq!(acc.loss_curve.len(), 4);
+        for (a, b) in big.loss_curve.iter().zip(&acc.loss_curve) {
+            assert!(
+                (a - b).abs() < 1e-3,
+                "accumulated loss curve must track the large-batch one: {a} vs {b}"
+            );
+        }
+        assert_eq!(acc.retries, 0);
+        assert_eq!(acc.failovers, 0);
+    }
+
+    #[test]
+    fn metrics_include_fault_tolerance_fields() {
+        let (mut net, train, test) = tiny_setup(30);
+        let opt = Optimizer::new(OptimizerKind::Sgd, 1e-3, &net, false);
+        let engine = Backprop;
+        let mut t = Trainer::new(&mut net, &engine, opt);
+        t.log_every = 1;
+        t.replicas = 2;
+        let dir = std::env::temp_dir().join("moonwalk_trainer_fault_fields_test");
+        let path = dir.join("metrics.jsonl");
+        let mut rng = Rng::new(31);
+        let rep = t.train(&train, &test, 4, 2, &mut rng, Some(&path)).unwrap();
+        assert_eq!(rep.retries, 0);
+        assert_eq!(rep.failovers, 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let first = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(first.req_usize("retries").unwrap(), 0);
+        assert_eq!(first.req_usize("failovers").unwrap(), 0);
+        assert_eq!(first.req_usize("members").unwrap(), 2);
+        assert_eq!(first.req_usize("heartbeat_ms").unwrap(), 0);
+        assert_eq!(first.req_usize("grad_accum").unwrap(), 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -12,12 +12,28 @@
 //! sharding.
 //!
 //! **Where replicas execute is a [`transport::Transport`]**: in-process
-//! on the worker pool ([`transport::LocalTransport`], the default) or in
+//! on the worker pool ([`transport::LocalTransport`], the default), in
 //! one worker subprocess per replica over unix-domain sockets
-//! ([`transport::UnixTransport`], `--transport unix`). Every contract
-//! below is transport-independent; `tests/transport.rs` proves the unix
-//! transport bit-identical to the in-process path at equal replica
-//! counts.
+//! ([`transport::UnixTransport`], `--transport unix`), or over TCP for
+//! multi-host runs ([`transport::TcpTransport`], `--transport tcp`).
+//! Every contract below is transport-independent; `tests/transport.rs`
+//! proves the socket transports bit-identical to the in-process path at
+//! equal replica counts.
+//!
+//! **Fault tolerance** (the elastic fault-tolerance PR): a failed or
+//! timed-out step can be **retried exactly** via
+//! [`ReplicaGroup::step_retrying`] — every attempt discards all partial
+//! per-layer gradient deliveries (the reducer is rebuilt per attempt),
+//! re-syncs (respawning dead workers and re-uploading the unchanged
+//! parameters) and replays the identical batch, so a recovered run's
+//! loss curve is **bit-identical** to a no-fault run
+//! (`tests/fault_tolerance.rs`). When a replica cannot come back, the
+//! group **fails over** by shrinking its elastic membership
+//! ([`ReplicaGroup::set_members`]): the fixed logical shard set is
+//! re-queued onto the survivors, and because the reduce folds in
+//! logical shard order the reduced gradient at equal global batch stays
+//! bit-identical too. Replicas may likewise join/leave between steps by
+//! growing/shrinking membership and re-syncing.
 //!
 //! In-process scheduling: replicas fan out as one pool region, so each
 //! replica's engine runs with nested kernel parallelism suppressed — the
@@ -61,6 +77,7 @@ use crate::model::Network;
 use crate::nn::Loss;
 use crate::tensor::Tensor;
 
+use transport::supervisor::Backoff;
 use transport::{LocalTransport, ShardSpec};
 
 // ----- replica-count resolution ---------------------------------------------
@@ -151,6 +168,41 @@ pub struct ReplicaResult {
     pub reduce_s: f64,
 }
 
+/// How [`ReplicaGroup::step_retrying`] responds to step failures.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Retry attempts per membership level after the first failure
+    /// (0 = fail fast, the pre-supervision behavior).
+    pub retries: usize,
+    /// Base delay before a retry; doubles per attempt (capped at 8×).
+    pub backoff_ms: u64,
+    /// After the retry budget is exhausted, shrink the elastic
+    /// membership by one and keep going (re-queueing the dead worker's
+    /// logical shards onto survivors, bit-identically) until the group
+    /// is down to a single member.
+    pub failover: bool,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            retries: 2,
+            backoff_ms: 50,
+            failover: false,
+        }
+    }
+}
+
+/// What recovering a step cost (per-step observability; the trainer
+/// logs these per JSONL row).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    /// Failed attempts that were retried at unchanged membership.
+    pub retries: usize,
+    /// Membership shrinks (failovers onto survivors).
+    pub failovers: usize,
+}
+
 /// A fixed-size data-parallel replica group executing on a pluggable
 /// [`Transport`] (see module docs).
 ///
@@ -225,9 +277,29 @@ impl ReplicaGroup {
         }
     }
 
-    /// The active transport's name (`"local"`, `"unix"`), for metrics.
+    /// The active transport's name (`"local"`, `"unix"`, `"tcp"`), for
+    /// metrics.
     pub fn transport_name(&self) -> String {
         crate::util::lock_ignore_poison(&self.transport).name()
+    }
+
+    /// The transport's live executor count (≤ [`Self::replicas`]; they
+    /// differ only while running degraded after a failover or an
+    /// explicit membership change).
+    pub fn members(&self) -> usize {
+        crate::util::lock_ignore_poison(&self.transport).members()
+    }
+
+    /// Elastically resize the executor set (join/leave between steps).
+    /// The logical shard count is fixed, so gradients stay bit-identical
+    /// at equal global batch; call [`Self::sync`] before the next step.
+    pub fn set_members(&self, members: usize) -> anyhow::Result<()> {
+        crate::util::lock_ignore_poison(&self.transport).set_members(members)
+    }
+
+    /// The transport's heartbeat interval (ms; 0 = none), for metrics.
+    pub fn heartbeat_ms(&self) -> u64 {
+        crate::util::lock_ignore_poison(&self.transport).heartbeat_ms()
     }
 
     /// Synchronize every replica's parameters with `net` through the
@@ -256,7 +328,7 @@ impl ReplicaGroup {
         op: ReduceOp,
         sink: &(dyn Fn(usize, Vec<Tensor>) + Sync),
     ) -> anyhow::Result<ReplicaStep> {
-        transport::local::fanout_streaming(self.replicas, net, engine, shards, op, sink)
+        transport::local::fanout_streaming(self.replicas, self.replicas, net, engine, shards, op, sink)
     }
 
     /// [`Self::compute_streaming`] collecting the reduced gradients.
@@ -297,6 +369,80 @@ impl ReplicaGroup {
         sink: &(dyn Fn(usize, Vec<Tensor>) + Sync),
     ) -> anyhow::Result<ReplicaStep> {
         crate::util::lock_ignore_poison(&self.transport).step(net, engine, shards, op, sink)
+    }
+
+    /// [`Self::step`] under a [`RetryPolicy`]: on failure, re-sync
+    /// (respawn dead workers + re-upload the **unchanged** parameters)
+    /// and replay the identical shards — each attempt rebuilds the
+    /// reducer, so partial deliveries of failed attempts are discarded
+    /// wholesale and a successful attempt is bit-identical to a run
+    /// that never failed. With `policy.failover`, exhausted retry
+    /// budgets shrink the membership onto survivors (one worker at a
+    /// time, down to 1) and keep replaying, so even a permanently lost
+    /// host costs retried steps, not the run.
+    pub fn step_retrying(
+        &self,
+        net: &Network,
+        engine: &dyn GradEngine,
+        shards: &[ShardSpec<'_>],
+        op: ReduceOp,
+        policy: RetryPolicy,
+    ) -> anyhow::Result<(ReplicaResult, StepStats)> {
+        let mut stats = StepStats::default();
+        let mut last_err = match self.step(net, engine, shards, op) {
+            Ok(res) => return Ok((res, stats)),
+            Err(e) => e,
+        };
+        let mut backoff = Backoff::new(policy.backoff_ms.max(1), policy.backoff_ms.max(1) * 8);
+        loop {
+            for _ in 0..policy.retries {
+                stats.retries += 1;
+                crate::log_warn!(
+                    "step failed ({last_err:#}); retry {} after backoff",
+                    stats.retries
+                );
+                std::thread::sleep(backoff.delay());
+                // Re-sync respawns whatever died and re-uploads params;
+                // optimizer state was never touched, so the replay is
+                // exact.
+                if let Err(e) = self.sync(net) {
+                    last_err = e.context("re-syncing for step retry");
+                    continue;
+                }
+                match self.step(net, engine, shards, op) {
+                    Ok(res) => return Ok((res, stats)),
+                    Err(e) => last_err = e,
+                }
+            }
+            if !policy.failover {
+                return Err(last_err.context(format!(
+                    "step failed after {} retr{}",
+                    stats.retries,
+                    if stats.retries == 1 { "y" } else { "ies" }
+                )));
+            }
+            let members = self.members();
+            if members <= 1 {
+                return Err(last_err.context(format!(
+                    "step failed after {} retries and {} failovers (1 member left)",
+                    stats.retries, stats.failovers
+                )));
+            }
+            stats.failovers += 1;
+            crate::log_warn!(
+                "step unrecoverable at {members} members; failing over to {} survivor(s)",
+                members - 1
+            );
+            self.set_members(members - 1)?;
+            if let Err(e) = self.sync(net) {
+                last_err = e.context("re-syncing after failover");
+                continue;
+            }
+            match self.step(net, engine, shards, op) {
+                Ok(res) => return Ok((res, stats)),
+                Err(e) => last_err = e,
+            }
+        }
     }
 
     /// [`Self::step_streaming`] collecting the reduced gradients.

@@ -27,8 +27,15 @@ use super::{submit_to_sink, ShardSpec, Transport};
 /// and [`LocalTransport::step`]: the borrow-based `Shard` API and the
 /// transport's serializable [`ShardSpec`] API both land here, so the two
 /// are bit-identical by construction.
+///
+/// `workers` caps the pool shares executing the replica set (elastic
+/// membership: fewer live executors than logical shards). Because the
+/// share-ordered merge concatenates outcomes back in replica order and
+/// the reducer folds in replica order, the result is **bit-identical
+/// for every worker count** — shares only change scheduling.
 pub(crate) fn fanout_streaming(
     replicas: usize,
+    workers: usize,
     net: &Network,
     engine: &dyn GradEngine,
     shards: &[Shard<'_>],
@@ -83,7 +90,7 @@ pub(crate) fn fanout_streaming(
     // outcomes back in replica order.
     let outcomes: Vec<(usize, anyhow::Result<f32>)> = pool::run_reduce(
         replicas,
-        pool::effective_threads(replicas),
+        pool::effective_threads(workers.clamp(1, replicas)),
         Vec::new,
         |range, acc: &mut Vec<(usize, anyhow::Result<f32>)>| {
             for r in range {
@@ -115,6 +122,7 @@ pub(crate) fn fanout_streaming(
 /// the caller's `&Network`, so [`Transport::broadcast`] is a no-op.
 pub struct LocalTransport {
     replicas: usize,
+    members: usize,
 }
 
 impl LocalTransport {
@@ -122,6 +130,7 @@ impl LocalTransport {
     pub fn new(replicas: usize) -> LocalTransport {
         LocalTransport {
             replicas: replicas.max(1),
+            members: replicas.max(1),
         }
     }
 }
@@ -133,6 +142,22 @@ impl Transport for LocalTransport {
 
     fn replicas(&self) -> usize {
         self.replicas
+    }
+
+    fn members(&self) -> usize {
+        self.members
+    }
+
+    fn set_members(&mut self, members: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            members >= 1 && members <= self.replicas,
+            "member count {members} out of range 1..={}",
+            self.replicas
+        );
+        // In-process "members" are pool shares; shrinking just narrows
+        // the fan-out (bit-identical — see `fanout_streaming`).
+        self.members = members;
+        Ok(())
     }
 
     fn broadcast(&mut self, _net: &Network) -> anyhow::Result<()> {
@@ -159,7 +184,7 @@ impl Transport for LocalTransport {
                 loss: l.as_ref(),
             })
             .collect();
-        fanout_streaming(self.replicas, net, engine, &borrowed, op, sink)
+        fanout_streaming(self.replicas, self.members, net, engine, &borrowed, op, sink)
     }
 }
 

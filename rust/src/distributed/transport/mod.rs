@@ -19,12 +19,23 @@
 //!   contribution arrives — over a socket exactly as over a channel —
 //!   so no transport ever buffers a full gradient set per replica.
 //!
-//! Two std-only implementations ship today: [`LocalTransport`] (the
-//! in-process pool fan-out PR 3 landed, refactored behind the trait) and
+//! Three std-only implementations ship today: [`LocalTransport`] (the
+//! in-process pool fan-out PR 3 landed, refactored behind the trait),
 //! [`UnixTransport`] (one worker **subprocess** per replica, speaking
-//! the [`wire`] format over `std::os::unix::net` sockets). The active
+//! the [`wire`] format over `std::os::unix::net` sockets) and
+//! [`TcpTransport`] (the same wire format over TCP, multi-host capable
+//! via standalone `--replica-worker --connect-tcp` workers). The active
 //! kind resolves like every other runtime knob: CLI `--transport` >
 //! `MOONWALK_TRANSPORT` env var > `local`.
+//!
+//! Since the elastic fault-tolerance PR the two socket transports share
+//! one supervised coordinator ([`sock`], private) governed by the
+//! [`supervisor`] knobs: heartbeats, step/accept/hello deadlines,
+//! scripted fault injection, and elastic membership
+//! ([`Transport::set_members`]) that executes the fixed logical shard
+//! set on fewer live workers — bit-identically, because the reducer
+//! folds in logical shard order regardless of which worker computed a
+//! shard.
 //!
 //! # Example
 //!
@@ -52,11 +63,16 @@
 //! ```
 
 pub mod local;
+mod sock;
+pub mod supervisor;
+pub mod tcp;
 pub mod unix;
 pub mod wire;
 pub mod worker;
 
 pub use local::LocalTransport;
+pub use supervisor::{Deadlines, FaultKind, FaultPlan};
+pub use tcp::{TcpTransport, TcpTransportOpts};
 pub use unix::{EngineSpec, UnixTransport, UnixTransportOpts};
 pub use wire::WireLoss;
 
@@ -119,8 +135,39 @@ pub trait Transport: Send {
     /// metrics so runs are attributable.
     fn name(&self) -> String;
 
-    /// Fixed replica count this transport executes.
+    /// Fixed **logical** replica (shard) count of this transport — the
+    /// data sharding and reducer layout never change, whatever the live
+    /// worker count ([`Transport::members`]) currently is.
     fn replicas(&self) -> usize;
+
+    /// Live executor count. Defaults to [`Transport::replicas`]; the
+    /// socket transports may run degraded with fewer members after
+    /// [`Transport::set_members`], executing several logical shards per
+    /// worker.
+    fn members(&self) -> usize {
+        self.replicas()
+    }
+
+    /// Elastically resize the executor set (workers leave on shrink,
+    /// join on grow; a re-[`broadcast`](Transport::broadcast) follows
+    /// either way). The logical shard count is untouched, so the
+    /// reduced gradient stays bit-identical at equal global batch.
+    /// Transports without elastic membership reject any change.
+    fn set_members(&mut self, members: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            members == self.replicas(),
+            "the {} transport does not support elastic membership",
+            self.name()
+        );
+        Ok(())
+    }
+
+    /// The supervised heartbeat interval in milliseconds (0 = no
+    /// heartbeats — in-process transports need none), recorded in
+    /// metrics.
+    fn heartbeat_ms(&self) -> u64 {
+        0
+    }
 
     /// Synchronize every replica's parameters with `net` — the broadcast
     /// seam. In-process replicas share `net` by reference (no-op); remote
@@ -158,15 +205,18 @@ pub enum TransportKind {
     Local,
     /// One worker subprocess per replica over unix-domain sockets.
     Unix,
+    /// Socket workers over TCP — same wire format, multi-host capable.
+    Tcp,
 }
 
 impl TransportKind {
-    /// Parse a CLI/env spelling (`"local"` / `"unix"`).
+    /// Parse a CLI/env spelling (`"local"` / `"unix"` / `"tcp"`).
     pub fn parse(s: &str) -> anyhow::Result<TransportKind> {
         match s.trim().to_ascii_lowercase().as_str() {
             "local" | "in-process" => Ok(TransportKind::Local),
             "unix" | "unix-socket" => Ok(TransportKind::Unix),
-            other => anyhow::bail!("unknown transport `{other}` (local|unix)"),
+            "tcp" | "tcp-socket" => Ok(TransportKind::Tcp),
+            other => anyhow::bail!("unknown transport `{other}` (local|unix|tcp)"),
         }
     }
 }
@@ -179,7 +229,7 @@ fn resolve_default() -> TransportKind {
         if let Ok(k) = TransportKind::parse(&v) {
             return k;
         }
-        crate::log_warn!("MOONWALK_TRANSPORT=`{v}` not recognized (local|unix); using local");
+        crate::log_warn!("MOONWALK_TRANSPORT=`{v}` not recognized (local|unix|tcp); using local");
     }
     TransportKind::Local
 }
@@ -190,6 +240,7 @@ pub fn kind() -> TransportKind {
     match KIND.load(Ordering::Relaxed) {
         1 => TransportKind::Local,
         2 => TransportKind::Unix,
+        3 => TransportKind::Tcp,
         _ => {
             let k = resolve_default();
             set_kind(k);
@@ -204,6 +255,7 @@ pub fn set_kind(k: TransportKind) {
         match k {
             TransportKind::Local => 1,
             TransportKind::Unix => 2,
+            TransportKind::Tcp => 3,
         },
         Ordering::Relaxed,
     );
@@ -256,7 +308,8 @@ mod tests {
             TransportKind::parse("unix-socket").unwrap(),
             TransportKind::Unix
         );
-        assert!(TransportKind::parse("tcp").is_err());
+        assert_eq!(TransportKind::parse("tcp").unwrap(), TransportKind::Tcp);
+        assert!(TransportKind::parse("pigeon").is_err());
         let before = kind();
         set_kind(TransportKind::Unix);
         assert_eq!(kind(), TransportKind::Unix);

@@ -1,0 +1,916 @@
+//! The shared socket coordinator behind [`UnixTransport`] and
+//! [`TcpTransport`]: everything about supervising worker subprocesses
+//! over a framed stream that does **not** depend on the socket family.
+//!
+//! [`UnixTransport`]: super::UnixTransport
+//! [`TcpTransport`]: super::TcpTransport
+//!
+//! PR 4's unix transport owned this logic directly; the TCP transport
+//! would have duplicated all of it, so it moved here and both transports
+//! became thin family adapters. On top of the PR 4 behavior this
+//! coordinator adds the supervision layer (see
+//! [`supervisor`](super::supervisor)):
+//!
+//! * **Deadline-bounded reads.** Connections poll on a short read
+//!   timeout through a resumable [`FrameReader`], so a hung worker can
+//!   no longer block the coordinator forever — byte-silence beyond the
+//!   heartbeat grace (or the step deadline, with heartbeats off) fails
+//!   the step with an error naming the replica.
+//! * **Elastic membership.** The *logical* shard count `R` is fixed at
+//!   spawn (it defines the data sharding and the reducer layout), but
+//!   the group may execute on any `1 ≤ members ≤ R` live workers:
+//!   logical shard `q` runs on connection slot `q % members`, each slot
+//!   serving its queue of shards serially. Because shard execution is
+//!   stateless between frames and the reducer folds in **logical** shard
+//!   order, the reduced gradient is bit-identical for every member
+//!   count — degradation and elastic join/leave never perturb training.
+//! * **Fault injection.** A [`FaultPlan`] schedules worker-side events
+//!   (kill/hang, shipped in the init blob) and coordinator-side events
+//!   (drop/delay/corrupt a gradient frame, applied in the reader loop),
+//!   keyed deterministically on `(replica slot, global step)`.
+
+use std::collections::HashMap;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::distributed::{ReduceOp, ReplicaStep, StreamingAllReduce};
+use crate::model::Network;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::lock_ignore_poison as lock;
+
+use super::supervisor::{Deadlines, FaultKind, FaultPlan};
+use super::unix::EngineSpec;
+use super::wire::{self, FramePoll, FrameReader, Msg};
+use super::{submit_to_sink, ShardSpec};
+
+/// Which socket family a coordinator speaks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Family {
+    /// Unix-domain sockets (single host).
+    Unix,
+    /// TCP sockets (multi-host capable).
+    Tcp,
+}
+
+impl Family {
+    fn as_str(self) -> &'static str {
+        match self {
+            Family::Unix => "unix",
+            Family::Tcp => "tcp",
+        }
+    }
+}
+
+/// A stream of either family. All clones share one socket, so timeouts
+/// set through any handle govern every handle.
+pub(crate) enum SockStream {
+    /// A unix-domain stream.
+    Unix(UnixStream),
+    /// A TCP stream.
+    Tcp(TcpStream),
+}
+
+impl SockStream {
+    pub(crate) fn try_clone(&self) -> io::Result<SockStream> {
+        Ok(match self {
+            SockStream::Unix(s) => SockStream::Unix(s.try_clone()?),
+            SockStream::Tcp(s) => SockStream::Tcp(s.try_clone()?),
+        })
+    }
+
+    fn set_nonblocking(&self, v: bool) -> io::Result<()> {
+        match self {
+            SockStream::Unix(s) => s.set_nonblocking(v),
+            SockStream::Tcp(s) => s.set_nonblocking(v),
+        }
+    }
+
+    pub(crate) fn set_read_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        match self {
+            SockStream::Unix(s) => s.set_read_timeout(t),
+            SockStream::Tcp(s) => s.set_read_timeout(t),
+        }
+    }
+
+    fn set_write_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        match self {
+            SockStream::Unix(s) => s.set_write_timeout(t),
+            SockStream::Tcp(s) => s.set_write_timeout(t),
+        }
+    }
+}
+
+impl Read for SockStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            SockStream::Unix(s) => s.read(buf),
+            SockStream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for SockStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            SockStream::Unix(s) => s.write(buf),
+            SockStream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            SockStream::Unix(s) => s.flush(),
+            SockStream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// A listener of either family.
+enum SockListener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl SockListener {
+    fn set_nonblocking(&self, v: bool) -> io::Result<()> {
+        match self {
+            SockListener::Unix(l) => l.set_nonblocking(v),
+            SockListener::Tcp(l) => l.set_nonblocking(v),
+        }
+    }
+
+    fn accept(&self) -> io::Result<SockStream> {
+        match self {
+            SockListener::Unix(l) => l.accept().map(|(s, _)| SockStream::Unix(s)),
+            SockListener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                // Gradient frames are small and latency-sensitive;
+                // Nagle batching would serialize the streamed reduce.
+                s.set_nodelay(true)?;
+                Ok(SockStream::Tcp(s))
+            }
+        }
+    }
+}
+
+/// Family-specific construction input for [`SocketCoordinator::spawn`].
+pub(crate) enum Endpoint {
+    /// Bind a unix socket under `socket_dir` (`None` = fresh temp dir).
+    Unix {
+        /// Directory for the coordinator socket.
+        socket_dir: Option<PathBuf>,
+    },
+    /// Bind a TCP listener on `listen`; the **last** `remote_workers`
+    /// replica slots are not spawned locally — standalone workers
+    /// (`--replica-worker --connect-tcp`) are expected to dial in.
+    Tcp {
+        /// Bind address, e.g. `127.0.0.1:0`.
+        listen: String,
+        /// How many replica slots expect external workers.
+        remote_workers: usize,
+    },
+}
+
+/// Family-independent construction options for [`SocketCoordinator`].
+pub(crate) struct SocketOpts {
+    /// Logical replica (shard) count — fixed for the group's lifetime.
+    pub replicas: usize,
+    /// JSON text of the worker network config.
+    pub config_json: String,
+    /// Engine each worker runs.
+    pub engine: EngineSpec,
+    /// Worker pool threads (keep 1 for bit-equality with local).
+    pub threads_per_worker: usize,
+    /// Worker executable; `None` re-invokes the current binary.
+    pub worker_bin: Option<PathBuf>,
+    /// Timing knobs for every connection.
+    pub deadlines: Deadlines,
+    /// Scheduled fault injections (empty in production).
+    pub faults: FaultPlan,
+}
+
+/// One live worker connection: optional subprocess handle (external TCP
+/// workers have none), buffered reader/writer clones of one socket
+/// (timeouts set on either govern both), and the resumable frame
+/// decoder that survives poll timeouts mid-frame.
+struct WorkerConn {
+    child: Option<Child>,
+    reader: BufReader<SockStream>,
+    writer: BufWriter<SockStream>,
+    frame: FrameReader,
+}
+
+impl WorkerConn {
+    fn kill(&mut self) {
+        if let Some(child) = self.child.as_mut() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+/// Distinguishes "the worker process/connection is gone" (reset + respawn
+/// on next broadcast) from a clean worker-side step error (worker fine).
+struct StepFailure {
+    fatal: bool,
+    err: anyhow::Error,
+}
+
+static SOCKET_COUNTER: AtomicUsize = AtomicUsize::new(0);
+
+/// The shared multi-process coordinator (see module docs). Both public
+/// transports deref their behavior onto this type.
+pub(crate) struct SocketCoordinator {
+    config_json: String,
+    engine: EngineSpec,
+    threads_per_worker: usize,
+    worker_bin: Option<PathBuf>,
+    deadlines: Deadlines,
+    faults: Mutex<FaultPlan>,
+    listener: SockListener,
+    family: Family,
+    /// What spawned workers pass to `--connect`/`--connect-tcp`.
+    connect_arg: String,
+    socket_path: Option<PathBuf>,
+    /// `(dir, created_by_us)` for unix-socket cleanup.
+    socket_dir: Option<(PathBuf, bool)>,
+    /// External (non-spawned) worker slots: the last `remote` of `R`.
+    remote: usize,
+    conns: Vec<Option<WorkerConn>>,
+    members: usize,
+    synced: bool,
+    step_idx: usize,
+}
+
+impl SocketCoordinator {
+    /// Bind the listener, spawn local workers, and complete the
+    /// handshake + init exchange with every replica slot.
+    pub(crate) fn spawn(opts: SocketOpts, endpoint: Endpoint) -> anyhow::Result<SocketCoordinator> {
+        anyhow::ensure!(opts.replicas >= 1, "replica count must be >= 1");
+        // Validate the config JSON up front: a worker failing to parse it
+        // would otherwise surface as an opaque exit.
+        Json::parse(&opts.config_json)
+            .map_err(|e| anyhow::anyhow!("invalid worker config JSON: {e}"))?;
+        let (listener, family, connect_arg, socket_path, socket_dir, remote) = match endpoint {
+            Endpoint::Unix { socket_dir } => {
+                let (dir, own) = match socket_dir {
+                    Some(d) => (d, false),
+                    None => (
+                        std::env::temp_dir().join(format!(
+                            "moonwalk-unix-{}-{}",
+                            std::process::id(),
+                            SOCKET_COUNTER.fetch_add(1, Ordering::Relaxed)
+                        )),
+                        true,
+                    ),
+                };
+                std::fs::create_dir_all(&dir)?;
+                let path = dir.join("coordinator.sock");
+                // A stale socket file from a crashed previous run blocks
+                // bind.
+                let _ = std::fs::remove_file(&path);
+                let listener = SockListener::Unix(UnixListener::bind(&path)?);
+                let arg = path.to_string_lossy().into_owned();
+                (listener, Family::Unix, arg, Some(path), Some((dir, own)), 0)
+            }
+            Endpoint::Tcp {
+                listen,
+                remote_workers,
+            } => {
+                anyhow::ensure!(
+                    remote_workers <= opts.replicas,
+                    "{remote_workers} remote workers exceed {} replicas",
+                    opts.replicas
+                );
+                let listener = TcpListener::bind(&listen)
+                    .map_err(|e| anyhow::anyhow!("binding tcp listener on {listen}: {e}"))?;
+                // Bind may have been to port 0; workers (and the user,
+                // for external ones) need the resolved address.
+                let arg = listener.local_addr()?.to_string();
+                (
+                    SockListener::Tcp(listener),
+                    Family::Tcp,
+                    arg,
+                    None,
+                    None,
+                    remote_workers,
+                )
+            }
+        };
+        listener.set_nonblocking(true)?;
+        let replicas = opts.replicas;
+        let mut coord = SocketCoordinator {
+            config_json: opts.config_json,
+            engine: opts.engine,
+            threads_per_worker: opts.threads_per_worker,
+            worker_bin: opts.worker_bin,
+            deadlines: opts.deadlines,
+            faults: Mutex::new(opts.faults),
+            listener,
+            family,
+            connect_arg,
+            socket_path,
+            socket_dir,
+            remote,
+            conns: (0..replicas).map(|_| None).collect(),
+            members: replicas,
+            synced: false,
+            step_idx: 0,
+        };
+        let all: Vec<usize> = (0..replicas).collect();
+        coord.establish(&all)?;
+        Ok(coord)
+    }
+
+    /// Human-readable family name (`"unix"` / `"tcp"`).
+    pub(crate) fn family_name(&self) -> &'static str {
+        self.family.as_str()
+    }
+
+    /// The address workers connect to: the unix socket path, or the TCP
+    /// listener's resolved `host:port` (useful when binding port 0).
+    pub(crate) fn connect_addr(&self) -> &str {
+        &self.connect_arg
+    }
+
+    /// Fixed logical shard count `R`.
+    pub(crate) fn replicas(&self) -> usize {
+        self.conns.len()
+    }
+
+    /// Live executor count `members ≤ R`.
+    pub(crate) fn members(&self) -> usize {
+        self.members
+    }
+
+    /// The resolved heartbeat interval (ms); 0 = disabled.
+    pub(crate) fn heartbeat_ms(&self) -> u64 {
+        self.deadlines.heartbeat_ms
+    }
+
+    /// Replace the fault schedule (tests and the bench harness inject
+    /// plans after spawn).
+    pub(crate) fn set_fault_plan(&mut self, plan: FaultPlan) {
+        *lock(&self.faults) = plan;
+    }
+
+    /// Resize the executor set to `members` live workers (logical shard
+    /// count unchanged — see module docs for the bit-identity argument).
+    /// Shrinking kills the excess workers; growing marks the new slots
+    /// for respawn. Either way the group needs a re-broadcast.
+    pub(crate) fn set_members(&mut self, members: usize) -> anyhow::Result<()> {
+        let replicas = self.conns.len();
+        anyhow::ensure!(
+            members >= 1 && members <= replicas,
+            "member count {members} out of range 1..={replicas}"
+        );
+        if members == self.members {
+            return Ok(());
+        }
+        for slot in members..self.members {
+            if let Some(mut conn) = self.conns[slot].take() {
+                conn.kill();
+            }
+        }
+        crate::log_warn!(
+            "transport membership now {members}/{replicas} worker(s); re-broadcast to resume"
+        );
+        self.members = members;
+        self.synced = false;
+        Ok(())
+    }
+
+    /// The worker executable to launch.
+    fn bin(&self) -> anyhow::Result<PathBuf> {
+        match &self.worker_bin {
+            Some(p) => Ok(p.clone()),
+            None => Ok(std::env::current_exe()?),
+        }
+    }
+
+    /// Whether a replica slot expects an external (non-spawned) worker.
+    fn is_external(&self, replica: usize) -> bool {
+        self.remote > 0 && replica >= self.conns.len() - self.remote
+    }
+
+    /// The init blob for one fresh worker: config + engine + runtime
+    /// knobs + its armed worker-side fault events.
+    fn init_json(&self, replica: usize) -> String {
+        let config = Json::parse(&self.config_json).expect("validated at spawn");
+        let armed: Vec<Json> = lock(&self.faults)
+            .arm_worker(replica)
+            .into_iter()
+            .map(|e| {
+                let mut pairs = vec![("kind", Json::from(e.kind.label()))];
+                match e.step {
+                    Some(s) => pairs.push(("step", s.into())),
+                    None => pairs.push(("every", true.into())),
+                }
+                Json::from_pairs(pairs)
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("config", config),
+            (
+                "engine",
+                Json::from_pairs(vec![
+                    ("name", self.engine.name.as_str().into()),
+                    ("block", self.engine.block.into()),
+                    ("checkpoint_segments", self.engine.checkpoint_segments.into()),
+                    ("seed", (self.engine.seed as usize).into()),
+                ]),
+            ),
+            ("threads", self.threads_per_worker.max(1).into()),
+            (
+                "heartbeat_ms",
+                (self.deadlines.heartbeat_ms as usize).into(),
+            ),
+            ("faults", Json::Arr(armed)),
+        ])
+        .to_string()
+    }
+
+    /// Spawn (or, for external slots, await) the given replicas'
+    /// workers, accept their handshakes and send each its init blob.
+    fn establish(&mut self, replicas: &[usize]) -> anyhow::Result<()> {
+        if replicas.is_empty() {
+            return Ok(());
+        }
+        let mut pending: HashMap<usize, Option<Child>> = HashMap::new();
+        for &r in replicas {
+            anyhow::ensure!(
+                self.conns[r].is_none(),
+                "replica {r} already has a live worker"
+            );
+            if self.is_external(r) {
+                // A standalone worker must dial in within the accept
+                // deadline: moonwalk --replica-worker --connect-tcp ...
+                pending.insert(r, None);
+                continue;
+            }
+            let bin = self.bin()?;
+            let mut cmd = Command::new(&bin);
+            cmd.arg("--replica-worker");
+            match self.family {
+                Family::Unix => cmd.arg("--connect").arg(&self.connect_arg),
+                Family::Tcp => cmd.arg("--connect-tcp").arg(&self.connect_arg),
+            };
+            let child = cmd
+                .arg("--replica")
+                .arg(r.to_string())
+                .stdin(Stdio::null())
+                .spawn()
+                .map_err(|e| anyhow::anyhow!("spawning worker for replica {r}: {e}"))?;
+            pending.insert(r, Some(child));
+        }
+        let deadline = Instant::now() + self.deadlines.accept;
+        while !pending.is_empty() {
+            match self.listener.accept() {
+                Ok(stream) => {
+                    stream.set_nonblocking(false)?;
+                    // Bound the handshake read: a peer that connects but
+                    // never sends its hello must not wedge the accept
+                    // loop. The write timeout stays for the connection's
+                    // whole life — a hung worker must not block param
+                    // uploads forever either.
+                    stream.set_read_timeout(Some(self.deadlines.hello))?;
+                    stream.set_write_timeout(Some(self.deadlines.accept))?;
+                    let mut reader = BufReader::new(stream.try_clone()?);
+                    let (version, replica) =
+                        match wire::read_msg_from(&mut reader, "connecting peer") {
+                            Ok(Msg::Hello { version, replica }) => (version, replica as usize),
+                            Ok(other) => anyhow::bail!("expected worker hello, got {other:?}"),
+                            Err(e) => anyhow::bail!("peer connected but sent no hello: {e}"),
+                        };
+                    anyhow::ensure!(
+                        version == wire::WIRE_VERSION,
+                        "worker speaks wire version {version}, coordinator {}",
+                        wire::WIRE_VERSION
+                    );
+                    anyhow::ensure!(
+                        replica < self.conns.len(),
+                        "hello from replica {replica}, but the group has {} slots",
+                        self.conns.len()
+                    );
+                    let child = pending
+                        .remove(&replica)
+                        .ok_or_else(|| anyhow::anyhow!("unexpected hello from replica {replica}"))?;
+                    let mut writer = BufWriter::new(stream.try_clone()?);
+                    wire::write_init(&mut writer, &self.init_json(replica))?;
+                    writer.flush()?;
+                    // Step-loop reads poll on a short timeout and resume
+                    // through the FrameReader; liveness is enforced by
+                    // heartbeat grace and the step deadline, not here.
+                    stream.set_read_timeout(Some(self.deadlines.poll()))?;
+                    self.conns[replica] = Some(WorkerConn {
+                        child,
+                        reader,
+                        writer,
+                        frame: FrameReader::new(),
+                    });
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    // While waiting, surface a worker that died before
+                    // connecting (bad binary, immediate crash) instead of
+                    // timing out opaquely.
+                    for (&r, child) in pending.iter_mut() {
+                        if let Some(child) = child.as_mut() {
+                            if let Ok(Some(status)) = child.try_wait() {
+                                anyhow::bail!(
+                                    "replica {r} worker exited with {status} before connecting"
+                                );
+                            }
+                        }
+                    }
+                    anyhow::ensure!(
+                        Instant::now() < deadline,
+                        "timed out after {:.0?} waiting for {} worker(s) to connect \
+                         (accept deadline; --accept-timeout / MOONWALK_ACCEPT_TIMEOUT)",
+                        self.deadlines.accept,
+                        pending.len()
+                    );
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
+    }
+
+    /// Active member slots whose worker is currently down.
+    fn dead(&self) -> Vec<usize> {
+        (0..self.members)
+            .filter(|&s| self.conns[s].is_none())
+            .collect()
+    }
+
+    /// Send the full parameter set to one replica slot.
+    fn send_params(&mut self, r: usize, layers: &[Vec<&Tensor>]) -> io::Result<()> {
+        let conn = self.conns[r].as_mut().expect("caller checked liveness");
+        wire::write_params(&mut conn.writer, layers)?;
+        conn.writer.flush()
+    }
+
+    /// Kill one worker — fault injection for the worker-death
+    /// recovery tests. The next broadcast respawns it.
+    pub(crate) fn kill_worker(&mut self, replica: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(replica < self.conns.len(), "replica {replica} out of range");
+        if let Some(mut conn) = self.conns[replica].take() {
+            conn.kill();
+        }
+        self.synced = false;
+        Ok(())
+    }
+
+    /// Kill one worker **without** marking it dead — mimics an unnoticed
+    /// crash discovered only when the next step's I/O hits EOF.
+    pub(crate) fn simulate_worker_crash(&mut self, replica: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(replica < self.conns.len(), "replica {replica} out of range");
+        if let Some(conn) = self.conns[replica].as_mut() {
+            anyhow::ensure!(
+                conn.child.is_some(),
+                "replica {replica} is an external worker; cannot kill its process"
+            );
+            conn.kill();
+        }
+        Ok(())
+    }
+
+    /// Tear down every worker and mark the group unsynced — the
+    /// whole-group reset after any fatal step failure (surviving workers
+    /// may hold half an aborted step in their socket buffers).
+    pub(crate) fn reset_workers(&mut self) {
+        for slot in self.conns.iter_mut() {
+            if let Some(mut conn) = slot.take() {
+                conn.kill();
+            }
+        }
+        self.synced = false;
+    }
+
+    /// Worker subprocess ids, `None` for dead slots and external workers.
+    pub(crate) fn worker_ids(&self) -> Vec<Option<u32>> {
+        self.conns
+            .iter()
+            .map(|c| c.as_ref().and_then(|c| c.child.as_ref().map(|ch| ch.id())))
+            .collect()
+    }
+
+    /// Respawn dead members and upload the parameter set to every live
+    /// member; one retry per slot covers a worker that died between the
+    /// liveness check and the write.
+    pub(crate) fn broadcast(&mut self, net: &Network) -> anyhow::Result<()> {
+        let dead = self.dead();
+        self.establish(&dead)?;
+        let layers: Vec<Vec<&Tensor>> = net.layers.iter().map(|l| l.params()).collect();
+        for r in 0..self.members {
+            if self.send_params(r, &layers).is_err() {
+                // The worker is gone: reap it, respawn, resend once.
+                if let Some(mut conn) = self.conns[r].take() {
+                    conn.kill();
+                }
+                self.establish(&[r])
+                    .map_err(|e| e.context(format!("respawning replica {r} mid-broadcast")))?;
+                self.send_params(r, &layers)
+                    .map_err(|e| anyhow::anyhow!("replica {r}: param upload failed twice: {e}"))?;
+            }
+        }
+        self.synced = true;
+        Ok(())
+    }
+
+    /// One supervised replicated step over `shards` (see module docs for
+    /// the logical-shard → member mapping).
+    pub(crate) fn step(
+        &mut self,
+        net: &Network,
+        shards: &[ShardSpec<'_>],
+        op: ReduceOp,
+        sink: &(dyn Fn(usize, Vec<Tensor>) + Sync),
+    ) -> anyhow::Result<ReplicaStep> {
+        let replicas = self.conns.len();
+        anyhow::ensure!(
+            shards.len() == replicas,
+            "group has {replicas} replicas but {} shards were supplied",
+            shards.len()
+        );
+        anyhow::ensure!(
+            self.synced,
+            "parameters were never broadcast to the workers (call broadcast \
+             after construction and after every parameter update or step error)"
+        );
+        let members = self.members;
+        let step_idx = self.step_idx;
+        self.step_idx += 1;
+        // Pull this step's coordinator-side faults up front (one lock,
+        // deterministic order) before the reader threads start.
+        let slot_faults: Vec<Option<FaultKind>> = {
+            let mut plan = lock(&self.faults);
+            (0..members).map(|s| plan.take_coord(s, step_idx)).collect()
+        };
+        // The reducer is rebuilt per step (bucket-fused exactly like the
+        // local transport's) so a failed attempt's partial deliveries
+        // are discarded wholesale — the retry starts from a clean fold.
+        let reducer = super::reducer_for(net, replicas, op);
+        let losses: Mutex<Vec<Option<f32>>> = Mutex::new(vec![None; replicas]);
+        let family = self.family;
+        let dl = self.deadlines;
+        let outcomes: Vec<Result<(), StepFailure>> = std::thread::scope(|scope| {
+            let reducer = &reducer;
+            let losses = &losses;
+            let handles: Vec<_> = self
+                .conns
+                .iter_mut()
+                .take(members)
+                .enumerate()
+                .map(|(slot, conn_slot)| {
+                    let conn = conn_slot.as_mut().expect("synced implies alive");
+                    // Slot `s` serially executes logical shards s, s+M,
+                    // s+2M, … — the full set at M = R, a longer queue as
+                    // the group degrades.
+                    let queue: Vec<usize> = (slot..replicas).step_by(members).collect();
+                    let fault = slot_faults[slot];
+                    scope.spawn(move || {
+                        drive_slot(conn, &queue, shards, reducer, losses, sink, dl, fault, family)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        Err(StepFailure {
+                            fatal: true,
+                            err: anyhow::anyhow!("transport reader thread panicked"),
+                        })
+                    })
+                })
+                .collect()
+        });
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut any_fatal = false;
+        for outcome in outcomes {
+            if let Err(f) = outcome {
+                any_fatal |= f.fatal;
+                if first_err.is_none() {
+                    first_err = Some(f.err);
+                }
+            }
+        }
+        // The partial-delivery guard: every slot reported success, yet
+        // the reducer still holds unfinished layers — a gradient frame
+        // was lost in flight (e.g. the drop-frame fault). Silently
+        // continuing would skip those layers' optimizer update.
+        if first_err.is_none() {
+            let pending = reducer.pending_layers();
+            if pending > 0 {
+                any_fatal = true;
+                first_err = Some(anyhow::anyhow!(
+                    "step {step_idx} completed but {pending} layer reduction(s) never \
+                     finished (a gradient frame was lost); discarding partial deliveries"
+                ));
+            }
+        }
+        if let Some(e) = first_err {
+            if any_fatal {
+                // Surviving workers completed, but a fatal peer means the
+                // step is torn; reset so the next broadcast rebuilds a
+                // clean group. Clean (non-fatal) engine errors leave
+                // workers parked at a frame boundary — no reset needed.
+                self.reset_workers();
+            }
+            return Err(e);
+        }
+        let replica_losses: Vec<f32> = lock(&losses)
+            .iter()
+            .map(|l| l.expect("all slots succeeded"))
+            .collect();
+        let loss = replica_losses.iter().sum::<f32>() / replica_losses.len() as f32;
+        Ok(ReplicaStep {
+            loss,
+            replica_losses,
+            reduce_s: reducer.reduce_seconds(),
+        })
+    }
+}
+
+/// Drive one connection slot through its queue of logical shards:
+/// dispatch a shard, drain its gradient stream through the resumable
+/// frame reader under heartbeat-grace and step-deadline supervision,
+/// then move to the next queued shard.
+#[allow(clippy::too_many_arguments)]
+fn drive_slot(
+    conn: &mut WorkerConn,
+    queue: &[usize],
+    shards: &[ShardSpec<'_>],
+    reducer: &StreamingAllReduce,
+    losses: &Mutex<Vec<Option<f32>>>,
+    sink: &(dyn Fn(usize, Vec<Tensor>) + Sync),
+    dl: Deadlines,
+    mut fault: Option<FaultKind>,
+    family: Family,
+) -> Result<(), StepFailure> {
+    for &q in queue {
+        let peer = format!("replica {q} ({})", family.as_str());
+        let shard = &shards[q];
+        wire::write_step(&mut conn.writer, shard.x, &shard.loss.to_wire())
+            .and_then(|_| conn.writer.flush())
+            .map_err(|e| StepFailure {
+                fatal: true,
+                err: anyhow::anyhow!("{peer} worker died during step dispatch: {e}"),
+            })?;
+        let started = Instant::now();
+        let mut last_activity = Instant::now();
+        loop {
+            match conn.frame.poll_frame(&mut conn.reader, &peer) {
+                Ok(FramePoll::Frame(mut tag, payload)) => {
+                    last_activity = Instant::now();
+                    if tag == wire::TAG_GRAD {
+                        // Coordinator-side fault injection targets the
+                        // slot's first *gradient* frame of the step (a
+                        // deterministic anchor; heartbeats don't count).
+                        match fault.take() {
+                            Some(FaultKind::DropFrame) => {
+                                crate::log_warn!(
+                                    "fault injection: dropping a gradient frame from {peer}"
+                                );
+                                continue;
+                            }
+                            Some(FaultKind::DelayFrame(ms)) => {
+                                crate::log_warn!(
+                                    "fault injection: delaying a gradient frame from {peer} \
+                                     by {ms}ms"
+                                );
+                                std::thread::sleep(Duration::from_millis(ms));
+                            }
+                            Some(FaultKind::CorruptFrame) => {
+                                crate::log_warn!(
+                                    "fault injection: corrupting a gradient frame from {peer}"
+                                );
+                                tag = 0xEE;
+                            }
+                            _ => {}
+                        }
+                    }
+                    let msg = wire::decode_frame(tag, &payload, &peer).map_err(|e| StepFailure {
+                        fatal: true,
+                        err: anyhow::anyhow!(e),
+                    })?;
+                    match msg {
+                        Msg::Heartbeat => {}
+                        Msg::Grad { layer, grads } => {
+                            submit_to_sink(reducer, layer as usize, q, grads, sink);
+                        }
+                        Msg::StepDone { loss } => {
+                            lock(losses)[q] = Some(loss);
+                            break;
+                        }
+                        Msg::Error { message } => {
+                            return Err(StepFailure {
+                                fatal: false,
+                                err: anyhow::anyhow!("replica {q} failed: {message}"),
+                            });
+                        }
+                        other => {
+                            return Err(StepFailure {
+                                fatal: true,
+                                err: anyhow::anyhow!("{peer}: unexpected {other:?} mid-step"),
+                            });
+                        }
+                    }
+                }
+                Ok(FramePoll::Pending { progressed }) => {
+                    // Liveness resets on *byte* progress, not complete
+                    // frames, so a slow large frame never reads as a
+                    // hang; heartbeats cover compute-bound silence.
+                    if progressed {
+                        last_activity = Instant::now();
+                    }
+                    if let Some(grace) = dl.grace() {
+                        if last_activity.elapsed() > grace {
+                            return Err(StepFailure {
+                                fatal: true,
+                                err: anyhow::anyhow!(
+                                    "{peer} presumed hung: no heartbeat or data for {}ms \
+                                     (grace {}ms at --heartbeat-ms {})",
+                                    last_activity.elapsed().as_millis(),
+                                    grace.as_millis(),
+                                    dl.heartbeat_ms
+                                ),
+                            });
+                        }
+                    }
+                    if let Some(limit) = dl.step {
+                        if started.elapsed() > limit {
+                            return Err(StepFailure {
+                                fatal: true,
+                                err: anyhow::anyhow!(
+                                    "{peer} exceeded the step deadline ({:.1}s; \
+                                     --step-timeout / MOONWALK_STEP_TIMEOUT)",
+                                    limit.as_secs_f64()
+                                ),
+                            });
+                        }
+                    }
+                }
+                Err(e) => {
+                    let what = if e.kind() == io::ErrorKind::UnexpectedEof {
+                        "worker died mid-step (connection closed)".to_string()
+                    } else {
+                        format!("transport error mid-step: {e}")
+                    };
+                    return Err(StepFailure {
+                        fatal: true,
+                        err: anyhow::anyhow!("replica {q} ({}) {what}", family.as_str()),
+                    });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+impl Drop for SocketCoordinator {
+    fn drop(&mut self) {
+        // Ask every live worker to exit, give them a moment, then make
+        // sure no spawned process outlives the coordinator.
+        for conn in self.conns.iter_mut().flatten() {
+            let _ = wire::write_shutdown(&mut conn.writer);
+            let _ = conn.writer.flush();
+        }
+        let deadline = Instant::now() + Duration::from_millis(500);
+        for conn in self.conns.iter_mut().flatten() {
+            let Some(child) = conn.child.as_mut() else {
+                continue;
+            };
+            loop {
+                match child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(10))
+                    }
+                    _ => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some(path) = &self.socket_path {
+            let _ = std::fs::remove_file(path);
+        }
+        if let Some((dir, own)) = &self.socket_dir {
+            if *own {
+                let _ = std::fs::remove_dir_all(dir);
+            }
+        }
+    }
+}

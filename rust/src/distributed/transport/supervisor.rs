@@ -1,0 +1,518 @@
+//! The supervision layer: configurable connection deadlines, heartbeat
+//! policy, retry backoff, and the scriptable [`FaultPlan`] chaos
+//! harness.
+//!
+//! PR 4's transport had three hard-coded time constants (30 s accept,
+//! 10 s hello, **no** step deadline — a hung worker blocked the
+//! coordinator forever) and two ad-hoc fault hooks (`kill_worker`,
+//! `simulate_worker_crash`). This module generalizes both:
+//!
+//! * [`Deadlines`] resolves every timing knob through the usual
+//!   precedence (CLI flag > `MOONWALK_*` env var > default) and rides
+//!   along every coordinator connection. The **step deadline** is the
+//!   hung-worker fix: readers poll on a short timeout and abandon a
+//!   connection that exceeds it. The **heartbeat** interval drives both
+//!   sides — workers tick while computing; the coordinator treats
+//!   `grace()` of byte-silence as a dead peer long before the step
+//!   deadline fires.
+//! * [`Backoff`] is the doubling retry delay used by step retry and
+//!   worker connect loops.
+//! * [`FaultPlan`] is a deterministic, scriptable schedule of injected
+//!   failures (`kill:1@3,hang:0@5,drop:1@2,delay250:0@1,corrupt:1@4`),
+//!   wired through `--fault` / `MOONWALK_FAULT` and the bench harness.
+//!   Worker-side events (kill, hang) ship to the worker in its init
+//!   blob; coordinator-side events (drop/delay/corrupt a gradient
+//!   frame) are applied in the reader loop. Events are **one-shot**:
+//!   arming removes them, so a respawned worker comes back clean. The
+//!   wildcard step `@*` re-arms on every spawn — that is how the
+//!   failover tests model a host that never comes back.
+//!
+//! Determinism note: fault *injection* is deterministic (keyed on
+//! `(replica, global step)`), and recovery is provably exact — the
+//! retry path replays the identical batch against unchanged parameters,
+//! so a post-recovery loss curve is bit-identical to a no-fault run
+//! (`tests/fault_tolerance.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Default per-step compute deadline (seconds). Generous: it is the
+/// backstop for a worker that hangs with heartbeats disabled; with
+/// heartbeats on, `grace()` detects the hang much sooner.
+pub const DEFAULT_STEP_TIMEOUT_S: u64 = 120;
+/// Default worker accept/connect deadline (seconds) — PR 4's 30 s, now
+/// configurable.
+pub const DEFAULT_ACCEPT_TIMEOUT_S: u64 = 30;
+/// Default handshake read deadline (seconds) — PR 4's 10 s, now
+/// configurable.
+pub const DEFAULT_HELLO_TIMEOUT_S: u64 = 10;
+/// Default worker heartbeat interval (milliseconds). 0 disables
+/// heartbeats (liveness then rests on the step deadline alone).
+pub const DEFAULT_HEARTBEAT_MS: u64 = 500;
+
+// Global knob state, resolved lazily like every other runtime knob
+// (pool threads, replicas, transport kind): explicit setter (CLI) >
+// env var > default. Values are stored in milliseconds; 0 = unresolved,
+// u64::MAX = explicitly disabled.
+static STEP_MS: AtomicU64 = AtomicU64::new(0);
+static ACCEPT_MS: AtomicU64 = AtomicU64::new(0);
+static HELLO_MS: AtomicU64 = AtomicU64::new(0);
+static HEARTBEAT_MS: AtomicU64 = AtomicU64::new(0);
+
+const DISABLED: u64 = u64::MAX;
+
+fn resolve_ms(slot: &AtomicU64, env: &str, default_ms: u64, zero_disables: bool) -> u64 {
+    match slot.load(Ordering::Relaxed) {
+        0 => {}
+        v => return v,
+    }
+    let v = match std::env::var(env) {
+        Ok(s) => match s.trim().parse::<f64>() {
+            Ok(secs) if secs == 0.0 && zero_disables => DISABLED,
+            Ok(secs) if secs > 0.0 => (secs * 1000.0) as u64,
+            _ => {
+                crate::log_warn!("{env}=`{s}` is not a valid duration; using the default");
+                default_ms
+            }
+        },
+        Err(_) => default_ms,
+    };
+    slot.store(v.max(1), Ordering::Relaxed);
+    v.max(1)
+}
+
+fn store_ms(slot: &AtomicU64, ms: u64, zero_disables: bool) {
+    slot.store(
+        if ms == 0 {
+            if zero_disables {
+                DISABLED
+            } else {
+                1
+            }
+        } else {
+            ms
+        },
+        Ordering::Relaxed,
+    );
+}
+
+/// Set the per-step compute deadline (CLI `--step-timeout`, seconds;
+/// `0` disables — the PR 4 behavior of waiting forever).
+pub fn set_step_timeout_secs(secs: f64) {
+    store_ms(&STEP_MS, (secs * 1000.0) as u64, true);
+}
+
+/// Set the worker accept/connect deadline (CLI `--accept-timeout`,
+/// seconds).
+pub fn set_accept_timeout_secs(secs: f64) {
+    store_ms(&ACCEPT_MS, (secs * 1000.0) as u64, false);
+}
+
+/// Set the handshake read deadline (CLI `--hello-timeout`, seconds).
+pub fn set_hello_timeout_secs(secs: f64) {
+    store_ms(&HELLO_MS, (secs * 1000.0) as u64, false);
+}
+
+/// Set the worker heartbeat interval (CLI `--heartbeat-ms`; `0`
+/// disables heartbeats).
+pub fn set_heartbeat_ms(ms: u64) {
+    store_ms(&HEARTBEAT_MS, ms, true);
+}
+
+/// Every timing knob a supervised connection needs, in one copyable
+/// bundle. [`Deadlines::resolve`] reads the global knobs; tests and
+/// benches construct explicit values to keep fault detection fast.
+#[derive(Clone, Copy, Debug)]
+pub struct Deadlines {
+    /// Worker accept/connect deadline.
+    pub accept: Duration,
+    /// Handshake (hello) read deadline.
+    pub hello: Duration,
+    /// Per-step compute deadline; `None` = wait forever.
+    pub step: Option<Duration>,
+    /// Worker heartbeat interval in milliseconds; 0 disables.
+    pub heartbeat_ms: u64,
+}
+
+impl Default for Deadlines {
+    fn default() -> Deadlines {
+        Deadlines {
+            accept: Duration::from_secs(DEFAULT_ACCEPT_TIMEOUT_S),
+            hello: Duration::from_secs(DEFAULT_HELLO_TIMEOUT_S),
+            step: Some(Duration::from_secs(DEFAULT_STEP_TIMEOUT_S)),
+            heartbeat_ms: DEFAULT_HEARTBEAT_MS,
+        }
+    }
+}
+
+impl Deadlines {
+    /// Resolve from the global knobs: explicit setters (the CLI flags)
+    /// > `MOONWALK_STEP_TIMEOUT` / `MOONWALK_ACCEPT_TIMEOUT` /
+    /// `MOONWALK_HELLO_TIMEOUT` (seconds) and `MOONWALK_HEARTBEAT_MS`
+    /// (milliseconds) > the defaults.
+    pub fn resolve() -> Deadlines {
+        let step = resolve_ms(
+            &STEP_MS,
+            "MOONWALK_STEP_TIMEOUT",
+            DEFAULT_STEP_TIMEOUT_S * 1000,
+            true,
+        );
+        let accept = resolve_ms(
+            &ACCEPT_MS,
+            "MOONWALK_ACCEPT_TIMEOUT",
+            DEFAULT_ACCEPT_TIMEOUT_S * 1000,
+            false,
+        );
+        let hello = resolve_ms(
+            &HELLO_MS,
+            "MOONWALK_HELLO_TIMEOUT",
+            DEFAULT_HELLO_TIMEOUT_S * 1000,
+            false,
+        );
+        let hb = {
+            match HEARTBEAT_MS.load(Ordering::Relaxed) {
+                0 => {
+                    let v = match std::env::var("MOONWALK_HEARTBEAT_MS") {
+                        Ok(s) => match s.trim().parse::<u64>() {
+                            Ok(0) => DISABLED,
+                            Ok(ms) => ms,
+                            Err(_) => DEFAULT_HEARTBEAT_MS,
+                        },
+                        Err(_) => DEFAULT_HEARTBEAT_MS,
+                    };
+                    HEARTBEAT_MS.store(v, Ordering::Relaxed);
+                    v
+                }
+                v => v,
+            }
+        };
+        Deadlines {
+            accept: Duration::from_millis(accept),
+            hello: Duration::from_millis(hello),
+            step: if step == DISABLED {
+                None
+            } else {
+                Some(Duration::from_millis(step))
+            },
+            heartbeat_ms: if hb == DISABLED { 0 } else { hb },
+        }
+    }
+
+    /// How long a connection may stay byte-silent mid-step before the
+    /// supervisor declares its worker dead: several missed heartbeats,
+    /// floored so scheduler jitter cannot produce false positives.
+    /// `None` when heartbeats are disabled (the step deadline is then
+    /// the only liveness check).
+    pub fn grace(&self) -> Option<Duration> {
+        if self.heartbeat_ms == 0 {
+            None
+        } else {
+            Some(Duration::from_millis((self.heartbeat_ms * 8).max(500)))
+        }
+    }
+
+    /// The reader poll interval: short enough to notice deadline/grace
+    /// expiry promptly, long enough not to spin.
+    pub fn poll(&self) -> Duration {
+        let ms = if self.heartbeat_ms > 0 {
+            self.heartbeat_ms.clamp(5, 200)
+        } else {
+            200
+        };
+        Duration::from_millis(ms)
+    }
+}
+
+/// Exponential retry backoff: `base, 2·base, 4·base, …` capped at
+/// `max`. Deterministic (no jitter) so retried runs stay reproducible.
+#[derive(Clone, Debug)]
+pub struct Backoff {
+    next_ms: u64,
+    max_ms: u64,
+}
+
+impl Backoff {
+    /// A backoff starting at `base_ms`, doubling up to `max_ms`.
+    pub fn new(base_ms: u64, max_ms: u64) -> Backoff {
+        Backoff {
+            next_ms: base_ms.max(1),
+            max_ms: max_ms.max(1),
+        }
+    }
+
+    /// The next delay (advancing the schedule).
+    pub fn delay(&mut self) -> Duration {
+        let d = self.next_ms.min(self.max_ms);
+        self.next_ms = self.next_ms.saturating_mul(2).min(self.max_ms);
+        Duration::from_millis(d)
+    }
+}
+
+// ----- fault injection -------------------------------------------------------
+
+/// What an injected fault does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Worker-side: abort the process right after streaming its first
+    /// gradient frame of the step — a kill -9 mid-step that leaves the
+    /// coordinator holding a partial delivery.
+    Kill,
+    /// Worker-side: stop heartbeating and sleep forever mid-step — the
+    /// failure mode PR 4 could not detect.
+    Hang,
+    /// Coordinator-side: discard the worker's first gradient frame of
+    /// the step (exercises the partial-delivery guard).
+    DropFrame,
+    /// Coordinator-side: delay processing the first gradient frame by
+    /// this many milliseconds (a transient slow link; the step must
+    /// still succeed bit-identically).
+    DelayFrame(u64),
+    /// Coordinator-side: corrupt the first gradient frame's tag byte,
+    /// forcing the labeled decode-error path.
+    CorruptFrame,
+}
+
+impl FaultKind {
+    /// Whether the event executes inside the worker process (shipped in
+    /// the init blob) rather than in the coordinator's reader.
+    pub fn worker_side(&self) -> bool {
+        matches!(self, FaultKind::Kill | FaultKind::Hang)
+    }
+
+    /// The spec spelling of this kind.
+    pub fn label(&self) -> String {
+        match self {
+            FaultKind::Kill => "kill".into(),
+            FaultKind::Hang => "hang".into(),
+            FaultKind::DropFrame => "drop".into(),
+            FaultKind::DelayFrame(ms) => format!("delay{ms}"),
+            FaultKind::CorruptFrame => "corrupt".into(),
+        }
+    }
+}
+
+/// One scheduled fault: `kind` strikes `replica` at global step `step`
+/// (`None` = every step — the `@*` wildcard, which re-arms after every
+/// respawn and models a permanently failing host).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// The replica slot the fault targets.
+    pub replica: usize,
+    /// 0-based global step index; `None` fires every step.
+    pub step: Option<usize>,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of injected faults (see module docs).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// The scheduled events, in spec order.
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated spec: each entry is
+    /// `kind:replica@step`, kind ∈ `kill | hang | drop | corrupt |
+    /// delay<ms>`, step a 0-based integer or `*` (every step).
+    /// Example: `kill:1@3,hang:0@5,delay250:0@1`.
+    pub fn parse(spec: &str) -> anyhow::Result<FaultPlan> {
+        let mut events = Vec::new();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (kind_s, rest) = entry
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("fault `{entry}`: expected kind:replica@step"))?;
+            let (replica_s, step_s) = rest
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("fault `{entry}`: expected kind:replica@step"))?;
+            let kind = match kind_s.trim() {
+                "kill" => FaultKind::Kill,
+                "hang" => FaultKind::Hang,
+                "drop" => FaultKind::DropFrame,
+                "corrupt" => FaultKind::CorruptFrame,
+                k if k.starts_with("delay") => {
+                    let ms: u64 = k["delay".len()..].parse().map_err(|_| {
+                        anyhow::anyhow!("fault `{entry}`: delay needs milliseconds (delay250)")
+                    })?;
+                    FaultKind::DelayFrame(ms)
+                }
+                other => anyhow::bail!(
+                    "fault `{entry}`: unknown kind `{other}` (kill|hang|drop|corrupt|delay<ms>)"
+                ),
+            };
+            let replica: usize = replica_s
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault `{entry}`: bad replica index"))?;
+            let step = match step_s.trim() {
+                "*" => None,
+                s => Some(s.parse::<usize>().map_err(|_| {
+                    anyhow::anyhow!("fault `{entry}`: bad step (integer or `*`)")
+                })?),
+            };
+            events.push(FaultEvent {
+                replica,
+                step,
+                kind,
+            });
+        }
+        Ok(FaultPlan { events })
+    }
+
+    /// Resolve the active plan: explicit `spec` (the CLI `--fault`) >
+    /// `MOONWALK_FAULT` env var > empty.
+    pub fn resolve(spec: Option<&str>) -> anyhow::Result<FaultPlan> {
+        if let Some(s) = spec {
+            return FaultPlan::parse(s);
+        }
+        if let Ok(s) = std::env::var("MOONWALK_FAULT") {
+            if !s.trim().is_empty() {
+                return FaultPlan::parse(&s);
+            }
+        }
+        Ok(FaultPlan::default())
+    }
+
+    /// Whether no events are scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The spec spelling of this plan (round-trips through [`parse`]).
+    ///
+    /// [`parse`]: Self::parse
+    pub fn to_spec(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| {
+                format!(
+                    "{}:{}@{}",
+                    e.kind.label(),
+                    e.replica,
+                    match e.step {
+                        Some(s) => s.to_string(),
+                        None => "*".into(),
+                    }
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Take the worker-side events for `replica`, to ship in its init
+    /// blob. One-shot events are consumed (a respawned worker comes
+    /// back clean); wildcard (`@*`) events are copied and retained.
+    pub fn arm_worker(&mut self, replica: usize) -> Vec<FaultEvent> {
+        let mut armed = Vec::new();
+        self.events.retain(|e| {
+            if e.replica == replica && e.kind.worker_side() {
+                armed.push(e.clone());
+                e.step.is_none() // retain only wildcards
+            } else {
+                true
+            }
+        });
+        armed
+    }
+
+    /// Take the coordinator-side fault for `(replica, step)` if one is
+    /// scheduled. One-shot events are consumed; wildcards retained.
+    pub fn take_coord(&mut self, replica: usize, step: usize) -> Option<FaultKind> {
+        let idx = self.events.iter().position(|e| {
+            e.replica == replica
+                && !e.kind.worker_side()
+                && e.step.map(|s| s == step).unwrap_or(true)
+        })?;
+        let e = self.events[idx].clone();
+        if e.step.is_some() {
+            self.events.remove(idx);
+        }
+        Some(e.kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_plan_parses_and_round_trips() {
+        let plan = FaultPlan::parse("kill:1@3, hang:0@5,drop:1@2,delay250:0@1,corrupt:1@*")
+            .unwrap();
+        assert_eq!(plan.events.len(), 5);
+        assert_eq!(
+            plan.events[0],
+            FaultEvent {
+                replica: 1,
+                step: Some(3),
+                kind: FaultKind::Kill
+            }
+        );
+        assert_eq!(plan.events[3].kind, FaultKind::DelayFrame(250));
+        assert_eq!(plan.events[4].step, None);
+        let respelled = FaultPlan::parse(&plan.to_spec()).unwrap();
+        assert_eq!(respelled.events, plan.events);
+        assert!(FaultPlan::parse("explode:0@1").is_err());
+        assert!(FaultPlan::parse("kill:0").is_err());
+        assert!(FaultPlan::parse("kill:x@1").is_err());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn arming_is_one_shot_except_wildcards() {
+        let mut plan = FaultPlan::parse("kill:0@2,hang:1@*,drop:0@1").unwrap();
+        let armed = plan.arm_worker(0);
+        assert_eq!(armed.len(), 1);
+        assert_eq!(armed[0].kind, FaultKind::Kill);
+        // Re-arming replica 0 finds nothing: the one-shot was consumed.
+        assert!(plan.arm_worker(0).is_empty());
+        // The wildcard hang re-arms every time.
+        assert_eq!(plan.arm_worker(1).len(), 1);
+        assert_eq!(plan.arm_worker(1).len(), 1);
+        // Coordinator-side events are untouched by worker arming.
+        assert_eq!(plan.take_coord(0, 1), Some(FaultKind::DropFrame));
+        assert_eq!(plan.take_coord(0, 1), None, "one-shot consumed");
+    }
+
+    #[test]
+    fn coord_faults_match_step_or_wildcard() {
+        let mut plan = FaultPlan::parse("delay10:1@*").unwrap();
+        assert_eq!(plan.take_coord(1, 0), Some(FaultKind::DelayFrame(10)));
+        assert_eq!(plan.take_coord(1, 7), Some(FaultKind::DelayFrame(10)));
+        assert_eq!(plan.take_coord(0, 0), None, "wrong replica");
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let mut b = Backoff::new(10, 50);
+        assert_eq!(b.delay().as_millis(), 10);
+        assert_eq!(b.delay().as_millis(), 20);
+        assert_eq!(b.delay().as_millis(), 40);
+        assert_eq!(b.delay().as_millis(), 50);
+        assert_eq!(b.delay().as_millis(), 50);
+    }
+
+    #[test]
+    fn deadline_grace_and_poll_track_heartbeat() {
+        let d = Deadlines {
+            heartbeat_ms: 50,
+            ..Default::default()
+        };
+        assert_eq!(d.grace().unwrap().as_millis(), 500, "floored at 500ms");
+        let d = Deadlines {
+            heartbeat_ms: 1000,
+            ..Default::default()
+        };
+        assert_eq!(d.grace().unwrap().as_millis(), 8000);
+        assert_eq!(d.poll().as_millis(), 200, "poll capped at 200ms");
+        let d = Deadlines {
+            heartbeat_ms: 0,
+            ..Default::default()
+        };
+        assert!(d.grace().is_none(), "no heartbeat, no grace check");
+    }
+}

@@ -1,0 +1,180 @@
+//! The TCP multi-process transport: the multi-host twin of
+//! [`UnixTransport`](super::UnixTransport), speaking the identical
+//! framed [`wire`](super::wire) format over TCP sockets.
+//!
+//! The coordinator binds a TCP listener (`--listen`, default
+//! `127.0.0.1:0`) and, exactly like the unix transport, spawns local
+//! worker subprocesses that dial back in — so `--transport tcp` works
+//! out of the box on one host and is bit-identical to `--transport
+//! unix` and `--transport local` at the same replica count (the wire
+//! payloads are the same bytes; only the socket family differs).
+//!
+//! For **true multi-host runs**, the last `remote_workers` replica
+//! slots are not spawned locally: the coordinator prints its resolved
+//! listen address and waits (up to the accept deadline) for standalone
+//! workers launched on other hosts via the hidden worker mode:
+//!
+//! ```text
+//! moonwalk --replica-worker --connect-tcp <host:port> --replica <r>
+//! ```
+//!
+//! The handshake (magic, wire version, replica id) is unchanged from
+//! the unix transport, and every supervision feature — heartbeats,
+//! step/accept/hello deadlines, fault injection, elastic membership —
+//! comes from the shared [`SocketCoordinator`](super::sock) and behaves
+//! identically on both families (`tests/fault_tolerance.rs` runs its
+//! chaos grid over both).
+//!
+//! `TCP_NODELAY` is set on both ends: gradient frames are small and
+//! latency-sensitive, and Nagle batching would serialize the streamed
+//! all-reduce.
+
+use std::path::PathBuf;
+
+use crate::autodiff::GradEngine;
+use crate::distributed::{ReduceOp, ReplicaStep};
+use crate::model::Network;
+use crate::tensor::Tensor;
+
+use super::sock::{Endpoint, SocketCoordinator, SocketOpts};
+use super::supervisor::{Deadlines, FaultPlan};
+use super::unix::EngineSpec;
+use super::{ShardSpec, Transport};
+
+/// Construction options for [`TcpTransport::spawn`].
+pub struct TcpTransportOpts {
+    /// Logical replica count (fixed; defines sharding + reducer layout).
+    pub replicas: usize,
+    /// JSON text of the worker network config (see
+    /// [`super::UnixTransportOpts::config_json`]).
+    pub config_json: String,
+    /// Engine each worker runs.
+    pub engine: EngineSpec,
+    /// Worker pool threads (keep 1 for bit-equality with local).
+    pub threads_per_worker: usize,
+    /// Worker executable; `None` re-invokes the current binary.
+    pub worker_bin: Option<PathBuf>,
+    /// Coordinator bind address; port 0 picks a free port (read it back
+    /// via [`TcpTransport::local_addr`]).
+    pub listen: String,
+    /// How many of the replica slots (the last ones) expect standalone
+    /// workers dialing in from other hosts instead of local spawns.
+    pub remote_workers: usize,
+    /// Supervision deadlines + heartbeat interval.
+    pub deadlines: Deadlines,
+    /// Scripted fault injections (empty in production).
+    pub faults: FaultPlan,
+}
+
+impl TcpTransportOpts {
+    /// Options for `replicas` local workers over loopback TCP with the
+    /// bit-equality defaults (1 worker thread, current binary, ephemeral
+    /// port, globally resolved deadlines, no faults).
+    pub fn new(replicas: usize, config_json: String, engine: EngineSpec) -> TcpTransportOpts {
+        TcpTransportOpts {
+            replicas,
+            config_json,
+            engine,
+            threads_per_worker: 1,
+            worker_bin: None,
+            listen: "127.0.0.1:0".to_string(),
+            remote_workers: 0,
+            deadlines: Deadlines::resolve(),
+            faults: FaultPlan::default(),
+        }
+    }
+}
+
+/// The TCP multi-process transport (see module docs).
+pub struct TcpTransport {
+    inner: SocketCoordinator,
+}
+
+impl TcpTransport {
+    /// Bind the listener, spawn the local workers, await any remote
+    /// ones, and complete the handshake + init exchange with each.
+    pub fn spawn(opts: TcpTransportOpts) -> anyhow::Result<TcpTransport> {
+        let inner = SocketCoordinator::spawn(
+            SocketOpts {
+                replicas: opts.replicas,
+                config_json: opts.config_json,
+                engine: opts.engine,
+                threads_per_worker: opts.threads_per_worker,
+                worker_bin: opts.worker_bin,
+                deadlines: opts.deadlines,
+                faults: opts.faults,
+            },
+            Endpoint::Tcp {
+                listen: opts.listen,
+                remote_workers: opts.remote_workers,
+            },
+        )?;
+        Ok(TcpTransport { inner })
+    }
+
+    /// The listener's resolved `host:port` — what remote workers pass to
+    /// `--connect-tcp` (and the only way to learn an ephemeral port).
+    pub fn local_addr(&self) -> String {
+        self.inner.connect_addr().to_string()
+    }
+
+    /// Kill one worker subprocess (local slots only) — fault injection;
+    /// the next [`Transport::broadcast`] respawns it.
+    pub fn kill_worker(&mut self, replica: usize) -> anyhow::Result<()> {
+        self.inner.kill_worker(replica)
+    }
+
+    /// Kill one worker subprocess **without** marking it dead (see
+    /// [`super::UnixTransport::simulate_worker_crash`]).
+    pub fn simulate_worker_crash(&mut self, replica: usize) -> anyhow::Result<()> {
+        self.inner.simulate_worker_crash(replica)
+    }
+
+    /// Worker subprocess ids, `None` for dead slots and remote workers.
+    pub fn worker_ids(&self) -> Vec<Option<u32>> {
+        self.inner.worker_ids()
+    }
+
+    /// Replace the scripted fault schedule (chaos tests arm plans after
+    /// spawn so the initial handshake stays clean).
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.inner.set_fault_plan(plan)
+    }
+}
+
+impl Transport for TcpTransport {
+    fn name(&self) -> String {
+        self.inner.family_name().into()
+    }
+
+    fn replicas(&self) -> usize {
+        self.inner.replicas()
+    }
+
+    fn members(&self) -> usize {
+        self.inner.members()
+    }
+
+    fn set_members(&mut self, members: usize) -> anyhow::Result<()> {
+        self.inner.set_members(members)
+    }
+
+    fn heartbeat_ms(&self) -> u64 {
+        self.inner.heartbeat_ms()
+    }
+
+    fn broadcast(&mut self, net: &Network) -> anyhow::Result<()> {
+        self.inner.broadcast(net)
+    }
+
+    fn step(
+        &mut self,
+        net: &Network,
+        _engine: &dyn GradEngine,
+        shards: &[ShardSpec<'_>],
+        op: ReduceOp,
+        sink: &(dyn Fn(usize, Vec<Tensor>) + Sync),
+    ) -> anyhow::Result<ReplicaStep> {
+        self.inner.step(net, shards, op, sink)
+    }
+}

@@ -1,13 +1,15 @@
-//! The multi-process transport: one worker **subprocess** per replica,
-//! speaking the [`wire`](super::wire) format over unix-domain sockets.
+//! The unix-socket multi-process transport: one worker **subprocess**
+//! per replica on the same host, speaking the [`wire`](super::wire)
+//! format over unix-domain sockets.
 //!
-//! The coordinator binds a socket, spawns `replicas` workers — the
-//! binary re-invoked with the hidden `--replica-worker` mode — and
-//! multiplexes parameter broadcast and per-layer streamed gradient
-//! upload over each worker's connection. The streamed all-reduce runs on
-//! coordinator-side reader threads: the moment every worker has uploaded
-//! a layer, that layer folds in replica order and lands in the caller's
-//! sink, exactly as the in-process transport does on pool threads.
+//! The coordinator binds a socket, spawns workers — the binary
+//! re-invoked with the hidden `--replica-worker` mode — and multiplexes
+//! parameter broadcast and per-layer streamed gradient upload over each
+//! worker's connection. Since the elastic fault-tolerance PR all of that
+//! machinery is family-independent and lives in the shared
+//! [`SocketCoordinator`](super::sock); this module is the unix-domain
+//! adapter plus the public options type. The TCP twin is
+//! [`TcpTransport`](super::TcpTransport).
 //!
 //! **Determinism.** Workers run their engine with a single pool thread
 //! (the `threads` field of the init blob, default 1), which executes the
@@ -16,37 +18,31 @@
 //! the unix transport is **bit-identical** to the local transport at the
 //! same replica count (`tests/transport.rs` proves it).
 //!
-//! **Failure semantics.** A worker that exits or drops its connection
-//! mid-step fails that step with an error naming the replica (mirroring
-//! the in-process panic path). A crash mid-step tears the whole group
-//! down — surviving workers may hold half an aborted step in their
-//! socket buffers, which no coordinator can drain exactly — and the
-//! next [`Transport::broadcast`] respawns every replica and re-uploads
-//! parameters, so the group keeps serving subsequent steps. A clean
-//! worker-side engine error (`Err`, not a crash) fails the step the
-//! same way but keeps the workers alive and in sync.
+//! **Failure semantics.** A worker that exits, hangs past its heartbeat
+//! grace, or drops its connection mid-step fails that step with an error
+//! naming the replica; the whole group resets and the next
+//! [`Transport::broadcast`] respawns every replica and re-uploads
+//! parameters. A clean worker-side engine error (`Err`, not a crash)
+//! fails the step but keeps the workers alive and in sync. Supervision
+//! knobs (step/accept/hello deadlines, heartbeat interval) come from
+//! [`supervisor`](super::supervisor); scripted fault injection from its
+//! [`FaultPlan`](super::supervisor::FaultPlan).
 //!
 //! **Memory.** Per-replica gradients park in the coordinator's reducer
 //! until the last replica delivers each layer; workers themselves hold
 //! only their engine's working set — the per-process memory budget that
 //! makes this the scale-out half of the ROADMAP's north star.
 
-use std::collections::HashMap;
-use std::io::{BufReader, BufWriter, Write};
-use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
-use std::process::{Child, Command, Stdio};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::time::{Duration, Instant};
 
 use crate::autodiff::GradEngine;
 use crate::distributed::{ReduceOp, ReplicaStep};
 use crate::model::Network;
 use crate::tensor::Tensor;
-use crate::util::json::Json;
 
-use super::wire::{self, Msg};
-use super::{submit_to_sink, ShardSpec, Transport};
+use super::sock::{Endpoint, SocketCoordinator, SocketOpts};
+use super::supervisor::{Deadlines, FaultPlan};
+use super::{ShardSpec, Transport};
 
 /// How a worker should instantiate its gradient engine — the arguments
 /// of [`crate::autodiff::engine_by_name`], in serializable form.
@@ -96,12 +92,19 @@ pub struct UnixTransportOpts {
     /// Directory for the coordinator socket; `None` creates (and later
     /// removes) a fresh directory under the system temp dir.
     pub socket_dir: Option<PathBuf>,
+    /// Supervision deadlines + heartbeat interval. The default resolves
+    /// the global knobs (CLI flags / `MOONWALK_*` env vars); tests set
+    /// short explicit values for fast fault detection.
+    pub deadlines: Deadlines,
+    /// Scripted fault injections (empty in production).
+    pub faults: FaultPlan,
 }
 
 impl UnixTransportOpts {
     /// Options for `replicas` workers rebuilding `config_json` and
     /// running `engine`, with the bit-equality defaults (1 worker
-    /// thread, current binary, temp socket dir).
+    /// thread, current binary, temp socket dir, globally resolved
+    /// deadlines, no faults).
     pub fn new(replicas: usize, config_json: String, engine: EngineSpec) -> UnixTransportOpts {
         UnixTransportOpts {
             replicas,
@@ -110,219 +113,43 @@ impl UnixTransportOpts {
             threads_per_worker: 1,
             worker_bin: None,
             socket_dir: None,
+            deadlines: Deadlines::resolve(),
+            faults: FaultPlan::default(),
         }
     }
 }
 
-/// One live worker: subprocess handle plus its framed connection.
-struct WorkerConn {
-    child: Child,
-    reader: BufReader<UnixStream>,
-    writer: BufWriter<UnixStream>,
-}
-
-/// Distinguishes "the worker process is gone" (respawn on next
-/// broadcast) from a clean worker-side step error (worker still fine).
-struct StepFailure {
-    fatal: bool,
-    err: anyhow::Error,
-}
-
-static SOCKET_COUNTER: AtomicUsize = AtomicUsize::new(0);
-
 /// The unix-socket multi-process transport (see module docs).
 pub struct UnixTransport {
-    opts: UnixTransportOpts,
-    listener: UnixListener,
-    socket_path: PathBuf,
-    socket_dir: PathBuf,
-    own_dir: bool,
-    conns: Vec<Option<WorkerConn>>,
-    synced: bool,
+    inner: SocketCoordinator,
 }
 
 impl UnixTransport {
     /// Bind the coordinator socket, spawn one worker subprocess per
     /// replica, and complete the handshake + init exchange with each.
     pub fn spawn(opts: UnixTransportOpts) -> anyhow::Result<UnixTransport> {
-        anyhow::ensure!(opts.replicas >= 1, "replica count must be >= 1");
-        // Validate the config JSON up front: a worker failing to parse it
-        // would otherwise surface as an opaque exit.
-        Json::parse(&opts.config_json)
-            .map_err(|e| anyhow::anyhow!("invalid worker config JSON: {e}"))?;
-        let (socket_dir, own_dir) = match &opts.socket_dir {
-            Some(d) => (d.clone(), false),
-            None => (
-                std::env::temp_dir().join(format!(
-                    "moonwalk-unix-{}-{}",
-                    std::process::id(),
-                    SOCKET_COUNTER.fetch_add(1, Ordering::Relaxed)
-                )),
-                true,
-            ),
-        };
-        std::fs::create_dir_all(&socket_dir)?;
-        let socket_path = socket_dir.join("coordinator.sock");
-        // A stale socket file from a crashed previous run blocks bind.
-        let _ = std::fs::remove_file(&socket_path);
-        let listener = UnixListener::bind(&socket_path)?;
-        listener.set_nonblocking(true)?;
-        let replicas = opts.replicas;
-        let mut transport = UnixTransport {
-            opts,
-            listener,
-            socket_path,
-            socket_dir,
-            own_dir,
-            conns: (0..replicas).map(|_| None).collect(),
-            synced: false,
-        };
-        let all: Vec<usize> = (0..replicas).collect();
-        transport.establish(&all)?;
-        Ok(transport)
-    }
-
-    /// The worker executable to launch.
-    fn worker_bin(&self) -> anyhow::Result<PathBuf> {
-        match &self.opts.worker_bin {
-            Some(p) => Ok(p.clone()),
-            None => Ok(std::env::current_exe()?),
-        }
-    }
-
-    /// The init blob every fresh worker receives.
-    fn init_json(&self) -> String {
-        let config = Json::parse(&self.opts.config_json).expect("validated at spawn");
-        Json::from_pairs(vec![
-            ("config", config),
-            (
-                "engine",
-                Json::from_pairs(vec![
-                    ("name", self.opts.engine.name.as_str().into()),
-                    ("block", self.opts.engine.block.into()),
-                    (
-                        "checkpoint_segments",
-                        self.opts.engine.checkpoint_segments.into(),
-                    ),
-                    ("seed", (self.opts.engine.seed as usize).into()),
-                ]),
-            ),
-            ("threads", self.opts.threads_per_worker.max(1).into()),
-        ])
-        .to_string()
-    }
-
-    /// Spawn the given replicas' workers, accept their handshakes and
-    /// send each its init blob. Used at construction and to respawn dead
-    /// workers from [`Transport::broadcast`].
-    fn establish(&mut self, replicas: &[usize]) -> anyhow::Result<()> {
-        if replicas.is_empty() {
-            return Ok(());
-        }
-        let bin = self.worker_bin()?;
-        let mut pending: HashMap<usize, Child> = HashMap::new();
-        for &r in replicas {
-            anyhow::ensure!(
-                self.conns[r].is_none(),
-                "replica {r} already has a live worker"
-            );
-            let child = Command::new(&bin)
-                .arg("--replica-worker")
-                .arg("--connect")
-                .arg(&self.socket_path)
-                .arg("--replica")
-                .arg(r.to_string())
-                .stdin(Stdio::null())
-                .spawn()
-                .map_err(|e| anyhow::anyhow!("spawning worker for replica {r}: {e}"))?;
-            pending.insert(r, child);
-        }
-        let deadline = Instant::now() + Duration::from_secs(30);
-        while !pending.is_empty() {
-            match self.listener.accept() {
-                Ok((stream, _)) => {
-                    stream.set_nonblocking(false)?;
-                    // Bound the handshake read: the socket path is
-                    // guessable, and a peer that connects but never
-                    // sends its hello must not wedge the accept loop
-                    // forever. Blocking reads are restored below for
-                    // the step loop.
-                    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
-                    let mut reader = BufReader::new(stream.try_clone()?);
-                    let (version, replica) = match wire::read_msg(&mut reader) {
-                        Ok(Msg::Hello { version, replica }) => (version, replica as usize),
-                        Ok(other) => anyhow::bail!("expected worker hello, got {other:?}"),
-                        Err(e) => anyhow::bail!("peer connected but sent no hello: {e}"),
-                    };
-                    stream.set_read_timeout(None)?;
-                    anyhow::ensure!(
-                        version == wire::WIRE_VERSION,
-                        "worker speaks wire version {version}, coordinator {}",
-                        wire::WIRE_VERSION
-                    );
-                    let child = pending.remove(&replica).ok_or_else(|| {
-                        anyhow::anyhow!("unexpected hello from replica {replica}")
-                    })?;
-                    let mut writer = BufWriter::new(stream);
-                    wire::write_init(&mut writer, &self.init_json())?;
-                    writer.flush()?;
-                    self.conns[replica] = Some(WorkerConn {
-                        child,
-                        reader,
-                        writer,
-                    });
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    // While waiting, surface a worker that died before
-                    // connecting (bad binary, immediate crash) instead of
-                    // timing out opaquely.
-                    for (&r, child) in pending.iter_mut() {
-                        if let Ok(Some(status)) = child.try_wait() {
-                            anyhow::bail!(
-                                "replica {r} worker exited with {status} before connecting"
-                            );
-                        }
-                    }
-                    anyhow::ensure!(
-                        Instant::now() < deadline,
-                        "timed out waiting for {} worker(s) to connect",
-                        pending.len()
-                    );
-                    std::thread::sleep(Duration::from_millis(5));
-                }
-                Err(e) => return Err(e.into()),
-            }
-        }
-        Ok(())
-    }
-
-    /// Indices of replicas whose worker is currently down.
-    fn dead(&self) -> Vec<usize> {
-        self.conns
-            .iter()
-            .enumerate()
-            .filter_map(|(r, c)| c.is_none().then_some(r))
-            .collect()
-    }
-
-    /// Send the full parameter set to one replica.
-    fn send_params(&mut self, r: usize, layers: &[Vec<&Tensor>]) -> std::io::Result<()> {
-        let conn = self.conns[r].as_mut().expect("caller checked liveness");
-        wire::write_params(&mut conn.writer, layers)?;
-        conn.writer.flush()
+        let inner = SocketCoordinator::spawn(
+            SocketOpts {
+                replicas: opts.replicas,
+                config_json: opts.config_json,
+                engine: opts.engine,
+                threads_per_worker: opts.threads_per_worker,
+                worker_bin: opts.worker_bin,
+                deadlines: opts.deadlines,
+                faults: opts.faults,
+            },
+            Endpoint::Unix {
+                socket_dir: opts.socket_dir,
+            },
+        )?;
+        Ok(UnixTransport { inner })
     }
 
     /// Kill one worker subprocess — fault injection for the
     /// worker-death recovery tests. The next [`Transport::broadcast`]
     /// respawns it.
     pub fn kill_worker(&mut self, replica: usize) -> anyhow::Result<()> {
-        anyhow::ensure!(replica < self.conns.len(), "replica {replica} out of range");
-        if let Some(mut conn) = self.conns[replica].take() {
-            let _ = conn.child.kill();
-            let _ = conn.child.wait();
-        }
-        self.synced = false;
-        Ok(())
+        self.inner.kill_worker(replica)
     }
 
     /// Kill one worker subprocess **without** marking it dead — fault
@@ -330,71 +157,45 @@ impl UnixTransport {
     /// discovers the death when the next step's I/O hits EOF, exercising
     /// the mid-step failure path end to end.
     pub fn simulate_worker_crash(&mut self, replica: usize) -> anyhow::Result<()> {
-        anyhow::ensure!(replica < self.conns.len(), "replica {replica} out of range");
-        if let Some(conn) = self.conns[replica].as_mut() {
-            let _ = conn.child.kill();
-            let _ = conn.child.wait();
-        }
-        Ok(())
-    }
-
-    /// Tear down every worker and mark the group unsynced. Called after
-    /// any step failure: a surviving worker may hold half of an aborted
-    /// step in its socket buffers (gradients the coordinator never
-    /// drained), so restarting the whole group is the only state the
-    /// coordinator can re-establish exactly. The next broadcast respawns
-    /// all replicas.
-    fn reset_workers(&mut self) {
-        for slot in self.conns.iter_mut() {
-            if let Some(mut conn) = slot.take() {
-                let _ = conn.child.kill();
-                let _ = conn.child.wait();
-            }
-        }
-        self.synced = false;
+        self.inner.simulate_worker_crash(replica)
     }
 
     /// Worker subprocess ids, `None` for dead replicas (observability +
     /// tests).
     pub fn worker_ids(&self) -> Vec<Option<u32>> {
-        self.conns
-            .iter()
-            .map(|c| c.as_ref().map(|c| c.child.id()))
-            .collect()
+        self.inner.worker_ids()
+    }
+
+    /// Replace the scripted fault schedule (chaos tests arm plans after
+    /// spawn so the initial handshake stays clean).
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.inner.set_fault_plan(plan)
     }
 }
 
 impl Transport for UnixTransport {
     fn name(&self) -> String {
-        "unix".into()
+        self.inner.family_name().into()
     }
 
     fn replicas(&self) -> usize {
-        self.conns.len()
+        self.inner.replicas()
+    }
+
+    fn members(&self) -> usize {
+        self.inner.members()
+    }
+
+    fn set_members(&mut self, members: usize) -> anyhow::Result<()> {
+        self.inner.set_members(members)
+    }
+
+    fn heartbeat_ms(&self) -> u64 {
+        self.inner.heartbeat_ms()
     }
 
     fn broadcast(&mut self, net: &Network) -> anyhow::Result<()> {
-        // Respawn anything that died since the last step, then upload the
-        // parameter set to every worker; one retry per replica covers a
-        // worker that died between the liveness check and the write.
-        let dead = self.dead();
-        self.establish(&dead)?;
-        let layers: Vec<Vec<&Tensor>> = net.layers.iter().map(|l| l.params()).collect();
-        for r in 0..self.conns.len() {
-            if self.send_params(r, &layers).is_err() {
-                // The worker is gone: reap it, respawn, resend once.
-                if let Some(mut conn) = self.conns[r].take() {
-                    let _ = conn.child.kill();
-                    let _ = conn.child.wait();
-                }
-                self.establish(&[r])
-                    .map_err(|e| e.context(format!("respawning replica {r} mid-broadcast")))?;
-                self.send_params(r, &layers)
-                    .map_err(|e| anyhow::anyhow!("replica {r}: param upload failed twice: {e}"))?;
-            }
-        }
-        self.synced = true;
-        Ok(())
+        self.inner.broadcast(net)
     }
 
     fn step(
@@ -405,159 +206,6 @@ impl Transport for UnixTransport {
         op: ReduceOp,
         sink: &(dyn Fn(usize, Vec<Tensor>) + Sync),
     ) -> anyhow::Result<ReplicaStep> {
-        let replicas = self.conns.len();
-        anyhow::ensure!(
-            shards.len() == replicas,
-            "group has {replicas} replicas but {} shards were supplied",
-            shards.len()
-        );
-        anyhow::ensure!(
-            self.synced,
-            "parameters were never broadcast to the workers (call broadcast \
-             after construction and after every parameter update or step error)"
-        );
-        // Dispatch the step to every worker first; gradients start
-        // flowing back while later shards are still uploading.
-        for (r, shard) in shards.iter().enumerate() {
-            let send = (|| -> std::io::Result<()> {
-                let conn = self.conns[r].as_mut().expect("synced implies alive");
-                wire::write_step(&mut conn.writer, shard.x, &shard.loss.to_wire())?;
-                conn.writer.flush()
-            })();
-            if let Err(e) = send {
-                // Workers dispatched before this one now hold an aborted
-                // half-step; reset the whole group so no stale frames
-                // survive into the next step.
-                self.reset_workers();
-                anyhow::bail!("replica {r} worker died during step dispatch: {e}");
-            }
-        }
-        // Drain all connections concurrently, feeding the shared
-        // replica-ordered reducer (bucket-fused exactly like the local
-        // transport's, so delivery batching matches across transports);
-        // each bucket's fold fires on the reader thread that delivers
-        // the last contribution.
-        let reducer = super::reducer_for(net, replicas, op);
-        let outcomes: Vec<Result<f32, StepFailure>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = self
-                .conns
-                .iter_mut()
-                .enumerate()
-                .map(|(r, slot)| {
-                    let conn = slot.as_mut().expect("synced implies alive");
-                    let reducer = &reducer;
-                    scope.spawn(move || -> Result<f32, StepFailure> {
-                        loop {
-                            match wire::read_msg(&mut conn.reader) {
-                                Ok(Msg::Grad { layer, grads }) => {
-                                    submit_to_sink(reducer, layer as usize, r, grads, sink);
-                                }
-                                Ok(Msg::StepDone { loss }) => return Ok(loss),
-                                Ok(Msg::Error { message }) => {
-                                    return Err(StepFailure {
-                                        fatal: false,
-                                        err: anyhow::anyhow!("replica {r} failed: {message}"),
-                                    })
-                                }
-                                Ok(other) => {
-                                    return Err(StepFailure {
-                                        fatal: true,
-                                        err: anyhow::anyhow!(
-                                            "replica {r}: unexpected {other:?} mid-step"
-                                        ),
-                                    })
-                                }
-                                Err(e) => {
-                                    let what = if e.kind()
-                                        == std::io::ErrorKind::UnexpectedEof
-                                    {
-                                        "worker died mid-step (connection closed)".into()
-                                    } else {
-                                        format!("transport error mid-step: {e}")
-                                    };
-                                    return Err(StepFailure {
-                                        fatal: true,
-                                        err: anyhow::anyhow!("replica {r} {what}"),
-                                    });
-                                }
-                            }
-                        }
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| {
-                    h.join().unwrap_or_else(|_| {
-                        Err(StepFailure {
-                            fatal: true,
-                            err: anyhow::anyhow!("transport reader thread panicked"),
-                        })
-                    })
-                })
-                .collect()
-        });
-        let mut replica_losses = Vec::with_capacity(replicas);
-        let mut first_err: Option<anyhow::Error> = None;
-        let mut any_fatal = false;
-        for outcome in outcomes {
-            match outcome {
-                Ok(l) => replica_losses.push(l),
-                Err(f) => {
-                    any_fatal |= f.fatal;
-                    if first_err.is_none() {
-                        first_err = Some(f.err);
-                    }
-                }
-            }
-        }
-        if let Some(e) = first_err {
-            if any_fatal {
-                // Surviving workers completed (their readers drained
-                // through StepDone), but a fatal peer means the step is
-                // torn; reset so the next broadcast rebuilds a clean
-                // group. Clean (non-fatal) engine errors leave workers
-                // parked at a frame boundary — no reset needed.
-                self.reset_workers();
-            }
-            return Err(e);
-        }
-        let loss = replica_losses.iter().sum::<f32>() / replica_losses.len() as f32;
-        Ok(ReplicaStep {
-            loss,
-            replica_losses,
-            reduce_s: reducer.reduce_seconds(),
-        })
-    }
-}
-
-impl Drop for UnixTransport {
-    fn drop(&mut self) {
-        // Ask every live worker to exit, give them a moment, then make
-        // sure nothing outlives the coordinator.
-        for conn in self.conns.iter_mut().flatten() {
-            let _ = wire::write_shutdown(&mut conn.writer);
-            let _ = conn.writer.flush();
-        }
-        let deadline = Instant::now() + Duration::from_millis(500);
-        for conn in self.conns.iter_mut().flatten() {
-            loop {
-                match conn.child.try_wait() {
-                    Ok(Some(_)) => break,
-                    Ok(None) if Instant::now() < deadline => {
-                        std::thread::sleep(Duration::from_millis(10))
-                    }
-                    _ => {
-                        let _ = conn.child.kill();
-                        let _ = conn.child.wait();
-                        break;
-                    }
-                }
-            }
-        }
-        let _ = std::fs::remove_file(&self.socket_path);
-        if self.own_dir {
-            let _ = std::fs::remove_dir_all(&self.socket_dir);
-        }
+        self.inner.step(net, shards, op, sink)
     }
 }

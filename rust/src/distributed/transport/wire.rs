@@ -25,8 +25,9 @@ use std::io::{self, Read, Write};
 use crate::tensor::Tensor;
 
 /// Protocol version; bumped on any incompatible framing change. Carried
-/// in the [`Msg::Hello`] handshake and checked by both peers.
-pub const WIRE_VERSION: u8 = 1;
+/// in the [`Msg::Hello`] handshake and checked by both peers. Version 2
+/// added the [`Msg::Heartbeat`] liveness frame.
+pub const WIRE_VERSION: u8 = 2;
 
 /// Handshake magic preceding the version byte (`b"MWTP"` — MoonWalk
 /// TransPort), so a stray connection is rejected immediately.
@@ -40,15 +41,27 @@ pub const MAGIC: [u8; 4] = *b"MWTP";
 /// needs a chunked params frame before it can use this transport.
 pub const MAX_FRAME: u32 = 1 << 30;
 
-// Frame tags (one byte on the wire).
-const TAG_HELLO: u8 = 1;
-const TAG_INIT: u8 = 2;
-const TAG_PARAMS: u8 = 3;
-const TAG_STEP: u8 = 4;
-const TAG_GRAD: u8 = 5;
-const TAG_STEP_DONE: u8 = 6;
-const TAG_ERROR: u8 = 7;
-const TAG_SHUTDOWN: u8 = 8;
+// Frame tags (one byte on the wire). Public so the supervision layer can
+// classify frames (e.g. target a fault at the first gradient frame)
+// without decoding them.
+/// [`Msg::Hello`] frame tag.
+pub const TAG_HELLO: u8 = 1;
+/// [`Msg::Init`] frame tag.
+pub const TAG_INIT: u8 = 2;
+/// [`Msg::Params`] frame tag.
+pub const TAG_PARAMS: u8 = 3;
+/// [`Msg::Step`] frame tag.
+pub const TAG_STEP: u8 = 4;
+/// [`Msg::Grad`] frame tag.
+pub const TAG_GRAD: u8 = 5;
+/// [`Msg::StepDone`] frame tag.
+pub const TAG_STEP_DONE: u8 = 6;
+/// [`Msg::Error`] frame tag.
+pub const TAG_ERROR: u8 = 7;
+/// [`Msg::Shutdown`] frame tag.
+pub const TAG_SHUTDOWN: u8 = 8;
+/// [`Msg::Heartbeat`] frame tag (wire version 2).
+pub const TAG_HEARTBEAT: u8 = 9;
 
 /// A serializable loss head — the subset of [`crate::nn::Loss`] choices
 /// a remote replica can reconstruct from bytes.
@@ -122,6 +135,10 @@ pub enum Msg {
     },
     /// Coordinator → worker: exit the serve loop and terminate.
     Shutdown,
+    /// Worker → coordinator liveness tick, sent every `heartbeat_ms`
+    /// while the worker is computing a step. Carries no payload; the
+    /// supervision layer only cares that bytes keep arriving.
+    Heartbeat,
 }
 
 // ----- primitive encoders ----------------------------------------------------
@@ -227,7 +244,7 @@ fn write_frame(w: &mut impl Write, tag: u8, payload: &[u8]) -> io::Result<()> {
         return Err(io::Error::new(
             io::ErrorKind::InvalidData,
             format!(
-                "frame of {} bytes exceeds the {MAX_FRAME} wire limit",
+                "frame tag {tag} of {} bytes exceeds the {MAX_FRAME}-byte wire limit",
                 payload.len()
             ),
         ));
@@ -237,23 +254,61 @@ fn write_frame(w: &mut impl Write, tag: u8, payload: &[u8]) -> io::Result<()> {
     w.write_all(payload)
 }
 
+/// The oversized-length error every reader raises, naming the connection
+/// (`peer`), the frame tag and the offending length — the context the
+/// supervision layer needs to attribute a corrupt peer.
+fn oversized(peer: &str, tag: u8, len: u32) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::InvalidData,
+        format!("{peer}: wire frame tag {tag} of {len} bytes exceeds the {MAX_FRAME}-byte limit"),
+    )
+}
+
 /// Read one message, blocking. A clean EOF before any byte of a frame
 /// surfaces as [`io::ErrorKind::UnexpectedEof`] — the coordinator maps
 /// that onto "worker died" / the worker onto "coordinator gone".
+/// Decode failures are labeled with the anonymous peer name `"peer"`;
+/// supervised connections use [`read_msg_from`] to attribute errors.
 pub fn read_msg(r: &mut impl Read) -> io::Result<Msg> {
+    read_msg_from(r, "peer")
+}
+
+/// [`read_msg`] for a named connection: every framing/decoding error
+/// names `peer` (e.g. `"replica 3 (tcp)"`), the frame tag and the
+/// offending length, so a supervisor can attribute the failure without
+/// guessing which reader thread raised it.
+pub fn read_msg_from(r: &mut impl Read, peer: &str) -> io::Result<Msg> {
     let mut head = [0u8; 5];
     r.read_exact(&mut head)?;
     let tag = head[0];
     let len = u32::from_le_bytes([head[1], head[2], head[3], head[4]]);
     if len > MAX_FRAME {
-        return Err(io::Error::new(
-            io::ErrorKind::InvalidData,
-            format!("wire frame of {len} bytes exceeds the {MAX_FRAME} limit"),
-        ));
+        return Err(oversized(peer, tag, len));
     }
     let mut payload = vec![0u8; len as usize];
-    r.read_exact(&mut payload)?;
-    let mut c = Cursor::new(&payload);
+    r.read_exact(&mut payload)
+        .map_err(|e| io::Error::new(e.kind(), format!("{peer}: frame tag {tag}: {e}")))?;
+    decode_frame(tag, &payload, peer)
+}
+
+/// Decode one complete frame's payload into a [`Msg`]. Every decode
+/// error is labeled with `peer`, the frame tag and the payload length —
+/// a corrupt frame must name the connection it arrived on.
+pub fn decode_frame(tag: u8, payload: &[u8], peer: &str) -> io::Result<Msg> {
+    decode_frame_inner(tag, payload).map_err(|e| {
+        io::Error::new(
+            e.kind(),
+            format!(
+                "{peer}: corrupt frame tag {tag} ({} bytes): {e}",
+                payload.len()
+            ),
+        )
+    })
+}
+
+fn decode_frame_inner(tag: u8, payload: &[u8]) -> io::Result<Msg> {
+    let len = payload.len();
+    let mut c = Cursor::new(payload);
     let msg = match tag {
         TAG_HELLO => {
             let magic = c.take(4)?;
@@ -269,7 +324,7 @@ pub fn read_msg(r: &mut impl Read) -> io::Result<Msg> {
             }
         }
         TAG_INIT => {
-            let raw = c.take(len as usize)?;
+            let raw = c.take(len)?;
             Msg::Init {
                 config: String::from_utf8(raw.to_vec()).map_err(|_| {
                     io::Error::new(io::ErrorKind::InvalidData, "init config is not UTF-8")
@@ -324,12 +379,13 @@ pub fn read_msg(r: &mut impl Read) -> io::Result<Msg> {
         }
         TAG_STEP_DONE => Msg::StepDone { loss: c.f32()? },
         TAG_ERROR => {
-            let raw = c.take(len as usize)?;
+            let raw = c.take(len)?;
             Msg::Error {
                 message: String::from_utf8_lossy(raw).into_owned(),
             }
         }
         TAG_SHUTDOWN => Msg::Shutdown,
+        TAG_HEARTBEAT => Msg::Heartbeat,
         other => {
             return Err(io::Error::new(
                 io::ErrorKind::InvalidData,
@@ -417,6 +473,147 @@ pub fn write_error(w: &mut impl Write, message: &str) -> io::Result<()> {
 /// Write the shutdown request that ends a worker's serve loop.
 pub fn write_shutdown(w: &mut impl Write) -> io::Result<()> {
     write_frame(w, TAG_SHUTDOWN, &[])
+}
+
+/// Write a liveness heartbeat (worker → coordinator, mid-compute).
+pub fn write_heartbeat(w: &mut impl Write) -> io::Result<()> {
+    write_frame(w, TAG_HEARTBEAT, &[])
+}
+
+// ----- resumable (deadline-aware) frame reading ------------------------------
+
+/// Outcome of one [`FrameReader::poll_frame`] call.
+#[derive(Debug)]
+pub enum FramePoll {
+    /// A complete frame arrived: `(tag, payload)`. Decode it with
+    /// [`decode_frame`].
+    Frame(u8, Vec<u8>),
+    /// The read timed out before the frame completed. `progressed` is
+    /// true when at least one new byte arrived during this call — a slow
+    /// large frame in flight, not a silent peer — so supervisors reset
+    /// their liveness clock on progress, not only on whole frames.
+    Pending {
+        /// Whether any bytes arrived this call.
+        progressed: bool,
+    },
+}
+
+/// An incremental frame reader for sockets with a read timeout.
+///
+/// `Read::read_exact` is unusable under read timeouts: a timeout
+/// mid-frame loses the bytes already consumed and desyncs the stream.
+/// `FrameReader` retains partial header/payload progress across
+/// `WouldBlock`/`TimedOut` returns, so a supervisor can poll a
+/// connection on a short timeout — checking heartbeat grace and step
+/// deadlines between polls — without ever corrupting the framing.
+pub struct FrameReader {
+    head: [u8; 5],
+    head_got: usize,
+    payload: Vec<u8>,
+    payload_got: usize,
+    in_payload: bool,
+}
+
+impl Default for FrameReader {
+    fn default() -> FrameReader {
+        FrameReader::new()
+    }
+}
+
+impl FrameReader {
+    /// A reader positioned at a frame boundary.
+    pub fn new() -> FrameReader {
+        FrameReader {
+            head: [0u8; 5],
+            head_got: 0,
+            payload: Vec::new(),
+            payload_got: 0,
+            in_payload: false,
+        }
+    }
+
+    /// Whether a partially received frame is in flight (the stream must
+    /// not be abandoned at a non-boundary if it is to be reused).
+    pub fn mid_frame(&self) -> bool {
+        self.head_got > 0 || self.in_payload
+    }
+
+    /// Drive the frame forward with whatever bytes `r` can deliver
+    /// before its read timeout. Returns [`FramePoll::Frame`] when a
+    /// frame completes, [`FramePoll::Pending`] on timeout (progress
+    /// retained for the next call). EOF and oversized lengths are
+    /// errors naming `peer`.
+    pub fn poll_frame(&mut self, r: &mut impl Read, peer: &str) -> io::Result<FramePoll> {
+        let mut progressed = false;
+        loop {
+            if !self.in_payload {
+                while self.head_got < 5 {
+                    match r.read(&mut self.head[self.head_got..]) {
+                        Ok(0) => {
+                            return Err(io::Error::new(
+                                io::ErrorKind::UnexpectedEof,
+                                format!("{peer}: connection closed mid-stream"),
+                            ))
+                        }
+                        Ok(n) => {
+                            self.head_got += n;
+                            progressed = true;
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                        Err(e)
+                            if e.kind() == io::ErrorKind::WouldBlock
+                                || e.kind() == io::ErrorKind::TimedOut =>
+                        {
+                            return Ok(FramePoll::Pending { progressed })
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+                let tag = self.head[0];
+                let len =
+                    u32::from_le_bytes([self.head[1], self.head[2], self.head[3], self.head[4]]);
+                if len > MAX_FRAME {
+                    return Err(oversized(peer, tag, len));
+                }
+                self.payload = vec![0u8; len as usize];
+                self.payload_got = 0;
+                self.in_payload = true;
+            }
+            while self.payload_got < self.payload.len() {
+                match r.read(&mut self.payload[self.payload_got..]) {
+                    Ok(0) => {
+                        return Err(io::Error::new(
+                            io::ErrorKind::UnexpectedEof,
+                            format!(
+                                "{peer}: connection closed mid-frame (tag {}, {} of {} bytes)",
+                                self.head[0],
+                                self.payload_got,
+                                self.payload.len()
+                            ),
+                        ))
+                    }
+                    Ok(n) => {
+                        self.payload_got += n;
+                        progressed = true;
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e)
+                        if e.kind() == io::ErrorKind::WouldBlock
+                            || e.kind() == io::ErrorKind::TimedOut =>
+                    {
+                        return Ok(FramePoll::Pending { progressed })
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            let tag = self.head[0];
+            let payload = std::mem::take(&mut self.payload);
+            self.head_got = 0;
+            self.payload_got = 0;
+            self.in_payload = false;
+            return Ok(FramePoll::Frame(tag, payload));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -519,6 +716,118 @@ mod tests {
         // Unknown tag.
         let unk = [99u8, 0, 0, 0, 0];
         assert!(read_msg(&mut unk.as_slice()).is_err());
+    }
+
+    #[test]
+    fn heartbeat_roundtrip() {
+        assert!(matches!(
+            roundtrip(|w| write_heartbeat(w).unwrap()),
+            Msg::Heartbeat
+        ));
+    }
+
+    #[test]
+    fn errors_name_peer_tag_and_length() {
+        // Oversized length prefix: the error must name the connection,
+        // the frame tag and the offending length.
+        let bad = [TAG_GRAD, 0xff, 0xff, 0xff, 0xff];
+        let err = read_msg_from(&mut bad.as_slice(), "replica 3 (tcp)").unwrap_err();
+        let text = err.to_string();
+        assert!(text.contains("replica 3 (tcp)"), "names the peer: {text}");
+        assert!(text.contains("tag 5"), "names the tag: {text}");
+        assert!(text.contains("4294967295 bytes"), "names the length: {text}");
+        // Corrupt payload: decode errors carry the same context.
+        let err = decode_frame(TAG_STEP_DONE, &[1, 2], "replica 0 (unix)").unwrap_err();
+        let text = err.to_string();
+        assert!(text.contains("replica 0 (unix)"), "names the peer: {text}");
+        assert!(text.contains("tag 6"), "names the tag: {text}");
+        assert!(text.contains("2 bytes"), "names the length: {text}");
+        // Unknown tag through the same labeled path.
+        let err = decode_frame(0xEE, &[], "replica 1 (unix)").unwrap_err();
+        assert!(err.to_string().contains("replica 1 (unix)"));
+        assert!(err.to_string().contains("unknown wire tag"));
+    }
+
+    /// A reader that yields at most `chunk` bytes per call and returns
+    /// `WouldBlock` every other call — the worst-case trickle a read
+    /// timeout produces.
+    struct Trickle<'a> {
+        data: &'a [u8],
+        pos: usize,
+        chunk: usize,
+        block_next: bool,
+    }
+
+    impl<'a> std::io::Read for Trickle<'a> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.block_next {
+                self.block_next = false;
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WouldBlock,
+                    "trickle",
+                ));
+            }
+            self.block_next = true;
+            let n = self.chunk.min(buf.len()).min(self.data.len() - self.pos);
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn frame_reader_survives_timeouts_mid_frame() {
+        // Two frames back to back, delivered one byte at a time with a
+        // timeout between every byte: the resumable reader must retain
+        // partial progress and decode both bit-exactly.
+        let mut buf = Vec::new();
+        let g = Tensor::from_vec(vec![1.5, -0.0, 42.0], &[3]);
+        write_grad(&mut buf, 7, std::slice::from_ref(&g)).unwrap();
+        write_step_done(&mut buf, 0.25).unwrap();
+        let mut src = Trickle {
+            data: &buf,
+            pos: 0,
+            chunk: 1,
+            block_next: false,
+        };
+        let mut fr = FrameReader::new();
+        let mut msgs = Vec::new();
+        let mut progressed_any = false;
+        while msgs.len() < 2 {
+            match fr.poll_frame(&mut src, "replica 0 (test)").unwrap() {
+                FramePoll::Frame(tag, payload) => {
+                    msgs.push(decode_frame(tag, &payload, "replica 0 (test)").unwrap());
+                }
+                FramePoll::Pending { progressed } => progressed_any |= progressed,
+            }
+        }
+        assert!(progressed_any, "trickle must report byte progress");
+        assert!(!fr.mid_frame(), "reader parked at a frame boundary");
+        match &msgs[0] {
+            Msg::Grad { layer, grads } => {
+                assert_eq!(*layer, 7);
+                assert_eq!(grads[0].data()[0].to_bits(), 1.5f32.to_bits());
+                assert_eq!(grads[0].data()[1].to_bits(), (-0.0f32).to_bits());
+            }
+            other => panic!("wrong msg {other:?}"),
+        }
+        assert!(matches!(msgs[1], Msg::StepDone { loss } if loss == 0.25));
+    }
+
+    #[test]
+    fn frame_reader_reports_idle_timeouts() {
+        let mut src = Trickle {
+            data: &[],
+            pos: 0,
+            chunk: 1,
+            block_next: true,
+        };
+        let mut fr = FrameReader::new();
+        match fr.poll_frame(&mut src, "replica 0 (test)").unwrap() {
+            FramePoll::Pending { progressed } => assert!(!progressed),
+            other => panic!("expected pending, got {other:?}"),
+        }
+        assert!(!fr.mid_frame());
     }
 
     #[test]

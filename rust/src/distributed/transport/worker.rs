@@ -1,11 +1,16 @@
-//! The replica worker: what runs inside each subprocess the
-//! [`UnixTransport`](super::UnixTransport) spawns.
+//! The replica worker: what runs inside each subprocess a socket
+//! transport ([`UnixTransport`](super::UnixTransport) /
+//! [`TcpTransport`](super::TcpTransport)) spawns — or standalone on
+//! another host for true multi-host TCP runs.
 //!
 //! The binary re-invokes itself as
-//! `moonwalk --replica-worker --connect <socket> --replica <r>`; this
-//! module is that mode's whole life: connect, handshake, build the
-//! configured network + engine from the init blob, then serve
-//! `Params` / `Step` frames until `Shutdown` or EOF.
+//! `moonwalk --replica-worker --connect <socket> --replica <r>` (unix)
+//! or `moonwalk --replica-worker --connect-tcp <host:port> --replica
+//! <r>` (tcp); this module is that mode's whole life: connect (with
+//! exponential backoff on the TCP path, where the coordinator may not
+//! be listening yet), handshake, build the configured network + engine
+//! from the init blob, then serve `Params` / `Step` frames until
+//! `Shutdown` or EOF.
 //!
 //! Per step the worker runs its engine's streaming API and uploads each
 //! layer's gradients **the moment the engine emits them** (one flushed
@@ -16,33 +21,105 @@
 //! naming this replica — the subprocess mirror of the in-process
 //! panic-re-raise path.
 //!
+//! **Heartbeats.** When the init blob carries a non-zero
+//! `heartbeat_ms`, a ticker thread shares the frame writer and emits
+//! [`Heartbeat`](super::wire::Msg::Heartbeat) frames — but **only while
+//! a step is computing**. Between steps the coordinator is not reading
+//! this connection, and unread ticks would silently fill the socket
+//! buffer; during compute they are exactly the liveness signal the
+//! supervisor's grace check needs.
+//!
+//! **Fault injection.** The init blob may carry worker-side
+//! [`FaultPlan`](super::supervisor::FaultPlan) events: `kill` aborts
+//! the process right after flushing the first gradient frame of the
+//! matched step (leaving the coordinator holding a partial delivery),
+//! `hang` wedges the process silently — no heartbeats, no frames, no
+//! exit. Events match the worker's *n*-th served step since (re)spawn;
+//! one-shot events were consumed coordinator-side at arming, so a
+//! respawned worker comes back clean unless the event was the `@*`
+//! wildcard.
+//!
 //! Determinism: the init blob pins the worker's pool thread count
 //! (default 1), putting every kernel on the same serial code path an
 //! in-process replica uses when its nested parallelism is suppressed —
-//! this is what makes unix-vs-local gradients bit-identical.
+//! this is what makes socket-vs-local gradients bit-identical.
 
 use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
 use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::autodiff::engine_by_name;
 use crate::cli::Args;
 use crate::model::config::Config;
 use crate::runtime::pool;
 use crate::util::json::Json;
+use crate::util::lock_ignore_poison as lock;
 use crate::util::Rng;
 
+use super::sock::SockStream;
+use super::supervisor::{Backoff, Deadlines};
 use super::wire::{self, Msg};
 
-/// Run the worker protocol over an established stream until `Shutdown`
-/// or EOF. Split from [`run`] so tests can drive a worker over an
-/// in-process socketpair without spawning a subprocess.
-pub fn serve(stream: UnixStream, replica: usize) -> anyhow::Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
-    wire::write_hello(&mut writer, replica as u32)?;
-    writer.flush()?;
+/// A worker-side injected failure parsed from the init blob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Sabotage {
+    /// Abort after flushing the first gradient frame of the step.
+    Kill,
+    /// Wedge silently: no heartbeats, no frames, no exit.
+    Hang,
+}
 
-    // Init: architecture + engine + runtime configuration.
+/// Pop the sabotage scheduled for the `served`-th step, if any.
+/// One-shot events are consumed; `every` (wildcard) events persist.
+fn take_sabotage(
+    faults: &mut Vec<(Sabotage, Option<usize>)>,
+    served: usize,
+) -> Option<Sabotage> {
+    let idx = faults
+        .iter()
+        .position(|(_, step)| step.map(|s| s == served).unwrap_or(true))?;
+    let (kind, step) = faults[idx];
+    if step.is_some() {
+        faults.remove(idx);
+    }
+    Some(kind)
+}
+
+/// Run the worker protocol over an established unix stream until
+/// `Shutdown` or EOF. Kept as the family-specific convenience so tests
+/// can drive a worker over an in-process socketpair without spawning a
+/// subprocess; the protocol itself is family-independent
+/// ([`serve_framed`]).
+pub fn serve(stream: UnixStream, replica: usize) -> anyhow::Result<()> {
+    serve_stream(SockStream::Unix(stream), replica)
+}
+
+/// Family-generic entry: split the stream into reader + writer halves
+/// and serve the protocol.
+fn serve_stream(stream: SockStream, replica: usize) -> anyhow::Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    serve_framed(reader, stream, replica)
+}
+
+/// The worker protocol proper (see module docs).
+fn serve_framed(
+    mut reader: BufReader<SockStream>,
+    writer: SockStream,
+    replica: usize,
+) -> anyhow::Result<()> {
+    // The writer is shared with the heartbeat ticker; the mutex scopes
+    // whole frames, so ticks never interleave with a gradient frame.
+    let writer = Arc::new(Mutex::new(BufWriter::new(writer)));
+    {
+        let mut w = lock(&writer);
+        wire::write_hello(&mut *w, replica as u32)?;
+        w.flush()?;
+    }
+
+    // Init: architecture + engine + runtime configuration + faults.
     let init = match wire::read_msg(&mut reader)? {
         Msg::Init { config } => config,
         other => anyhow::bail!("replica {replica}: expected init, got {other:?}"),
@@ -59,63 +136,166 @@ pub fn serve(stream: UnixStream, replica: usize) -> anyhow::Result<()> {
     // Pin the pool before any tensor work: serial kernels by default,
     // matching an in-process replica's suppressed nested parallelism.
     pool::set_threads(init.opt_usize("threads", 1).max(1));
+    let heartbeat_ms = init.opt_usize("heartbeat_ms", 0) as u64;
+    let mut faults: Vec<(Sabotage, Option<usize>)> = Vec::new();
+    if let Some(events) = init.get("faults").as_arr() {
+        for event in events {
+            let kind = match event.opt_str("kind", "") {
+                "kill" => Sabotage::Kill,
+                "hang" => Sabotage::Hang,
+                other => anyhow::bail!("replica {replica}: unknown worker fault `{other}`"),
+            };
+            let step = if event.opt_bool("every", false) {
+                None
+            } else {
+                Some(event.opt_usize("step", 0))
+            };
+            faults.push((kind, step));
+        }
+    }
     // Architecture skeleton only — the first Params frame overwrites
     // every parameter bit-exactly.
     let mut rng = Rng::new(cfg.seed);
     let mut net = cfg.build_network(&mut rng);
 
-    loop {
-        match wire::read_msg(&mut reader) {
-            Ok(Msg::Params { layers }) => {
-                net.import_params(&layers)
-                    .map_err(|e| e.context(format!("replica {replica}: param import")))?;
-            }
-            Ok(Msg::Step { x, loss }) => {
-                let head = loss.build();
-                // Stream each layer's gradients as the engine emits
-                // them; an I/O failure mid-stream aborts the step (the
-                // coordinator is gone or closing).
-                let mut io_err: Option<std::io::Error> = None;
-                let result = engine.compute_streaming(&net, &x, head.as_ref(), &mut |li, g| {
-                    if io_err.is_none() {
-                        let send = wire::write_grad(&mut writer, li as u32, &g)
-                            .and_then(|_| writer.flush());
-                        if let Err(e) = send {
-                            io_err = Some(e);
+    // `active` gates the ticker to compute windows (see module docs);
+    // `stop` ends it when the serve loop exits.
+    let active = AtomicBool::new(false);
+    let stop = AtomicBool::new(false);
+    let mut served = 0usize;
+    std::thread::scope(|scope| {
+        if heartbeat_ms > 0 {
+            let writer = Arc::clone(&writer);
+            let active = &active;
+            let stop = &stop;
+            scope.spawn(move || {
+                let interval = Duration::from_millis(heartbeat_ms);
+                let nap = Duration::from_millis(heartbeat_ms.clamp(1, 25));
+                let mut last = Instant::now();
+                while !stop.load(Ordering::Relaxed) {
+                    if active.load(Ordering::Relaxed) && last.elapsed() >= interval {
+                        let mut w = lock(&writer);
+                        // Re-check under the lock: a step that just
+                        // finished must not gain a trailing tick.
+                        if active.load(Ordering::Relaxed) {
+                            let _ = wire::write_heartbeat(&mut *w).and_then(|_| w.flush());
                         }
+                        last = Instant::now();
                     }
-                });
-                if let Some(e) = io_err {
-                    return Err(anyhow::anyhow!(
-                        "replica {replica}: gradient upload failed: {e}"
-                    ));
+                    std::thread::sleep(nap);
                 }
-                match result {
-                    Ok(loss_val) => wire::write_step_done(&mut writer, loss_val)?,
-                    Err(e) => wire::write_error(&mut writer, &format!("{e:#}"))?,
-                }
-                writer.flush()?;
-            }
-            Ok(Msg::Shutdown) => return Ok(()),
-            Ok(other) => anyhow::bail!("replica {replica}: unexpected {other:?}"),
-            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
-                // Coordinator dropped the connection (e.g. its process
-                // ended without a shutdown frame): exit quietly.
-                return Ok(());
-            }
-            Err(e) => return Err(e.into()),
+            });
         }
-    }
+        let out = (|| -> anyhow::Result<()> {
+            loop {
+                match wire::read_msg(&mut reader) {
+                    Ok(Msg::Params { layers }) => {
+                        net.import_params(&layers)
+                            .map_err(|e| e.context(format!("replica {replica}: param import")))?;
+                    }
+                    Ok(Msg::Step { x, loss }) => {
+                        let sabotage = take_sabotage(&mut faults, served);
+                        served += 1;
+                        if sabotage == Some(Sabotage::Hang) {
+                            // A wedged process: never heartbeats, never
+                            // answers, never exits. Only the supervisor's
+                            // grace/deadline (or a kill) ends this.
+                            loop {
+                                std::thread::sleep(Duration::from_secs(3600));
+                            }
+                        }
+                        let kill = sabotage == Some(Sabotage::Kill);
+                        let head = loss.build();
+                        // Stream each layer's gradients as the engine
+                        // emits them; an I/O failure mid-stream aborts
+                        // the step (the coordinator is gone or closing).
+                        let mut io_err: Option<std::io::Error> = None;
+                        let mut frames_sent = 0usize;
+                        active.store(true, Ordering::Relaxed);
+                        let result =
+                            engine.compute_streaming(&net, &x, head.as_ref(), &mut |li, g| {
+                                if io_err.is_none() {
+                                    let mut w = lock(&writer);
+                                    let send = wire::write_grad(&mut *w, li as u32, &g)
+                                        .and_then(|_| w.flush());
+                                    drop(w);
+                                    match send {
+                                        Ok(()) => {
+                                            frames_sent += 1;
+                                            if kill && frames_sent == 1 {
+                                                // kill -9 mid-step: the
+                                                // coordinator now holds a
+                                                // partial delivery.
+                                                std::process::abort();
+                                            }
+                                        }
+                                        Err(e) => io_err = Some(e),
+                                    }
+                                }
+                            });
+                        active.store(false, Ordering::Relaxed);
+                        if let Some(e) = io_err {
+                            return Err(anyhow::anyhow!(
+                                "replica {replica}: gradient upload failed: {e}"
+                            ));
+                        }
+                        let mut w = lock(&writer);
+                        match result {
+                            Ok(loss_val) => wire::write_step_done(&mut *w, loss_val)?,
+                            Err(e) => wire::write_error(&mut *w, &format!("{e:#}"))?,
+                        }
+                        w.flush()?;
+                    }
+                    Ok(Msg::Shutdown) => return Ok(()),
+                    Ok(Msg::Heartbeat) => {} // tolerated, not expected
+                    Ok(other) => anyhow::bail!("replica {replica}: unexpected {other:?}"),
+                    Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                        // Coordinator dropped the connection (e.g. its
+                        // process ended without a shutdown frame): exit
+                        // quietly.
+                        return Ok(());
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            }
+        })();
+        stop.store(true, Ordering::Relaxed);
+        out
+    })
 }
 
 /// The `--replica-worker` subprocess entry point: connect to the
-/// coordinator socket named by `--connect` and [`serve`] the protocol.
+/// coordinator named by `--connect` (unix socket path) or
+/// `--connect-tcp` (`host:port`) and serve the protocol.
 pub fn run(args: &Args) -> anyhow::Result<()> {
+    let replica = args.get_usize("replica", 0)?;
+    if let Some(addr) = args.get("connect-tcp") {
+        // The coordinator may still be binding (or briefly down between
+        // respawns on a multi-host run): retry with backoff for the
+        // accept window instead of failing on the first refusal.
+        let deadline = Instant::now() + Deadlines::resolve().accept;
+        let mut backoff = Backoff::new(10, 500);
+        let stream = loop {
+            match TcpStream::connect(&addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    anyhow::ensure!(
+                        Instant::now() < deadline,
+                        "connecting to coordinator at {addr}: {e}"
+                    );
+                    std::thread::sleep(backoff.delay());
+                }
+            }
+        };
+        stream.set_nodelay(true)?;
+        return serve_stream(SockStream::Tcp(stream), replica);
+    }
     let path = args
         .get("connect")
-        .ok_or_else(|| anyhow::anyhow!("--replica-worker needs --connect <socket>"))?;
-    let replica = args.get_usize("replica", 0)?;
+        .ok_or_else(|| {
+            anyhow::anyhow!("--replica-worker needs --connect <socket> or --connect-tcp <addr>")
+        })?;
     let stream = UnixStream::connect(path)
         .map_err(|e| anyhow::anyhow!("connecting to coordinator at {path}: {e}"))?;
-    serve(stream, replica)
+    serve_stream(SockStream::Unix(stream), replica)
 }

@@ -23,13 +23,28 @@
 //!   replica, and per-layer gradients are all-reduced streamed
 //!   (default: `MOONWALK_REPLICAS` env var, else 1). The batch size
 //!   must be divisible by N.
-//! * `--transport local|unix` — where `train`'s replicas execute:
-//!   in-process on the worker pool (default) or one worker
-//!   **subprocess** per replica over unix-domain sockets
-//!   (`MOONWALK_TRANSPORT` is the env spelling). The unix transport
-//!   gives each replica its own process memory budget; gradients are
+//! * `--transport local|unix|tcp` — where `train`'s replicas execute:
+//!   in-process on the worker pool (default), one worker **subprocess**
+//!   per replica over unix-domain sockets, or worker processes over TCP
+//!   (`MOONWALK_TRANSPORT` is the env spelling). The socket transports
+//!   give each replica its own process memory budget; gradients are
 //!   bit-identical to the in-process transport at the same replica
-//!   count.
+//!   count. TCP extras: `--listen HOST:PORT` (default `127.0.0.1:0`)
+//!   binds the coordinator, and `--remote-workers K` leaves the last K
+//!   replica slots for standalone workers dialing in from other hosts.
+//! * Supervision (socket transports): `--step-timeout S` (per-step
+//!   compute deadline, `0` = wait forever), `--accept-timeout S`,
+//!   `--hello-timeout S`, `--heartbeat-ms MS` (worker liveness ticks;
+//!   `0` disables). Env spellings: `MOONWALK_STEP_TIMEOUT`,
+//!   `MOONWALK_ACCEPT_TIMEOUT`, `MOONWALK_HELLO_TIMEOUT` (seconds),
+//!   `MOONWALK_HEARTBEAT_MS`.
+//! * Fault tolerance: `--step-retries N` (replay a failed step N times
+//!   per membership level, default 2), `--failover` (after the retry
+//!   budget, shrink onto surviving workers instead of aborting),
+//!   `--grad-accum K` (accumulate K micro-batches per optimizer step),
+//!   and `--fault kind:replica@step,...` (scripted fault injection —
+//!   `kill|hang|drop|corrupt|delay<ms>`, step `*` = every step;
+//!   `MOONWALK_FAULT` is the env spelling) for testing recovery.
 //! * `--engine NAME` — override the config's gradient engine for
 //!   `train` (any `autodiff::engine_by_name` name, plus `planned`).
 //! * `--budget BYTES` — peak-memory budget for the `planned` engine
@@ -39,13 +54,19 @@
 //!   per-layer strategy mix whose predicted peak respects the budget.
 //!   `train --engine planned` prints the plan table before training.
 //!
-//! Hidden mode: `--replica-worker --connect <socket> --replica <r>` is
-//! the subprocess entry the unix transport spawns; it is not part of the
+//! Hidden mode: `--replica-worker --connect <socket> --replica <r>`
+//! (unix) or `--replica-worker --connect-tcp <host:port> --replica <r>`
+//! (tcp — also the standalone multi-host worker launch) is the
+//! subprocess entry the socket transports spawn; it is not part of the
 //! user-facing CLI surface.
 
 use moonwalk::autodiff::{engine_by_name, Backprop, GradEngine, EXACT_ENGINES};
 use moonwalk::cli::Args;
-use moonwalk::distributed::transport::{EngineSpec, TransportKind, UnixTransport, UnixTransportOpts};
+use moonwalk::distributed::transport::{
+    EngineSpec, FaultPlan, TcpTransport, TcpTransportOpts, TransportKind, UnixTransport,
+    UnixTransportOpts,
+};
+use moonwalk::distributed::RetryPolicy;
 use moonwalk::coordinator::{Optimizer, OptimizerKind, SyntheticSpec, TextureDataset, Trainer};
 use moonwalk::model::config::{ArchKind, Config};
 use moonwalk::memsim;
@@ -137,19 +158,56 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     // each step, and stream per-layer gradients back over the socket.
     // Honored at any replica count — even one subprocess buys a separate
     // process memory budget.
-    if moonwalk::distributed::transport::kind() == TransportKind::Unix {
-        let opts = UnixTransportOpts::new(
-            trainer.replicas,
-            cfg.to_json().to_string(),
-            EngineSpec {
-                name: cfg.engine.clone(),
-                block: cfg.block,
-                checkpoint_segments: cfg.checkpoint_every,
-                seed: cfg.seed,
-            },
-        );
-        trainer.transport = Some(Box::new(UnixTransport::spawn(opts)?));
+    let kind = moonwalk::distributed::transport::kind();
+    let faults = FaultPlan::resolve(args.get("fault"))?;
+    let engine_spec = EngineSpec {
+        name: cfg.engine.clone(),
+        block: cfg.block,
+        checkpoint_segments: cfg.checkpoint_every,
+        seed: cfg.seed,
+    };
+    match kind {
+        TransportKind::Unix => {
+            let mut opts =
+                UnixTransportOpts::new(trainer.replicas, cfg.to_json().to_string(), engine_spec);
+            opts.faults = faults;
+            trainer.transport = Some(Box::new(UnixTransport::spawn(opts)?));
+        }
+        TransportKind::Tcp => {
+            let mut opts =
+                TcpTransportOpts::new(trainer.replicas, cfg.to_json().to_string(), engine_spec);
+            opts.listen = args.get_or("listen", "127.0.0.1:0").to_string();
+            opts.remote_workers = args.get_usize("remote-workers", 0)?;
+            opts.faults = faults;
+            let remote = opts.remote_workers;
+            let transport = TcpTransport::spawn(opts)?;
+            if remote > 0 {
+                // By the time spawn returns the remote workers have
+                // already dialed in, but print the resolved address
+                // anyway — it documents what the run bound.
+                println!(
+                    "tcp coordinator on {} ({remote} remote worker slot(s))",
+                    transport.local_addr()
+                );
+            }
+            trainer.transport = Some(Box::new(transport));
+        }
+        TransportKind::Local => {
+            anyhow::ensure!(
+                faults.is_empty(),
+                "--fault needs a socket transport (--transport unix|tcp)"
+            );
+        }
     }
+    let mut retry = RetryPolicy::default();
+    if let Some(r) = args.get_usize_opt("step-retries")? {
+        retry.retries = r;
+    }
+    retry.failover = args.has("failover");
+    trainer.retry = retry;
+    let accum = args.get_usize("grad-accum", 1)?;
+    anyhow::ensure!(accum >= 1, "--grad-accum must be >= 1");
+    trainer.grad_accum = accum;
     let metrics = args.get("metrics").map(std::path::PathBuf::from);
     let report = trainer.train(
         &train,
@@ -161,7 +219,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     )?;
     println!(
         "engine={} steps={} replicas={} transport={} final_loss={:.4} train_acc={:.3} \
-         test_acc={:.3} peak_mem={} time={:.1}s reduce={:.2}s prefetch_wait={:.2}s{}",
+         test_acc={:.3} peak_mem={} time={:.1}s reduce={:.2}s prefetch_wait={:.2}s \
+         retries={} failovers={}{}",
         engine.name(),
         report.steps,
         report.replicas,
@@ -173,6 +232,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         report.total_time_s,
         report.reduce_time_s,
         report.prefetch_wait_s,
+        report.retries,
+        report.failovers,
         match report.planned_peak_bytes {
             Some(p) => format!(" planned_peak={}", tracker::fmt_bytes(p)),
             None => String::new(),
@@ -367,7 +428,8 @@ fn main() {
             std::process::exit(2);
         }
     };
-    // Hidden subprocess mode (spawned by the unix transport): serve the
+    // Hidden subprocess mode (spawned by the socket transports, or
+    // launched standalone on another host with --connect-tcp): serve the
     // replica-worker protocol and exit. Runs before configure_runtime —
     // the worker pins its own pool size from the coordinator's init blob.
     if args.has("replica-worker") {
@@ -391,7 +453,9 @@ fn main() {
             eprintln!(
                 "usage: moonwalk <train|gradcheck|audit|plan|sweep> [--config cfg.json] \
                  [--threads N] [--gemm auto|scalar|blocked|parallel] [--replicas N] \
-                 [--transport local|unix] [--engine NAME] [--budget BYTES] ...\n\
+                 [--transport local|unix|tcp] [--listen HOST:PORT] [--remote-workers K] \
+                 [--step-timeout S] [--heartbeat-ms MS] [--step-retries N] [--failover] \
+                 [--grad-accum K] [--fault SPEC] [--engine NAME] [--budget BYTES] ...\n\
                  (got {other:?}; see README.md)"
             );
             std::process::exit(2);

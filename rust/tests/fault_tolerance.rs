@@ -1,0 +1,629 @@
+//! Elastic fault-tolerance contract (ISSUE 6): the chaos grid.
+//!
+//! 1. **Kill recovery** — a worker kill -9'd mid-step (after it already
+//!    streamed a gradient frame) under both socket families is detected,
+//!    retried deterministically, and the run's loss curve is
+//!    **bit-identical** to the no-fault run at equal replica count.
+//! 2. **Hang recovery** — a worker that stops heartbeating and sleeps
+//!    forever is declared dead after the heartbeat grace, then the step
+//!    replays bit-identically (the failure mode a plain blocking read
+//!    could never detect).
+//! 3. **Frame faults** — dropped gradient frames trip the
+//!    partial-delivery guard, corrupted frames fail with an error naming
+//!    the replica and tag, delayed frames are harmless.
+//! 4. **Exact-engine grid** — every engine in `EXACT_ENGINES` survives a
+//!    mid-step kill and reproduces its pre-crash gradients bit-for-bit
+//!    after respawn (worker engine state, including compiled plans, is
+//!    rebuilt deterministically).
+//! 5. **Elastic membership** — shrinking the executor set re-queues the
+//!    fixed logical shards onto survivors bit-identically; growing back
+//!    restores the original layout. Failover mode rides this to finish
+//!    runs with a permanently dying worker.
+//! 6. **Randomized chaos schedules** — pseudo-random fault plans (kill,
+//!    hang, dropped and delayed frames) across `EXACT_ENGINES` × both
+//!    socket families, each asserted bit-identical to its no-fault twin.
+//!
+//! Worker subprocesses are the real `moonwalk` binary
+//! (`CARGO_BIN_EXE_moonwalk`) in its hidden `--replica-worker` mode.
+//! Tests serialize through the same thread-pin mutex as the other
+//! process-global suites.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use moonwalk::autodiff::{engine_by_name, EXACT_ENGINES};
+use moonwalk::coordinator::{Optimizer, OptimizerKind, SyntheticSpec, TextureDataset, TrainReport, Trainer};
+use moonwalk::distributed::transport::{
+    Deadlines, EngineSpec, FaultPlan, LossSpec, ShardSpec, TcpTransport, TcpTransportOpts,
+    Transport, UnixTransport, UnixTransportOpts,
+};
+use moonwalk::distributed::{split_batch, ReduceOp, RetryPolicy};
+use moonwalk::model::config::Config;
+use moonwalk::model::Network;
+use moonwalk::tensor::Tensor;
+use moonwalk::util::json::Json;
+use moonwalk::util::Rng;
+
+/// Serializes the tests that pin process-global state (pool threads,
+/// subprocess load).
+static THREAD_PIN: Mutex<()> = Mutex::new(());
+
+fn pin_lock() -> std::sync::MutexGuard<'static, ()> {
+    match THREAD_PIN.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// The tiny CNN of the transport suite, as a `Config` so worker
+/// subprocesses rebuild the identical architecture.
+fn tiny_cfg(seed: u64) -> Config {
+    Config::from_json(
+        &Json::parse(&format!(
+            r#"{{"arch": "cnn2d", "depth": 2, "channels": 5, "input_hw": 16,
+                 "cin": 2, "classes": 4, "alpha": 0.1, "constrained": true,
+                 "seed": {seed}}}"#
+        ))
+        .unwrap(),
+    )
+    .unwrap()
+}
+
+fn tiny_net(cfg: &Config) -> Network {
+    let mut rng = Rng::new(cfg.seed);
+    cfg.build_network(&mut rng)
+}
+
+/// Short supervision deadlines so fault detection is fast: a 50 ms
+/// heartbeat puts the hang grace at its 500 ms floor, and the 60 s step
+/// deadline stays a backstop that never fires in a healthy test.
+fn fast_deadlines() -> Deadlines {
+    Deadlines {
+        accept: Duration::from_secs(30),
+        hello: Duration::from_secs(10),
+        step: Some(Duration::from_secs(60)),
+        heartbeat_ms: 50,
+    }
+}
+
+/// The two socket families the chaos grid runs over.
+#[derive(Clone, Copy, Debug)]
+enum Family {
+    Unix,
+    Tcp,
+}
+
+const FAMILIES: [Family; 2] = [Family::Unix, Family::Tcp];
+
+impl Family {
+    fn label(self) -> &'static str {
+        match self {
+            Family::Unix => "unix",
+            Family::Tcp => "tcp",
+        }
+    }
+}
+
+/// Spawn a 2-worker transport of `family` with an explicit fault plan.
+fn spawn_family(
+    family: Family,
+    cfg: &Config,
+    engine: EngineSpec,
+    replicas: usize,
+    deadlines: Deadlines,
+    faults: FaultPlan,
+) -> Box<dyn Transport> {
+    let bin = Some(std::path::PathBuf::from(env!("CARGO_BIN_EXE_moonwalk")));
+    match family {
+        Family::Unix => {
+            let mut opts = UnixTransportOpts::new(replicas, cfg.to_json().to_string(), engine);
+            opts.worker_bin = bin;
+            opts.deadlines = deadlines;
+            opts.faults = faults;
+            Box::new(UnixTransport::spawn(opts).expect("spawn unix transport"))
+        }
+        Family::Tcp => {
+            let mut opts = TcpTransportOpts::new(replicas, cfg.to_json().to_string(), engine);
+            opts.worker_bin = bin;
+            opts.deadlines = deadlines;
+            opts.faults = faults;
+            Box::new(TcpTransport::spawn(opts).expect("spawn tcp transport"))
+        }
+    }
+}
+
+/// The worker-side spelling of the trainer's engine configuration.
+fn engine_spec(cfg: &Config, name: &str) -> EngineSpec {
+    EngineSpec {
+        name: name.to_string(),
+        block: cfg.block,
+        checkpoint_segments: cfg.checkpoint_every,
+        seed: cfg.seed,
+    }
+}
+
+/// One full trainer run (replicas = 2, batch 4) over `family` with the
+/// given fault spec — the no-fault twin passes `""`.
+fn train_run(
+    cfg: &Config,
+    engine_name: &str,
+    family: Family,
+    fault_spec: &str,
+    retry: RetryPolicy,
+    steps: usize,
+) -> TrainReport {
+    let data = TextureDataset::generate(
+        SyntheticSpec {
+            hw: 16,
+            cin: 2,
+            classes: 4,
+            noise: 0.15,
+            seed: cfg.seed + 100,
+        },
+        40,
+    );
+    let (train, test) = data.split(0.2);
+    let mut net = tiny_net(cfg);
+    let engine = engine_by_name(engine_name, cfg.block, cfg.checkpoint_every, cfg.seed).unwrap();
+    let opt = Optimizer::new(OptimizerKind::Sgd, 1e-3, &net, false);
+    let faults = FaultPlan::parse(fault_spec).unwrap();
+    let transport = spawn_family(
+        family,
+        cfg,
+        engine_spec(cfg, engine_name),
+        2,
+        fast_deadlines(),
+        faults,
+    );
+    let mut trainer = Trainer::new(&mut net, engine.as_ref(), opt);
+    trainer.replicas = 2;
+    trainer.retry = retry;
+    trainer.transport = Some(transport);
+    let mut rng = Rng::new(cfg.seed + 7);
+    trainer
+        .train(&train, &test, 4, steps, &mut rng, None)
+        .unwrap()
+}
+
+fn assert_curves_bit_identical(label: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{label}: loss curve length");
+    for (step, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{label} step {step}: no-fault {x} vs faulted {y}"
+        );
+    }
+}
+
+/// One collected step through any transport (transport-suite idiom).
+fn step_collect(
+    t: &mut dyn Transport,
+    net: &Network,
+    engine: &dyn moonwalk::autodiff::GradEngine,
+    xs: &[Tensor],
+    labels: &[usize],
+) -> anyhow::Result<(f32, Vec<Vec<Tensor>>)> {
+    let per = labels.len() / xs.len();
+    let shards: Vec<ShardSpec<'_>> = xs
+        .iter()
+        .enumerate()
+        .map(|(r, x)| ShardSpec {
+            x,
+            loss: LossSpec::SoftmaxXent(&labels[r * per..(r + 1) * per]),
+        })
+        .collect();
+    let grads: Mutex<Vec<Vec<Tensor>>> =
+        Mutex::new((0..net.depth()).map(|_| Vec::new()).collect());
+    let step = t.step(net, engine, &shards, ReduceOp::Mean, &|li, g| {
+        grads.lock().unwrap()[li] = g;
+    })?;
+    Ok((step.loss, grads.into_inner().unwrap()))
+}
+
+fn assert_grads_bit_identical(label: &str, a: &[Vec<Tensor>], b: &[Vec<Tensor>]) {
+    assert_eq!(a.len(), b.len(), "{label}: layer count");
+    for (li, (la, lb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(la.len(), lb.len(), "{label} layer {li}: gradient arity");
+        for (pi, (ga, gb)) in la.iter().zip(lb).enumerate() {
+            assert_eq!(ga.shape(), gb.shape(), "{label} layer {li} param {pi}");
+            for (va, vb) in ga.data().iter().zip(gb.data()) {
+                assert_eq!(
+                    va.to_bits(),
+                    vb.to_bits(),
+                    "{label} layer {li} param {pi}: gradient bits"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. Kill recovery — the acceptance test
+// ---------------------------------------------------------------------------
+
+/// A worker kill -9'd mid-step (it aborts right after flushing its first
+/// gradient frame, leaving the coordinator holding a partial delivery)
+/// under **both** socket families: the run completes with a loss curve
+/// bit-identical to the no-fault run at the same replica count, and the
+/// report records the retry.
+#[test]
+fn kill_mid_step_recovers_bit_identical_loss_curve() {
+    let _pin = pin_lock();
+    let retry = RetryPolicy {
+        retries: 2,
+        backoff_ms: 5,
+        failover: false,
+    };
+    for family in FAMILIES {
+        for engine in ["backprop", "moonwalk"] {
+            let cfg = tiny_cfg(20);
+            let clean = train_run(&cfg, engine, family, "", retry, 3);
+            let faulted = train_run(&cfg, engine, family, "kill:1@1", retry, 3);
+            let label = format!("{}/{engine} kill:1@1", family.label());
+            assert_curves_bit_identical(&label, &clean.loss_curve, &faulted.loss_curve);
+            assert!(faulted.retries >= 1, "{label}: retry must be recorded");
+            assert_eq!(faulted.failovers, 0, "{label}: no failover expected");
+            assert_eq!(clean.retries, 0, "{label}: clean run must not retry");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Hang recovery
+// ---------------------------------------------------------------------------
+
+/// A worker that stops heartbeating and sleeps forever mid-step is
+/// declared dead after the heartbeat grace and the step replays
+/// bit-identically — on both families.
+#[test]
+fn hung_worker_detected_and_recovered_bit_identical() {
+    let _pin = pin_lock();
+    let retry = RetryPolicy {
+        retries: 2,
+        backoff_ms: 5,
+        failover: false,
+    };
+    for family in FAMILIES {
+        let cfg = tiny_cfg(21);
+        let clean = train_run(&cfg, "backprop", family, "", retry, 3);
+        let faulted = train_run(&cfg, "backprop", family, "hang:0@1", retry, 3);
+        let label = format!("{} hang:0@1", family.label());
+        assert_curves_bit_identical(&label, &clean.loss_curve, &faulted.loss_curve);
+        assert!(faulted.retries >= 1, "{label}: retry must be recorded");
+    }
+}
+
+/// The step-level hang error blames the heartbeat grace, naming the
+/// silent replica — the observable difference from a plain dead socket.
+#[test]
+fn hang_error_names_heartbeat_grace() {
+    let _pin = pin_lock();
+    let cfg = tiny_cfg(22);
+    let net = tiny_net(&cfg);
+    let mut rng = Rng::new(1);
+    let x = Tensor::randn(&[4, 16, 16, 2], 1.0, &mut rng);
+    let labels = vec![0usize, 3, 1, 2];
+    let xs = split_batch(&x, 2).unwrap();
+    let engine = engine_by_name("backprop", 4, 0, 0).unwrap();
+    let mut t = spawn_family(
+        Family::Unix,
+        &cfg,
+        EngineSpec::new("backprop"),
+        2,
+        fast_deadlines(),
+        FaultPlan::parse("hang:0@0").unwrap(),
+    );
+    t.broadcast(&net).unwrap();
+    let err = step_collect(t.as_mut(), &net, engine.as_ref(), &xs, &labels)
+        .expect_err("a hung worker must fail the step");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("presumed hung"), "hang diagnosis: {msg}");
+    assert!(msg.contains("replica 0"), "hang error names replica: {msg}");
+}
+
+// ---------------------------------------------------------------------------
+// 3. Frame faults
+// ---------------------------------------------------------------------------
+
+/// A dropped gradient frame trips the partial-delivery guard (the step
+/// fails rather than silently reducing a short fold), and after a
+/// rebroadcast the group reproduces the clean gradients bit-for-bit.
+#[test]
+fn dropped_frame_trips_partial_delivery_guard() {
+    let _pin = pin_lock();
+    let cfg = tiny_cfg(23);
+    let net = tiny_net(&cfg);
+    let mut rng = Rng::new(2);
+    let x = Tensor::randn(&[4, 16, 16, 2], 1.0, &mut rng);
+    let labels = vec![1usize, 2, 0, 3];
+    let xs = split_batch(&x, 2).unwrap();
+    let engine = engine_by_name("backprop", 4, 0, 0).unwrap();
+    let mut clean = spawn_family(
+        Family::Unix,
+        &cfg,
+        EngineSpec::new("backprop"),
+        2,
+        fast_deadlines(),
+        FaultPlan::default(),
+    );
+    clean.broadcast(&net).unwrap();
+    let (ref_loss, ref_grads) =
+        step_collect(clean.as_mut(), &net, engine.as_ref(), &xs, &labels).unwrap();
+
+    let mut faulted = spawn_family(
+        Family::Unix,
+        &cfg,
+        EngineSpec::new("backprop"),
+        2,
+        fast_deadlines(),
+        FaultPlan::parse("drop:0@0").unwrap(),
+    );
+    faulted.broadcast(&net).unwrap();
+    let err = step_collect(faulted.as_mut(), &net, engine.as_ref(), &xs, &labels)
+        .expect_err("a dropped gradient frame must fail the step");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("never finished"), "partial-delivery guard: {msg}");
+
+    faulted.broadcast(&net).unwrap();
+    let (loss, grads) =
+        step_collect(faulted.as_mut(), &net, engine.as_ref(), &xs, &labels).unwrap();
+    assert_eq!(loss.to_bits(), ref_loss.to_bits(), "post-drop recovery loss");
+    assert_grads_bit_identical("drop recovery", &ref_grads, &grads);
+}
+
+/// A corrupted frame tag fails with an error naming the replica, the
+/// family and the bogus tag byte — the supervision layer's attribution
+/// contract.
+#[test]
+fn corrupt_frame_error_names_replica_and_tag() {
+    let _pin = pin_lock();
+    let cfg = tiny_cfg(24);
+    let net = tiny_net(&cfg);
+    let mut rng = Rng::new(3);
+    let x = Tensor::randn(&[4, 16, 16, 2], 1.0, &mut rng);
+    let labels = vec![0usize, 1, 2, 3];
+    let xs = split_batch(&x, 2).unwrap();
+    let engine = engine_by_name("backprop", 4, 0, 0).unwrap();
+    let mut t = spawn_family(
+        Family::Unix,
+        &cfg,
+        EngineSpec::new("backprop"),
+        2,
+        fast_deadlines(),
+        FaultPlan::parse("corrupt:0@0").unwrap(),
+    );
+    t.broadcast(&net).unwrap();
+    let err = step_collect(t.as_mut(), &net, engine.as_ref(), &xs, &labels)
+        .expect_err("a corrupt frame must fail the step");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("corrupt frame tag"), "decode diagnosis: {msg}");
+    assert!(msg.contains("replica 0"), "corrupt error names replica: {msg}");
+    // Recovery path: rebroadcast, then the next step serves cleanly.
+    t.broadcast(&net).unwrap();
+    step_collect(t.as_mut(), &net, engine.as_ref(), &xs, &labels)
+        .expect("group must serve after recovering from a corrupt frame");
+}
+
+/// A delayed gradient frame (transient slow link shorter than the
+/// heartbeat grace) is harmless: the step succeeds with gradients
+/// bit-identical to an undelayed run.
+#[test]
+fn delayed_frame_is_bit_identical() {
+    let _pin = pin_lock();
+    let cfg = tiny_cfg(25);
+    let net = tiny_net(&cfg);
+    let mut rng = Rng::new(4);
+    let x = Tensor::randn(&[4, 16, 16, 2], 1.0, &mut rng);
+    let labels = vec![3usize, 0, 2, 1];
+    let xs = split_batch(&x, 2).unwrap();
+    let engine = engine_by_name("backprop", 4, 0, 0).unwrap();
+    let mut clean = spawn_family(
+        Family::Unix,
+        &cfg,
+        EngineSpec::new("backprop"),
+        2,
+        fast_deadlines(),
+        FaultPlan::default(),
+    );
+    clean.broadcast(&net).unwrap();
+    let (ref_loss, ref_grads) =
+        step_collect(clean.as_mut(), &net, engine.as_ref(), &xs, &labels).unwrap();
+    let mut delayed = spawn_family(
+        Family::Unix,
+        &cfg,
+        EngineSpec::new("backprop"),
+        2,
+        fast_deadlines(),
+        FaultPlan::parse("delay40:1@0").unwrap(),
+    );
+    delayed.broadcast(&net).unwrap();
+    let (loss, grads) =
+        step_collect(delayed.as_mut(), &net, engine.as_ref(), &xs, &labels).unwrap();
+    assert_eq!(loss.to_bits(), ref_loss.to_bits(), "delayed-frame loss");
+    assert_grads_bit_identical("delay40", &ref_grads, &grads);
+}
+
+// ---------------------------------------------------------------------------
+// 4. Exact-engine kill grid
+// ---------------------------------------------------------------------------
+
+/// Every exact engine survives a mid-step kill: the failed step names
+/// the dead replica, the rebroadcast respawns it (rebuilding the engine
+/// — including any compiled execution plan — deterministically), and
+/// the replayed step reproduces the pre-crash gradients bit-for-bit.
+#[test]
+fn exact_engine_grid_kill_recovery_bit_exact() {
+    let _pin = pin_lock();
+    let cfg = tiny_cfg(26);
+    let net = tiny_net(&cfg);
+    let mut rng = Rng::new(5);
+    let x = Tensor::randn(&[4, 16, 16, 2], 1.0, &mut rng);
+    let labels = vec![2usize, 1, 3, 0];
+    let xs = split_batch(&x, 2).unwrap();
+    for name in EXACT_ENGINES {
+        let engine = engine_by_name(name, 4, 2, 0).unwrap();
+        let spec = EngineSpec {
+            name: name.to_string(),
+            block: 4,
+            checkpoint_segments: 2,
+            seed: 0,
+        };
+        let mut t = spawn_family(
+            Family::Unix,
+            &cfg,
+            spec,
+            2,
+            fast_deadlines(),
+            FaultPlan::parse("kill:1@1").unwrap(),
+        );
+        t.broadcast(&net).unwrap();
+        let (loss0, grads0) =
+            step_collect(t.as_mut(), &net, engine.as_ref(), &xs, &labels).unwrap();
+        let err = step_collect(t.as_mut(), &net, engine.as_ref(), &xs, &labels)
+            .expect_err("the armed kill must fail the second step");
+        assert!(
+            format!("{err:#}").contains("replica 1"),
+            "{name}: kill error names the replica: {err:#}"
+        );
+        t.broadcast(&net).unwrap();
+        let (loss1, grads1) =
+            step_collect(t.as_mut(), &net, engine.as_ref(), &xs, &labels).unwrap();
+        assert_eq!(loss1.to_bits(), loss0.to_bits(), "{name}: replayed loss");
+        assert_grads_bit_identical(name, &grads0, &grads1);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 5. Elastic membership
+// ---------------------------------------------------------------------------
+
+/// Shrinking the executor set re-queues the fixed logical shards onto
+/// the survivors bit-identically (the reducer folds in logical shard
+/// order, not delivery order); growing back restores the original
+/// layout, still bit-identical.
+#[test]
+fn elastic_membership_shrink_and_grow_bit_identical() {
+    let _pin = pin_lock();
+    let cfg = tiny_cfg(27);
+    let net = tiny_net(&cfg);
+    let mut rng = Rng::new(6);
+    let x = Tensor::randn(&[4, 16, 16, 2], 1.0, &mut rng);
+    let labels = vec![1usize, 0, 3, 2];
+    let xs = split_batch(&x, 2).unwrap();
+    let engine = engine_by_name("moonwalk", 4, 2, 0).unwrap();
+    let mut t = spawn_family(
+        Family::Unix,
+        &cfg,
+        EngineSpec::new("moonwalk"),
+        2,
+        fast_deadlines(),
+        FaultPlan::default(),
+    );
+    t.broadcast(&net).unwrap();
+    assert_eq!(t.members(), 2);
+    let (loss_full, grads_full) =
+        step_collect(t.as_mut(), &net, engine.as_ref(), &xs, &labels).unwrap();
+
+    t.set_members(1).unwrap();
+    t.broadcast(&net).unwrap();
+    assert_eq!(t.members(), 1);
+    let (loss_one, grads_one) =
+        step_collect(t.as_mut(), &net, engine.as_ref(), &xs, &labels).unwrap();
+    assert_eq!(
+        loss_one.to_bits(),
+        loss_full.to_bits(),
+        "1-member loss must match the 2-member fold"
+    );
+    assert_grads_bit_identical("members=1", &grads_full, &grads_one);
+
+    t.set_members(2).unwrap();
+    t.broadcast(&net).unwrap();
+    assert_eq!(t.members(), 2);
+    let (loss_back, grads_back) =
+        step_collect(t.as_mut(), &net, engine.as_ref(), &xs, &labels).unwrap();
+    assert_eq!(loss_back.to_bits(), loss_full.to_bits(), "regrown loss");
+    assert_grads_bit_identical("regrown members=2", &grads_full, &grads_back);
+}
+
+/// Failover mode finishes a run whose replica 1 dies on **every** step
+/// it serves (`kill:1@*` re-arms after each respawn — a permanently
+/// failing host): the group shrinks to the survivor and the loss curve
+/// stays bit-identical to the healthy 2-member run.
+#[test]
+fn failover_completes_run_with_permanently_dying_worker() {
+    let _pin = pin_lock();
+    let cfg = tiny_cfg(28);
+    let clean = train_run(
+        &cfg,
+        "backprop",
+        Family::Unix,
+        "",
+        RetryPolicy {
+            retries: 1,
+            backoff_ms: 5,
+            failover: true,
+        },
+        3,
+    );
+    let faulted = train_run(
+        &cfg,
+        "backprop",
+        Family::Unix,
+        "kill:1@*",
+        RetryPolicy {
+            retries: 1,
+            backoff_ms: 5,
+            failover: true,
+        },
+        3,
+    );
+    assert_curves_bit_identical("failover kill:1@*", &clean.loss_curve, &faulted.loss_curve);
+    assert!(faulted.failovers >= 1, "the shrink must be recorded");
+    assert_eq!(clean.failovers, 0, "clean run must not fail over");
+}
+
+// ---------------------------------------------------------------------------
+// 6. Randomized chaos schedules
+// ---------------------------------------------------------------------------
+
+/// The chaos grid: for every exact engine × both socket families, a
+/// deterministic pseudo-random fault schedule (1–2 faults drawn from
+/// kill / dropped frame / delayed frame / hang, random replica and
+/// step) is injected into a short training run, which must stay
+/// bit-identical to its no-fault twin at the same replica count.
+#[test]
+fn chaos_schedules_bit_identical_across_engines_and_transports() {
+    let _pin = pin_lock();
+    let retry = RetryPolicy {
+        retries: 3,
+        backoff_ms: 5,
+        failover: false,
+    };
+    for (ei, engine) in EXACT_ENGINES.iter().enumerate() {
+        for family in FAMILIES {
+            // Deterministic per-combo schedule; hangs are rare (1 in 8)
+            // because each costs a 500 ms detection grace.
+            let mut rng = Rng::new(1000 + ei as u64 * 2 + family.label().len() as u64);
+            let n_faults = 1 + rng.below(2);
+            let spec = (0..n_faults)
+                .map(|_| {
+                    let kind = match rng.below(8) {
+                        0..=2 => "kill".to_string(),
+                        3 | 4 => "drop".to_string(),
+                        5 | 6 => "delay40".to_string(),
+                        _ => "hang".to_string(),
+                    };
+                    format!("{kind}:{}@{}", rng.below(2), rng.below(2))
+                })
+                .collect::<Vec<_>>()
+                .join(",");
+            let cfg = tiny_cfg(30 + ei as u64);
+            let clean = train_run(&cfg, engine, family, "", retry, 2);
+            let faulted = train_run(&cfg, engine, family, &spec, retry, 2);
+            let label = format!("{}/{engine} chaos [{spec}]", family.label());
+            assert_curves_bit_identical(&label, &clean.loss_curve, &faulted.loss_curve);
+            assert_eq!(faulted.failovers, 0, "{label}: retries must suffice");
+        }
+    }
+}

@@ -6,17 +6,18 @@
 # Builds the workspace in release mode, runs the full test suite
 # (unit + integration: parallel-runtime grids, pool stress, property
 # sweeps, engine equivalence, distributed replica sharding, the
-# multi-process transport grid, budgeted-planner invariants), re-runs
-# the distributed, transport and planner suites as dedicated
-# invocations so replica/transport/planner failures stay visible at
-# the end of CI output, then enforces the documentation
-# surface (rustdoc must build warning-free and every doctest must pass
-# — the doc system is tier-1 from PR 4 on), and finally the perf_ops
-# --quick smoke, which emits BENCH_perf_ops.json (including the
-# replicas {1,2} scaling rows, the local/unix transport-overhead
-# rows and the planner_rows budget sweep; field schema in
-# docs/BENCH_SCHEMA.md) so the perf trajectory
-# stays diffable across commits. Exits non-zero on the first failure.
+# multi-process transport grid, budgeted-planner invariants, the
+# fault-tolerance chaos grid), re-runs the distributed, transport,
+# planner and fault-tolerance suites as dedicated invocations so
+# replica/transport/planner/recovery failures stay visible at the end
+# of CI output, then enforces the documentation surface (rustdoc must
+# build warning-free and every doctest must pass — the doc system is
+# tier-1 from PR 4 on), and finally the perf_ops --quick smoke, which
+# emits BENCH_perf_ops.json (including the replicas {1,2} scaling
+# rows, the local/unix transport-overhead rows, the planner_rows
+# budget sweep and the fault_rows recovery smoke; field schema in
+# docs/BENCH_SCHEMA.md) so the perf trajectory stays diffable across
+# commits. Exits non-zero on the first failure.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -25,6 +26,7 @@ cargo test -q
 cargo test -q --test distributed
 cargo test -q --test transport
 cargo test -q --test planner
+cargo test -q --test fault_tolerance
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 cargo test -q --doc
 cargo bench --bench perf_ops -- --quick
