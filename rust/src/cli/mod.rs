@@ -7,11 +7,15 @@ use std::collections::BTreeMap;
 
 /// Apply the global runtime flags shared by every entry point:
 /// `--threads N` (worker-pool size), `--gemm auto|scalar|blocked|parallel`
-/// (GEMM algorithm override), `--replicas N` (data-parallel replica
-/// count; `MOONWALK_REPLICAS` is the env spelling) and
-/// `--transport local|unix|tcp` (where replicas execute — in-process on
-/// the pool or one worker subprocess each; `MOONWALK_TRANSPORT` is the
-/// env spelling).
+/// (GEMM algorithm override), `--conv-algo
+/// auto|direct|im2col|winograd` (conv lowering override;
+/// `MOONWALK_CONV` is the env spelling), `--conv-cache PATH`
+/// (persisted conv-autotune table; `MOONWALK_CONV_CACHE` is the env
+/// spelling the coordinator exports to worker subprocesses),
+/// `--replicas N` (data-parallel replica count; `MOONWALK_REPLICAS` is
+/// the env spelling) and `--transport local|unix|tcp` (where replicas
+/// execute — in-process on the pool or one worker subprocess each;
+/// `MOONWALK_TRANSPORT` is the env spelling).
 ///
 /// Supervision knobs for the socket transports (env spellings
 /// `MOONWALK_STEP_TIMEOUT` / `MOONWALK_ACCEPT_TIMEOUT` /
@@ -33,6 +37,12 @@ pub fn configure_runtime(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(algo) = args.get("gemm") {
         crate::tensor::ops::set_gemm_override(algo)?;
+    }
+    if let Some(algo) = args.get("conv-algo") {
+        crate::tensor::conv_algo::set_conv_override(algo)?;
+    }
+    if let Some(path) = args.get("conv-cache") {
+        crate::tensor::conv_algo::set_cache_path(path);
     }
     if let Some(r) = args.get_usize_opt("replicas")? {
         anyhow::ensure!(r >= 1, "--replicas must be >= 1");
@@ -270,6 +280,13 @@ mod tests {
         assert!(configure_runtime(&parse("train --step-timeout abc")).is_err());
         assert!(configure_runtime(&parse("train --accept-timeout 0")).is_err());
         assert!(configure_runtime(&parse("train --heartbeat-ms x")).is_err());
+    }
+
+    #[test]
+    fn conv_algo_flag_validated() {
+        // Fails inside set_conv_override before any global state is
+        // stored, so this test cannot pollute the process-wide override.
+        assert!(configure_runtime(&parse("train --conv-algo fft")).is_err());
     }
 
     #[test]

@@ -393,7 +393,11 @@ impl ReplicaGroup {
             Ok(res) => return Ok((res, stats)),
             Err(e) => e,
         };
-        let mut backoff = Backoff::new(policy.backoff_ms.max(1), policy.backoff_ms.max(1) * 8);
+        // Saturating: a huge --step-retries backoff base must not wrap
+        // the ms counter; Backoff::new additionally clamps both ends to
+        // supervisor::MAX_BACKOFF_MS.
+        let base_ms = policy.backoff_ms.max(1);
+        let mut backoff = Backoff::new(base_ms, base_ms.saturating_mul(8));
         loop {
             for _ in 0..policy.retries {
                 stats.retries += 1;

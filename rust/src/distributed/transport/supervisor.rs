@@ -223,8 +223,18 @@ impl Deadlines {
     }
 }
 
+/// The absolute ceiling any [`Backoff`] delay can reach, in
+/// milliseconds (60 s). A large `--step-retries` budget doubles the
+/// delay every attempt; without an absolute cap a caller-supplied
+/// `max_ms` derived from an unchecked multiply could overflow the ms
+/// counter or sleep absurdly long between replays. Every constructor
+/// clamps to this, so a retry chain of any length is monotone,
+/// bounded, and panic-free.
+pub const MAX_BACKOFF_MS: u64 = 60_000;
+
 /// Exponential retry backoff: `base, 2·base, 4·base, …` capped at
-/// `max`. Deterministic (no jitter) so retried runs stay reproducible.
+/// `max` (itself clamped to [`MAX_BACKOFF_MS`]). Deterministic (no
+/// jitter) so retried runs stay reproducible.
 #[derive(Clone, Debug)]
 pub struct Backoff {
     next_ms: u64,
@@ -232,15 +242,20 @@ pub struct Backoff {
 }
 
 impl Backoff {
-    /// A backoff starting at `base_ms`, doubling up to `max_ms`.
+    /// A backoff starting at `base_ms`, doubling up to `max_ms`. Both
+    /// arguments are clamped into `[1, MAX_BACKOFF_MS]`, so even a
+    /// pathological caller value (e.g. an overflowed multiply) yields
+    /// a bounded schedule.
     pub fn new(base_ms: u64, max_ms: u64) -> Backoff {
         Backoff {
-            next_ms: base_ms.max(1),
-            max_ms: max_ms.max(1),
+            next_ms: base_ms.clamp(1, MAX_BACKOFF_MS),
+            max_ms: max_ms.clamp(1, MAX_BACKOFF_MS),
         }
     }
 
-    /// The next delay (advancing the schedule).
+    /// The next delay (advancing the schedule). Saturating: the
+    /// doubling never wraps, and the returned delay never exceeds
+    /// `max_ms` (≤ [`MAX_BACKOFF_MS`]).
     pub fn delay(&mut self) -> Duration {
         let d = self.next_ms.min(self.max_ms);
         self.next_ms = self.next_ms.saturating_mul(2).min(self.max_ms);
@@ -494,6 +509,37 @@ mod tests {
         assert_eq!(b.delay().as_millis(), 40);
         assert_eq!(b.delay().as_millis(), 50);
         assert_eq!(b.delay().as_millis(), 50);
+    }
+
+    #[test]
+    fn backoff_long_chain_monotone_capped_panic_free() {
+        // Regression (ISSUE 7): a large --step-retries budget walks the
+        // doubling schedule far past where u64 would wrap; pathological
+        // constructor arguments (e.g. an overflowed base·8) used to
+        // escape any absolute cap. The chain must stay monotone
+        // nondecreasing, bounded by MAX_BACKOFF_MS, and panic-free —
+        // for both an ordinary base and u64::MAX inputs.
+        for (base, max) in [(1u64, u64::MAX), (50, 50 * 8), (u64::MAX, u64::MAX)] {
+            let mut b = Backoff::new(base, max);
+            let mut prev = 0u128;
+            for step in 0..200 {
+                let d = b.delay().as_millis();
+                assert!(
+                    d >= prev,
+                    "delay regressed at step {step}: {d} < {prev} (base {base})"
+                );
+                assert!(
+                    d <= u128::from(MAX_BACKOFF_MS),
+                    "delay {d} exceeds MAX_BACKOFF_MS at step {step} (base {base})"
+                );
+                prev = d;
+            }
+            assert_eq!(
+                b.delay().as_millis(),
+                u128::from(MAX_BACKOFF_MS.min(max.clamp(1, MAX_BACKOFF_MS))),
+                "a long chain must end pinned at the cap"
+            );
+        }
     }
 
     #[test]

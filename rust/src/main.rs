@@ -6,10 +6,13 @@
 //! * `gradcheck --config cfg.json` — verify every applicable engine
 //!   produces Backprop's gradients on the configured network.
 //! * `audit     --config cfg.json` — per-layer submersivity report.
-//! * `plan      --config cfg.json --budget-mb N [--budget BYTES]` —
-//!   Table-1 model + planner: predicted memory/time per method, chosen
-//!   whole-network engine, and the **per-layer mixed-strategy plan**
-//!   (`plan::compile`) for the same budget.
+//! * `plan      --config cfg.json --budget-mb N [--budget BYTES]
+//!   [--autotune]` — Table-1 model + planner: predicted memory/time per
+//!   method, chosen whole-network engine, and the **per-layer
+//!   mixed-strategy plan** (`plan::compile`) for the same budget.
+//!   `--autotune` calibrates conv algorithm choices first (timed once,
+//!   cached; persisted via `--conv-cache`), and the plan table's
+//!   `timed_ms` column shows the cached calibration per conv layer.
 //! * `sweep     --config cfg.json --depths 1,2,..` — memory/time sweep
 //!   (the Fig. 2 / Fig. 3 measurement, printable without cargo bench).
 //!
@@ -18,6 +21,16 @@
 //!   (default: `MOONWALK_THREADS` env var, else available parallelism).
 //! * `--gemm auto|scalar|blocked|parallel` — force a GEMM algorithm
 //!   (default auto; `MOONWALK_GEMM` is the env spelling).
+//! * `--conv-algo auto|direct|im2col|winograd` — force a convolution
+//!   lowering for conv1d/conv2d forward and weight-gradient ops
+//!   (default auto; `MOONWALK_CONV` is the env spelling). `auto`
+//!   resolves override → autotune-cache hit → direct, and never times
+//!   anything on its own: calibration only happens through explicit
+//!   entry points (`plan --autotune`, the `conv_rows` bench family).
+//! * `--conv-cache PATH` — persist/load the conv autotune cache at
+//!   PATH (`MOONWALK_CONV_CACHE` is the env spelling). `train` exports
+//!   both conv settings to spawned replica workers so every process
+//!   resolves identical algorithms and compiles identical plans.
 //! * `--replicas N` — data-parallel replica count for `train`: the
 //!   global batch is sharded N ways, one gradient engine runs per
 //!   replica, and per-layer gradients are all-reduced streamed
@@ -159,6 +172,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     // Honored at any replica count — even one subprocess buys a separate
     // process memory budget.
     let kind = moonwalk::distributed::transport::kind();
+    // Export the conv dispatch state before any worker subprocess is
+    // spawned (all engines, both socket transports): workers resolve
+    // convolution algorithms from MOONWALK_CONV / MOONWALK_CONV_CACHE,
+    // so exporting here guarantees every process picks identical
+    // lowerings — and, with a shared cache file, compiles identical
+    // plans — keeping gradients bit-identical across transports.
+    if let Some(algo) = moonwalk::tensor::conv_algo::conv_override() {
+        std::env::set_var("MOONWALK_CONV", algo.label());
+    }
+    if let Some(path) = moonwalk::tensor::conv_algo::cache_path() {
+        std::env::set_var("MOONWALK_CONV_CACHE", &path);
+    }
     let faults = FaultPlan::resolve(args.get("fault"))?;
     let engine_spec = EngineSpec {
         name: cfg.engine.clone(),
@@ -372,7 +397,26 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     // overrides `--budget-mb` for this section when given): calibration
     // probe + Pareto DP, the `--engine planned` execution plan.
     let layer_budget = moonwalk::cli::budget_bytes(args)?.unwrap_or(budget);
-    let probes = moonwalk::plan::probe_network(&net, &in_shape, moonwalk::plan::DEFAULT_FRAG_BLOCKS)?;
+    let mut probes = moonwalk::plan::probe_network(&net, &in_shape, moonwalk::plan::DEFAULT_FRAG_BLOCKS)?;
+    // `--autotune` calibrates the conv algorithm choices for this
+    // network (times candidates, records winners in the autotune cache;
+    // persists when `--conv-cache`/MOONWALK_CONV_CACHE is set). Without
+    // it nothing is timed; the timed_ms column simply reflects whatever
+    // the cache already holds.
+    if args.has("autotune") {
+        let outcomes = moonwalk::plan::calibrate_convs(&net, &in_shape)?;
+        let timed = outcomes.iter().filter(|o| !o.cached).count();
+        println!(
+            "\nconv autotune: {} op(s) ({} calibrated, {} already cached):",
+            outcomes.len(),
+            timed,
+            outcomes.len() - timed
+        );
+        for o in &outcomes {
+            println!("  {:<44} -> {:<9} {:.3} ms", o.key, o.algo.label(), o.best_ms);
+        }
+    }
+    moonwalk::plan::attach_timed(&net, &in_shape, &mut probes);
     println!("\nper-layer execution plan (budget {}):", tracker::fmt_bytes(layer_budget));
     match moonwalk::plan::compile(&probes, Some(layer_budget)) {
         Ok(compiled) => print!("{}", moonwalk::plan::summary_table(&compiled, &probes)),
@@ -455,7 +499,8 @@ fn main() {
                  [--threads N] [--gemm auto|scalar|blocked|parallel] [--replicas N] \
                  [--transport local|unix|tcp] [--listen HOST:PORT] [--remote-workers K] \
                  [--step-timeout S] [--heartbeat-ms MS] [--step-retries N] [--failover] \
-                 [--grad-accum K] [--fault SPEC] [--engine NAME] [--budget BYTES] ...\n\
+                 [--grad-accum K] [--fault SPEC] [--engine NAME] [--budget BYTES] \
+                 [--conv-algo auto|direct|im2col|winograd] [--conv-cache PATH] ...\n\
                  (got {other:?}; see README.md)"
             );
             std::process::exit(2);

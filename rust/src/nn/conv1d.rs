@@ -20,6 +20,7 @@ use crate::nn::{
     Fragment, Layer, LayerError, Residual, ResidualData, ResidualKind, Submersivity,
 };
 use crate::runtime::pool;
+use crate::tensor::conv_algo::{self, ConvAlgo, ConvDims, ConvOp};
 use crate::tensor::{arena, ops, Tensor};
 use crate::util::Rng;
 
@@ -127,33 +128,91 @@ impl Conv1d {
         Ok((l + 2 * p - k) / s + 1)
     }
 
+    /// The [`ConvDims`] geometry for an `[N,L,Cin]` input (`w`/`wo` are
+    /// 0 for 1-D) — what the conv-algo dispatcher keys its autotune
+    /// cache on.
+    fn conv_dims(&self, n: usize, l: usize, lo: usize) -> ConvDims {
+        ConvDims {
+            n,
+            h: l,
+            w: 0,
+            ho: lo,
+            wo: 0,
+            cin: self.cin,
+            cout: self.cout,
+            k: self.k,
+            s: self.stride,
+            p: self.pad,
+        }
+    }
+
+    /// Forward convolution, dispatched through the [`ConvAlgo`] lattice
+    /// (`tensor::conv_algo`): forced override → autotune-cache hit →
+    /// Direct. Shared by `forward`, `jvp_input` and `jvp_params`.
     fn conv_with(&self, x: &Tensor, wdata: &[f32], bias: Option<&Tensor>) -> Tensor {
         assert_eq!(x.rank(), 3, "conv1d expects [N,L,C]");
         assert_eq!(x.shape()[2], self.cin);
         let (n, l) = (x.shape()[0], x.shape()[1]);
         let lo = self.out_len(l).expect("shape checked");
-        let (k, s, p, cin, cout) = (self.k, self.stride, self.pad, self.cin, self.cout);
+        match conv_algo::resolve(ConvOp::Conv1dFwd, &self.conv_dims(n, l, lo)) {
+            ConvAlgo::Im2col => self.conv_with_im2col(x, wdata, bias, lo),
+            _ => self.conv_with_direct(x, wdata, bias, lo),
+        }
+    }
+
+    /// Gather im2col patch rows for images `imgs` into `buf`
+    /// (row `a` of image `img` = the `k·Cin` receptive field of output
+    /// position `a`, taps contiguous — the row-major flattening of the
+    /// `[k,Cin,Cout]` kernel).
+    fn gather_patches(
+        &self,
+        x: &Tensor,
+        imgs: std::ops::Range<usize>,
+        lo: usize,
+        buf: &mut [f32],
+    ) {
+        let (l, cin) = (x.shape()[1], self.cin);
+        let (k, s, p) = (self.k, self.stride, self.pad);
+        let row_len = k * cin;
+        debug_assert_eq!(buf.len(), imgs.len() * lo * row_len);
+        let xd = x.data();
+        for (local, img) in imgs.enumerate() {
+            let b_img = &mut buf[local * lo * row_len..(local + 1) * lo * row_len];
+            for a in 0..lo {
+                for j in 0..k {
+                    let ii = (s * a + j) as isize - p as isize;
+                    let dst = a * row_len + j * cin;
+                    if ii >= 0 && (ii as usize) < l {
+                        let src = (img * l + ii as usize) * cin;
+                        b_img[dst..dst + cin].copy_from_slice(&xd[src..src + cin]);
+                    } else {
+                        b_img[dst..dst + cin].fill(0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The Direct lowering: batch-parallel per-image im2col + GEMM —
+    /// each worker leases its own patch buffer and the GEMMs run serial
+    /// inside the fan-out.
+    fn conv_with_direct(
+        &self,
+        x: &Tensor,
+        wdata: &[f32],
+        bias: Option<&Tensor>,
+        lo: usize,
+    ) -> Tensor {
+        let n = x.shape()[0];
+        let (k, cin, cout) = (self.k, self.cin, self.cout);
         let row_len = k * cin;
         let mut out = Tensor::zeros(&[n, lo, cout]);
-        let xd = x.data();
         let img_out = lo * cout;
-        // Batch-parallel: each worker leases its own im2col patch buffer.
         let workers = pool::effective_threads(n);
         pool::run_records(out.data_mut(), img_out, workers, |imgs, chunk| {
             let mut patches = arena::take(lo * row_len);
             for (local, img) in imgs.enumerate() {
-                for a in 0..lo {
-                    for j in 0..k {
-                        let ii = (s * a + j) as isize - p as isize;
-                        let dst = a * row_len + j * cin;
-                        if ii >= 0 && (ii as usize) < l {
-                            let src = (img * l + ii as usize) * cin;
-                            patches[dst..dst + cin].copy_from_slice(&xd[src..src + cin]);
-                        } else {
-                            patches[dst..dst + cin].fill(0.0);
-                        }
-                    }
-                }
+                self.gather_patches(x, img..img + 1, lo, &mut patches);
                 ops::matmul_into_auto(
                     &patches,
                     wdata,
@@ -172,6 +231,176 @@ impl Conv1d {
             }
         }
         out
+    }
+
+    /// The Im2col lowering: gather *all* images into one
+    /// `[N·L', k·Cin]` patch matrix and run a single GEMM, letting the
+    /// GEMM dispatcher (`select_gemm_algo`) own the parallelism — the
+    /// opposite split from Direct's batch fan-out, which is exactly
+    /// what the autotuner arbitrates.
+    fn conv_with_im2col(
+        &self,
+        x: &Tensor,
+        wdata: &[f32],
+        bias: Option<&Tensor>,
+        lo: usize,
+    ) -> Tensor {
+        let n = x.shape()[0];
+        let (k, cin, cout) = (self.k, self.cin, self.cout);
+        let row_len = k * cin;
+        let mut out = Tensor::zeros(&[n, lo, cout]);
+        let mut patches = arena::take(n * lo * row_len);
+        self.gather_patches(x, 0..n, lo, &mut patches);
+        ops::matmul_into_auto(&patches, wdata, out.data_mut(), n * lo, row_len, cout);
+        if let Some(b) = bias {
+            for chunk in out.data_mut().chunks_mut(cout) {
+                for (o, bv) in chunk.iter_mut().zip(b.data()) {
+                    *o += bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// The Im2col lowering of the weight gradient: one
+    /// `[N·L', k·Cin]ᵀ·[N·L', Cout]` GEMM over the batched patch matrix
+    /// (vs Direct's image-parallel sparsity-skipping reduction).
+    fn vjp_params_dw_im2col(&self, x: &Tensor, grad_out: &Tensor, lo: usize) -> Tensor {
+        let n = x.shape()[0];
+        let (k, cin, cout) = (self.k, self.cin, self.cout);
+        let row_len = k * cin;
+        let mut dw = Tensor::zeros(&[k, cin, cout]);
+        let mut patches = arena::take(n * lo * row_len);
+        self.gather_patches(x, 0..n, lo, &mut patches);
+        ops::matmul_tn_into_auto(
+            &patches,
+            grad_out.data(),
+            dw.data_mut(),
+            n * lo,
+            row_len,
+            cout,
+        );
+        dw
+    }
+
+    /// The Direct lowering of the weight gradient: image-parallel
+    /// reduction with worker-ordered (deterministic) merge of
+    /// per-worker dw accumulators, leased from the arena so they are
+    /// tracker-visible and recycled. Skips zero input values — a win
+    /// on sparse activations that the dense im2col GEMM cannot have.
+    fn vjp_params_dw_direct(&self, x: &Tensor, grad_out: &Tensor, lo: usize) -> Tensor {
+        let (n, l) = (x.shape()[0], x.shape()[1]);
+        let (k, s, p, cin, cout) = (self.k, self.stride, self.pad, self.cin, self.cout);
+        let wlen = k * cin * cout;
+        let xd = x.data();
+        let gd = grad_out.data();
+        let workers = pool::effective_threads(n);
+        let acc = pool::run_reduce(
+            n,
+            workers,
+            || arena::take_zeroed(wlen),
+            |imgs, dwd| {
+                for img in imgs {
+                    for a in 0..lo {
+                        let grow = &gd[(img * lo + a) * cout..(img * lo + a + 1) * cout];
+                        for j in 0..k {
+                            let ii = (s * a + j) as isize - p as isize;
+                            if ii < 0 || ii as usize >= l {
+                                continue;
+                            }
+                            let xrow = &xd
+                                [(img * l + ii as usize) * cin..(img * l + ii as usize + 1) * cin];
+                            for c in 0..cin {
+                                let xv = xrow[c];
+                                if xv == 0.0 {
+                                    continue;
+                                }
+                                let drow =
+                                    &mut dwd[(j * cin + c) * cout..(j * cin + c + 1) * cout];
+                                for c2 in 0..cout {
+                                    drow[c2] += xv * grow[c2];
+                                }
+                            }
+                        }
+                    }
+                }
+            },
+            |a, b| {
+                for (av, bv) in a.iter_mut().zip(b.iter()) {
+                    *av += *bv;
+                }
+            },
+        );
+        let mut dw = Tensor::zeros(&[k, cin, cout]);
+        dw.data_mut().copy_from_slice(&acc);
+        dw
+    }
+
+    /// Calibrate this layer's autotunable conv ops (forward and
+    /// `vjp_params`) for input `x` — the 1-D analogue of
+    /// `Conv2d::autotune`; see `tensor::conv_algo` for the determinism
+    /// contract (no timing ever happens outside explicit calibration).
+    pub fn autotune(&self, x: &Tensor) -> Vec<conv_algo::TuneOutcome> {
+        self.autotune_with(x, 1, 3)
+    }
+
+    /// [`Self::autotune`] with explicit bench warmup/iteration counts.
+    pub fn autotune_with(
+        &self,
+        x: &Tensor,
+        warmup: usize,
+        iters: usize,
+    ) -> Vec<conv_algo::TuneOutcome> {
+        let (n, l) = (x.shape()[0], x.shape()[1]);
+        let lo = self.out_len(l).expect("autotune needs a valid input shape");
+        let dims = self.conv_dims(n, l, lo);
+        let mut outcomes = Vec::new();
+        for op in [ConvOp::Conv1dFwd, ConvOp::Conv1dVjpParams] {
+            if let Some((algo, ms)) = conv_algo::cached(op, &dims) {
+                outcomes.push(conv_algo::TuneOutcome {
+                    key: conv_algo::key(op, &dims),
+                    algo,
+                    best_ms: ms,
+                    candidates: Vec::new(),
+                    cached: true,
+                });
+                continue;
+            }
+            let g = Tensor::full(&[n, lo, self.cout], 0.5);
+            let mut cands = Vec::new();
+            for algo in conv_algo::candidates(op, &dims) {
+                let stats = crate::util::timer::bench(warmup, iters, || match op {
+                    ConvOp::Conv1dFwd => {
+                        let _ = if algo == ConvAlgo::Im2col {
+                            self.conv_with_im2col(x, self.w.data(), self.bias.as_ref(), lo)
+                        } else {
+                            self.conv_with_direct(x, self.w.data(), self.bias.as_ref(), lo)
+                        };
+                    }
+                    _ => {
+                        let _ = if algo == ConvAlgo::Im2col {
+                            self.vjp_params_dw_im2col(x, &g, lo)
+                        } else {
+                            self.vjp_params_dw_direct(x, &g, lo)
+                        };
+                    }
+                });
+                cands.push((algo, stats.median_ms()));
+            }
+            let &(best, best_ms) = cands
+                .iter()
+                .min_by(|a, b| a.1.total_cmp(&b.1))
+                .expect("Direct is always a candidate");
+            conv_algo::record(op, &dims, best, best_ms);
+            outcomes.push(conv_algo::TuneOutcome {
+                key: conv_algo::key(op, &dims),
+                algo: best,
+                best_ms,
+                candidates: cands,
+                cached: false,
+            });
+        }
+        outcomes
     }
 
     /// Transpose convolution: `h[n,i,c] = Σ_{j,c'} w[j,c,c'] h'[n,(i−j+p)/s,c']`.
@@ -333,52 +562,11 @@ impl Layer for Conv1d {
     fn vjp_params(&self, x: &Tensor, grad_out: &Tensor) -> Vec<Tensor> {
         let (n, l) = (x.shape()[0], x.shape()[1]);
         let lo = self.out_len(l).expect("shapes validated");
-        let (k, s, p, cin, cout) = (self.k, self.stride, self.pad, self.cin, self.cout);
-        let wlen = k * cin * cout;
-        let xd = x.data();
-        let gd = grad_out.data();
-        // Image-parallel reduction with worker-ordered (deterministic)
-        // merge of per-worker dw accumulators, leased from the arena so
-        // they are tracker-visible and recycled.
-        let workers = pool::effective_threads(n);
-        let acc = pool::run_reduce(
-            n,
-            workers,
-            || arena::take_zeroed(wlen),
-            |imgs, dwd| {
-                for img in imgs {
-                    for a in 0..lo {
-                        let grow = &gd[(img * lo + a) * cout..(img * lo + a + 1) * cout];
-                        for j in 0..k {
-                            let ii = (s * a + j) as isize - p as isize;
-                            if ii < 0 || ii as usize >= l {
-                                continue;
-                            }
-                            let xrow = &xd
-                                [(img * l + ii as usize) * cin..(img * l + ii as usize + 1) * cin];
-                            for c in 0..cin {
-                                let xv = xrow[c];
-                                if xv == 0.0 {
-                                    continue;
-                                }
-                                let drow =
-                                    &mut dwd[(j * cin + c) * cout..(j * cin + c + 1) * cout];
-                                for c2 in 0..cout {
-                                    drow[c2] += xv * grow[c2];
-                                }
-                            }
-                        }
-                    }
-                }
-            },
-            |a, b| {
-                for (av, bv) in a.iter_mut().zip(b.iter()) {
-                    *av += *bv;
-                }
-            },
-        );
-        let mut dw = Tensor::zeros(&[k, cin, cout]);
-        dw.data_mut().copy_from_slice(&acc);
+        let cout = self.cout;
+        let dw = match conv_algo::resolve(ConvOp::Conv1dVjpParams, &self.conv_dims(n, l, lo)) {
+            ConvAlgo::Im2col => self.vjp_params_dw_im2col(x, grad_out, lo),
+            _ => self.vjp_params_dw_direct(x, grad_out, lo),
+        };
         let mut grads = vec![dw];
         if self.bias.is_some() {
             let mut db = Tensor::zeros(&[cout]);
@@ -495,6 +683,21 @@ impl Layer for Conv1d {
                 }
             }
         }
+    }
+
+    fn conv_tune_key(&self, in_shape: &[usize]) -> Option<String> {
+        if in_shape.len() != 3 || in_shape[2] != self.cin {
+            return None;
+        }
+        let lo = self.out_len(in_shape[1]).ok()?;
+        Some(conv_algo::key(
+            ConvOp::Conv1dFwd,
+            &self.conv_dims(in_shape[0], in_shape[1], lo),
+        ))
+    }
+
+    fn conv_autotune(&self, x: &Tensor) -> Vec<conv_algo::TuneOutcome> {
+        self.autotune(x)
     }
 
     /// Capture the first `k−1` spatial slices of each block of `h_out`
@@ -690,6 +893,40 @@ mod tests {
         assert!(conv.submersivity().is_submersive());
         let x = input(2, 11, 4, 3);
         testutil::check_vijp_right_inverse(&conv, &x, 52, 2e-3);
+    }
+
+    #[test]
+    fn im2col_matches_direct_forward_and_vjp_params() {
+        let mut rng = Rng::new(30);
+        let conv = Conv1d::new(3, 4, 6, 2, 1, true, &mut rng);
+        let x = input(3, 17, 4, 30);
+        let lo = conv.out_len(17).unwrap();
+        let direct = conv.conv_with_direct(&x, conv.w.data(), conv.bias.as_ref(), lo);
+        let im2col = conv.conv_with_im2col(&x, conv.w.data(), conv.bias.as_ref(), lo);
+        assert_close(&im2col, &direct, 1e-5, "conv1d forward im2col vs direct");
+        let g = input(3, lo, 6, 31);
+        let d_direct = conv.vjp_params_dw_direct(&x, &g, lo);
+        let d_im2col = conv.vjp_params_dw_im2col(&x, &g, lo);
+        assert_close(&d_im2col, &d_direct, 1e-5, "conv1d vjp_params im2col vs direct");
+    }
+
+    #[test]
+    fn autotune_has_two_candidates_then_caches() {
+        // Distinct geometry so this test cannot collide with others
+        // sharing the process-global autotune cache.
+        let mut rng = Rng::new(32);
+        let conv = Conv1d::new(3, 3, 3, 1, 1, false, &mut rng);
+        let x = input(2, 23, 3, 32);
+        let first = conv.autotune_with(&x, 0, 1);
+        assert_eq!(first.len(), 2);
+        assert!(first.iter().all(|o| !o.cached));
+        assert_eq!(first[0].candidates.len(), 2, "direct + im2col");
+        let second = conv.autotune_with(&x, 0, 1);
+        assert!(second.iter().all(|o| o.cached));
+        assert_eq!(
+            conv.conv_tune_key(x.shape()).as_deref(),
+            Some(first[0].key.as_str())
+        );
     }
 
     #[test]

@@ -19,6 +19,7 @@ use crate::nn::{
     Layer, LayerError, Residual, ResidualData, ResidualKind, Submersivity,
 };
 use crate::runtime::pool;
+use crate::tensor::conv_algo::{self, ConvAlgo, ConvDims, ConvOp};
 use crate::tensor::{arena, ops, Tensor};
 use crate::util::Rng;
 
@@ -32,6 +33,17 @@ pub const DIAG_FLOOR: f32 = 0.05;
 /// `ops::PAR_MIN_FLOPS`, sized for the persistent pool's park/wake cost.
 /// Tiny tail layers of stride-2 stacks (H' = 2..4) stay serial.
 const SPATIAL_MIN_TAP_ELEMS: usize = 4096;
+
+/// The F(2×2, 3×3) Winograd kernel transform `G` (4×3). Every entry of
+/// every F(2×2,3×3) transform matrix is in {0, ±1, ±½} — exact in
+/// binary floating point — so the Winograd lowering's only rounding
+/// difference vs Direct is summation order.
+const WINO_G: [[f32; 3]; 4] = [
+    [1.0, 0.0, 0.0],
+    [0.5, 0.5, 0.5],
+    [0.5, -0.5, 0.5],
+    [0.0, 0.0, 1.0],
+];
 
 /// A channel-last 2-D convolution layer.
 pub struct Conv2d {
@@ -118,6 +130,23 @@ impl Conv2d {
         Ok(((h + 2 * p - k) / s + 1, (w + 2 * p - k) / s + 1))
     }
 
+    /// The [`ConvDims`] geometry for an `[N,H,W,Cin]` input — what the
+    /// conv-algo dispatcher keys its autotune cache on.
+    fn conv_dims(&self, n: usize, h: usize, w: usize, ho: usize, wo: usize) -> ConvDims {
+        ConvDims {
+            n,
+            h,
+            w,
+            ho,
+            wo,
+            cin: self.cin,
+            cout: self.cout,
+            k: self.k,
+            s: self.stride,
+            p: self.pad,
+        }
+    }
+
     /// Gather one kernel tap's input slice: `buf[a*wo+b, ci] =
     /// x[img, s·a+ki−p, s·b+kj−p, ci]` (zeros outside). Per-tap gathers
     /// keep transient buffers at `H'·W'·Cin` instead of the full im2col
@@ -175,22 +204,64 @@ impl Conv2d {
     }
 
     /// Forward convolution with an arbitrary kernel (shared by `forward`,
-    /// `jvp_input` and `jvp_params`, which differ only in kernel/bias):
-    /// per-tap gather + `[H'W',Cin]·[Cin,Cout]` matmuls. Images are
-    /// independent, so the batch axis fans out across the worker pool
-    /// (each worker leases its own tap buffer from the arena). A
-    /// single-image batch has nothing to split on the batch axis, so it
-    /// partitions the *output rows* instead (spatial row-band
-    /// parallelism): each worker gathers only its band of a tap and runs
-    /// the banded GEMM. Output rows are computed by exactly the serial
-    /// kernel in the same tap order, so the banded result is
-    /// bit-identical to the serial one — and one region covers all `k²`
-    /// taps instead of dispatching a row-parallel GEMM per tap.
+    /// `jvp_input` and `jvp_params`, which differ only in kernel/bias),
+    /// dispatched through the [`ConvAlgo`] lattice
+    /// (`tensor::conv_algo`): forced override → autotune-cache hit →
+    /// Direct. All lowerings produce the same values to fp tolerance
+    /// (`rust/tests/conv_algo.rs`); Direct is bit-compatible with every
+    /// release before the dispatcher existed.
     fn conv_with(&self, x: &Tensor, wdata: &[f32], bias: Option<&Tensor>) -> Tensor {
         assert_eq!(x.rank(), 4, "conv2d expects [N,H,W,C]");
         assert_eq!(x.shape()[3], self.cin, "channel mismatch");
-        let (n, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2]);
-        let (ho, wo) = self.out_hw(h, wd).expect("shape checked by caller");
+        let (n, h, w_in) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+        let (ho, wo) = self.out_hw(h, w_in).expect("shape checked by caller");
+        let dims = self.conv_dims(n, h, w_in, ho, wo);
+        match conv_algo::resolve(ConvOp::Conv2dFwd, &dims) {
+            ConvAlgo::Im2col => self.conv_with_im2col(x, wdata, bias, ho, wo),
+            ConvAlgo::Winograd => self.conv_with_winograd(x, wdata, bias, ho, wo),
+            ConvAlgo::Direct => self.conv_with_direct(x, wdata, bias, ho, wo),
+        }
+    }
+
+    /// Force a specific lowering (calibration and the equivalence
+    /// tests go through this; normal callers use the dispatched
+    /// [`Self::conv_with`]). Panics if `algo` is inapplicable.
+    fn conv_with_algo(
+        &self,
+        x: &Tensor,
+        wdata: &[f32],
+        bias: Option<&Tensor>,
+        algo: ConvAlgo,
+    ) -> Tensor {
+        let (n, h, w_in) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+        let (ho, wo) = self.out_hw(h, w_in).expect("shape checked by caller");
+        match algo {
+            ConvAlgo::Im2col => self.conv_with_im2col(x, wdata, bias, ho, wo),
+            ConvAlgo::Winograd => self.conv_with_winograd(x, wdata, bias, ho, wo),
+            ConvAlgo::Direct => self.conv_with_direct(x, wdata, bias, ho, wo),
+        }
+    }
+
+    /// The Direct lowering: per-tap gather + `[H'W',Cin]·[Cin,Cout]`
+    /// matmuls. Images are independent, so the batch axis fans out
+    /// across the worker pool (each worker leases its own tap buffer
+    /// from the arena). A single-image batch has nothing to split on
+    /// the batch axis, so it partitions the *output rows* instead
+    /// (spatial row-band parallelism): each worker gathers only its
+    /// band of a tap and runs the banded GEMM. Output rows are computed
+    /// by exactly the serial kernel in the same tap order, so the
+    /// banded result is bit-identical to the serial one — and one
+    /// region covers all `k²` taps instead of dispatching a
+    /// row-parallel GEMM per tap.
+    fn conv_with_direct(
+        &self,
+        x: &Tensor,
+        wdata: &[f32],
+        bias: Option<&Tensor>,
+        ho: usize,
+        wo: usize,
+    ) -> Tensor {
+        let n = x.shape()[0];
         let (k, cin, cout) = (self.k, self.cin, self.cout);
         let mut out = Tensor::zeros(&[n, ho, wo, cout]);
         let img_out = ho * wo * cout;
@@ -246,6 +317,398 @@ impl Conv2d {
             }
         });
         out
+    }
+
+    /// Gather one image's full im2col patch matrix: row `a·W'+b` holds
+    /// the `k²·Cin` receptive field of output position `(a, b)`, with
+    /// column index `(ki·k + kj)·Cin + ci` — exactly the row-major
+    /// flattening of the `[k,k,Cin,Cout]` kernel, so the conv is one
+    /// `[H'W', k²Cin]·[k²Cin, Cout]` product. `k²`-fold more transient
+    /// scratch than Direct's per-tap gathers (why Direct is the default
+    /// and this is an autotune candidate, not a replacement).
+    fn gather_patches(&self, x: &Tensor, img: usize, ho: usize, wo: usize, buf: &mut [f32]) {
+        let (h, w, cin) = (x.shape()[1], x.shape()[2], self.cin);
+        let (k, s, p) = (self.k, self.stride, self.pad);
+        let plen = k * k * cin;
+        debug_assert_eq!(buf.len(), ho * wo * plen);
+        let xd = x.data();
+        let x_base = img * h * w * cin;
+        for a in 0..ho {
+            for b in 0..wo {
+                let row = &mut buf[(a * wo + b) * plen..(a * wo + b + 1) * plen];
+                for ki in 0..k {
+                    let seg = &mut row[ki * k * cin..(ki + 1) * k * cin];
+                    let ii = (s * a + ki) as isize - p as isize;
+                    if ii < 0 || ii as usize >= h {
+                        seg.fill(0.0);
+                        continue;
+                    }
+                    let xrow = x_base + (ii as usize) * w * cin;
+                    for kj in 0..k {
+                        let dst = &mut seg[kj * cin..(kj + 1) * cin];
+                        let jj = (s * b + kj) as isize - p as isize;
+                        if jj >= 0 && (jj as usize) < w {
+                            let src = xrow + (jj as usize) * cin;
+                            dst.copy_from_slice(&xd[src..src + cin]);
+                        } else {
+                            dst.fill(0.0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The im2col lowering: per image, gather the full patch matrix and
+    /// run one `[H'W', k²Cin]·[k²Cin, Cout]` GEMM. The image loop is
+    /// serial *on purpose* — the GEMM dispatcher (`select_gemm_algo`)
+    /// owns the parallelism, the opposite split from Direct's
+    /// batch-parallel fan-out; which wins is exactly what the autotuner
+    /// measures.
+    fn conv_with_im2col(
+        &self,
+        x: &Tensor,
+        wdata: &[f32],
+        bias: Option<&Tensor>,
+        ho: usize,
+        wo: usize,
+    ) -> Tensor {
+        let n = x.shape()[0];
+        let (k, cin, cout) = (self.k, self.cin, self.cout);
+        let plen = k * k * cin;
+        let pos = ho * wo;
+        let mut out = Tensor::zeros(&[n, ho, wo, cout]);
+        let img_out = pos * cout;
+        let mut patches = arena::take(pos * plen);
+        let od = out.data_mut();
+        for img in 0..n {
+            self.gather_patches(x, img, ho, wo, &mut patches);
+            let o_img = &mut od[img * img_out..(img + 1) * img_out];
+            ops::matmul_into_auto(&patches, wdata, o_img, pos, plen, cout);
+            if let Some(b) = bias {
+                let bd = b.data();
+                for row in o_img.chunks_mut(cout) {
+                    for (o, bv) in row.iter_mut().zip(bd) {
+                        *o += bv;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The F(2×2, 3×3) Winograd lowering (`k == 3 && s == 1` only):
+    /// `Y = Aᵀ [ (G g Gᵀ) ⊙ (Bᵀ d B) ] A` per 2×2 output tile. The
+    /// element-wise products batch across tiles and channels into 16
+    /// `[tiles, Cin]·[Cin, Cout]` GEMMs — 2.25× fewer multiplies than
+    /// the 9-tap direct sweep in the large-channel limit. `U = G g Gᵀ`
+    /// is computed once per call and shared by all images; `V`/`M` come
+    /// from the arena per the declared `workspace_bytes`. Odd `H'`/`W'`
+    /// clip the last tile row/column on the write-back.
+    fn conv_with_winograd(
+        &self,
+        x: &Tensor,
+        wdata: &[f32],
+        bias: Option<&Tensor>,
+        ho: usize,
+        wo: usize,
+    ) -> Tensor {
+        assert!(
+            self.k == 3 && self.stride == 1,
+            "Winograd F(2x2,3x3) requires k=3, s=1"
+        );
+        let (n, h, w_in) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+        let (cin, cout, p) = (self.cin, self.cout, self.pad);
+        let (th, tw) = (ho.div_ceil(2), wo.div_ceil(2));
+        let tiles = th * tw;
+        let mut out = Tensor::zeros(&[n, ho, wo, cout]);
+        // U[xy] ∈ [Cin, Cout] for each of the 16 transform positions.
+        let mut u = arena::take(16 * cin * cout);
+        for ci in 0..cin {
+            for co in 0..cout {
+                let mut g = [[0.0f32; 3]; 3];
+                for (i, row) in g.iter_mut().enumerate() {
+                    for (j, v) in row.iter_mut().enumerate() {
+                        *v = wdata[((i * 3 + j) * cin + ci) * cout + co];
+                    }
+                }
+                // t = G·g (4×3), then U = t·Gᵀ (4×4).
+                let mut t = [[0.0f32; 3]; 4];
+                for (i, trow) in t.iter_mut().enumerate() {
+                    for (j, tv) in trow.iter_mut().enumerate() {
+                        *tv = (0..3).map(|m| WINO_G[i][m] * g[m][j]).sum();
+                    }
+                }
+                for (i, trow) in t.iter().enumerate() {
+                    for j in 0..4 {
+                        let uv: f32 = (0..3).map(|m| trow[m] * WINO_G[j][m]).sum();
+                        u[(i * 4 + j) * cin * cout + ci * cout + co] = uv;
+                    }
+                }
+            }
+        }
+        let mut v = arena::take(16 * tiles * cin);
+        let mut m = arena::take(16 * tiles * cout);
+        let xd = x.data();
+        let img_in = h * w_in * cin;
+        let img_out = ho * wo * cout;
+        let od = out.data_mut();
+        let bd = bias.map(|b| b.data());
+        for img in 0..n {
+            // V[xy] ∈ [tiles, Cin]: V = Bᵀ d B per (tile, channel), d
+            // the zero-padded 4×4 input patch at (2·ta−p, 2·tb−p).
+            for ta in 0..th {
+                for tb in 0..tw {
+                    let tile = ta * tw + tb;
+                    for ci in 0..cin {
+                        let mut d = [[0.0f32; 4]; 4];
+                        for (i, drow) in d.iter_mut().enumerate() {
+                            let ii = (2 * ta + i) as isize - p as isize;
+                            if ii < 0 || ii as usize >= h {
+                                continue;
+                            }
+                            let xrow = img * img_in + (ii as usize) * w_in * cin;
+                            for (j, dv) in drow.iter_mut().enumerate() {
+                                let jj = (2 * tb + j) as isize - p as isize;
+                                if jj >= 0 && (jj as usize) < w_in {
+                                    *dv = xd[xrow + (jj as usize) * cin + ci];
+                                }
+                            }
+                        }
+                        // Bᵀ·d then ·B — both are ±1 row/column picks.
+                        let mut t = [[0.0f32; 4]; 4];
+                        for j in 0..4 {
+                            t[0][j] = d[0][j] - d[2][j];
+                            t[1][j] = d[1][j] + d[2][j];
+                            t[2][j] = d[2][j] - d[1][j];
+                            t[3][j] = d[1][j] - d[3][j];
+                        }
+                        for (i, trow) in t.iter().enumerate() {
+                            let vals = [
+                                trow[0] - trow[2],
+                                trow[1] + trow[2],
+                                trow[2] - trow[1],
+                                trow[1] - trow[3],
+                            ];
+                            for (j, &val) in vals.iter().enumerate() {
+                                v[(i * 4 + j) * tiles * cin + tile * cin + ci] = val;
+                            }
+                        }
+                    }
+                }
+            }
+            // M[xy] = V[xy]·U[xy] — the GEMM kernels accumulate, so
+            // zero M first.
+            m.fill(0.0);
+            for xy in 0..16 {
+                ops::matmul_into_auto(
+                    &v[xy * tiles * cin..(xy + 1) * tiles * cin],
+                    &u[xy * cin * cout..(xy + 1) * cin * cout],
+                    &mut m[xy * tiles * cout..(xy + 1) * tiles * cout],
+                    tiles,
+                    cin,
+                    cout,
+                );
+            }
+            // Y = Aᵀ M A per tile: 2×2 outputs, clipped at the edges.
+            let o_img = &mut od[img * img_out..(img + 1) * img_out];
+            for ta in 0..th {
+                for tb in 0..tw {
+                    let tile = ta * tw + tb;
+                    for co in 0..cout {
+                        let mm =
+                            |i: usize, j: usize| m[(i * 4 + j) * tiles * cout + tile * cout + co];
+                        let mut t2 = [[0.0f32; 4]; 2];
+                        for j in 0..4 {
+                            t2[0][j] = mm(0, j) + mm(1, j) + mm(2, j);
+                            t2[1][j] = mm(1, j) - mm(2, j) - mm(3, j);
+                        }
+                        for (dy, t2row) in t2.iter().enumerate() {
+                            let oa = 2 * ta + dy;
+                            if oa >= ho {
+                                continue;
+                            }
+                            let y0 = t2row[0] + t2row[1] + t2row[2];
+                            let y1 = t2row[1] - t2row[2] - t2row[3];
+                            for (dx, yv) in [y0, y1].into_iter().enumerate() {
+                                let ob = 2 * tb + dx;
+                                if ob >= wo {
+                                    continue;
+                                }
+                                o_img[(oa * wo + ob) * cout + co] =
+                                    yv + bd.map_or(0.0, |b| b[co]);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The im2col lowering of the weight gradient: per image,
+    /// `dw += patchesᵀ·g` as one `[k²Cin, H'W']·[H'W', Cout]` GEMM,
+    /// accumulated serially across images (the GEMM dispatcher owns the
+    /// parallelism — the transposed analogue of
+    /// [`Self::conv_with_im2col`]).
+    fn vjp_params_dw_im2col(
+        &self,
+        x: &Tensor,
+        grad_out: &Tensor,
+        ho: usize,
+        wo: usize,
+    ) -> Tensor {
+        let n = x.shape()[0];
+        let (k, cin, cout) = (self.k, self.cin, self.cout);
+        let plen = k * k * cin;
+        let pos = ho * wo;
+        let gd = grad_out.data();
+        let mut dw = Tensor::zeros(&[k, k, cin, cout]);
+        let mut patches = arena::take(pos * plen);
+        for img in 0..n {
+            self.gather_patches(x, img, ho, wo, &mut patches);
+            ops::matmul_tn_into_auto(
+                &patches,
+                &gd[img * pos * cout..(img + 1) * pos * cout],
+                dw.data_mut(),
+                pos,
+                plen,
+                cout,
+            );
+        }
+        dw
+    }
+
+    /// The Direct lowering of the weight gradient — an image-parallel
+    /// reduction: each worker folds its contiguous image range into a
+    /// private dw accumulator; partials merge in worker order, so a
+    /// fixed thread count is bit-deterministic. The accumulators come
+    /// from the arena so they are tracker-visible and recycled (no
+    /// per-call heap churn). Single-image batches fall back to spatial
+    /// row-band partitioning: each worker contracts its band of output
+    /// rows against its band of the tap gather. Like the batch
+    /// reduction, the band merge reorders the position sum, so batch-1
+    /// parallel dw matches serial to fp tolerance (and is bit-stable at
+    /// a fixed thread count).
+    fn vjp_params_dw_direct(
+        &self,
+        x: &Tensor,
+        grad_out: &Tensor,
+        ho: usize,
+        wo: usize,
+    ) -> Tensor {
+        let n = x.shape()[0];
+        let (k, cin, cout) = (self.k, self.cin, self.cout);
+        let wlen = k * k * cin * cout;
+        let gd = grad_out.data();
+        let img_g = ho * wo * cout;
+        fn merge_add(a: &mut arena::Scratch, b: arena::Scratch) {
+            for (av, bv) in a.iter_mut().zip(b.iter()) {
+                *av += *bv;
+            }
+        }
+        let workers = pool::effective_threads(n);
+        let spatial = if n == 1 && ho * wo * cout * k * k >= SPATIAL_MIN_TAP_ELEMS {
+            pool::effective_threads(ho)
+        } else {
+            1
+        };
+        let acc = if spatial > 1 {
+            pool::run_reduce(
+                ho,
+                spatial,
+                || arena::take_zeroed(wlen),
+                |rows, acc| {
+                    let g_band = &gd[rows.start * wo * cout..rows.end * wo * cout];
+                    self.accumulate_dw_band(x, 0, rows, wo, g_band, acc);
+                },
+                merge_add,
+            )
+        } else {
+            pool::run_reduce(
+                n,
+                workers,
+                || arena::take_zeroed(wlen),
+                |imgs, acc| {
+                    for img in imgs {
+                        let g_img = &gd[img * img_g..(img + 1) * img_g];
+                        self.accumulate_dw_band(x, img, 0..ho, wo, g_img, acc);
+                    }
+                },
+                merge_add,
+            )
+        };
+        let mut dw = Tensor::zeros(&[k, k, cin, cout]);
+        dw.data_mut().copy_from_slice(&acc);
+        dw
+    }
+
+    /// Calibrate this layer's autotunable conv ops (forward and
+    /// `vjp_params`) for input `x`: time every applicable [`ConvAlgo`]
+    /// candidate and [`conv_algo::record`] the winner in the
+    /// process-wide cache (persisted when a cache path is configured).
+    /// Ops whose key is already cached return `cached: true` without
+    /// re-timing — a warm cache makes calibration free. This is the
+    /// *only* Conv2d path that turns wall-clock into dispatch
+    /// decisions; `forward`/`vjp_params` themselves never time anything
+    /// (the determinism contract in `tensor::conv_algo`).
+    pub fn autotune(&self, x: &Tensor) -> Vec<conv_algo::TuneOutcome> {
+        self.autotune_with(x, 1, 3)
+    }
+
+    /// [`Self::autotune`] with explicit bench warmup/iteration counts.
+    pub fn autotune_with(
+        &self,
+        x: &Tensor,
+        warmup: usize,
+        iters: usize,
+    ) -> Vec<conv_algo::TuneOutcome> {
+        let (n, h, w_in) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+        let (ho, wo) = self.out_hw(h, w_in).expect("autotune needs a valid input shape");
+        let dims = self.conv_dims(n, h, w_in, ho, wo);
+        let mut outcomes = Vec::new();
+        for op in [ConvOp::Conv2dFwd, ConvOp::Conv2dVjpParams] {
+            if let Some((algo, ms)) = conv_algo::cached(op, &dims) {
+                outcomes.push(conv_algo::TuneOutcome {
+                    key: conv_algo::key(op, &dims),
+                    algo,
+                    best_ms: ms,
+                    candidates: Vec::new(),
+                    cached: true,
+                });
+                continue;
+            }
+            let g = Tensor::full(&[n, ho, wo, self.cout], 0.5);
+            let mut cands = Vec::new();
+            for algo in conv_algo::candidates(op, &dims) {
+                let stats = crate::util::timer::bench(warmup, iters, || match op {
+                    ConvOp::Conv2dFwd => {
+                        let _ = self.conv_with_algo(x, self.w.data(), self.bias.as_ref(), algo);
+                    }
+                    _ => {
+                        let _ = if algo == ConvAlgo::Im2col {
+                            self.vjp_params_dw_im2col(x, &g, ho, wo)
+                        } else {
+                            self.vjp_params_dw_direct(x, &g, ho, wo)
+                        };
+                    }
+                });
+                cands.push((algo, stats.median_ms()));
+            }
+            let &(best, best_ms) = cands
+                .iter()
+                .min_by(|a, b| a.1.total_cmp(&b.1))
+                .expect("Direct is always a candidate");
+            conv_algo::record(op, &dims, best, best_ms);
+            outcomes.push(conv_algo::TuneOutcome {
+                key: conv_algo::key(op, &dims),
+                algo: best,
+                best_ms,
+                candidates: cands,
+                cached: false,
+            });
+        }
+        outcomes
     }
 
     /// Transpose convolution (Eq. 12/13): scatter `g · wᵀ` back to input
@@ -665,58 +1128,11 @@ impl Layer for Conv2d {
     fn vjp_params(&self, x: &Tensor, grad_out: &Tensor) -> Vec<Tensor> {
         let (n, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
         let (ho, wo) = self.out_hw(h, w).expect("shapes validated");
-        let (k, cin, cout) = (self.k, self.cin, self.cout);
-        let wlen = k * k * cin * cout;
-        let gd = grad_out.data();
-        let img_g = ho * wo * cout;
-        // Image-parallel reduction: each worker folds its contiguous image
-        // range into a private dw accumulator; partials merge in worker
-        // order, so a fixed thread count is bit-deterministic. The
-        // accumulators come from the arena so they are tracker-visible
-        // and recycled (no per-call heap churn). Single-image batches
-        // fall back to spatial row-band partitioning: each worker
-        // contracts its band of output rows against its band of the tap
-        // gather. Like the batch reduction, the band merge reorders the
-        // position sum, so batch-1 parallel dw matches serial to fp
-        // tolerance (and is bit-stable at a fixed thread count).
-        fn merge_add(a: &mut arena::Scratch, b: arena::Scratch) {
-            for (av, bv) in a.iter_mut().zip(b.iter()) {
-                *av += *bv;
-            }
-        }
-        let workers = pool::effective_threads(n);
-        let spatial = if n == 1 && ho * wo * cout * k * k >= SPATIAL_MIN_TAP_ELEMS {
-            pool::effective_threads(ho)
-        } else {
-            1
+        let dims = self.conv_dims(n, h, w, ho, wo);
+        let dw = match conv_algo::resolve(ConvOp::Conv2dVjpParams, &dims) {
+            ConvAlgo::Im2col => self.vjp_params_dw_im2col(x, grad_out, ho, wo),
+            _ => self.vjp_params_dw_direct(x, grad_out, ho, wo),
         };
-        let acc = if spatial > 1 {
-            pool::run_reduce(
-                ho,
-                spatial,
-                || arena::take_zeroed(wlen),
-                |rows, acc| {
-                    let g_band = &gd[rows.start * wo * cout..rows.end * wo * cout];
-                    self.accumulate_dw_band(x, 0, rows, wo, g_band, acc);
-                },
-                merge_add,
-            )
-        } else {
-            pool::run_reduce(
-                n,
-                workers,
-                || arena::take_zeroed(wlen),
-                |imgs, acc| {
-                    for img in imgs {
-                        let g_img = &gd[img * img_g..(img + 1) * img_g];
-                        self.accumulate_dw_band(x, img, 0..ho, wo, g_img, acc);
-                    }
-                },
-                merge_add,
-            )
-        };
-        let mut dw = Tensor::zeros(&[k, k, cin, cout]);
-        dw.data_mut().copy_from_slice(&acc);
         let mut grads = vec![dw];
         if self.bias.is_some() {
             let mut db = Tensor::zeros(&[self.cout]);
@@ -893,6 +1309,21 @@ impl Layer for Conv2d {
             }
         }
     }
+
+    fn conv_tune_key(&self, in_shape: &[usize]) -> Option<String> {
+        if in_shape.len() != 4 || in_shape[3] != self.cin {
+            return None;
+        }
+        let (ho, wo) = self.out_hw(in_shape[1], in_shape[2]).ok()?;
+        Some(conv_algo::key(
+            ConvOp::Conv2dFwd,
+            &self.conv_dims(in_shape[0], in_shape[1], in_shape[2], ho, wo),
+        ))
+    }
+
+    fn conv_autotune(&self, x: &Tensor) -> Vec<conv_algo::TuneOutcome> {
+        self.autotune(x)
+    }
 }
 
 #[cfg(test)]
@@ -1004,6 +1435,63 @@ mod tests {
         let idx = conv.widx(1, 1, 0, 2);
         conv.w.data_mut()[idx] = 0.5;
         assert!(!conv.submersivity().is_submersive());
+    }
+
+    #[test]
+    fn im2col_and_winograd_match_direct_forward() {
+        // Stride-1 3×3 with odd H'/W' (clipped Winograd tiles), bias on,
+        // and asymmetric H≠W so row/column indexing mistakes can't cancel.
+        let mut rng = Rng::new(21);
+        let conv = Conv2d::new(3, 4, 6, 1, 1, true, &mut rng);
+        let x = input(2, 7, 9, 4, 21);
+        let direct = conv.conv_with_algo(&x, conv.w.data(), conv.bias.as_ref(), ConvAlgo::Direct);
+        for algo in [ConvAlgo::Im2col, ConvAlgo::Winograd] {
+            let y = conv.conv_with_algo(&x, conv.w.data(), conv.bias.as_ref(), algo);
+            assert_eq!(y.shape(), direct.shape());
+            assert_close(&y, &direct, 1e-5, algo.label());
+        }
+        // Unpadded: output 5×7, all tiles interior on one axis only.
+        let conv = Conv2d::new(3, 3, 3, 1, 0, false, &mut rng);
+        let x = input(1, 7, 9, 3, 22);
+        let direct = conv.conv_with_algo(&x, conv.w.data(), None, ConvAlgo::Direct);
+        for algo in [ConvAlgo::Im2col, ConvAlgo::Winograd] {
+            let y = conv.conv_with_algo(&x, conv.w.data(), None, algo);
+            assert_close(&y, &direct, 1e-5, algo.label());
+        }
+    }
+
+    #[test]
+    fn im2col_matches_direct_strided_vjp_params() {
+        let mut rng = Rng::new(23);
+        let conv = Conv2d::new(3, 3, 5, 2, 1, true, &mut rng);
+        let x = input(2, 9, 9, 3, 23);
+        let (ho, wo) = conv.out_hw(9, 9).unwrap();
+        let g = input(2, ho, wo, 5, 24);
+        let d_direct = conv.vjp_params_dw_direct(&x, &g, ho, wo);
+        let d_im2col = conv.vjp_params_dw_im2col(&x, &g, ho, wo);
+        assert_close(&d_im2col, &d_direct, 1e-5, "vjp_params im2col vs direct");
+    }
+
+    #[test]
+    fn autotune_records_winner_then_serves_from_cache() {
+        // Distinct geometry so this test cannot collide with other
+        // tests sharing the process-global autotune cache.
+        let mut rng = Rng::new(25);
+        let conv = Conv2d::new(3, 2, 2, 1, 1, false, &mut rng);
+        let x = input(3, 11, 11, 2, 25);
+        let first = conv.autotune_with(&x, 0, 1);
+        assert_eq!(first.len(), 2, "fwd + vjp_params");
+        assert!(first.iter().all(|o| !o.cached));
+        // Forward has all three candidates on this k=3/s=1 shape.
+        assert_eq!(first[0].candidates.len(), 3);
+        let second = conv.autotune_with(&x, 0, 1);
+        assert!(second.iter().all(|o| o.cached), "second pass must be free");
+        assert_eq!(second[0].algo, first[0].algo);
+        // The layer-trait view agrees on the forward key.
+        assert_eq!(
+            conv.conv_tune_key(x.shape()).as_deref(),
+            Some(first[0].key.as_str())
+        );
     }
 
     #[test]

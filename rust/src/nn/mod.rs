@@ -244,6 +244,24 @@ pub trait Layer: Send + Sync {
             reason: "not implemented for this layer type".into(),
         })
     }
+
+    /// The canonical conv-autotune cache key of this layer's *forward*
+    /// op for an input shape (`tensor::conv_algo`), letting the planner
+    /// attach timed-probe data to `Box<dyn Layer>` chains without
+    /// downcasting. `None` for layers that are not dispatched convs
+    /// (the default).
+    fn conv_tune_key(&self, _in_shape: &[usize]) -> Option<String> {
+        None
+    }
+
+    /// Calibrate this layer's conv-algorithm choices for input `x`,
+    /// recording winners in the process-wide autotune cache (see
+    /// `Conv1d::autotune` / `Conv2d::autotune`). Layers without
+    /// dispatched convs return no outcomes (the default). This is the
+    /// only `Layer` entry point that may measure wall-clock time.
+    fn conv_autotune(&self, _x: &Tensor) -> Vec<crate::tensor::conv_algo::TuneOutcome> {
+        Vec::new()
+    }
 }
 
 /// Boxed layer alias used throughout.

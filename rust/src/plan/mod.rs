@@ -43,4 +43,6 @@ pub use planner::{
     build_frontier, compile, summary_table, validate, CompiledPlan, LayerDecision, PlanFrontier,
     ResidualTier, Strategy,
 };
-pub use probe::{probe_network, FragmentProbe, LayerProbe, DEFAULT_FRAG_BLOCKS};
+pub use probe::{
+    attach_timed, calibrate_convs, probe_network, FragmentProbe, LayerProbe, DEFAULT_FRAG_BLOCKS,
+};

@@ -468,25 +468,32 @@ pub fn validate(decisions: &[LayerDecision], probes: &[LayerProbe]) -> anyhow::R
 
 /// Human-readable plan table: per-layer strategy, planned bytes, and the
 /// probe's measured-vs-analytic columns, plus the totals line the CLI
-/// prints.
+/// prints. The `timed_ms` column shows the conv autotune cache's
+/// calibrated forward time beside the analytic cost ("-" when the layer
+/// has no cached calibration — see [`crate::plan::probe::attach_timed`]).
 pub fn summary_table(plan: &CompiledPlan, probes: &[LayerProbe]) -> String {
     use std::fmt::Write;
     let mut out = String::new();
     let _ = writeln!(
         out,
-        "{:<4} {:<34} {:<12} {:>12} {:>12} {:>12}",
-        "#", "layer", "strategy", "aid_bytes", "mx_bytes", "act_bytes"
+        "{:<4} {:<34} {:<12} {:>12} {:>12} {:>12} {:>9}",
+        "#", "layer", "strategy", "aid_bytes", "mx_bytes", "act_bytes", "timed_ms"
     );
     for (i, (d, p)) in plan.decisions.iter().zip(probes).enumerate() {
+        let timed = match p.timed_fwd_ms {
+            Some(ms) => format!("{ms:.3}"),
+            None => "-".into(),
+        };
         let _ = writeln!(
             out,
-            "{:<4} {:<34} {:<12} {:>12} {:>12} {:>12}",
+            "{:<4} {:<34} {:<12} {:>12} {:>12} {:>12} {:>9}",
             i,
             p.cost.name,
             d.strategy.label(),
             d.aid_bytes,
             p.measured_mx,
-            p.measured_act
+            p.measured_act,
+            timed
         );
     }
     let _ = writeln!(
@@ -690,5 +697,8 @@ mod tests {
         let table = summary_table(&plan, &probes);
         assert_eq!(table.lines().count(), probes.len() + 2);
         assert!(table.contains("planned_peak="));
+        // Without calibration every layer's timed column is the "-"
+        // placeholder (probe_network leaves timed_fwd_ms at None).
+        assert!(table.contains("timed_ms"));
     }
 }

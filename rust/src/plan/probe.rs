@@ -23,6 +23,14 @@
 //! matters for the same reason — plans compiled from a probe must be
 //! identical across runs and replicas, so every number here is a pure
 //! function of the network and input shape.
+//!
+//! Wall-clock timing is the one exception, and it is opt-in only:
+//! [`calibrate_convs`] runs the conv autotune (`plan --autotune`) and
+//! [`attach_timed`] copies the resulting *cached* milliseconds onto the
+//! probes as [`LayerProbe::timed_fwd_ms`]. Attaching is a pure cache
+//! lookup — for a fixed cache file the timed column (and the compiled
+//! plan) is identical across processes, which is what lets respawned
+//! replica workers agree with their coordinator.
 
 use crate::memsim::{self, LayerCost};
 use crate::model::Network;
@@ -66,6 +74,14 @@ pub struct LayerProbe {
     /// Measured fragmental candidates (empty when the layer does not
     /// support §5.1 capture).
     pub fragments: Vec<FragmentProbe>,
+    /// Timed forward milliseconds from the conv autotune cache, if the
+    /// layer is a convolution whose forward op has been calibrated
+    /// (`None` otherwise). [`probe_network`] always leaves this `None` —
+    /// its numbers are a pure function of network and shape — and
+    /// [`attach_timed`] fills it in from
+    /// [`crate::tensor::conv_algo::cached_time_ms`] afterwards, which is
+    /// a pure *lookup* (no wall-clock measurement ever happens here).
+    pub timed_fwd_ms: Option<f64>,
 }
 
 impl LayerProbe {
@@ -123,10 +139,62 @@ pub fn probe_network(
             measured_act: y.bytes(),
             fragments,
             cost,
+            timed_fwd_ms: None,
         });
         x = y;
     }
     Ok(probes)
+}
+
+/// Fill each probe's [`LayerProbe::timed_fwd_ms`] from the conv
+/// autotune cache. Pure lookups only: the per-layer input shapes are
+/// walked with [`crate::nn::Layer::out_shape`] (no forwards), each conv
+/// layer's [`crate::nn::Layer::conv_tune_key`] is matched against
+/// [`crate::tensor::conv_algo::cached_time_ms`], and layers without a
+/// cached calibration stay `None`. Nothing here measures wall-clock
+/// time, so attaching keeps plans deterministic for a fixed cache file —
+/// exactly the property that lets a coordinator and its respawned
+/// replica workers compile identical plans from a shared cache.
+pub fn attach_timed(net: &Network, in_shape: &[usize], probes: &mut [LayerProbe]) {
+    let mut shape = in_shape.to_vec();
+    for (layer, probe) in net.layers.iter().zip(probes.iter_mut()) {
+        if let Some(key) = layer.conv_tune_key(&shape) {
+            probe.timed_fwd_ms = crate::tensor::conv_algo::cached_time_ms(&key);
+        }
+        match layer.out_shape(&shape) {
+            Ok(next) => shape = next,
+            Err(_) => break,
+        }
+    }
+}
+
+/// Calibrate every convolution layer of `net` on `in_shape`: run the
+/// forward chain once to materialize each layer's concrete input, and
+/// hand it to [`crate::nn::Layer::conv_autotune`], which times the
+/// applicable [`crate::tensor::conv_algo::ConvAlgo`] candidates and
+/// records the winners in the autotune cache (persisted when a cache
+/// path is configured). Already-cached ops are *not* re-timed — their
+/// outcomes come back with `cached == true` — so a second calibration
+/// pass over the same network is near-free.
+///
+/// This is the planner-side explicit calibration entry point (`plan
+/// --autotune`); nothing in the default resolve path ever measures
+/// time. The probe input is pseudo-random rather than zero because the
+/// direct conv kernels skip zero inputs (sparsity fast path), which
+/// would bias the timings.
+pub fn calibrate_convs(
+    net: &Network,
+    in_shape: &[usize],
+) -> anyhow::Result<Vec<crate::tensor::conv_algo::TuneOutcome>> {
+    anyhow::ensure!(net.depth() > 0, "cannot calibrate an empty network");
+    let mut rng = crate::util::Rng::new(0x7a11);
+    let mut x = Tensor::randn(in_shape, 0.5, &mut rng);
+    let mut outcomes = Vec::new();
+    for layer in net.layers.iter() {
+        outcomes.extend(layer.conv_autotune(&x));
+        x = layer.forward(&x);
+    }
+    Ok(outcomes)
 }
 
 /// Best-effort kernel width for the analytic fragment formula, recovered
@@ -208,5 +276,37 @@ mod tests {
                 *DEFAULT_FRAG_BLOCKS.last().unwrap()
             );
         }
+    }
+
+    #[test]
+    fn calibrate_then_attach_fills_timed_column() {
+        // Distinct geometry from every other cache-touching test so the
+        // process-global autotune cache keys cannot collide.
+        let mut rng = Rng::new(2);
+        let spec = FragmentalCnn1dSpec {
+            input_len: 48,
+            channels: 6,
+            depth: 2,
+            ..Default::default()
+        };
+        let net = build_cnn1d_fragmental(&spec, &mut rng);
+        let in_shape = [1usize, 48, 3];
+        let mut probes = probe_network(&net, &in_shape, DEFAULT_FRAG_BLOCKS).unwrap();
+        assert!(
+            probes.iter().all(|p| p.timed_fwd_ms.is_none()),
+            "probe_network must stay a pure function of network and shape"
+        );
+        let outcomes = calibrate_convs(&net, &in_shape).unwrap();
+        assert!(!outcomes.is_empty(), "fragmental net has conv layers to tune");
+        attach_timed(&net, &in_shape, &mut probes);
+        let timed: Vec<&LayerProbe> =
+            probes.iter().filter(|p| p.timed_fwd_ms.is_some()).collect();
+        assert!(!timed.is_empty(), "calibrated conv layers gain a timed column");
+        for p in &timed {
+            assert!(p.timed_fwd_ms.unwrap() >= 0.0);
+        }
+        // A second calibration pass is served entirely from the cache.
+        let again = calibrate_convs(&net, &in_shape).unwrap();
+        assert!(again.iter().all(|o| o.cached), "re-calibration must not re-time");
     }
 }

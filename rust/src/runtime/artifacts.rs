@@ -1,7 +1,17 @@
-//! Artifact manifest: `artifacts/manifest.json` describes every compiled
-//! op — its HLO file, input/output shapes and role — plus the flagship
-//! model configuration the artifacts were lowered for. Produced by
-//! `python/compile/aot.py`; consumed by `runtime::pjrt::PjrtRuntime` (behind the `xla` feature).
+//! Persisted runtime artifacts.
+//!
+//! * [`Manifest`] — `artifacts/manifest.json` describes every compiled
+//!   op — its HLO file, input/output shapes and role — plus the flagship
+//!   model configuration the artifacts were lowered for. Produced by
+//!   `python/compile/aot.py`; consumed by `runtime::pjrt::PjrtRuntime`
+//!   (behind the `xla` feature).
+//! * [`TuneTable`] — the conv-algorithm autotune cache
+//!   (`tensor::conv_algo`): measured winners keyed on
+//!   `(op, shape, threads)`, persisted so later runs and respawned
+//!   replica workers skip calibration and compile identical plans.
+//!   Loading is deliberately tolerant: a missing, corrupt or stale file
+//!   yields an **empty** table (callers fall back to re-timing), never
+//!   an error — a shared cache must not be able to brick a run.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -88,6 +98,94 @@ impl Manifest {
     }
 }
 
+// ----- conv autotune table ---------------------------------------------------
+
+/// One measured autotune winner: which algorithm won and its median
+/// forward time when it was calibrated.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneEntry {
+    /// Winning algorithm label (`"direct"` / `"im2col"` / `"winograd"`).
+    pub algo: String,
+    /// The winner's measured median, in milliseconds.
+    pub ms: f64,
+}
+
+/// The persisted conv-algorithm autotune cache: canonical
+/// `(op, shape, threads)` key → measured winner. See
+/// `tensor::conv_algo` for the key format and the resolution order
+/// (override → cache → Direct).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TuneTable {
+    /// Winner per canonical key, sorted (deterministic serialization).
+    pub entries: BTreeMap<String, TuneEntry>,
+}
+
+/// Format version stamped into the persisted JSON; a table written by
+/// an incompatible future format is treated as stale (→ empty).
+const TUNE_TABLE_VERSION: usize = 1;
+
+impl TuneTable {
+    /// Load a persisted table. Missing, unreadable, corrupt or
+    /// version-mismatched files all yield an **empty** table — the
+    /// caller re-times on the next explicit calibration instead of
+    /// erroring (the cache is an accelerator, never a dependency).
+    pub fn load(path: &Path) -> TuneTable {
+        let Ok(text) = std::fs::read_to_string(path) else {
+            return TuneTable::default();
+        };
+        let Ok(j) = Json::parse(&text) else {
+            return TuneTable::default();
+        };
+        TuneTable::from_json(&j).unwrap_or_default()
+    }
+
+    /// Parse from the JSON object [`TuneTable::to_json`] writes.
+    /// `None` on any structural mismatch (treated as stale by `load`).
+    pub fn from_json(j: &Json) -> Option<TuneTable> {
+        if j.get("version").as_usize()? != TUNE_TABLE_VERSION {
+            return None;
+        }
+        let mut entries = BTreeMap::new();
+        for (key, e) in j.get("entries").as_obj()? {
+            let algo = e.get("algo").as_str()?.to_string();
+            let ms = e.get("ms").as_f64()?;
+            entries.insert(key.clone(), TuneEntry { algo, ms });
+        }
+        Some(TuneTable { entries })
+    }
+
+    /// The persisted JSON form (versioned; keys sorted by `BTreeMap`).
+    pub fn to_json(&self) -> Json {
+        let mut entries = Json::obj();
+        for (key, e) in &self.entries {
+            entries.set(
+                key,
+                Json::from_pairs(vec![
+                    ("algo", e.algo.as_str().into()),
+                    ("ms", e.ms.into()),
+                ]),
+            );
+        }
+        Json::from_pairs(vec![
+            ("version", TUNE_TABLE_VERSION.into()),
+            ("entries", entries),
+        ])
+    }
+
+    /// Persist to `path` (creating parent directories). Best-effort
+    /// callers may ignore the result — a read-only filesystem degrades
+    /// to per-process calibration, not failure.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_pretty())
+            .map_err(|e| anyhow::anyhow!("writing tune table {path:?}: {e}"))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,6 +220,50 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
         let err = Manifest::load(&dir).unwrap_err().to_string();
         assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn tune_table_roundtrip() {
+        let mut t = TuneTable::default();
+        t.entries.insert(
+            "conv2d_fwd n2 hw32x32 c16>16 k3 s1 p1 t4".to_string(),
+            TuneEntry {
+                algo: "winograd".to_string(),
+                ms: 0.125,
+            },
+        );
+        t.entries.insert(
+            "conv1d_fwd n2 hw64x0 c8>8 k3 s1 p1 t1".to_string(),
+            TuneEntry {
+                algo: "im2col".to_string(),
+                ms: 0.5,
+            },
+        );
+        let path = std::env::temp_dir().join("moonwalk_tune_roundtrip/tune.json");
+        t.save(&path).unwrap();
+        assert_eq!(TuneTable::load(&path), t);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn tune_table_corrupt_or_stale_is_empty_not_error() {
+        let dir = std::env::temp_dir().join("moonwalk_tune_corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        // Missing file.
+        assert!(TuneTable::load(&dir.join("absent.json")).entries.is_empty());
+        // Corrupt JSON.
+        let bad = dir.join("bad.json");
+        std::fs::write(&bad, "{not json at all").unwrap();
+        assert!(TuneTable::load(&bad).entries.is_empty());
+        // Structurally wrong.
+        let wrong = dir.join("wrong.json");
+        std::fs::write(&wrong, r#"{"version": 1, "entries": [1, 2]}"#).unwrap();
+        assert!(TuneTable::load(&wrong).entries.is_empty());
+        // Stale version.
+        let stale = dir.join("stale.json");
+        std::fs::write(&stale, r#"{"version": 999, "entries": {}}"#).unwrap();
+        assert!(TuneTable::load(&stale).entries.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

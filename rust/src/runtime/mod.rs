@@ -8,7 +8,9 @@
 //!   deterministic partitioning, bit-identical to the PR 1 scoped pool
 //!   at fixed thread counts.
 //! * [`artifacts`] — manifest/loader for the AOT artifacts emitted by
-//!   `python/compile/aot.py` (JAX/Pallas programs lowered to HLO text).
+//!   `python/compile/aot.py` (JAX/Pallas programs lowered to HLO text),
+//!   plus the persisted conv-autotune table ([`TuneTable`]) behind
+//!   `tensor::conv_algo`.
 //! * `pjrt` — the PJRT client that compiles and executes those
 //!   artifacts from the Rust hot path. Gated behind the `xla` feature
 //!   because it needs the vendored `xla` crate, which not every build
@@ -20,6 +22,6 @@ pub mod pool;
 #[cfg(feature = "xla")]
 pub mod pjrt;
 
-pub use artifacts::{Manifest, OpSpec};
+pub use artifacts::{Manifest, OpSpec, TuneEntry, TuneTable};
 #[cfg(feature = "xla")]
 pub use pjrt::PjrtRuntime;

@@ -1,7 +1,9 @@
 //! Thread-aware scratch-buffer arena (§Perf iteration 5).
 //!
 //! The conv/GEMM hot paths need transient buffers — per-tap gathers,
-//! transposed tap weights, the vijp channel-major workspace — that the
+//! transposed tap weights, the vijp channel-major workspace, and the
+//! im2col/Winograd conv workspaces (sized by
+//! [`crate::tensor::conv_algo::workspace_bytes`]) — that the
 //! seed implementation allocated as fresh [`Tensor`]s on every call,
 //! dominating the allocation-churn metric (`tracker::total_allocs`).
 //! This arena recycles those buffers process-wide so Moonwalk's Phase
@@ -123,8 +125,12 @@ pub fn take(len: usize) -> Scratch {
         let mut best: Option<(usize, usize)> = None; // (index, capacity)
         for (i, b) in pool.iter().enumerate() {
             let cap = b.capacity();
-            if cap >= len && best.map_or(true, |(_, bc)| cap < bc) {
-                best = Some((i, cap));
+            if cap < len {
+                continue;
+            }
+            match best {
+                Some((_, bc)) if cap >= bc => {}
+                _ => best = Some((i, cap)),
             }
         }
         best.map(|(i, _)| pool.swap_remove(i))

@@ -1,0 +1,566 @@
+//! Convolution algorithm dispatch + autotune cache (the cuDNN
+//! `cudnnConvolutionFwdAlgo_t` idea, in-process).
+//!
+//! `GemmAlgo` picks *how a GEMM runs*; [`ConvAlgo`] picks *which
+//! lowering a convolution uses* before any GEMM is reached:
+//!
+//! * [`ConvAlgo::Direct`] — the hand-tuned per-tap kernels in
+//!   `nn/conv1d.rs` / `nn/conv2d.rs`. Always applicable; **the
+//!   reference** every other algorithm is tested against, and the
+//!   bit-compatibility anchor (see the determinism contract below).
+//! * [`ConvAlgo::Im2col`] — lower the conv onto one large
+//!   `[positions, k·k·Cin] · [k·k·Cin, Cout]` product and reuse the
+//!   blocked/parallel GEMM dispatchers (`matmul_*_into_auto`).
+//!   Applicable to conv1d/conv2d forward and `vjp_params`.
+//! * [`ConvAlgo::Winograd`] — F(2×2, 3×3) fast convolution for
+//!   stride-1 3×3 conv2d forward: 16 per-transform-position GEMMs of
+//!   shape `[tiles, Cin] · [Cin, Cout]` replace the 9-tap direct sweep
+//!   (2.25× fewer multiplies in the large-channel limit). The
+//!   F(2×2,3×3) transform matrices are exact in binary floating point
+//!   (entries in {0, ±1, ±½}), so the only rounding difference vs
+//!   Direct is summation order.
+//!
+//! The vijp (Eq. 9) stays **Direct-only**: the triangular elimination /
+//! wavefront schedules are tied to the pivot-tap structure and have no
+//! im2col/Winograd analogue; a forced override simply falls back (see
+//! [`applicable`]).
+//!
+//! Every algorithm declares its workspace ([`workspace_bytes`]) and
+//! serves scratch from [`crate::tensor::arena`], so the tracker
+//! accounting the planner relies on stays honest.
+//!
+//! # Selection and the determinism contract
+//!
+//! Resolution order ([`resolve`]): forced override (`--conv-algo` /
+//! `MOONWALK_CONV`) → autotune-cache hit → Direct. There is **no lazy
+//! self-timing in default paths**: wall-clock measurements inside a
+//! forward pass would make results depend on machine load, breaking
+//! the bit-exactness contracts (unix vs local transports, fixed-thread
+//! run-to-run) that the test suite pins. Calibration happens only
+//! through the explicit entry points — `Conv1d::autotune` /
+//! `Conv2d::autotune`, `plan::calibrate_convs`, and the `conv_rows`
+//! bench family — which time the applicable candidates once
+//! ([`record`]s the winner) and persist the table via
+//! [`crate::runtime::artifacts::TuneTable`] when a cache path is
+//! configured (`--conv-cache` / `MOONWALK_CONV_CACHE`). Later runs and
+//! respawned replica workers load the same table, so every process
+//! sharing a cache file resolves every conv identically and compiles
+//! identical plans. With no override and no cache entry the default is
+//! exactly today's Direct kernels, bit for bit.
+//!
+//! Cache keys ([`key`]) are canonical `(op, shape, threads)` strings;
+//! the thread component is the *kernel-effective* count (1 inside a
+//! pool worker — where nested parallelism is suppressed — so
+//! in-process replicas and single-threaded worker subprocesses agree
+//! on the key and therefore on the resolution).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+use crate::runtime::artifacts::{TuneEntry, TuneTable};
+use crate::runtime::pool;
+use crate::util::lock_ignore_poison;
+
+/// A convolution lowering. See the module docs for the lattice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ConvAlgo {
+    /// The hand-tuned per-tap kernels — always applicable, the
+    /// reference and the bit-compatibility anchor.
+    Direct,
+    /// Lower onto one blocked/parallel GEMM over gathered patches.
+    Im2col,
+    /// F(2×2, 3×3) Winograd fast convolution (conv2d forward,
+    /// `k == 3 && s == 1` only).
+    Winograd,
+}
+
+impl ConvAlgo {
+    /// Stable lowercase label (cache files, CLI, bench JSON).
+    pub fn label(self) -> &'static str {
+        match self {
+            ConvAlgo::Direct => "direct",
+            ConvAlgo::Im2col => "im2col",
+            ConvAlgo::Winograd => "winograd",
+        }
+    }
+
+    /// Parse a [`ConvAlgo::label`] spelling. `None` for anything else
+    /// (including `"auto"`, which is not an algorithm).
+    pub fn parse(name: &str) -> Option<ConvAlgo> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "direct" => Some(ConvAlgo::Direct),
+            "im2col" => Some(ConvAlgo::Im2col),
+            "winograd" => Some(ConvAlgo::Winograd),
+            _ => None,
+        }
+    }
+}
+
+/// Which convolution operator is being dispatched. Forward and
+/// `vjp_params` are autotunable; the vijp entries exist so the lattice
+/// covers the whole operator quartet (they resolve to Direct — the
+/// elimination/wavefront schedules have no alternative lowering).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ConvOp {
+    /// `Conv1d` forward (also jvp: same contraction, different data).
+    Conv1dFwd,
+    /// `Conv1d::vjp_params`.
+    Conv1dVjpParams,
+    /// `Conv1d::vijp` (Direct-only).
+    Conv1dVijp,
+    /// `Conv2d` forward (also jvp).
+    Conv2dFwd,
+    /// `Conv2d::vjp_params`.
+    Conv2dVjpParams,
+    /// `Conv2d::vijp` (Direct-only).
+    Conv2dVijp,
+}
+
+impl ConvOp {
+    /// Stable label used as the leading component of cache keys.
+    pub fn label(self) -> &'static str {
+        match self {
+            ConvOp::Conv1dFwd => "conv1d_fwd",
+            ConvOp::Conv1dVjpParams => "conv1d_vjpw",
+            ConvOp::Conv1dVijp => "conv1d_vijp",
+            ConvOp::Conv2dFwd => "conv2d_fwd",
+            ConvOp::Conv2dVjpParams => "conv2d_vjpw",
+            ConvOp::Conv2dVijp => "conv2d_vijp",
+        }
+    }
+}
+
+/// The geometry of one conv invocation — everything the cache key and
+/// the workspace query need. For 1-D convs `w`/`wo` are 0 and `h`/`ho`
+/// carry the length.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvDims {
+    /// Batch size.
+    pub n: usize,
+    /// Input spatial height (1-D: length).
+    pub h: usize,
+    /// Input spatial width (1-D: 0).
+    pub w: usize,
+    /// Output spatial height (1-D: output length).
+    pub ho: usize,
+    /// Output spatial width (1-D: 0).
+    pub wo: usize,
+    /// Input channels.
+    pub cin: usize,
+    /// Output channels.
+    pub cout: usize,
+    /// Kernel size (square for 2-D).
+    pub k: usize,
+    /// Stride.
+    pub s: usize,
+    /// Zero padding.
+    pub p: usize,
+}
+
+impl ConvDims {
+    /// Output positions per image (`ho` for 1-D, `ho·wo` for 2-D).
+    pub fn positions(&self) -> usize {
+        self.ho * self.wo.max(1)
+    }
+
+    /// Patch row length for im2col (`k·cin` 1-D, `k²·cin` 2-D).
+    pub fn patch_len(&self) -> usize {
+        if self.wo == 0 {
+            self.k * self.cin
+        } else {
+            self.k * self.k * self.cin
+        }
+    }
+}
+
+/// The thread count a cache key carries: the *kernel-effective* one.
+/// Inside a pool worker nested parallelism is suppressed (kernels run
+/// serial), so in-process replicas key on 1 — exactly like the
+/// single-threaded worker subprocesses — and every executor sharing a
+/// cache file resolves identically.
+fn key_threads() -> usize {
+    if pool::in_worker() {
+        1
+    } else {
+        pool::threads()
+    }
+}
+
+/// The canonical autotune-cache key for `(op, shape, threads)`, e.g.
+/// `conv2d_fwd n2 hw32x32 c16>16 k3 s1 p1 t4`.
+pub fn key(op: ConvOp, d: &ConvDims) -> String {
+    format!(
+        "{} n{} hw{}x{} c{}>{} k{} s{} p{} t{}",
+        op.label(),
+        d.n,
+        d.h,
+        d.w,
+        d.cin,
+        d.cout,
+        d.k,
+        d.s,
+        d.p,
+        key_threads()
+    )
+}
+
+/// Whether `algo` can execute `op` on this geometry at all. Forcing an
+/// inapplicable algorithm (e.g. `--conv-algo winograd` on a strided
+/// conv, or anything non-Direct on a vijp) falls back to Direct rather
+/// than erroring — an override is a preference lattice, not a promise.
+pub fn applicable(algo: ConvAlgo, op: ConvOp, d: &ConvDims) -> bool {
+    match algo {
+        ConvAlgo::Direct => true,
+        ConvAlgo::Im2col => matches!(
+            op,
+            ConvOp::Conv1dFwd
+                | ConvOp::Conv1dVjpParams
+                | ConvOp::Conv2dFwd
+                | ConvOp::Conv2dVjpParams
+        ),
+        ConvAlgo::Winograd => op == ConvOp::Conv2dFwd && d.k == 3 && d.s == 1,
+    }
+}
+
+/// The applicable candidate set for `(op, dims)`, Direct first.
+pub fn candidates(op: ConvOp, d: &ConvDims) -> Vec<ConvAlgo> {
+    [ConvAlgo::Direct, ConvAlgo::Im2col, ConvAlgo::Winograd]
+        .into_iter()
+        .filter(|a| applicable(*a, op, d))
+        .collect()
+}
+
+/// Workspace bytes `algo` leases from `tensor::arena` for one `(op,
+/// dims)` invocation — the declared scratch high-water mark per
+/// in-flight image (the tracker measures the truth at run time; this
+/// is the planning/documentation figure, like cuDNN's
+/// `getWorkspaceSize`).
+pub fn workspace_bytes(algo: ConvAlgo, op: ConvOp, d: &ConvDims) -> usize {
+    let pos = d.positions();
+    let f32s = match (algo, op) {
+        // Direct conv2d forward/vjp gather one tap band at a time:
+        // positions × Cin. Direct conv1d builds per-image patches.
+        (ConvAlgo::Direct, ConvOp::Conv2dFwd | ConvOp::Conv2dVjpParams) => pos * d.cin,
+        (ConvAlgo::Direct, ConvOp::Conv1dFwd) => pos * d.patch_len(),
+        (ConvAlgo::Direct, ConvOp::Conv1dVjpParams) => 0,
+        (ConvAlgo::Direct, ConvOp::Conv1dVijp | ConvOp::Conv2dVijp) => pos * d.cout,
+        // Im2col materializes the full patch matrix.
+        (ConvAlgo::Im2col, _) => pos * d.patch_len(),
+        // Winograd: V (16·tiles·Cin) + U (16·Cin·Cout) + M
+        // (16·tiles·Cout), tiles = ⌈ho/2⌉·⌈wo/2⌉.
+        (ConvAlgo::Winograd, _) => {
+            let tiles = d.ho.div_ceil(2) * d.wo.div_ceil(2);
+            16 * (tiles * d.cin + d.cin * d.cout + tiles * d.cout)
+        }
+    };
+    f32s * 4
+}
+
+// ----- override --------------------------------------------------------------
+
+// Cached MOONWALK_CONV override: 0 unresolved, 1 auto, 2 direct,
+// 3 im2col, 4 winograd (same idiom as ops::GEMM_OVERRIDE).
+static CONV_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+fn override_state() -> u8 {
+    let v = CONV_OVERRIDE.load(Ordering::Relaxed);
+    if v != 0 {
+        return v;
+    }
+    let v = match std::env::var("MOONWALK_CONV") {
+        Err(_) => 1,
+        Ok(raw) => match raw.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => 1,
+            "direct" => 2,
+            "im2col" => 3,
+            "winograd" => 4,
+            other => {
+                // Warn exactly once (the result is cached): a perf knob
+                // that is silently ignored produces wrong measurements.
+                eprintln!(
+                    "warning: MOONWALK_CONV=`{other}` not recognized \
+                     (auto|direct|im2col|winograd); using auto"
+                );
+                1
+            }
+        },
+    };
+    CONV_OVERRIDE.store(v, Ordering::Relaxed);
+    v
+}
+
+/// The forced algorithm, if any (`None` = auto: cache → Direct).
+pub fn conv_override() -> Option<ConvAlgo> {
+    match override_state() {
+        2 => Some(ConvAlgo::Direct),
+        3 => Some(ConvAlgo::Im2col),
+        4 => Some(ConvAlgo::Winograd),
+        _ => None,
+    }
+}
+
+/// Force a conv algorithm globally: `"auto"`, `"direct"`, `"im2col"`
+/// or `"winograd"` (the CLI's `--conv-algo`; `MOONWALK_CONV` is the
+/// env spelling).
+pub fn set_conv_override(name: &str) -> anyhow::Result<()> {
+    let v = match name {
+        "auto" => 1,
+        "direct" => 2,
+        "im2col" => 3,
+        "winograd" => 4,
+        other => {
+            anyhow::bail!("unknown conv algorithm `{other}` (auto|direct|im2col|winograd)")
+        }
+    };
+    CONV_OVERRIDE.store(v, Ordering::Relaxed);
+    Ok(())
+}
+
+// ----- autotune cache --------------------------------------------------------
+
+struct CacheState {
+    /// Whether the persisted table (if any) has been loaded.
+    loaded: bool,
+    /// Explicit path (`set_cache_path`); else `MOONWALK_CONV_CACHE`.
+    path: Option<PathBuf>,
+    /// key → (winner, measured ms).
+    entries: BTreeMap<String, (ConvAlgo, f64)>,
+}
+
+static CACHE: Mutex<CacheState> = Mutex::new(CacheState {
+    loaded: false,
+    path: None,
+    entries: BTreeMap::new(),
+});
+
+fn ensure_loaded(state: &mut CacheState) {
+    if state.loaded {
+        return;
+    }
+    state.loaded = true;
+    if state.path.is_none() {
+        if let Ok(p) = std::env::var("MOONWALK_CONV_CACHE") {
+            if !p.trim().is_empty() {
+                state.path = Some(PathBuf::from(p));
+            }
+        }
+    }
+    if let Some(path) = state.path.clone() {
+        let table = TuneTable::load(&path);
+        for (k, e) in table.entries {
+            if let Some(algo) = ConvAlgo::parse(&e.algo) {
+                state.entries.insert(k, (algo, e.ms));
+            }
+            // Unknown labels (a newer writer) are skipped, not fatal:
+            // resolution for that key falls back to Direct.
+        }
+    }
+}
+
+/// Point the cache at a table file and (re)load it. The CLI's
+/// `--conv-cache`; `MOONWALK_CONV_CACHE` is the env spelling the
+/// coordinator exports to worker subprocesses.
+pub fn set_cache_path(path: &str) {
+    let mut state = lock_ignore_poison(&CACHE);
+    state.path = Some(PathBuf::from(path));
+    state.loaded = false;
+    state.entries.clear();
+    ensure_loaded(&mut state);
+}
+
+/// The active cache path, if any (after lazy env resolution).
+pub fn cache_path() -> Option<PathBuf> {
+    let mut state = lock_ignore_poison(&CACHE);
+    ensure_loaded(&mut state);
+    state.path.clone()
+}
+
+/// Drop the in-memory table and reload from the configured path — what
+/// a freshly spawned process sharing the cache file would see. Used by
+/// the shared-cache tests and the `conv_rows` second-resolve column.
+pub fn reload() {
+    let mut state = lock_ignore_poison(&CACHE);
+    state.entries.clear();
+    state.loaded = false;
+    ensure_loaded(&mut state);
+}
+
+/// The cached `(winner, ms)` for `(op, dims)` at the current
+/// kernel-effective thread count, if one was ever recorded.
+pub fn cached(op: ConvOp, d: &ConvDims) -> Option<(ConvAlgo, f64)> {
+    let k = key(op, d);
+    let mut state = lock_ignore_poison(&CACHE);
+    ensure_loaded(&mut state);
+    state.entries.get(&k).copied()
+}
+
+/// The cached winner's measured milliseconds for a canonical `key`
+/// string (the timed-probe column's lookup; pure given a fixed table).
+pub fn cached_time_ms(cache_key: &str) -> Option<f64> {
+    let mut state = lock_ignore_poison(&CACHE);
+    ensure_loaded(&mut state);
+    state.entries.get(cache_key).map(|(_, ms)| *ms)
+}
+
+/// Number of in-memory cache entries (diagnostics / bench reporting).
+pub fn cache_len() -> usize {
+    let mut state = lock_ignore_poison(&CACHE);
+    ensure_loaded(&mut state);
+    state.entries.len()
+}
+
+/// Record a calibrated winner for `(op, dims)` and persist the table
+/// if a cache path is configured (best-effort: a read-only filesystem
+/// degrades to per-process calibration, never failure).
+pub fn record(op: ConvOp, d: &ConvDims, algo: ConvAlgo, ms: f64) {
+    let k = key(op, d);
+    let mut state = lock_ignore_poison(&CACHE);
+    ensure_loaded(&mut state);
+    state.entries.insert(k, (algo, ms));
+    if let Some(path) = state.path.clone() {
+        let mut table = TuneTable::default();
+        for (key, (algo, ms)) in &state.entries {
+            table.entries.insert(
+                key.clone(),
+                TuneEntry {
+                    algo: algo.label().to_string(),
+                    ms: *ms,
+                },
+            );
+        }
+        if let Err(e) = table.save(&path) {
+            crate::log_warn!("conv autotune table not persisted: {e:#}");
+        }
+    }
+}
+
+/// Resolve the algorithm for `(op, dims)`: forced override (if
+/// applicable) → cache hit (if still applicable) → Direct. This is the
+/// **deterministic-by-default** contract: no wall-clock enters the
+/// decision, so for a fixed override/cache state every process picks
+/// the same lowering (see the module docs).
+pub fn resolve(op: ConvOp, d: &ConvDims) -> ConvAlgo {
+    if let Some(forced) = conv_override() {
+        return if applicable(forced, op, d) {
+            forced
+        } else {
+            ConvAlgo::Direct
+        };
+    }
+    match cached(op, d) {
+        Some((algo, _)) if applicable(algo, op, d) => algo,
+        _ => ConvAlgo::Direct,
+    }
+}
+
+/// One calibration outcome (what `Conv1d::autotune` /
+/// `Conv2d::autotune` return and the `conv_rows` bench reports).
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    /// The canonical cache key that was (re)calibrated.
+    pub key: String,
+    /// The winning algorithm.
+    pub algo: ConvAlgo,
+    /// The winner's measured median, ms.
+    pub best_ms: f64,
+    /// Every timed candidate: `(algo, median ms)`, Direct first.
+    pub candidates: Vec<(ConvAlgo, f64)>,
+    /// True when the result came from the cache (no timing ran).
+    pub cached: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims2d() -> ConvDims {
+        ConvDims {
+            n: 2,
+            h: 9,
+            w: 9,
+            ho: 9,
+            wo: 9,
+            cin: 3,
+            cout: 3,
+            k: 3,
+            s: 1,
+            p: 1,
+        }
+    }
+
+    #[test]
+    fn applicability_lattice() {
+        let d = dims2d();
+        assert!(applicable(ConvAlgo::Direct, ConvOp::Conv2dVijp, &d));
+        assert!(!applicable(ConvAlgo::Im2col, ConvOp::Conv2dVijp, &d));
+        assert!(!applicable(ConvAlgo::Winograd, ConvOp::Conv2dVjpParams, &d));
+        assert!(applicable(ConvAlgo::Winograd, ConvOp::Conv2dFwd, &d));
+        let strided = ConvDims { s: 2, ..d };
+        assert!(!applicable(ConvAlgo::Winograd, ConvOp::Conv2dFwd, &strided));
+        assert_eq!(
+            candidates(ConvOp::Conv2dFwd, &d),
+            vec![ConvAlgo::Direct, ConvAlgo::Im2col, ConvAlgo::Winograd]
+        );
+        assert_eq!(candidates(ConvOp::Conv1dVijp, &d), vec![ConvAlgo::Direct]);
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        for a in [ConvAlgo::Direct, ConvAlgo::Im2col, ConvAlgo::Winograd] {
+            assert_eq!(ConvAlgo::parse(a.label()), Some(a));
+        }
+        assert_eq!(ConvAlgo::parse("auto"), None);
+        assert_eq!(ConvAlgo::parse("fft"), None);
+    }
+
+    #[test]
+    fn workspace_declared_for_every_candidate() {
+        let d = dims2d();
+        for op in [ConvOp::Conv2dFwd, ConvOp::Conv2dVjpParams, ConvOp::Conv2dVijp] {
+            for a in candidates(op, &d) {
+                // Direct conv1d vjp_params is the only zero-workspace
+                // combination; every 2-D candidate leases scratch.
+                assert!(workspace_bytes(a, op, &d) > 0, "{op:?}/{a:?}");
+            }
+        }
+        // Winograd's workspace beats im2col's k²-fold patch matrix on
+        // this shape in the channel terms it replaces.
+        let wino = workspace_bytes(ConvAlgo::Winograd, ConvOp::Conv2dFwd, &d);
+        assert!(wino > 0);
+    }
+
+    #[test]
+    fn key_is_canonical_and_thread_tagged() {
+        let d = dims2d();
+        let k = key(ConvOp::Conv2dFwd, &d);
+        assert!(k.starts_with("conv2d_fwd n2 hw9x9 c3>3 k3 s1 p1 t"), "{k}");
+    }
+
+    #[test]
+    fn resolve_default_is_direct_and_record_sticks() {
+        // Distinct geometry so this test cannot collide with others
+        // sharing the process-global cache.
+        let d = ConvDims {
+            n: 7,
+            h: 31,
+            w: 31,
+            ho: 31,
+            wo: 31,
+            cin: 5,
+            cout: 5,
+            k: 3,
+            s: 1,
+            p: 1,
+        };
+        assert_eq!(resolve(ConvOp::Conv2dFwd, &d), ConvAlgo::Direct);
+        record(ConvOp::Conv2dFwd, &d, ConvAlgo::Winograd, 0.25);
+        assert_eq!(resolve(ConvOp::Conv2dFwd, &d), ConvAlgo::Winograd);
+        assert_eq!(cached(ConvOp::Conv2dFwd, &d), Some((ConvAlgo::Winograd, 0.25)));
+        assert_eq!(cached_time_ms(&key(ConvOp::Conv2dFwd, &d)), Some(0.25));
+        // A stale entry for an op the algo cannot serve resolves Direct.
+        record(ConvOp::Conv2dVijp, &d, ConvAlgo::Winograd, 0.1);
+        assert_eq!(resolve(ConvOp::Conv2dVijp, &d), ConvAlgo::Direct);
+    }
+}

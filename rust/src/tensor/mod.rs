@@ -8,6 +8,7 @@
 
 pub mod arena;
 pub mod bitset;
+pub mod conv_algo;
 pub mod ops;
 pub mod tracker;
 

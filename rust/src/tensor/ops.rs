@@ -166,18 +166,19 @@ pub fn select_gemm_algo(m: usize, k: usize, n: usize) -> GemmAlgo {
         _ => {}
     }
     let t_raw = pool::effective_threads(m);
+    let t = t_raw.min((m / PAR_MIN_ROWS).max(1));
     if gemm_override() == 4 {
-        // Forced parallel: honor it whenever a fan-out is possible at
-        // all (the PAR_MIN_ROWS amortization clamp applies to the auto
-        // heuristic only — a forced knob that silently downgrades would
-        // corrupt measurements).
-        return if t_raw > 1 {
-            GemmAlgo::Parallel { threads: t_raw }
+        // Forced parallel still clamps the fan-out to the row count:
+        // with fewer rows than PAR_MIN_ROWS·threads the extra shares
+        // would be empty or degenerate (more partitions than rows), so
+        // the override forces *the parallel kernel*, not a specific
+        // share count. It skips only the FLOP threshold below.
+        return if t > 1 {
+            GemmAlgo::Parallel { threads: t }
         } else {
             GemmAlgo::Blocked
         };
     }
-    let t = t_raw.min((m / PAR_MIN_ROWS).max(1));
     if t <= 1 {
         return GemmAlgo::Blocked;
     }
@@ -780,6 +781,29 @@ mod tests {
         // Tiny products must not pay the fan-out cost regardless of the
         // pool size (8x8x8 = 1k flops << threshold).
         assert_eq!(select_gemm_algo(8, 8, 8), GemmAlgo::Blocked);
+    }
+
+    #[test]
+    fn gemm_forced_parallel_clamps_to_row_count() {
+        // Regression (ISSUE 7): `--gemm parallel` on a short-m GEMM used
+        // to return `Parallel { threads: t_raw }` without the
+        // m / PAR_MIN_ROWS clamp the auto path applies, yielding more
+        // shares than rows. The override must force the parallel
+        // *kernel*, never a degenerate partition count.
+        set_gemm_override("parallel").unwrap();
+        // m smaller than any plausible pool size: the clamp caps the
+        // fan-out at (m / PAR_MIN_ROWS).max(1) = 1 ⇒ Blocked.
+        let small = select_gemm_algo(PAR_MIN_ROWS - 1, 64, 64);
+        // m big enough for exactly two shares: threads ≤ m / PAR_MIN_ROWS.
+        let two = select_gemm_algo(2 * PAR_MIN_ROWS, 64, 64);
+        set_gemm_override("auto").unwrap();
+        assert_eq!(small, GemmAlgo::Blocked, "m < PAR_MIN_ROWS must stay serial");
+        if let GemmAlgo::Parallel { threads } = two {
+            assert!(
+                threads <= 2,
+                "forced parallel at m = 2·PAR_MIN_ROWS must clamp shares to 2, got {threads}"
+            );
+        }
     }
 
     #[test]

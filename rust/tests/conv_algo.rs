@@ -1,0 +1,329 @@
+//! Conv algorithm dispatch properties (ISSUE 7):
+//!
+//! 1. Equivalence grid: every `ConvAlgo` lowering matches the Direct
+//!    reference to ≤ 1e-5 for forward and `vjp_params` across tail
+//!    blocks, the `s + p < k` wavefront geometry, and batch-1 shapes,
+//!    at 1 and 4 threads. `vijp` has no alternative lowering, so a
+//!    forced override must leave it bit-for-bit untouched.
+//! 2. Determinism: a fixed `(algo, threads)` pair is bit-identical
+//!    run-to-run.
+//! 3. Autotune cache: a corrupt or stale cache file degrades to an
+//!    empty table (re-timing, never an error), and two processes
+//!    sharing one persisted cache file resolve identical algorithms and
+//!    compile identical plans (simulated here with `reload()`, which
+//!    drops all in-memory state exactly like a respawned worker).
+//!
+//! The override, cache path, and worker count are process-global, so
+//! every test serializes through a local mutex and restores what it
+//! changed via drop guards.
+
+use std::sync::Mutex;
+
+use moonwalk::nn::{Conv1d, Conv2d, Layer};
+use moonwalk::runtime::pool;
+use moonwalk::tensor::{assert_close, conv_algo, Tensor};
+use moonwalk::util::Rng;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    match LOCK.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// Restores the pool's thread count on drop (panic-safe).
+struct ThreadGuard(usize);
+impl Drop for ThreadGuard {
+    fn drop(&mut self) {
+        pool::set_threads(self.0);
+    }
+}
+
+fn with_threads<T>(t: usize, f: impl FnOnce() -> T) -> T {
+    let _guard = ThreadGuard(pool::threads());
+    pool::set_threads(t);
+    f()
+}
+
+/// Forces a conv algorithm until dropped, then restores `auto`.
+struct ForcedConv;
+impl ForcedConv {
+    fn engage(name: &str) -> ForcedConv {
+        conv_algo::set_conv_override(name).unwrap();
+        ForcedConv
+    }
+}
+impl Drop for ForcedConv {
+    fn drop(&mut self) {
+        let _ = conv_algo::set_conv_override("auto");
+    }
+}
+
+fn temp_cache(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("moonwalk_conv_{}_{name}.json", std::process::id()))
+}
+
+/// Point the process cache at a fresh temp file; restores an empty
+/// in-memory table on drop (the path itself stays — this test binary
+/// owns the process — but every test re-points it before use).
+struct CacheFile(std::path::PathBuf);
+impl CacheFile {
+    fn fresh(name: &str) -> CacheFile {
+        let p = temp_cache(name);
+        let _ = std::fs::remove_file(&p);
+        conv_algo::set_cache_path(p.to_str().unwrap());
+        conv_algo::reload();
+        CacheFile(p)
+    }
+}
+impl Drop for CacheFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+        conv_algo::reload();
+    }
+}
+
+/// Every non-Direct lowering × {tail-block, wavefront `s+p<k`, batch-1,
+/// stride-1 Winograd-eligible} geometries × threads {1, 4} matches the
+/// Direct reference for forward and `vjp_params`; `vijp` is untouched
+/// by the override (bit-for-bit).
+#[test]
+fn conv2d_lowerings_match_direct_across_grid() {
+    let _g = lock();
+    // (k, s, p, cin, cout, hw, n)
+    for &(k, s, p, cin, cout, hw, n) in &[
+        (3usize, 2usize, 1usize, 4usize, 4usize, 9usize, 3usize), // tail blocks
+        (5, 3, 1, 3, 3, 13, 2),                                   // wavefront: s+p<k
+        (3, 2, 1, 6, 3, 9, 1),                                    // batch-1 row-band
+        (3, 1, 1, 4, 6, 11, 2),                                   // stride-1: Winograd applies
+    ] {
+        let mut rng = Rng::new(900 + k as u64 + s as u64);
+        // vijp needs the submersive projection and a supported schedule
+        // (fast path or the strided wavefront); the stride-1 row exists
+        // for Winograd's forward/vjp_params coverage only.
+        let check_vijp = s > 1;
+        let conv = if check_vijp {
+            Conv2d::new_submersive(k, cin, cout, s, p, true, &mut rng)
+        } else {
+            Conv2d::new(k, cin, cout, s, p, true, &mut rng)
+        };
+        let x = Tensor::randn(&[n, hw, hw, cin], 1.0, &mut rng);
+        let (y, res) = conv.forward_res(&x, moonwalk::nn::ResidualKind::Minimal);
+        let g = Tensor::randn(y.shape(), 1.0, &mut rng);
+        let h = conv.vjp_input(&res, &g);
+
+        let (y_d, vw_d, vj_d) = {
+            let _f = ForcedConv::engage("direct");
+            with_threads(1, || {
+                (
+                    conv.forward(&x),
+                    conv.vjp_params(&x, &g),
+                    check_vijp.then(|| conv.vijp(&res, &h).unwrap()),
+                )
+            })
+        };
+        for algo in ["im2col", "winograd"] {
+            for t in [1usize, 4] {
+                let _f = ForcedConv::engage(algo);
+                let (y_a, vw_a, vj_a) = with_threads(t, || {
+                    (
+                        conv.forward(&x),
+                        conv.vjp_params(&x, &g),
+                        check_vijp.then(|| conv.vijp(&res, &h).unwrap()),
+                    )
+                });
+                let tag = format!("conv2d k{k}s{s}p{p} {cin}->{cout} n{n} {algo} t={t}");
+                assert_close(&y_a, &y_d, 1e-5, &format!("{tag} fwd"));
+                for (a, b) in vw_a.iter().zip(&vw_d) {
+                    assert_close(a, b, 1e-5, &format!("{tag} vjp_params"));
+                }
+                // vijp has no alternative lowering: the override must
+                // not change a single bit of its schedule at t=1.
+                if t == 1 {
+                    if let (Some(va), Some(vd)) = (&vj_a, &vj_d) {
+                        assert_eq!(va.data(), vd.data(), "{tag} vijp untouched");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn conv1d_im2col_matches_direct_across_grid() {
+    let _g = lock();
+    // (k, s, p, cin, cout, l, n)
+    for &(k, s, p, cin, cout, l, n) in &[
+        (3usize, 2usize, 1usize, 4usize, 4usize, 11usize, 3usize), // tail blocks
+        (5, 3, 1, 3, 3, 16, 2),                                    // wavefront geometry
+        (3, 1, 1, 5, 5, 19, 1),                                    // batch-1, stride-1
+    ] {
+        let mut rng = Rng::new(950 + k as u64 + l as u64);
+        let check_vijp = s > 1;
+        let conv = if check_vijp {
+            Conv1d::new_submersive(k, cin, cout, s, p, &mut rng)
+        } else {
+            Conv1d::new(k, cin, cout, s, p, false, &mut rng)
+        };
+        let x = Tensor::randn(&[n, l, cin], 1.0, &mut rng);
+        let (y, res) = conv.forward_res(&x, moonwalk::nn::ResidualKind::Minimal);
+        let g = Tensor::randn(y.shape(), 1.0, &mut rng);
+        let h = conv.vjp_input(&res, &g);
+
+        let (y_d, vw_d, vj_d) = {
+            let _f = ForcedConv::engage("direct");
+            with_threads(1, || {
+                (
+                    conv.forward(&x),
+                    conv.vjp_params(&x, &g),
+                    check_vijp.then(|| conv.vijp(&res, &h).unwrap()),
+                )
+            })
+        };
+        for t in [1usize, 4] {
+            let _f = ForcedConv::engage("im2col");
+            let (y_a, vw_a, vj_a) = with_threads(t, || {
+                (
+                    conv.forward(&x),
+                    conv.vjp_params(&x, &g),
+                    check_vijp.then(|| conv.vijp(&res, &h).unwrap()),
+                )
+            });
+            let tag = format!("conv1d k{k}s{s}p{p} n{n} im2col t={t}");
+            assert_close(&y_a, &y_d, 1e-5, &format!("{tag} fwd"));
+            for (a, b) in vw_a.iter().zip(&vw_d) {
+                assert_close(a, b, 1e-5, &format!("{tag} vjp_params"));
+            }
+            if t == 1 {
+                if let (Some(va), Some(vd)) = (&vj_a, &vj_d) {
+                    assert_eq!(va.data(), vd.data(), "{tag} vijp untouched");
+                }
+            }
+        }
+    }
+}
+
+/// A fixed `(algo, threads)` pair is bit-identical run-to-run — the
+/// dispatch layer adds no nondeterminism on top of the deterministic
+/// kernels.
+#[test]
+fn fixed_algo_and_threads_bit_deterministic() {
+    let _g = lock();
+    for algo in ["direct", "im2col", "winograd"] {
+        let _f = ForcedConv::engage(algo);
+        let run = || {
+            let mut rng = Rng::new(1234);
+            let conv = Conv2d::new(3, 4, 6, 1, 1, true, &mut rng);
+            let x = Tensor::randn(&[2, 11, 11, 4], 1.0, &mut rng);
+            let y = conv.forward(&x);
+            let g = Tensor::randn(y.shape(), 1.0, &mut rng);
+            let dw = conv.vjp_params(&x, &g);
+            (y, dw)
+        };
+        let (y_a, dw_a) = with_threads(4, run);
+        let (y_b, dw_b) = with_threads(4, run);
+        assert_eq!(y_a.data(), y_b.data(), "{algo} forward bit-identical");
+        for (a, b) in dw_a.iter().zip(&dw_b) {
+            assert_eq!(a.data(), b.data(), "{algo} vjp_params bit-identical");
+        }
+    }
+}
+
+/// Corrupt or version-stale cache files degrade to an empty table —
+/// re-timing territory, never an error — and the next `record` rewrites
+/// a loadable file.
+#[test]
+fn corrupt_or_stale_cache_falls_back_to_retiming() {
+    let _g = lock();
+    let cache = CacheFile::fresh("corrupt");
+    std::fs::write(&cache.0, b"{ not json at all").unwrap();
+    conv_algo::reload();
+    assert_eq!(conv_algo::cache_len(), 0, "corrupt file loads as empty");
+
+    std::fs::write(&cache.0, br#"{"version": 999, "entries": {}}"#).unwrap();
+    conv_algo::reload();
+    assert_eq!(conv_algo::cache_len(), 0, "stale version loads as empty");
+
+    // Calibration proceeds normally on the empty table and the recorded
+    // winner round-trips through the (rewritten) file.
+    let mut rng = Rng::new(77);
+    let conv = Conv2d::new(3, 3, 3, 1, 1, false, &mut rng);
+    let x = Tensor::randn(&[2, 9, 9, 3], 1.0, &mut rng);
+    let outcomes = conv.autotune_with(&x, 0, 1);
+    assert!(!outcomes.is_empty());
+    assert!(outcomes.iter().all(|o| !o.cached), "empty table means real timing");
+    conv_algo::reload();
+    assert!(
+        conv_algo::cache_len() >= outcomes.len(),
+        "record() rewrote a loadable cache file"
+    );
+}
+
+/// Two processes sharing one persisted cache file resolve identical
+/// algorithms and compile identical plan tables. Process B is simulated
+/// by `reload()`: all in-memory state is dropped and everything comes
+/// back from the shared file, exactly like a respawned replica worker.
+#[test]
+fn shared_cache_yields_identical_resolution_and_plans() {
+    let _g = lock();
+    use moonwalk::model::{build_cnn1d_fragmental, FragmentalCnn1dSpec};
+    use moonwalk::plan;
+
+    let _cache = CacheFile::fresh("shared");
+    let mut rng = Rng::new(31);
+    let spec = FragmentalCnn1dSpec {
+        input_len: 40,
+        channels: 4,
+        depth: 2,
+        ..Default::default()
+    };
+    let net = build_cnn1d_fragmental(&spec, &mut rng);
+    let in_shape = [2usize, 40, 3];
+
+    // Process A: calibrate, then compile a plan with the timed column.
+    let outcomes_a = with_threads(2, || plan::calibrate_convs(&net, &in_shape)).unwrap();
+    assert!(!outcomes_a.is_empty());
+    let plan_a = with_threads(2, || -> anyhow::Result<String> {
+        let mut probes = plan::probe_network(&net, &in_shape, plan::DEFAULT_FRAG_BLOCKS)?;
+        plan::attach_timed(&net, &in_shape, &mut probes);
+        Ok(plan::summary_table(&plan::compile(&probes, None)?, &probes))
+    })
+    .unwrap();
+
+    // Process B: fresh in-memory state, same file. No re-timing — every
+    // op is served cached — and the compiled plan table is identical.
+    conv_algo::reload();
+    let outcomes_b = with_threads(2, || plan::calibrate_convs(&net, &in_shape)).unwrap();
+    assert_eq!(outcomes_a.len(), outcomes_b.len());
+    for (a, b) in outcomes_a.iter().zip(&outcomes_b) {
+        assert_eq!(a.key, b.key, "same op keys in both processes");
+        assert_eq!(a.algo, b.algo, "same winner for {}", a.key);
+        assert!(b.cached, "process B must be served from the shared file");
+        assert_eq!(a.best_ms, b.best_ms, "cached ms is the recorded ms");
+    }
+    let plan_b = with_threads(2, || -> anyhow::Result<String> {
+        let mut probes = plan::probe_network(&net, &in_shape, plan::DEFAULT_FRAG_BLOCKS)?;
+        plan::attach_timed(&net, &in_shape, &mut probes);
+        Ok(plan::summary_table(&plan::compile(&probes, None)?, &probes))
+    })
+    .unwrap();
+    assert_eq!(plan_a, plan_b, "shared cache compiles identical plan tables");
+}
+
+/// The forced-override CLI surface: unknown names error, valid names
+/// round-trip through `conv_override`.
+#[test]
+fn override_names_validated_and_visible() {
+    let _g = lock();
+    assert!(conv_algo::set_conv_override("fft").is_err());
+    {
+        let _f = ForcedConv::engage("winograd");
+        assert_eq!(
+            conv_algo::conv_override(),
+            Some(conv_algo::ConvAlgo::Winograd)
+        );
+    }
+    assert_eq!(conv_algo::conv_override(), None, "guard restored auto");
+}

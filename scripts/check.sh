@@ -15,13 +15,18 @@
 # tier-1 from PR 4 on), and finally the perf_ops --quick smoke, which
 # emits BENCH_perf_ops.json (including the replicas {1,2} scaling
 # rows, the local/unix transport-overhead rows, the planner_rows
-# budget sweep and the fault_rows recovery smoke; field schema in
-# docs/BENCH_SCHEMA.md) so the perf trajectory stays diffable across
-# commits. Exits non-zero on the first failure.
+# budget sweep, the fault_rows recovery smoke and the conv_rows
+# autotune family; field schema in docs/BENCH_SCHEMA.md) so the perf
+# trajectory stays diffable across commits. Exits non-zero on the
+# first failure.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo build --release
+# Lint gate (PR 7): warnings are errors across every target. Accepted
+# style lints are allowed centrally in Cargo.toml's [lints.clippy]
+# table rather than scattered as inline #[allow]s.
+cargo clippy --all-targets -- -D warnings
 cargo test -q
 cargo test -q --test distributed
 cargo test -q --test transport
