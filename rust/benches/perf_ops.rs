@@ -15,9 +15,14 @@
 //! persisted cache file), the budgeted-planner family (`planner_rows`:
 //! the per-layer mixed-strategy plan vs the best whole-network engine
 //! across a byte budget sweep — predicted and measured peaks plus the
-//! budget invariant) and the fault-injection recovery smoke
+//! budget invariant), the fault-injection recovery smoke
 //! (`fault_rows`: killed / hung worker detect-respawn-replay cycle
-//! time vs the clean step) for the §Perf log. Families that need the
+//! time vs the clean step) and the tracing-overhead family
+//! (`trace_rows`: span capture off vs on step medians, events per
+//! step, and the enabled-mode overhead ratio — the zero-cost-off
+//! contract of `docs/OBSERVABILITY.md`) for the §Perf log. The
+//! `metrics` field carries an `obs::metrics::snapshot()` of the run's
+//! counter/gauge registry. Families that need the
 //! worker subprocess binary emit `skipped: true` rows when it is
 //! absent instead of dropping the rows. The full field-by-field schema
 //! of the emitted `BENCH_perf_ops.json` lives in
@@ -839,6 +844,85 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // Tracing-overhead family (ISSUE 8): a small Moonwalk gradient step
+    // with span capture disabled (the default) and enabled. The contract
+    // (docs/OBSERVABILITY.md, ARCHITECTURE.md §2.6) is that the disabled
+    // path is one relaxed atomic load per would-be span, so
+    // `overhead_vs_off` on the enabled row bounds the *worst case* and
+    // the disabled row's step median must sit within noise (< 2%) of
+    // any untraced build. When the whole bench runs under `--trace` the
+    // span rings belong to the export — draining them here would drop
+    // the events from the merged trace — so the family emits `skipped`
+    // rows instead.
+    println!("\ntracing overhead (moonwalk, 2x16x16 ch8 depth 3):");
+    println!(
+        "{:<10} {:>12} {:>14} {:>16}",
+        "spans", "step_ms", "events/step", "overhead_vs_off"
+    );
+    let mut trace_rows: Vec<Json> = Vec::new();
+    if moonwalk::obs::export::trace_active() {
+        println!("(skipped: --trace active; span buffers belong to the export)");
+        for mode in [false, true] {
+            trace_rows.push(Json::from_pairs(vec![
+                ("enabled", mode.into()),
+                ("skipped", true.into()),
+                ("reason", "--trace active".into()),
+            ]));
+        }
+    } else {
+        let spec = SubmersiveCnn2dSpec {
+            input_hw: 16,
+            channels: 8,
+            depth: 3,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(8);
+        let net = build_cnn2d(&spec, &mut rng);
+        let x = Tensor::randn(&[2, 16, 16, 3], 1.0, &mut rng);
+        let engine = engine_by_name("moonwalk", 4, 0, 0)?;
+        let was = moonwalk::obs::span::enabled();
+        let warmup = 2;
+        let trace_iters = iters.min(10);
+        let mut off_median = f64::NAN;
+        for mode in [false, true] {
+            moonwalk::obs::span::set_enabled(mode);
+            // Start each mode from empty rings so the event count below
+            // is attributable to exactly this mode's calls.
+            let _ = moonwalk::obs::span::drain_all();
+            let st = bench(warmup, trace_iters, || {
+                engine
+                    .compute_streaming(&net, &x, &MeanLoss, &mut |_, g| drop(g))
+                    .unwrap();
+            });
+            let events: usize = moonwalk::obs::span::drain_all()
+                .iter()
+                .map(|t| t.events.len())
+                .sum();
+            let events_per_step = events as f64 / (warmup + trace_iters) as f64;
+            let overhead = if mode {
+                (st.median - off_median) / off_median.max(1e-12)
+            } else {
+                off_median = st.median;
+                0.0
+            };
+            println!(
+                "{:<10} {:>12.3} {:>14.1} {:>15.2}%",
+                if mode { "on" } else { "off" },
+                st.median_ms(),
+                events_per_step,
+                overhead * 1e2
+            );
+            trace_rows.push(Json::from_pairs(vec![
+                ("enabled", mode.into()),
+                ("skipped", false.into()),
+                ("step_ms", st.median_ms().into()),
+                ("events_per_step", events_per_step.into()),
+                ("overhead_vs_off", overhead.into()),
+            ]));
+        }
+        moonwalk::obs::span::set_enabled(was);
+    }
+
     // Pool lifecycle + arena recycle-rate snapshot for the run (monotone
     // process counters — diff across runs at equal workloads).
     let pstats = pool::stats();
@@ -867,6 +951,8 @@ fn main() -> anyhow::Result<()> {
         ("transport_rows", Json::Arr(transport_rows)),
         ("planner_rows", Json::Arr(planner_rows)),
         ("fault_rows", Json::Arr(fault_rows)),
+        ("trace_rows", Json::Arr(trace_rows)),
+        ("metrics", moonwalk::obs::metrics::snapshot()),
         ("dispatch_us", dispatch_us.into()),
         (
             "pool",
@@ -888,5 +974,8 @@ fn main() -> anyhow::Result<()> {
     ]);
     std::fs::write(json_path, out.to_string())?;
     println!("\nwrote {json_path}");
+    if let Some(path) = moonwalk::obs::export::finish()? {
+        println!("trace written to {}", path.display());
+    }
     Ok(())
 }

@@ -34,23 +34,31 @@ impl GradEngine for Backprop {
         let mut residuals: Vec<Option<Residual>> = Vec::with_capacity(net.depth());
         let mut xs: Vec<Tensor> = Vec::with_capacity(net.depth() + 1);
         xs.push(x0.clone());
-        for layer in &net.layers {
-            let (y, res) = layer.forward_res(xs.last().unwrap(), ResidualKind::Minimal);
-            residuals.push(Some(res));
-            xs.push(y);
+        {
+            let _sp = crate::span!("backprop.phase1");
+            for (i, layer) in net.layers.iter().enumerate() {
+                let _sl = crate::span!("phase1.forward", layer = i);
+                let (y, res) = layer.forward_res(xs.last().unwrap(), ResidualKind::Minimal);
+                residuals.push(Some(res));
+                xs.push(y);
+            }
         }
         let loss_val = loss.value(xs.last().unwrap());
 
         // Phase II: reverse sweep with vjp; the tape shrinks as it is
         // consumed (frameworks release residuals the same way).
         let mut g = loss.grad(xs.last().unwrap());
-        for (i, layer) in net.layers.iter().enumerate().rev() {
-            xs.truncate(i + 1); // drop activation x_{i+1}
-            let res = residuals[i].take().expect("residual consumed once");
-            if layer.n_params() > 0 {
-                sink(i, layer.vjp_params(&xs[i], &g));
+        {
+            let _sp = crate::span!("backprop.reverse");
+            for (i, layer) in net.layers.iter().enumerate().rev() {
+                let _sl = crate::span!("phase2.vjp", layer = i);
+                xs.truncate(i + 1); // drop activation x_{i+1}
+                let res = residuals[i].take().expect("residual consumed once");
+                if layer.n_params() > 0 {
+                    sink(i, layer.vjp_params(&xs[i], &g));
+                }
+                g = layer.vjp_input(&res, &g);
             }
-            g = layer.vjp_input(&res, &g);
         }
         Ok(loss_val)
     }

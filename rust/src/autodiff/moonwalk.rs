@@ -132,10 +132,14 @@ impl Moonwalk {
         // Phase I: minimal residuals only.
         let mut residuals: Vec<Option<Residual>> = Vec::with_capacity(net.depth());
         let mut x = x0.clone();
-        for layer in &net.layers {
-            let (y, res) = layer.forward_res(&x, ResidualKind::Minimal);
-            residuals.push(Some(res));
-            x = y;
+        {
+            let _sp = crate::span!("moonwalk.phase1");
+            for (i, layer) in net.layers.iter().enumerate() {
+                let _sl = crate::span!("phase1.forward", layer = i);
+                let (y, res) = layer.forward_res(&x, ResidualKind::Minimal);
+                residuals.push(Some(res));
+                x = y;
+            }
         }
         let loss_val = loss.value(&x);
 
@@ -143,10 +147,14 @@ impl Moonwalk {
         let mut aids: Vec<CotangentAid> = (0..net.depth()).map(|_| CotangentAid::None).collect();
         let mut h = loss.grad(&x);
         drop(x);
-        for (i, layer) in net.layers.iter().enumerate().rev() {
-            let res = residuals[i].take().expect("consumed once");
-            aids[i] = capture_aid(layer.as_ref(), &plan[i], &h)?;
-            h = layer.vjp_input(&res, &h);
+        {
+            let _sp = crate::span!("moonwalk.phase2");
+            for (i, layer) in net.layers.iter().enumerate().rev() {
+                let _sl = crate::span!("phase2.cotangent", layer = i);
+                let res = residuals[i].take().expect("consumed once");
+                aids[i] = capture_aid(layer.as_ref(), &plan[i], &h)?;
+                h = layer.vjp_input(&res, &h);
+            }
         }
         Ok((loss_val, h, aids))
     }
@@ -175,11 +183,15 @@ impl Moonwalk {
         // Phase I: forward storing only boundary activations.
         let mut boundary: Vec<Option<Tensor>> = vec![None; segments];
         let mut x = x0.clone();
-        for (i, layer) in net.layers.iter().enumerate() {
-            if let Some(seg) = starts.iter().position(|&s| s == i) {
-                boundary[seg] = Some(x.clone());
+        {
+            let _sp = crate::span!("moonwalk.phase1");
+            for (i, layer) in net.layers.iter().enumerate() {
+                let _sl = crate::span!("phase1.forward", layer = i);
+                if let Some(seg) = starts.iter().position(|&s| s == i) {
+                    boundary[seg] = Some(x.clone());
+                }
+                x = layer.forward(&x);
             }
-            x = layer.forward(&x);
         }
         let loss_val = loss.value(&x);
         let mut h = loss.grad(&x);
@@ -187,23 +199,28 @@ impl Moonwalk {
 
         // Phase II: reverse, one segment at a time.
         let mut aids: Vec<CotangentAid> = (0..depth).map(|_| CotangentAid::None).collect();
-        for seg in (0..segments).rev() {
-            let lo = starts[seg];
-            let hi = ((seg + 1) * seg_len).min(depth);
-            let x_seg = boundary[seg].take().expect("boundary stored");
-            // Rematerialize minimal residuals inside the segment.
-            let mut residuals: Vec<Option<Residual>> = Vec::with_capacity(hi - lo);
-            let mut xs = x_seg;
-            for layer in &net.layers[lo..hi] {
-                let (y, res) = layer.forward_res(&xs, ResidualKind::Minimal);
-                residuals.push(Some(res));
-                xs = y;
-            }
-            drop(xs);
-            for i in (lo..hi).rev() {
-                let res = residuals[i - lo].take().expect("consumed once");
-                aids[i] = capture_aid(net.layers[i].as_ref(), &plan[i], &h)?;
-                h = net.layers[i].vjp_input(&res, &h);
+        {
+            let _sp = crate::span!("moonwalk.phase2");
+            for seg in (0..segments).rev() {
+                let _ss = crate::span!("phase2.segment", segment = seg);
+                let lo = starts[seg];
+                let hi = ((seg + 1) * seg_len).min(depth);
+                let x_seg = boundary[seg].take().expect("boundary stored");
+                // Rematerialize minimal residuals inside the segment.
+                let mut residuals: Vec<Option<Residual>> = Vec::with_capacity(hi - lo);
+                let mut xs = x_seg;
+                for layer in &net.layers[lo..hi] {
+                    let (y, res) = layer.forward_res(&xs, ResidualKind::Minimal);
+                    residuals.push(Some(res));
+                    xs = y;
+                }
+                drop(xs);
+                for i in (lo..hi).rev() {
+                    let _sl = crate::span!("phase2.cotangent", layer = i);
+                    let res = residuals[i - lo].take().expect("consumed once");
+                    aids[i] = capture_aid(net.layers[i].as_ref(), &plan[i], &h)?;
+                    h = net.layers[i].vjp_input(&res, &h);
+                }
             }
         }
         Ok((loss_val, h, aids))
@@ -267,11 +284,16 @@ impl GradEngine for Moonwalk {
         // Nothing outlives one iteration except (x, h).
         let mut x = x0.clone();
         let mut h = Some(h0);
+        let _sp = crate::span!("moonwalk.phase3");
         for (i, layer) in net.layers.iter().enumerate() {
             let (y, res) = layer.forward_res(&x, ResidualKind::Minimal);
             let h_out = match (std::mem::replace(&mut aids[i], CotangentAid::None), &plan[i]) {
-                (CotangentAid::Checkpoint(ck), _) => Some(ck),
+                (CotangentAid::Checkpoint(ck), _) => {
+                    crate::obs::span::instant("phase3.checkpoint", Some(("layer", i as i64)));
+                    Some(ck)
+                }
                 (CotangentAid::Fragment(frag), _) => {
+                    let _sf = crate::span!("phase3.fragment", layer = i);
                     let h_in = h.as_ref().ok_or_else(|| {
                         anyhow::anyhow!("fragment at layer {i} needs an intact chain")
                     })?;
@@ -279,6 +301,7 @@ impl GradEngine for Moonwalk {
                 }
                 (CotangentAid::None, LayerPlan::SkipBroken) => None,
                 (CotangentAid::None, _) => {
+                    let _sv = crate::span!("phase3.vijp", layer = i);
                     let h_in = h.as_ref().ok_or_else(|| {
                         anyhow::anyhow!("vijp at layer {i} needs an intact chain")
                     })?;
@@ -288,6 +311,7 @@ impl GradEngine for Moonwalk {
                 }
             };
             if layer.n_params() > 0 {
+                let _sg = crate::span!("phase3.vjp_params", layer = i);
                 let h_out = h_out.as_ref().expect("plan anchors parameterized layers");
                 sink(i, layer.vjp_params(&x, h_out)); // Eq. 10
             }

@@ -203,10 +203,14 @@ impl GradEngine for PlannedEngine {
         // Moonwalk — the plan only changes what Phase II preserves).
         let mut residuals = Vec::with_capacity(net.depth());
         let mut x = x0.clone();
-        for layer in &net.layers {
-            let (y, res) = layer.forward_res(&x, ResidualKind::Minimal);
-            residuals.push(Some(res));
-            x = y;
+        {
+            let _sp = crate::span!("planned.phase1");
+            for (i, layer) in net.layers.iter().enumerate() {
+                let _sl = crate::span!("phase1.forward", layer = i);
+                let (y, res) = layer.forward_res(&x, ResidualKind::Minimal);
+                residuals.push(Some(res));
+                x = y;
+            }
         }
         let loss_val = loss.value(&x);
 
@@ -219,19 +223,23 @@ impl GradEngine for PlannedEngine {
         let mut aids: Vec<Aid> = (0..net.depth()).map(|_| Aid::None).collect();
         let mut h = loss.grad(&x);
         drop(x);
-        for (i, layer) in net.layers.iter().enumerate().rev() {
-            let res = residuals[i].take().expect("consumed once");
-            let h_next = layer.vjp_input(&res, &h);
-            aids[i] = match compiled.decisions[i].strategy {
-                Strategy::Vijp | Strategy::Residual(ResidualTier::Minimal) => Aid::None,
-                Strategy::Fragment { block } => {
-                    Aid::Fragment(layer.fragment_capture(&h, block).map_err(|e| {
-                        anyhow::anyhow!("planned fragment capture failed at layer {i}: {e}")
-                    })?)
-                }
-                Strategy::Residual(ResidualTier::Full) => Aid::Checkpoint(h),
-            };
-            h = h_next;
+        {
+            let _sp = crate::span!("planned.phase2");
+            for (i, layer) in net.layers.iter().enumerate().rev() {
+                let _sl = crate::span!("phase2.cotangent", layer = i);
+                let res = residuals[i].take().expect("consumed once");
+                let h_next = layer.vjp_input(&res, &h);
+                aids[i] = match compiled.decisions[i].strategy {
+                    Strategy::Vijp | Strategy::Residual(ResidualTier::Minimal) => Aid::None,
+                    Strategy::Fragment { block } => {
+                        Aid::Fragment(layer.fragment_capture(&h, block).map_err(|e| {
+                            anyhow::anyhow!("planned fragment capture failed at layer {i}: {e}")
+                        })?)
+                    }
+                    Strategy::Residual(ResidualTier::Full) => Aid::Checkpoint(h),
+                };
+                h = h_next;
+            }
         }
 
         // Phase III: forward sweep — recompute activations, obtain each
@@ -239,6 +247,7 @@ impl GradEngine for PlannedEngine {
         // gradients, drop everything before moving on.
         let mut x = x0.clone();
         let mut h = Some(h);
+        let _sp = crate::span!("planned.phase3");
         for (i, layer) in net.layers.iter().enumerate() {
             let (y, res) = layer.forward_res(&x, ResidualKind::Minimal);
             let strategy = compiled.decisions[i].strategy;
@@ -249,8 +258,12 @@ impl GradEngine for PlannedEngine {
             // bound counts on this).
             let h_in = h.take();
             let h_out = match (std::mem::replace(&mut aids[i], Aid::None), strategy) {
-                (Aid::Checkpoint(ck), _) => Some(ck),
+                (Aid::Checkpoint(ck), _) => {
+                    crate::obs::span::instant("phase3.checkpoint", Some(("layer", i as i64)));
+                    Some(ck)
+                }
                 (Aid::Fragment(frag), _) => {
+                    let _sf = crate::span!("phase3.fragment", layer = i);
                     let h_in = h_in.as_ref().ok_or_else(|| {
                         anyhow::anyhow!("planned fragment at layer {i} needs an intact chain")
                     })?;
@@ -260,6 +273,7 @@ impl GradEngine for PlannedEngine {
                 }
                 (Aid::None, Strategy::Residual(ResidualTier::Minimal)) => None,
                 (Aid::None, _) => {
+                    let _sv = crate::span!("phase3.vijp", layer = i);
                     let h_in = h_in.as_ref().ok_or_else(|| {
                         anyhow::anyhow!("planned vijp at layer {i} needs an intact chain")
                     })?;
@@ -270,6 +284,7 @@ impl GradEngine for PlannedEngine {
             };
             drop(h_in);
             if layer.n_params() > 0 {
+                let _sg = crate::span!("phase3.vjp_params", layer = i);
                 let h_out = h_out
                     .as_ref()
                     .expect("validated plans anchor parameterized layers");

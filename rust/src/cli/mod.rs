@@ -26,6 +26,10 @@ use std::collections::BTreeMap;
 /// `--heartbeat-ms MS` (worker liveness ticks while computing; `0`
 /// disables, leaving only the step deadline to catch hangs).
 ///
+/// `--trace PATH` (env spelling `MOONWALK_TRACE`) enables span capture
+/// and arranges for a merged Chrome trace-event JSON at PATH — entry
+/// points call `crate::obs::export::finish()` on success to write it.
+///
 /// The per-run `--budget` knob is *not* global state — resolve
 /// it with [`budget_bytes`] where an engine is built. Call before any
 /// tensor work. The persistent worker team is prewarmed here so the
@@ -78,6 +82,13 @@ pub fn configure_runtime(args: &Args) -> anyhow::Result<()> {
         }
         if let Some(ms) = args.get_usize_opt("heartbeat-ms")? {
             supervisor::set_heartbeat_ms(ms as u64);
+        }
+    }
+    if let Some(path) = args.get("trace") {
+        crate::obs::export::set_trace_path(path)?;
+    } else if let Ok(path) = std::env::var("MOONWALK_TRACE") {
+        if !path.trim().is_empty() {
+            crate::obs::export::set_trace_path(path.trim())?;
         }
     }
     crate::runtime::pool::prewarm();

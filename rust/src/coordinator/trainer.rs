@@ -64,6 +64,16 @@ pub struct TrainReport {
     /// workers after a retry budget was exhausted (0 on a fault-free
     /// run).
     pub failovers: usize,
+    /// Heartbeat-grace expiries the supervisor hit during this run
+    /// (delta of the `supervisor.heartbeat_misses` metric; 0 without a
+    /// socket transport or on a healthy run).
+    pub heartbeat_misses: u64,
+    /// Dead workers respawned during this run (delta of the
+    /// `supervisor.respawns` metric).
+    pub respawns: u64,
+    /// Milliseconds spent sleeping in retry backoff during this run
+    /// (delta of the `supervisor.backoff_wait_ms` metric).
+    pub backoff_wait_ms: u64,
 }
 
 /// Classification trainer binding a network, engine, optimizer and data.
@@ -176,6 +186,12 @@ impl<'a> Trainer<'a> {
         let mut retries_total = 0usize;
         let mut failovers_total = 0usize;
         let heartbeat_ms = group.heartbeat_ms();
+        // Supervisor recovery counters are process-global (they also move
+        // under other groups/tests in this process), so the run and each
+        // step report deltas against baselines captured here.
+        let hb0 = crate::obs::metrics::counter("supervisor.heartbeat_misses");
+        let rs0 = crate::obs::metrics::counter("supervisor.respawns");
+        let bw0 = crate::obs::metrics::counter("supervisor.backoff_wait_ms");
         let timer = Timer::start();
         let depth = self.net.depth();
         // The prefetch producer lives for the duration of the step loop:
@@ -183,6 +199,7 @@ impl<'a> Trainer<'a> {
         std::thread::scope(|scope| -> anyhow::Result<()> {
             let prefetch = Prefetcher::spawn(scope, plan, steps * accum);
             for step in 1..=steps {
+                let _step_span = crate::span!("train.step", step = step);
                 // Push the optimizer's latest parameters to every
                 // replica before the step: a no-op in-process, the full
                 // upload (+ dead-worker respawn) over a remote
@@ -326,6 +343,27 @@ impl<'a> Trainer<'a> {
                             ("failovers", step_stats.failovers.into()),
                             ("members", group.members().into()),
                             ("heartbeat_ms", (heartbeat_ms as usize).into()),
+                            // Supervisor recovery stats, cumulative since
+                            // the run started (deltas of the process-global
+                            // obs::metrics counters — see TrainReport).
+                            (
+                                "heartbeat_misses",
+                                (crate::obs::metrics::counter("supervisor.heartbeat_misses")
+                                    .saturating_sub(hb0) as usize)
+                                    .into(),
+                            ),
+                            (
+                                "respawns",
+                                (crate::obs::metrics::counter("supervisor.respawns")
+                                    .saturating_sub(rs0) as usize)
+                                    .into(),
+                            ),
+                            (
+                                "backoff_wait_ms",
+                                (crate::obs::metrics::counter("supervisor.backoff_wait_ms")
+                                    .saturating_sub(bw0) as usize)
+                                    .into(),
+                            ),
                             // Execution-planner signals: the compiled
                             // plan's predicted peak (0 when the engine
                             // has no plan) next to this step's measured
@@ -348,6 +386,9 @@ impl<'a> Trainer<'a> {
                             ("pool_parks", (pool1.parks - pool0.parks).into()),
                             ("pool_workers", pool1.workers_spawned.into()),
                         ]))?;
+                        // Flush per step so a crash (or an external tail
+                        // -f) never loses the row that was just logged.
+                        w.flush()?;
                     }
                 }
             }
@@ -377,6 +418,11 @@ impl<'a> Trainer<'a> {
             planned_peak_bytes: self.engine.planned_peak_bytes(),
             retries: retries_total,
             failovers: failovers_total,
+            heartbeat_misses: crate::obs::metrics::counter("supervisor.heartbeat_misses")
+                .saturating_sub(hb0),
+            respawns: crate::obs::metrics::counter("supervisor.respawns").saturating_sub(rs0),
+            backoff_wait_ms: crate::obs::metrics::counter("supervisor.backoff_wait_ms")
+                .saturating_sub(bw0),
         })
     }
 

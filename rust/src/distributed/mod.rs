@@ -307,6 +307,7 @@ impl ReplicaGroup {
     /// transports this must run after every parameter update (and after
     /// a failed step — it is also what respawns dead workers).
     pub fn sync(&self, net: &Network) -> anyhow::Result<()> {
+        let _sp = crate::span!("transport.broadcast");
         crate::util::lock_ignore_poison(&self.transport).broadcast(net)
     }
 
@@ -368,6 +369,7 @@ impl ReplicaGroup {
         op: ReduceOp,
         sink: &(dyn Fn(usize, Vec<Tensor>) + Sync),
     ) -> anyhow::Result<ReplicaStep> {
+        let _sp = crate::span!("transport.step");
         crate::util::lock_ignore_poison(&self.transport).step(net, engine, shards, op, sink)
     }
 
@@ -401,11 +403,21 @@ impl ReplicaGroup {
         loop {
             for _ in 0..policy.retries {
                 stats.retries += 1;
+                crate::obs::metrics::counter_add("step.retries", 1);
+                crate::obs::span::instant(
+                    "supervisor.retry",
+                    Some(("attempt", stats.retries as i64)),
+                );
                 crate::log_warn!(
                     "step failed ({last_err:#}); retry {} after backoff",
                     stats.retries
                 );
-                std::thread::sleep(backoff.delay());
+                let delay = backoff.delay();
+                crate::obs::metrics::counter_add(
+                    "supervisor.backoff_wait_ms",
+                    delay.as_millis() as u64,
+                );
+                std::thread::sleep(delay);
                 // Re-sync respawns whatever died and re-uploads params;
                 // optimizer state was never touched, so the replay is
                 // exact.
@@ -433,6 +445,11 @@ impl ReplicaGroup {
                 )));
             }
             stats.failovers += 1;
+            crate::obs::metrics::counter_add("step.failovers", 1);
+            crate::obs::span::instant(
+                "supervisor.failover",
+                Some(("survivors", (members - 1) as i64)),
+            );
             crate::log_warn!(
                 "step unrecoverable at {members} members; failing over to {} survivor(s)",
                 members - 1

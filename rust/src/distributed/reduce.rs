@@ -235,9 +235,11 @@ impl StreamingAllReduce {
             slots[bucket].take().expect("slot just filled").parts
         };
         let t = Timer::start();
+        let _sp = crate::span!("reduce.bucket", bucket = bucket);
         let mut out = Vec::with_capacity(n_members);
         for (pos, layer_parts) in slot_parts.into_iter().enumerate() {
             let member_layer = self.members[bucket][pos];
+            let _sl = crate::span!("reduce.layer", layer = member_layer);
             let mut parts = layer_parts.into_iter().map(|p| p.expect("counted part"));
             let mut acc = parts.next().expect("replicas >= 1");
             for part in parts {

@@ -608,6 +608,13 @@ impl SocketCoordinator {
     /// liveness check and the write.
     pub(crate) fn broadcast(&mut self, net: &Network) -> anyhow::Result<()> {
         let dead = self.dead();
+        if !dead.is_empty() {
+            crate::obs::metrics::counter_add("supervisor.respawns", dead.len() as u64);
+            crate::obs::span::instant(
+                "supervisor.respawn",
+                Some(("workers", dead.len() as i64)),
+            );
+        }
         self.establish(&dead)?;
         let layers: Vec<Vec<&Tensor>> = net.layers.iter().map(|l| l.params()).collect();
         for r in 0..self.members {
@@ -616,6 +623,8 @@ impl SocketCoordinator {
                 if let Some(mut conn) = self.conns[r].take() {
                     conn.kill();
                 }
+                crate::obs::metrics::counter_add("supervisor.respawns", 1);
+                crate::obs::span::instant("supervisor.respawn", Some(("workers", 1)));
                 self.establish(&[r])
                     .map_err(|e| e.context(format!("respawning replica {r} mid-broadcast")))?;
                 self.send_params(r, &layers)
@@ -835,6 +844,8 @@ fn drive_slot(
                     }
                     if let Some(grace) = dl.grace() {
                         if last_activity.elapsed() > grace {
+                            crate::obs::metrics::counter_add("supervisor.heartbeat_misses", 1);
+                            crate::obs::span::instant("supervisor.heartbeat_miss", None);
                             return Err(StepFailure {
                                 fatal: true,
                                 err: anyhow::anyhow!(

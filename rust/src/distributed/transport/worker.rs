@@ -194,6 +194,7 @@ fn serve_framed(
                             .map_err(|e| e.context(format!("replica {replica}: param import")))?;
                     }
                     Ok(Msg::Step { x, loss }) => {
+                        let _ss = crate::span!("worker.step", step = served);
                         let sabotage = take_sabotage(&mut faults, served);
                         served += 1;
                         if sabotage == Some(Sabotage::Hang) {
@@ -269,6 +270,10 @@ fn serve_framed(
 /// `--connect-tcp` (`host:port`) and serve the protocol.
 pub fn run(args: &Args) -> anyhow::Result<()> {
     let replica = args.get_usize("replica", 0)?;
+    // Enable span capture when the coordinator is tracing (it exports
+    // `MOONWALK_TRACE_DIR` before spawning us); the spool file written
+    // on exit is merged into the coordinator's Chrome trace.
+    crate::obs::export::worker_init_from_env();
     if let Some(addr) = args.get("connect-tcp") {
         // The coordinator may still be binding (or briefly down between
         // respawns on a multi-host run): retry with backoff for the
@@ -288,7 +293,9 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
             }
         };
         stream.set_nodelay(true)?;
-        return serve_stream(SockStream::Tcp(stream), replica);
+        let res = serve_stream(SockStream::Tcp(stream), replica);
+        let _ = crate::obs::export::write_worker_file(replica);
+        return res;
     }
     let path = args
         .get("connect")
@@ -297,5 +304,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         })?;
     let stream = UnixStream::connect(path)
         .map_err(|e| anyhow::anyhow!("connecting to coordinator at {path}: {e}"))?;
-    serve_stream(SockStream::Unix(stream), replica)
+    let res = serve_stream(SockStream::Unix(stream), replica);
+    let _ = crate::obs::export::write_worker_file(replica);
+    res
 }

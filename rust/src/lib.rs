@@ -51,6 +51,11 @@
 //!   behind the `xla` feature) that loads the AOT artifacts produced by
 //!   `python/compile/aot.py` (JAX/Pallas → HLO text) and executes them
 //!   from the Rust hot path; Python never runs at training time.
+//! * [`obs`] — zero-cost-off span tracing (`--trace out.trace.json`
+//!   emits a Perfetto-loadable Chrome trace of the Phase I–III / pool /
+//!   arena / transport timeline, with per-span memory samples) plus a
+//!   typed metrics registry whose `snapshot()` feeds the trainer JSONL
+//!   stream and `BENCH_perf_ops.json`.
 //! * [`util`] / [`cli`] — in-tree substrates (JSON codec, PCG64 RNG, CLI
 //!   parser, timing harness) since the offline build has no access to
 //!   serde/clap/criterion/rand.
@@ -81,6 +86,7 @@ pub mod distributed;
 pub mod memsim;
 pub mod model;
 pub mod nn;
+pub mod obs;
 pub mod plan;
 pub mod runtime;
 pub mod tensor;

@@ -51,6 +51,11 @@
 //!   `0` disables). Env spellings: `MOONWALK_STEP_TIMEOUT`,
 //!   `MOONWALK_ACCEPT_TIMEOUT`, `MOONWALK_HELLO_TIMEOUT` (seconds),
 //!   `MOONWALK_HEARTBEAT_MS`.
+//! * `--trace PATH` — record a span trace of the run and write it as
+//!   Chrome trace-event JSON at PATH (load at <https://ui.perfetto.dev>;
+//!   `MOONWALK_TRACE` is the env spelling). Covers every subcommand;
+//!   with a socket transport the worker subprocesses' spans are merged
+//!   into the same file. See `docs/OBSERVABILITY.md`.
 //! * Fault tolerance: `--step-retries N` (replay a failed step N times
 //!   per membership level, default 2), `--failover` (after the retry
 //!   budget, shrink onto surviving workers instead of aborting),
@@ -264,6 +269,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             None => String::new(),
         }
     );
+    if report.heartbeat_misses + report.respawns > 0 || report.backoff_wait_ms > 0 {
+        println!(
+            "supervisor: heartbeat_misses={} respawns={} backoff_wait_ms={}",
+            report.heartbeat_misses, report.respawns, report.backoff_wait_ms
+        );
+    }
     Ok(())
 }
 
@@ -500,12 +511,21 @@ fn main() {
                  [--transport local|unix|tcp] [--listen HOST:PORT] [--remote-workers K] \
                  [--step-timeout S] [--heartbeat-ms MS] [--step-retries N] [--failover] \
                  [--grad-accum K] [--fault SPEC] [--engine NAME] [--budget BYTES] \
+                 [--trace out.trace.json] \
                  [--conv-algo auto|direct|im2col|winograd] [--conv-cache PATH] ...\n\
                  (got {other:?}; see README.md)"
             );
             std::process::exit(2);
         }
     };
+    // Flush the span capture into the merged Chrome trace (a no-op
+    // without --trace / MOONWALK_TRACE). Runs also after a failed
+    // subcommand: a trace of the failing run is exactly what you want.
+    match moonwalk::obs::export::finish() {
+        Ok(Some(path)) => println!("trace written to {}", path.display()),
+        Ok(None) => {}
+        Err(e) => eprintln!("warning: trace export failed: {e:#}"),
+    }
     if let Err(e) = result {
         eprintln!("error: {e}");
         std::process::exit(1);

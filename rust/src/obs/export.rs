@@ -1,0 +1,288 @@
+//! Chrome trace-event export: merge every thread's span ring — and, in
+//! multi-process runs, every worker subprocess's spool file — into one
+//! Perfetto-loadable JSON timeline.
+//!
+//! Wiring:
+//!
+//! * `--trace out.trace.json` (any CLI entry point; `MOONWALK_TRACE`
+//!   env equivalent) calls [`set_trace_path`], which enables span
+//!   recording, creates a fresh `out.trace.json.workers/` spool
+//!   directory, and exports it as `MOONWALK_TRACE_DIR` so worker
+//!   subprocesses spawned later (unix/TCP transports respawn workers
+//!   freely) inherit the setting with no wire-format change.
+//! * A worker subprocess calls [`worker_init_from_env`] at entry; on
+//!   exit it writes its own events to
+//!   `<spool>/worker-<replica>-<pid>.trace.json` via
+//!   [`write_worker_file`] — one file per process *incarnation*, so a
+//!   respawned replica never clobbers its predecessor's tail.
+//! * The coordinator calls [`finish`] once at process end: it drains
+//!   local rings, folds in every spool file, rebases timestamps to the
+//!   earliest event, deletes the spool and writes the single merged
+//!   `{"traceEvents": […]}` file.
+//!
+//! Process/thread attribution uses the OS pid and the recorder's
+//! logical tid, with `process_name`/`thread_name` metadata events, so
+//! Perfetto shows one lane per worker process. Span memory samples
+//! additionally export as `mem.current` counter events — the timeline
+//! doubles as a live-bytes plot.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crate::obs::span;
+use crate::util::json::Json;
+use crate::util::lock_ignore_poison as lock;
+
+/// Where the merged trace is written (coordinator role only).
+static TRACE_PATH: Mutex<Option<PathBuf>> = Mutex::new(None);
+/// Spool directory for per-process worker files (both roles: the
+/// coordinator creates and later merges it; a worker only writes).
+static SPOOL_DIR: Mutex<Option<PathBuf>> = Mutex::new(None);
+
+/// Env var carrying the spool directory to worker subprocesses.
+pub const TRACE_DIR_ENV: &str = "MOONWALK_TRACE_DIR";
+
+/// Enable tracing and arrange for [`finish`] to write the merged trace
+/// to `path`. Creates a fresh `<path>.workers/` spool and exports it as
+/// [`TRACE_DIR_ENV`] for worker subprocesses.
+pub fn set_trace_path(path: &str) -> anyhow::Result<()> {
+    let p = PathBuf::from(path);
+    if let Some(dir) = p.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let spool = PathBuf::from(format!("{path}.workers"));
+    let _ = std::fs::remove_dir_all(&spool);
+    std::fs::create_dir_all(&spool)?;
+    std::env::set_var(TRACE_DIR_ENV, &spool);
+    *lock(&TRACE_PATH) = Some(p);
+    *lock(&SPOOL_DIR) = Some(spool);
+    span::set_enabled(true);
+    Ok(())
+}
+
+/// Worker-subprocess entry hook: if the coordinator exported
+/// [`TRACE_DIR_ENV`], enable span recording and remember the spool so
+/// [`write_worker_file`] has somewhere to write. No-op otherwise.
+pub fn worker_init_from_env() {
+    if let Ok(dir) = std::env::var(TRACE_DIR_ENV) {
+        if !dir.is_empty() {
+            *lock(&SPOOL_DIR) = Some(PathBuf::from(dir));
+            span::set_enabled(true);
+        }
+    }
+}
+
+/// Whether a trace capture is in flight in this process (either role).
+/// The `trace_rows` bench family checks this before toggling the
+/// recorder so it never drains a user-requested capture.
+pub fn trace_active() -> bool {
+    lock(&TRACE_PATH).is_some() || lock(&SPOOL_DIR).is_some()
+}
+
+/// Drain the local rings into Chrome trace events, attributed to this
+/// process (`label` becomes the Perfetto process name).
+fn chrome_events(label: &str) -> Vec<Json> {
+    let pid = std::process::id() as usize;
+    let mut out: Vec<Json> = Vec::new();
+    let mut meta = Json::obj();
+    meta.set("name", "process_name".into());
+    meta.set("ph", "M".into());
+    meta.set("pid", pid.into());
+    meta.set("tid", 0usize.into());
+    let mut margs = Json::obj();
+    margs.set("name", label.into());
+    meta.set("args", margs);
+    out.push(meta);
+    for t in span::drain_all() {
+        if t.events.is_empty() && t.dropped == 0 {
+            continue;
+        }
+        let tid = t.tid as usize;
+        let mut tmeta = Json::obj();
+        tmeta.set("name", "thread_name".into());
+        tmeta.set("ph", "M".into());
+        tmeta.set("pid", pid.into());
+        tmeta.set("tid", tid.into());
+        let mut targs = Json::obj();
+        targs.set("name", format!("thread-{tid}").into());
+        tmeta.set("args", targs);
+        out.push(tmeta);
+        if t.dropped > 0 {
+            crate::log_warn!(
+                "trace ring overflow on thread {tid}: {} oldest event(s) overwritten",
+                t.dropped
+            );
+        }
+        for e in &t.events {
+            let mut args = Json::obj();
+            if let Some((k, v)) = e.arg {
+                args.set(k, (v as f64).into());
+            }
+            args.set("mem_open_bytes", e.mem_open.into());
+            args.set("mem_close_bytes", e.mem_close.into());
+            args.set("depth", (e.depth as usize).into());
+            let mut ev = Json::obj();
+            ev.set("name", e.name.into());
+            ev.set("ts", (e.start_us as f64).into());
+            ev.set("pid", pid.into());
+            ev.set("tid", tid.into());
+            if e.instant {
+                ev.set("ph", "i".into());
+                // Thread-scoped instant marker.
+                ev.set("s", "t".into());
+            } else {
+                ev.set("ph", "X".into());
+                ev.set("dur", (e.dur_us as f64).into());
+            }
+            ev.set("args", args);
+            out.push(ev);
+            // Memory timeline: live tracked bytes as a counter track,
+            // sampled at every span boundary.
+            for (ts, bytes) in [(e.start_us, e.mem_open), (e.start_us + e.dur_us, e.mem_close)] {
+                let mut c = Json::obj();
+                c.set("name", "mem.current".into());
+                c.set("ph", "C".into());
+                c.set("ts", (ts as f64).into());
+                c.set("pid", pid.into());
+                c.set("tid", tid.into());
+                let mut cargs = Json::obj();
+                cargs.set("bytes", bytes.into());
+                c.set("args", cargs);
+                out.push(c);
+                if e.instant {
+                    break; // open == close; one sample is enough
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Write this worker's drained events to its per-incarnation spool
+/// file. Returns the written path, or `None` when no spool is
+/// configured or the write fails (tracing is best-effort on the worker
+/// side — a dying worker must still exit cleanly).
+pub fn write_worker_file(replica: usize) -> Option<PathBuf> {
+    let dir = lock(&SPOOL_DIR).clone()?;
+    let events = chrome_events(&format!("worker-{replica}"));
+    let path = dir.join(format!(
+        "worker-{replica}-{}.trace.json",
+        std::process::id()
+    ));
+    let obj = Json::from_pairs(vec![("traceEvents", Json::Arr(events))]);
+    match std::fs::write(&path, obj.to_string()) {
+        Ok(()) => Some(path),
+        Err(_) => None,
+    }
+}
+
+/// Merge local rings + every worker spool file and write the single
+/// Chrome trace JSON. Returns the written path, or `None` when no
+/// `--trace` capture was requested (callers invoke this
+/// unconditionally at process end). Consumes the capture: tracing is
+/// disabled and the spool removed.
+pub fn finish() -> anyhow::Result<Option<PathBuf>> {
+    let Some(path) = lock(&TRACE_PATH).take() else {
+        return Ok(None);
+    };
+    let spool = lock(&SPOOL_DIR).take();
+    span::set_enabled(false);
+    let mut events = chrome_events("coordinator");
+    if let Some(dir) = spool {
+        if let Ok(entries) = std::fs::read_dir(&dir) {
+            let mut files: Vec<PathBuf> = entries
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+                .collect();
+            files.sort(); // deterministic merge order
+            for file in files {
+                let Ok(text) = std::fs::read_to_string(&file) else {
+                    continue;
+                };
+                match Json::parse(&text) {
+                    Ok(j) => {
+                        if let Some(arr) = j.get("traceEvents").as_arr() {
+                            events.extend(arr.iter().cloned());
+                        }
+                    }
+                    Err(e) => {
+                        crate::log_warn!(
+                            "skipping malformed worker trace {}: {e}",
+                            file.display()
+                        );
+                    }
+                }
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        std::env::remove_var(TRACE_DIR_ENV);
+    }
+    // Rebase timestamps to the earliest event so the trace opens at
+    // t=0 instead of unix-epoch microseconds (metadata events carry no
+    // `ts` and are left alone). Wall-clock anchoring across processes
+    // is preserved — every process recorded unix-epoch micros.
+    let min_ts = events
+        .iter()
+        .filter_map(|e| e.get("ts").as_f64())
+        .fold(f64::INFINITY, f64::min);
+    if min_ts.is_finite() {
+        for e in events.iter_mut() {
+            if let Some(t) = e.get("ts").as_f64() {
+                e.set("ts", (t - min_ts).into());
+            }
+        }
+    }
+    let obj = Json::from_pairs(vec![("traceEvents", Json::Arr(events))]);
+    std::fs::write(&path, obj.to_string())?;
+    Ok(Some(path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finish_without_capture_is_none() {
+        // TRACE_PATH is process-global; this only asserts the
+        // no-capture path, which other tests never enter concurrently
+        // (integration tests own the capture lifecycle in their own
+        // process).
+        if !trace_active() {
+            assert!(finish().unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn chrome_events_shape() {
+        span::set_enabled(true);
+        {
+            let _sp = crate::span!("unit.export_probe", layer = 2usize);
+        }
+        span::instant("unit.export_instant", None);
+        span::set_enabled(false);
+        let evs = chrome_events("unit-test");
+        // Find our X event and check the Chrome fields.
+        let x = evs
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("unit.export_probe"))
+            .expect("span exported");
+        assert_eq!(x.get("ph").as_str(), Some("X"));
+        assert!(x.get("ts").as_f64().is_some());
+        assert!(x.get("dur").as_f64().is_some());
+        assert!(x.get("pid").as_usize().is_some());
+        assert_eq!(x.get("args").get("layer").as_f64(), Some(2.0));
+        assert!(x.get("args").get("mem_open_bytes").as_usize().is_some());
+        let i = evs
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("unit.export_instant"))
+            .expect("instant exported");
+        assert_eq!(i.get("ph").as_str(), Some("i"));
+        // Counter samples ride along.
+        assert!(evs
+            .iter()
+            .any(|e| e.get("name").as_str() == Some("mem.current")
+                && e.get("ph").as_str() == Some("C")));
+    }
+}

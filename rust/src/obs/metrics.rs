@@ -1,0 +1,186 @@
+//! Typed counter/gauge/histogram registry — one place for the runtime
+//! counters that PRs 1–7 scattered across modules as ad-hoc statics.
+//!
+//! Two kinds of source feed [`snapshot`]:
+//!
+//! * **Live sources** — counters that already exist as module statics
+//!   with public readers (pool lifecycle, arena recycle rate, tracker
+//!   bytes/allocs/frees). The snapshot *reads* them; their owners keep
+//!   the hot-path `AtomicUsize` they always had, so absorbing them here
+//!   costs the kernels nothing.
+//! * **Registered metrics** — named counters/gauges/histograms written
+//!   through [`counter_add`] / [`gauge_set`] / [`observe`] from cold
+//!   paths (supervisor retries, respawns, heartbeat misses, backoff
+//!   waits). These sit behind one mutex-guarded map — fine for events
+//!   that happen at most a few times per step, wrong for per-element
+//!   work (use a module static and add it to the snapshot instead).
+//!
+//! Key naming: `subsystem.metric`, flat (no nesting), e.g.
+//! `supervisor.respawns`, `step.retries`. The glossary lives in
+//! `docs/OBSERVABILITY.md`. Counters are process-global and monotone;
+//! consumers that need per-run numbers (the trainer's `TrainReport`)
+//! record a baseline with [`counter`] and report deltas.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::lock_ignore_poison as lock;
+
+enum Metric {
+    Counter(u64),
+    Gauge(f64),
+    Hist { count: u64, sum: f64, min: f64, max: f64 },
+}
+
+static REGISTRY: Mutex<BTreeMap<String, Metric>> = Mutex::new(BTreeMap::new());
+
+/// Add `delta` to the named monotone counter (created at 0 on first use).
+pub fn counter_add(name: &str, delta: u64) {
+    let mut reg = lock(&REGISTRY);
+    match reg.get_mut(name) {
+        Some(Metric::Counter(v)) => *v += delta,
+        _ => {
+            reg.insert(name.to_string(), Metric::Counter(delta));
+        }
+    }
+}
+
+/// Current value of a registered counter (0 if absent). Use this to
+/// snapshot a baseline before a run and report deltas after it.
+pub fn counter(name: &str) -> u64 {
+    match lock(&REGISTRY).get(name) {
+        Some(Metric::Counter(v)) => *v,
+        _ => 0,
+    }
+}
+
+/// Set the named gauge to `v` (last-write-wins).
+pub fn gauge_set(name: &str, v: f64) {
+    lock(&REGISTRY).insert(name.to_string(), Metric::Gauge(v));
+}
+
+/// Record one observation into the named histogram (count/sum/min/max —
+/// enough for rates and means without bucket configuration).
+pub fn observe(name: &str, v: f64) {
+    let mut reg = lock(&REGISTRY);
+    match reg.get_mut(name) {
+        Some(Metric::Hist {
+            count,
+            sum,
+            min,
+            max,
+        }) => {
+            *count += 1;
+            *sum += v;
+            *min = min.min(v);
+            *max = max.max(v);
+        }
+        _ => {
+            reg.insert(
+                name.to_string(),
+                Metric::Hist {
+                    count: 1,
+                    sum: v,
+                    min: v,
+                    max: v,
+                },
+            );
+        }
+    }
+}
+
+/// Drop every registered metric (tests; live sources are unaffected).
+pub fn reset() {
+    lock(&REGISTRY).clear();
+}
+
+/// One flat JSON object with every live source and every registered
+/// metric — the blob the trainer, `TrainReport` consumers and
+/// `BENCH_perf_ops.json` share. Histograms render as
+/// `{count, sum, min, max, mean}` sub-objects; everything else is a
+/// number.
+pub fn snapshot() -> Json {
+    let mut out = Json::obj();
+    let p = crate::runtime::pool::stats();
+    out.set("pool.regions", p.regions.into());
+    out.set("pool.wakes", p.wakes.into());
+    out.set("pool.parks", p.parks.into());
+    out.set("pool.workers_spawned", p.workers_spawned.into());
+    out.set("arena.hits", crate::tensor::arena::hits().into());
+    out.set("arena.misses", crate::tensor::arena::misses().into());
+    out.set("arena.pooled", crate::tensor::arena::pooled().into());
+    out.set(
+        "tracker.current_bytes",
+        crate::tensor::tracker::current().into(),
+    );
+    out.set("tracker.peak_bytes", crate::tensor::tracker::peak().into());
+    out.set(
+        "tracker.total_allocs",
+        crate::tensor::tracker::total_allocs().into(),
+    );
+    out.set(
+        "tracker.total_frees",
+        crate::tensor::tracker::total_frees().into(),
+    );
+    for (k, m) in lock(&REGISTRY).iter() {
+        match m {
+            Metric::Counter(v) => {
+                out.set(k, (*v as usize).into());
+            }
+            Metric::Gauge(v) => {
+                out.set(k, (*v).into());
+            }
+            Metric::Hist {
+                count,
+                sum,
+                min,
+                max,
+            } => {
+                out.set(
+                    k,
+                    Json::from_pairs(vec![
+                        ("count", (*count as usize).into()),
+                        ("sum", (*sum).into()),
+                        ("min", (*min).into()),
+                        ("max", (*max).into()),
+                        ("mean", (*sum / (*count).max(1) as f64).into()),
+                    ]),
+                );
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_and_hists_snapshot() {
+        // Unique names: the registry is process-global and unit tests
+        // run concurrently.
+        counter_add("unit.m.count", 2);
+        counter_add("unit.m.count", 3);
+        assert_eq!(counter("unit.m.count"), 5);
+        gauge_set("unit.m.gauge", 1.5);
+        observe("unit.m.hist", 2.0);
+        observe("unit.m.hist", 4.0);
+        let snap = snapshot();
+        assert_eq!(snap.get("unit.m.count").as_usize(), Some(5));
+        assert_eq!(snap.get("unit.m.gauge").as_f64(), Some(1.5));
+        let h = snap.get("unit.m.hist");
+        assert_eq!(h.req_usize("count").unwrap(), 2);
+        assert_eq!(h.req_f64("mean").unwrap(), 3.0);
+        assert_eq!(h.req_f64("max").unwrap(), 4.0);
+        // Live sources are always present.
+        assert!(snap.get("pool.regions").as_usize().is_some());
+        assert!(snap.get("tracker.total_frees").as_usize().is_some());
+    }
+
+    #[test]
+    fn absent_counter_reads_zero() {
+        assert_eq!(counter("unit.m.never_written"), 0);
+    }
+}

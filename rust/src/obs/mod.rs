@@ -1,0 +1,33 @@
+//! Observability: zero-cost-off span tracing + a typed metrics
+//! registry (ISSUE 8).
+//!
+//! The paper's claims are about *where* time and memory go — Moonwalk
+//! matches backprop's runtime while the peak residual footprint
+//! collapses — but end-of-step aggregates (trainer JSONL,
+//! `tracker::peak`) can't show the Phase I–III structure, the reduce
+//! overlap, or a straggler replica. This module adds the timeline:
+//!
+//! * [`span`] — thread-local ring-buffer span recorder behind the
+//!   [`span!`](crate::span) RAII macro. Disabled (the default) it costs
+//!   one relaxed atomic load per site; enabled, every span samples
+//!   `tracker::current()` at open/close, so traces double as memory
+//!   timelines.
+//! * [`export`] — merges per-thread rings (and per-process worker
+//!   spool files, for unix/TCP transports) into one Chrome trace-event
+//!   JSON, loadable at <https://ui.perfetto.dev>. Wired to `--trace
+//!   out.trace.json` on every CLI entry point.
+//! * [`metrics`] — counter/gauge/histogram registry with one
+//!   [`metrics::snapshot`] JSON view over both the registered metrics
+//!   (supervisor retries, respawns, heartbeat misses, backoff waits)
+//!   and the pre-existing live counters (pool, arena, tracker).
+//!
+//! **Determinism contract:** tracing never perturbs computed values —
+//! recording reads clocks and the tracker but takes no lock shared
+//! with compute and registers no tracked allocations, so every
+//! bit-equality suite holds with tracing enabled
+//! (`rust/tests/trace.rs`). Span taxonomy, the Perfetto how-to and the
+//! metrics glossary live in `docs/OBSERVABILITY.md`.
+
+pub mod export;
+pub mod metrics;
+pub mod span;

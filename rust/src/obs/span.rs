@@ -1,0 +1,361 @@
+//! Thread-local ring-buffer span recorder — the capture half of the
+//! tracing subsystem (the export half is [`crate::obs::export`]).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero cost off.** Tracing defaults to disabled; the only work a
+//!    disabled [`span!`](crate::span) site does is one relaxed atomic
+//!    load and constructing a `SpanGuard(None)` — no clock read, no
+//!    tracker sample, no buffer touch. The `trace_rows` family of
+//!    `BENCH_perf_ops.json` gates this (disabled-mode overhead must stay
+//!    within noise of the instrumented-but-off median).
+//! 2. **Never perturb determinism.** Recording reads wall/monotonic
+//!    clocks and [`tracker::current`] but writes nothing any kernel
+//!    reads, takes no lock shared with compute, and — critically — its
+//!    buffers are plain heap memory, **never** registered with the
+//!    allocation tracker, so `tracker::measure` profiles are identical
+//!    with tracing on and off. The bit-equality grid in
+//!    `rust/tests/trace.rs` enforces this end to end.
+//! 3. **Contention-free append.** Each thread records into its own
+//!    ring buffer behind a mutex only that thread touches on the hot
+//!    path (the exporter locks it once, at drain time), so appends
+//!    never contend across pool workers.
+//!
+//! Spans are RAII guards opened by the [`span!`](crate::span) macro:
+//!
+//! ```
+//! let _sp = moonwalk::span!("phase2.cotangent", layer = 3usize);
+//! // ... timed work ...
+//! // guard drop records the span
+//! ```
+//!
+//! Every span samples [`tracker::current`] at open and close, so the
+//! exported timeline doubles as a memory timeline — the paper's
+//! residual-collapse claim, visible per phase per layer.
+//!
+//! The ring holds [`RING_CAPACITY`] events per thread; overflow
+//! overwrites the oldest events and counts them in
+//! [`ThreadEvents::dropped`] rather than blocking or reallocating.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use crate::tensor::tracker;
+use crate::util::lock_ignore_poison as lock;
+
+/// Events kept per thread before the ring overwrites its oldest entry.
+pub const RING_CAPACITY: usize = 65_536;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// `(monotonic anchor, unix micros at that anchor)` — timestamps are
+/// `unix_base + anchor.elapsed()`, so they are monotone within a
+/// process and wall-clock aligned *across* processes (the coordinator
+/// and its worker subprocesses each anchor once; the merge in
+/// `obs::export` then needs no clock exchange).
+static EPOCH: OnceLock<(Instant, u64)> = OnceLock::new();
+
+fn epoch() -> &'static (Instant, u64) {
+    EPOCH.get_or_init(|| {
+        let unix_us = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        (Instant::now(), unix_us)
+    })
+}
+
+/// Microseconds since the unix epoch, monotone within the process.
+pub fn now_us() -> u64 {
+    let (anchor, base) = epoch();
+    base + anchor.elapsed().as_micros() as u64
+}
+
+/// Globally enable or disable span recording. Open guards created
+/// while enabled still record on drop after a disable — balance is
+/// preserved.
+pub fn set_enabled(on: bool) {
+    if on {
+        // Anchor the clock before the first span so timestamps never
+        // pay the SystemTime call on the recording path.
+        let _ = epoch();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether span recording is currently enabled.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// One recorded span (or instant event) as drained from a ring.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    /// Static span name, e.g. `"phase3.vijp"` (taxonomy in
+    /// `docs/OBSERVABILITY.md`).
+    pub name: &'static str,
+    /// Optional `(key, value)` argument, e.g. `("layer", 3)`.
+    pub arg: Option<(&'static str, i64)>,
+    /// Open timestamp, microseconds since the unix epoch.
+    pub start_us: u64,
+    /// Duration in microseconds (0 for instants).
+    pub dur_us: u64,
+    /// Nesting depth at open (0 = top level on its thread).
+    pub depth: u32,
+    /// `tracker::current()` sampled at open.
+    pub mem_open: usize,
+    /// `tracker::current()` sampled at close (== open for instants).
+    pub mem_close: usize,
+    /// True for point events recorded via [`instant`].
+    pub instant: bool,
+}
+
+struct Ring {
+    events: Vec<SpanEvent>,
+    /// Overwrite cursor once the ring is full.
+    next: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    const fn new() -> Ring {
+        Ring {
+            events: Vec::new(),
+            next: 0,
+            dropped: 0,
+        }
+    }
+
+    fn push(&mut self, ev: SpanEvent) {
+        if self.events.len() < RING_CAPACITY {
+            self.events.push(ev);
+        } else {
+            self.events[self.next] = ev;
+            self.next = (self.next + 1) % RING_CAPACITY;
+            self.dropped += 1;
+        }
+    }
+
+    fn drain(&mut self) -> (Vec<SpanEvent>, u64) {
+        // Chronological order: when wrapped, the oldest surviving event
+        // sits at the overwrite cursor.
+        let mut out = Vec::with_capacity(self.events.len());
+        out.extend_from_slice(&self.events[self.next..]);
+        out.extend_from_slice(&self.events[..self.next]);
+        self.events.clear();
+        self.next = 0;
+        (out, std::mem::take(&mut self.dropped))
+    }
+}
+
+/// All registered rings, living as long as the process (rings of exited
+/// threads stay registered so their tail events still export).
+static REGISTRY: Mutex<Vec<(u64, Arc<Mutex<Ring>>)>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+fn register() -> (u64, Arc<Mutex<Ring>>) {
+    let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    let ring = Arc::new(Mutex::new(Ring::new()));
+    lock(&REGISTRY).push((tid, Arc::clone(&ring)));
+    (tid, ring)
+}
+
+thread_local! {
+    static LOCAL: (u64, Arc<Mutex<Ring>>) = register();
+    static DEPTH: Cell<u32> = const { Cell::new(0) };
+}
+
+fn record(ev: SpanEvent) {
+    // try_with: a span dropped during thread-local teardown (e.g. a
+    // guard owned by a pool worker's last job) must not abort — the
+    // event is silently dropped instead.
+    let _ = LOCAL.try_with(|(_, ring)| lock(ring).push(ev));
+}
+
+struct ActiveSpan {
+    name: &'static str,
+    arg: Option<(&'static str, i64)>,
+    start_us: u64,
+    mem_open: usize,
+    depth: u32,
+}
+
+/// RAII span handle returned by [`open`] / the [`span!`](crate::span)
+/// macro; records one [`SpanEvent`] on drop. Holds `None` (and costs
+/// nothing) when tracing is disabled.
+pub struct SpanGuard(Option<ActiveSpan>);
+
+/// Open a span. Prefer the [`span!`](crate::span) macro, which
+/// stringifies the argument key for you. The guard must be bound
+/// (`let _sp = …`) — binding to `_` drops it immediately.
+pub fn open(name: &'static str, arg: Option<(&'static str, i64)>) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard(None);
+    }
+    let depth = DEPTH.with(|d| {
+        let v = d.get();
+        d.set(v + 1);
+        v
+    });
+    SpanGuard(Some(ActiveSpan {
+        name,
+        arg,
+        start_us: now_us(),
+        mem_open: tracker::current(),
+        depth,
+    }))
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(a) = self.0.take() else { return };
+        let _ = DEPTH.try_with(|d| d.set(d.get().saturating_sub(1)));
+        let end = now_us();
+        record(SpanEvent {
+            name: a.name,
+            arg: a.arg,
+            start_us: a.start_us,
+            dur_us: end.saturating_sub(a.start_us),
+            depth: a.depth,
+            mem_open: a.mem_open,
+            mem_close: tracker::current(),
+            instant: false,
+        });
+    }
+}
+
+/// Record a zero-duration point event (supervisor retries, pool wakes,
+/// heartbeat misses — things with a *when* but no extent).
+pub fn instant(name: &'static str, arg: Option<(&'static str, i64)>) {
+    if !enabled() {
+        return;
+    }
+    let now = now_us();
+    let mem = tracker::current();
+    record(SpanEvent {
+        name,
+        arg,
+        start_us: now,
+        dur_us: 0,
+        depth: DEPTH.with(|d| d.get()),
+        mem_open: mem,
+        mem_close: mem,
+        instant: true,
+    });
+}
+
+/// One thread's drained events.
+pub struct ThreadEvents {
+    /// Process-local logical thread id (stable for the thread's life;
+    /// *not* the OS tid).
+    pub tid: u64,
+    /// Events in chronological record order.
+    pub events: Vec<SpanEvent>,
+    /// Events overwritten by ring overflow since the last drain.
+    pub dropped: u64,
+}
+
+/// Drain every thread's ring (including rings of threads that have
+/// exited). Consuming: a second drain returns only events recorded in
+/// between.
+pub fn drain_all() -> Vec<ThreadEvents> {
+    lock(&REGISTRY)
+        .iter()
+        .map(|(tid, ring)| {
+            let (events, dropped) = lock(ring).drain();
+            ThreadEvents {
+                tid: *tid,
+                events,
+                dropped,
+            }
+        })
+        .collect()
+}
+
+/// Open a tracing span, recorded when the returned guard drops.
+///
+/// ```
+/// let _sp = moonwalk::span!("train.step");
+/// let _sl = moonwalk::span!("phase1.forward", layer = 2usize);
+/// ```
+///
+/// The second arm attaches one integer argument (the key is
+/// stringified); the value expression is evaluated even when tracing
+/// is disabled, so keep it trivial (an index, a count).
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::obs::span::open($name, None)
+    };
+    ($name:expr, $key:ident = $val:expr) => {
+        $crate::obs::span::open($name, Some((stringify!($key), $val as i64)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_guard_records_nothing() {
+        // Unique names so concurrent unit tests' events can't collide.
+        set_enabled(false);
+        {
+            let _sp = crate::span!("unit.disabled_probe");
+        }
+        let seen: usize = drain_all()
+            .iter()
+            .flat_map(|t| t.events.iter())
+            .filter(|e| e.name == "unit.disabled_probe")
+            .count();
+        assert_eq!(seen, 0);
+    }
+
+    #[test]
+    fn nested_spans_balance_and_nest() {
+        set_enabled(true);
+        {
+            let _outer = crate::span!("unit.nest_outer");
+            let _inner = crate::span!("unit.nest_inner", layer = 7usize);
+        }
+        set_enabled(false);
+        let all: Vec<SpanEvent> = drain_all()
+            .into_iter()
+            .flat_map(|t| t.events)
+            .filter(|e| e.name.starts_with("unit.nest_"))
+            .collect();
+        let outer = all.iter().find(|e| e.name == "unit.nest_outer").unwrap();
+        let inner = all.iter().find(|e| e.name == "unit.nest_inner").unwrap();
+        assert_eq!(inner.depth, outer.depth + 1);
+        assert_eq!(inner.arg, Some(("layer", 7)));
+        // Containment: inner opened no earlier and closed no later.
+        assert!(inner.start_us >= outer.start_us);
+        assert!(inner.start_us + inner.dur_us <= outer.start_us + outer.dur_us);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let mut ring = Ring::new();
+        let mk = |i: u64| SpanEvent {
+            name: "unit.ring",
+            arg: None,
+            start_us: i,
+            dur_us: 0,
+            depth: 0,
+            mem_open: 0,
+            mem_close: 0,
+            instant: true,
+        };
+        for i in 0..(RING_CAPACITY as u64 + 10) {
+            ring.push(mk(i));
+        }
+        let (events, dropped) = ring.drain();
+        assert_eq!(dropped, 10);
+        assert_eq!(events.len(), RING_CAPACITY);
+        // Oldest surviving event is #10; order is chronological.
+        assert_eq!(events[0].start_us, 10);
+        assert!(events.windows(2).all(|w| w[0].start_us < w[1].start_us));
+    }
+}

@@ -284,6 +284,7 @@ static TEAM: Mutex<Vec<Sender<Job>>> = Mutex::new(Vec::new());
 fn worker_loop(rx: Receiver<Job>) {
     IN_WORKER.with(|w| w.set(true));
     while let Ok(mut job) = rx.recv() {
+        let _ss = crate::span!("pool.share", share = job.share);
         // Catch panics so one bad share cannot take the worker (and every
         // later region scheduled on it) down; the submitter re-raises the
         // first payload. The latch itself settles in `Job::drop`.
@@ -299,6 +300,7 @@ fn worker_loop(rx: Receiver<Job>) {
             // settles the latch via Job::drop below.
         }
         drop(job);
+        crate::obs::span::instant("pool.park", None);
     }
     // All senders dropped — only happens at process teardown.
 }
@@ -355,6 +357,7 @@ fn run_region(parts: usize, f: &(dyn Fn(usize) + Sync)) {
         return;
     }
     let extra = parts - 1;
+    let _sp = crate::span!("pool.region", shares = parts);
     let latch = Latch::new(extra);
     // SAFETY: the only lifetime erasure in the runtime. `task` and
     // `latch_ref` point into this stack frame; workers use them only
@@ -398,6 +401,7 @@ fn run_region(parts: usize, f: &(dyn Fn(usize) + Sync)) {
         }
     }
     REGIONS.fetch_add(1, Ordering::Relaxed);
+    crate::obs::span::instant("pool.wake", Some(("workers", extra as i64)));
     // The caller runs share 0 as a worker: nested kernels must stay
     // serial exactly as under the scoped pool, where every share ran on
     // a spawned thread.

@@ -118,6 +118,7 @@ pub fn take(len: usize) -> Scratch {
     if len == 0 {
         return Scratch { buf: Vec::new() };
     }
+    let _sp = crate::span!("arena.take", len = len);
     let reused = {
         let mut pool = lock();
         // Best fit: the smallest pooled buffer that is large enough, so

@@ -17,6 +17,7 @@ use std::sync::{Mutex, MutexGuard};
 static CURRENT: AtomicI64 = AtomicI64::new(0);
 static PEAK: AtomicI64 = AtomicI64::new(0);
 static TOTAL_ALLOCS: AtomicI64 = AtomicI64::new(0);
+static TOTAL_FREES: AtomicI64 = AtomicI64::new(0);
 
 static MEASURE_MUTEX: Mutex<()> = Mutex::new(());
 
@@ -36,7 +37,18 @@ pub fn alloc(bytes: usize) {
 
 /// Release an allocation of `bytes`.
 pub fn free(bytes: usize) {
-    CURRENT.fetch_sub(bytes as i64, Ordering::Relaxed);
+    let prev = CURRENT.fetch_sub(bytes as i64, Ordering::Relaxed);
+    TOTAL_FREES.fetch_add(1, Ordering::Relaxed);
+    // Every free pairs with an earlier alloc of the same buffer, and
+    // ownership handoffs synchronize, so the running sum can only go
+    // negative if some path double-frees (or frees more bytes than it
+    // registered) — an accounting bug that would silently corrupt peak
+    // ranking. Catch it in debug builds.
+    debug_assert!(
+        prev >= bytes as i64,
+        "tracker::free({bytes}) would drive live bytes negative (was {prev}): \
+         double-free or mismatched alloc/free size"
+    );
 }
 
 /// Currently live tracked bytes.
@@ -53,6 +65,13 @@ pub fn peak() -> usize {
 /// metric used by the §Perf pass).
 pub fn total_allocs() -> usize {
     TOTAL_ALLOCS.load(Ordering::Relaxed).max(0) as usize
+}
+
+/// Number of tracked releases since process start. Together with
+/// [`total_allocs`] this exposes leak drift:
+/// `total_allocs - total_frees` should track the live object count.
+pub fn total_frees() -> usize {
+    TOTAL_FREES.load(Ordering::Relaxed).max(0) as usize
 }
 
 /// Reset the peak to the current live value.

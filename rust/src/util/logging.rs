@@ -86,6 +86,16 @@ impl JsonlWriter {
     }
 }
 
+impl Drop for JsonlWriter {
+    /// Best-effort flush so a crash-killed or early-returning owner
+    /// doesn't lose the buffered tail of the metrics stream. (BufWriter
+    /// also flushes on drop, but silently and only through its own
+    /// buffer — this keeps the behavior explicit and panic-safe.)
+    fn drop(&mut self) {
+        let _ = self.out.flush();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,324 @@
+//! Tracing subsystem contract (ISSUE 8):
+//!
+//! 1. **Span algebra** — spans recorded across a real engine run are
+//!    balanced and properly nested per thread (no partial interval
+//!    overlap; phase spans appear exactly once, per-layer spans once
+//!    per layer), and carry monotone memory samples from the tracker.
+//! 2. **Chrome roundtrip** — `--trace`-style capture via
+//!    [`moonwalk::obs::export::set_trace_path`] + `finish()` writes a
+//!    well-formed `{"traceEvents": […]}` JSON that this repo's own
+//!    parser accepts, with rebased timestamps and the documented event
+//!    fields (`ph`, `pid`, `tid`, `ts`).
+//! 3. **Multi-process merge** — a capture spanning the unix-socket
+//!    transport folds worker-subprocess spool files into the single
+//!    coordinator trace: events from ≥ 2 distinct pids, including the
+//!    workers' `worker.step` spans.
+//! 4. **Determinism** — the full `EXACT_ENGINES` grid produces
+//!    bit-identical losses and parameter gradients with span capture
+//!    on vs off (the never-perturb contract of ARCHITECTURE.md §2.6).
+//!
+//! Span recording, the ring registry, and the trace-capture path are
+//! process-global, so every test here serializes through one mutex and
+//! restores the disabled state before releasing it.
+
+use std::sync::Mutex;
+
+use moonwalk::autodiff::{engine_by_name, EXACT_ENGINES};
+use moonwalk::model::{build_cnn2d, SubmersiveCnn2dSpec};
+use moonwalk::nn::MeanLoss;
+use moonwalk::obs::{export, span};
+use moonwalk::tensor::Tensor;
+use moonwalk::util::json::Json;
+use moonwalk::util::Rng;
+
+/// Serializes every test: span state and the capture path are global.
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+fn trace_lock() -> std::sync::MutexGuard<'static, ()> {
+    match TRACE_LOCK.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// Tiny depth-3 submersive CNN + input, deterministic per seed.
+fn tiny_net(seed: u64) -> (moonwalk::model::Network, Tensor) {
+    let spec = SubmersiveCnn2dSpec {
+        input_hw: 16,
+        channels: 5,
+        depth: 3,
+        cin: 2,
+        classes: 3,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(seed);
+    let net = build_cnn2d(&spec, &mut rng);
+    let x = Tensor::randn(&[2, 16, 16, 2], 1.0, &mut rng);
+    (net, x)
+}
+
+/// One streamed gradient computation, collecting loss + per-layer grads.
+fn run_engine(
+    engine: &dyn moonwalk::autodiff::GradEngine,
+    net: &moonwalk::model::Network,
+    x: &Tensor,
+) -> (f32, Vec<Vec<Tensor>>) {
+    let mut grads: Vec<Vec<Tensor>> = (0..net.depth()).map(|_| Vec::new()).collect();
+    let loss = engine
+        .compute_streaming(net, x, &MeanLoss, &mut |li, g| grads[li] = g)
+        .expect("engine run");
+    (loss, grads)
+}
+
+// ---------------------------------------------------------------------------
+// 1. Span algebra on a real engine run
+// ---------------------------------------------------------------------------
+
+#[test]
+fn spans_balance_and_nest_across_engine_run() {
+    let _g = trace_lock();
+    let (net, x) = tiny_net(11);
+    let engine = engine_by_name("moonwalk", 4, 0, 0).unwrap();
+    let _ = span::drain_all(); // start from empty rings
+    span::set_enabled(true);
+    let _ = run_engine(engine.as_ref(), &net, &x);
+    span::set_enabled(false);
+    let threads = span::drain_all();
+
+    let mut phase_counts = [0usize; 3];
+    let mut fwd_layers = 0usize;
+    for t in &threads {
+        assert_eq!(t.dropped, 0, "tiny run must not overflow the ring");
+        // No partial interval overlap on any one thread: spans are
+        // strictly LIFO, so any two either nest or are disjoint.
+        let spans: Vec<_> = t.events.iter().filter(|e| !e.instant).collect();
+        for (i, a) in spans.iter().enumerate() {
+            let (a0, a1) = (a.start_us, a.start_us + a.dur_us);
+            for b in spans.iter().skip(i + 1) {
+                let (b0, b1) = (b.start_us, b.start_us + b.dur_us);
+                let disjoint = b0 >= a1 || a0 >= b1;
+                let nested = (b0 >= a0 && b1 <= a1) || (a0 >= b0 && a1 <= b1);
+                assert!(
+                    disjoint || nested,
+                    "partial overlap on thread {}: {} [{a0},{a1}] vs {} [{b0},{b1}]",
+                    t.tid,
+                    a.name,
+                    b.name
+                );
+            }
+        }
+        for e in &t.events {
+            match e.name {
+                "moonwalk.phase1" => phase_counts[0] += 1,
+                "moonwalk.phase2" => phase_counts[1] += 1,
+                "moonwalk.phase3" => phase_counts[2] += 1,
+                "phase1.forward" => fwd_layers += 1,
+                _ => {}
+            }
+        }
+    }
+    // Balanced phase structure: each phase span exactly once, one
+    // forward span per layer.
+    assert_eq!(phase_counts, [1, 1, 1]);
+    assert_eq!(fwd_layers, net.depth());
+}
+
+#[test]
+fn disabled_spans_record_nothing_across_engine_run() {
+    let _g = trace_lock();
+    let (net, x) = tiny_net(12);
+    let engine = engine_by_name("moonwalk", 4, 0, 0).unwrap();
+    span::set_enabled(false);
+    let _ = span::drain_all();
+    let _ = run_engine(engine.as_ref(), &net, &x);
+    let total: usize = span::drain_all().iter().map(|t| t.events.len()).sum();
+    assert_eq!(total, 0, "disabled tracing must not record events");
+}
+
+// ---------------------------------------------------------------------------
+// 2. Chrome trace-event roundtrip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chrome_trace_roundtrip_single_process() {
+    let _g = trace_lock();
+    let path = std::env::temp_dir().join(format!(
+        "moonwalk_trace_roundtrip_{}.trace.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    let _ = span::drain_all();
+    export::set_trace_path(path.to_str().unwrap()).unwrap();
+    assert!(export::trace_active());
+    assert!(span::enabled(), "capture must enable span recording");
+
+    let (net, x) = tiny_net(13);
+    let engine = engine_by_name("moonwalk", 4, 0, 0).unwrap();
+    let _ = run_engine(engine.as_ref(), &net, &x);
+
+    let written = export::finish().unwrap().expect("capture was active");
+    assert_eq!(written, path);
+    assert!(!export::trace_active(), "finish consumes the capture");
+    assert!(!span::enabled(), "finish disables span recording");
+    let spool = std::path::PathBuf::from(format!("{}.workers", path.display()));
+    assert!(!spool.exists(), "finish removes the worker spool");
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let json = Json::parse(&text).expect("trace is valid JSON");
+    let events = json.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(!events.is_empty());
+    let mut min_ts = f64::INFINITY;
+    let mut names = std::collections::BTreeSet::new();
+    for e in &events {
+        let ph = e.get("ph").as_str().expect("every event has ph");
+        assert!(e.get("pid").as_usize().is_some(), "every event has pid");
+        if let Some(name) = e.get("name").as_str() {
+            names.insert(name.to_string());
+        }
+        if let Some(ts) = e.get("ts").as_f64() {
+            assert!(ts >= 0.0, "timestamps rebased to the trace start");
+            min_ts = min_ts.min(ts);
+        }
+        if ph == "X" {
+            assert!(e.get("dur").as_f64().is_some(), "spans carry dur");
+        }
+    }
+    assert_eq!(min_ts, 0.0, "earliest event sits at t=0");
+    for want in [
+        "moonwalk.phase1",
+        "moonwalk.phase2",
+        "moonwalk.phase3",
+        "phase2.cotangent",
+        "mem.current",
+        "process_name",
+    ] {
+        assert!(names.contains(want), "trace is missing {want}");
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Multi-process merge through the unix transport
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chrome_trace_merges_unix_worker_processes() {
+    use moonwalk::distributed::transport::{
+        EngineSpec, LossSpec, ShardSpec, Transport, UnixTransport, UnixTransportOpts,
+    };
+    use moonwalk::distributed::{split_batch, ReduceOp};
+    use moonwalk::model::config::Config;
+
+    let _g = trace_lock();
+    let path = std::env::temp_dir().join(format!(
+        "moonwalk_trace_merge_{}.trace.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    let _ = span::drain_all();
+    // The capture must be live *before* spawn so the workers inherit
+    // the spool directory through the environment.
+    export::set_trace_path(path.to_str().unwrap()).unwrap();
+
+    let cfg = Config::from_json(
+        &Json::parse(
+            r#"{"arch": "cnn2d", "depth": 2, "channels": 5, "input_hw": 16,
+                "cin": 2, "classes": 4, "seed": 9}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let mut rng = Rng::new(cfg.seed);
+    let net = cfg.build_network(&mut rng);
+    let x = Tensor::randn(&[4, 16, 16, 2], 1.0, &mut rng);
+    let engine = engine_by_name("moonwalk", cfg.block, cfg.checkpoint_every, cfg.seed).unwrap();
+
+    let mut opts = UnixTransportOpts::new(2, cfg.to_json().to_string(), EngineSpec::new("moonwalk"));
+    opts.worker_bin = Some(std::path::PathBuf::from(env!("CARGO_BIN_EXE_moonwalk")));
+    let mut transport = UnixTransport::spawn(opts).expect("spawn unix transport");
+    transport.broadcast(&net).unwrap();
+    let xs = split_batch(&x, 2).unwrap();
+    let shards: Vec<ShardSpec<'_>> = xs
+        .iter()
+        .map(|x| ShardSpec {
+            x,
+            loss: LossSpec::Mean,
+        })
+        .collect();
+    transport
+        .step(&net, engine.as_ref(), &shards, ReduceOp::Mean, &|_, g| {
+            drop(g)
+        })
+        .unwrap();
+    // Shutdown waits for the workers, whose exit path writes the spool
+    // files the merge below folds in.
+    drop(transport);
+
+    let written = export::finish().unwrap().expect("capture was active");
+    let text = std::fs::read_to_string(&written).unwrap();
+    let json = Json::parse(&text).expect("merged trace is valid JSON");
+    let events = json.get("traceEvents").as_arr().expect("traceEvents");
+    let mut pids = std::collections::BTreeSet::new();
+    let mut worker_step_pids = std::collections::BTreeSet::new();
+    for e in &events {
+        let pid = e.get("pid").as_usize().expect("pid");
+        pids.insert(pid);
+        if e.get("name").as_str() == Some("worker.step") {
+            worker_step_pids.insert(pid);
+        }
+    }
+    let own = std::process::id() as usize;
+    assert!(
+        pids.len() >= 3,
+        "expected coordinator + 2 worker pids, got {pids:?}"
+    );
+    assert!(pids.contains(&own), "coordinator events present");
+    assert_eq!(
+        worker_step_pids.len(),
+        2,
+        "each worker contributes its worker.step span"
+    );
+    assert!(
+        !worker_step_pids.contains(&own),
+        "worker.step spans come from the subprocesses"
+    );
+    let _ = std::fs::remove_file(&written);
+}
+
+// ---------------------------------------------------------------------------
+// 4. Tracing never perturbs determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn exact_engine_grid_bit_identical_tracing_on_vs_off() {
+    let _g = trace_lock();
+    let (net, x) = tiny_net(14);
+    for name in EXACT_ENGINES {
+        let engine = engine_by_name(name, 4, 2, 0).unwrap();
+        span::set_enabled(false);
+        let (loss_off, grads_off) = run_engine(engine.as_ref(), &net, &x);
+        span::set_enabled(true);
+        let (loss_on, grads_on) = run_engine(engine.as_ref(), &net, &x);
+        span::set_enabled(false);
+        let _ = span::drain_all();
+        assert_eq!(
+            loss_off.to_bits(),
+            loss_on.to_bits(),
+            "{name}: loss must be bit-identical with tracing on"
+        );
+        assert_eq!(grads_off.len(), grads_on.len());
+        for (li, (ga, gb)) in grads_off.iter().zip(&grads_on).enumerate() {
+            assert_eq!(ga.len(), gb.len(), "{name} layer {li}: grad arity");
+            for (pi, (ta, tb)) in ga.iter().zip(gb).enumerate() {
+                assert_eq!(ta.shape(), tb.shape());
+                for (va, vb) in ta.data().iter().zip(tb.data()) {
+                    assert_eq!(
+                        va.to_bits(),
+                        vb.to_bits(),
+                        "{name} layer {li} param {pi}: gradient bits differ with tracing on"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -7,18 +7,20 @@
 # (unit + integration: parallel-runtime grids, pool stress, property
 # sweeps, engine equivalence, distributed replica sharding, the
 # multi-process transport grid, budgeted-planner invariants, the
-# fault-tolerance chaos grid), re-runs the distributed, transport,
-# planner and fault-tolerance suites as dedicated invocations so
-# replica/transport/planner/recovery failures stay visible at the end
-# of CI output, then enforces the documentation surface (rustdoc must
-# build warning-free and every doctest must pass — the doc system is
-# tier-1 from PR 4 on), and finally the perf_ops --quick smoke, which
-# emits BENCH_perf_ops.json (including the replicas {1,2} scaling
-# rows, the local/unix transport-overhead rows, the planner_rows
-# budget sweep, the fault_rows recovery smoke and the conv_rows
-# autotune family; field schema in docs/BENCH_SCHEMA.md) so the perf
-# trajectory stays diffable across commits. Exits non-zero on the
-# first failure.
+# fault-tolerance chaos grid, the tracing contract), re-runs the
+# distributed, transport, planner, fault-tolerance and trace suites as
+# dedicated invocations so replica/transport/planner/recovery/tracing
+# failures stay visible at the end of CI output, then enforces the
+# documentation surface (rustdoc must build warning-free and every
+# doctest must pass — the doc system is tier-1 from PR 4 on), the
+# perf_ops --quick smoke, which emits BENCH_perf_ops.json (including
+# the replicas {1,2} scaling rows, the local/unix transport-overhead
+# rows, the planner_rows budget sweep, the fault_rows recovery smoke,
+# the conv_rows autotune family and the trace_rows tracing-overhead
+# family; field schema in docs/BENCH_SCHEMA.md) so the perf trajectory
+# stays diffable across commits, and finally a --trace train smoke on
+# the local and unix transports asserting the merged Chrome trace is
+# emitted and parses. Exits non-zero on the first failure.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -32,6 +34,38 @@ cargo test -q --test distributed
 cargo test -q --test transport
 cargo test -q --test planner
 cargo test -q --test fault_tolerance
+cargo test -q --test trace
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 cargo test -q --doc
 cargo bench --bench perf_ops -- --quick
+
+# --trace smoke (PR 8): a tiny train run per transport must emit one
+# merged, parseable Chrome trace file. Uses the release binary built
+# above; python3 validates the JSON when available, otherwise the
+# check degrades to non-empty.
+trace_dir="$(mktemp -d)"
+trap 'rm -rf "$trace_dir"' EXIT
+cat > "$trace_dir/cfg.json" <<'EOF'
+{"arch": "cnn2d", "depth": 2, "channels": 4, "input_hw": 16,
+ "cin": 2, "classes": 4, "seed": 3, "batch": 4, "steps": 2,
+ "dataset_size": 16}
+EOF
+for transport in local unix; do
+  out="$trace_dir/$transport.trace.json"
+  ./target/release/moonwalk train --config "$trace_dir/cfg.json" \
+    --engine moonwalk --transport "$transport" --replicas 2 \
+    --trace "$out"
+  test -s "$out"
+  if command -v python3 > /dev/null 2>&1; then
+    python3 - "$out" <<'EOF'
+import json, sys
+with open(sys.argv[1]) as f:
+    trace = json.load(f)
+events = trace["traceEvents"]
+assert events, "empty traceEvents"
+assert all("ph" in e and "pid" in e for e in events)
+names = {e.get("name") for e in events}
+assert "moonwalk.phase1" in names, sorted(names)
+EOF
+  fi
+done
