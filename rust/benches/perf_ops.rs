@@ -725,6 +725,74 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // Reversible-depth grid (ISSUE 9): steps/s and tracked peak bytes vs
+    // depth for a coupling-block stack, backprop vs moonwalk vs the
+    // planned engine at its tightest budget. The story in numbers: the
+    // zero-residual blocks keep moonwalk/planned peaks flat in depth
+    // while backprop's activation tape grows linearly
+    // (`tests/reversible.rs` asserts the same shape; this family tracks
+    // the constants).
+    println!("\nreversible depth grid (coupling revnet, channels 8, batch 4):");
+    println!(
+        "{:<8} {:<10} {:>12} {:>12}",
+        "depth", "engine", "steps/s", "peak_bytes"
+    );
+    let mut depth_rows: Vec<Json> = Vec::new();
+    {
+        use moonwalk::autodiff::{Backprop, Moonwalk, MoonwalkOpts, PlannedEngine};
+        use moonwalk::model::{build_revnet, RevNetSpec, RevNetVariant};
+        use moonwalk::plan;
+        let depths: &[usize] = if quick { &[8, 128] } else { &[8, 32, 128] };
+        for &depth in depths {
+            let mut rng = Rng::new(9);
+            let net = build_revnet(
+                &RevNetSpec {
+                    channels: 8,
+                    depth,
+                    variant: RevNetVariant::Coupling,
+                    ..Default::default()
+                },
+                &mut rng,
+            );
+            let x = Tensor::randn(&[4, 8], 1.0, &mut rng);
+            let probes = plan::probe_network(&net, x.shape(), plan::DEFAULT_FRAG_BLOCKS)?;
+            let tight = plan::build_frontier(&probes).min_peak();
+            let engines: Vec<(&str, Box<dyn moonwalk::autodiff::GradEngine>)> = vec![
+                ("backprop", Box::new(Backprop)),
+                ("moonwalk", Box::new(Moonwalk::new(MoonwalkOpts::default()))),
+                ("planned", Box::new(PlannedEngine::with_budget(Some(tight)))),
+            ];
+            for (name, engine) in engines {
+                let (peak, secs, _loss) = moonwalk::coordinator::sweep::measure_engine(
+                    engine.as_ref(),
+                    &net,
+                    &x,
+                    &MeanLoss,
+                    1,
+                    iters.min(5),
+                )?;
+                let steps_per_s = if secs > 0.0 { 1.0 / secs } else { 0.0 };
+                println!(
+                    "{:<8} {:<10} {:>12.1} {:>12}",
+                    depth,
+                    name,
+                    steps_per_s,
+                    tracker::fmt_bytes(peak)
+                );
+                depth_rows.push(Json::from_pairs(vec![
+                    ("depth", depth.into()),
+                    ("engine", name.into()),
+                    ("variant", "coupling".into()),
+                    ("channels", 8usize.into()),
+                    ("batch", 4usize.into()),
+                    ("steps_per_s", steps_per_s.into()),
+                    ("peak_bytes", peak.into()),
+                    ("tight_budget", tight.into()),
+                ]));
+            }
+        }
+    }
+
     // Fault-injection smoke (ISSUE 6): the supervised unix transport's
     // end-to-end recovery cycle — detect a killed / hung worker, respawn
     // it, re-upload parameters and replay the step — timed against the
@@ -950,6 +1018,7 @@ fn main() -> anyhow::Result<()> {
         ("replicas_rows", Json::Arr(replica_rows)),
         ("transport_rows", Json::Arr(transport_rows)),
         ("planner_rows", Json::Arr(planner_rows)),
+        ("depth_rows", Json::Arr(depth_rows)),
         ("fault_rows", Json::Arr(fault_rows)),
         ("trace_rows", Json::Arr(trace_rows)),
         ("metrics", moonwalk::obs::metrics::snapshot()),

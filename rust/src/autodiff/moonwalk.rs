@@ -152,7 +152,7 @@ impl Moonwalk {
             for (i, layer) in net.layers.iter().enumerate().rev() {
                 let _sl = crate::span!("phase2.cotangent", layer = i);
                 let res = residuals[i].take().expect("consumed once");
-                aids[i] = capture_aid(layer.as_ref(), &plan[i], &h)?;
+                aids[i] = capture_aid(layer.as_ref(), i, &plan[i], &h)?;
                 h = layer.vjp_input(&res, &h);
             }
         }
@@ -218,7 +218,7 @@ impl Moonwalk {
                 for i in (lo..hi).rev() {
                     let _sl = crate::span!("phase2.cotangent", layer = i);
                     let res = residuals[i - lo].take().expect("consumed once");
-                    aids[i] = capture_aid(net.layers[i].as_ref(), &plan[i], &h)?;
+                    aids[i] = capture_aid(net.layers[i].as_ref(), i, &plan[i], &h)?;
                     h = net.layers[i].vjp_input(&res, &h);
                 }
             }
@@ -242,13 +242,16 @@ enum LayerPlan {
 
 fn capture_aid(
     layer: &dyn crate::nn::Layer,
+    index: usize,
     plan: &LayerPlan,
     h_out: &Tensor,
 ) -> anyhow::Result<CotangentAid> {
     Ok(match plan {
         LayerPlan::Vijp | LayerPlan::SkipBroken => CotangentAid::None,
         LayerPlan::Fragment(block) => {
-            CotangentAid::Fragment(layer.fragment_capture(h_out, *block)?)
+            CotangentAid::Fragment(layer.fragment_capture(h_out, *block).map_err(|e| {
+                anyhow::anyhow!("Phase II fragment capture failed at layer {index}: {e}")
+            })?)
         }
         LayerPlan::Checkpoint => CotangentAid::Checkpoint(h_out.clone()),
     })
@@ -297,7 +300,9 @@ impl GradEngine for Moonwalk {
                     let h_in = h.as_ref().ok_or_else(|| {
                         anyhow::anyhow!("fragment at layer {i} needs an intact chain")
                     })?;
-                    Some(layer.fragment_reconstruct(&frag, h_in)?)
+                    Some(layer.fragment_reconstruct(&frag, h_in).map_err(|e| {
+                        anyhow::anyhow!("Phase III reconstruction failed at layer {i}: {e}")
+                    })?)
                 }
                 (CotangentAid::None, LayerPlan::SkipBroken) => None,
                 (CotangentAid::None, _) => {

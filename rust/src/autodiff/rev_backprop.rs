@@ -38,7 +38,7 @@ impl GradEngine for RevBackprop {
         let mut x_out = x;
         for (i, layer) in net.layers.iter().enumerate().rev() {
             let x_in = layer.inverse(&x_out).map_err(|e| {
-                anyhow::anyhow!("RevBackprop requires invertible layers: {e}")
+                anyhow::anyhow!("RevBackprop inverse failed at layer {i}: {e}")
             })?;
             if layer.n_params() > 0 {
                 sink(i, layer.vjp_params(&x_in, &g));

@@ -29,6 +29,10 @@ pub struct LayerCost {
     pub d_params: usize,
     /// Forward FLOPs.
     pub flops: f64,
+    /// Is the layer's Jacobian right-invertible (`vijp` available)?
+    /// Reversible blocks (`nn::reversible`) report `true` regardless of
+    /// their inner branches: the coupling structure makes the composite
+    /// Jacobian unit-triangular, hence exactly invertible.
     pub submersive: bool,
     pub fragmental_ok: bool,
     /// Does the layer's vijp avoid the sequential spatial wavefront

@@ -5,7 +5,7 @@
 //! these from files or inline JSON. Unknown fields are ignored so configs
 //! stay forward-compatible.
 
-use crate::model::{FragmentalCnn1dSpec, Network, SubmersiveCnn2dSpec};
+use crate::model::{FragmentalCnn1dSpec, Network, RevNetSpec, RevNetVariant, SubmersiveCnn2dSpec};
 use crate::util::json::Json;
 use crate::util::Rng;
 
@@ -16,6 +16,9 @@ pub enum ArchKind {
     Cnn1dFragmental,
     Invertible,
     Mlp,
+    /// Reversible block stack (`model::build_revnet`); the `revnet_variant`
+    /// field picks the block family.
+    RevNet,
 }
 
 /// Full experiment configuration.
@@ -37,6 +40,11 @@ pub struct Config {
     pub block: usize,
     /// Checkpoint segment count (checkpointed engines); 0 = auto √L.
     pub checkpoint_every: usize,
+    /// Reversible block family for `arch = "revnet"`
+    /// (`coupling` | `momentum` | `residual` | `mixed`).
+    pub revnet_variant: String,
+    /// Momentum-block damping γ for `arch = "revnet"`.
+    pub gamma: f32,
     pub steps: usize,
     pub lr: f64,
     pub optimizer: String,
@@ -60,6 +68,8 @@ impl Default for Config {
             engine: "moonwalk".into(),
             block: 4,
             checkpoint_every: 0,
+            revnet_variant: "coupling".into(),
+            gamma: 0.9,
             steps: 100,
             lr: 1e-3,
             optimizer: "adam".into(),
@@ -78,8 +88,14 @@ impl Config {
             "cnn1d_fragmental" | "cnn1d" => ArchKind::Cnn1dFragmental,
             "invertible" => ArchKind::Invertible,
             "mlp" => ArchKind::Mlp,
+            "revnet" => ArchKind::RevNet,
             other => anyhow::bail!("unknown arch `{other}`"),
         };
+        let revnet_variant = j.opt_str("revnet_variant", &d.revnet_variant).to_string();
+        match revnet_variant.as_str() {
+            "coupling" | "momentum" | "residual" | "mixed" => {}
+            other => anyhow::bail!("unknown revnet_variant `{other}`"),
+        }
         Ok(Config {
             arch,
             depth: j.opt_usize("depth", d.depth),
@@ -94,6 +110,8 @@ impl Config {
             engine: j.opt_str("engine", &d.engine).to_string(),
             block: j.opt_usize("block", d.block),
             checkpoint_every: j.opt_usize("checkpoint_every", d.checkpoint_every),
+            revnet_variant,
+            gamma: j.opt_f64("gamma", d.gamma as f64) as f32,
             steps: j.opt_usize("steps", d.steps),
             lr: j.opt_f64("lr", d.lr),
             optimizer: j.opt_str("optimizer", &d.optimizer).to_string(),
@@ -119,6 +137,7 @@ impl Config {
                     ArchKind::Cnn1dFragmental => "cnn1d_fragmental",
                     ArchKind::Invertible => "invertible",
                     ArchKind::Mlp => "mlp",
+                    ArchKind::RevNet => "revnet",
                 }
                 .into(),
             ),
@@ -134,6 +153,8 @@ impl Config {
             ("engine", self.engine.as_str().into()),
             ("block", self.block.into()),
             ("checkpoint_every", self.checkpoint_every.into()),
+            ("revnet_variant", self.revnet_variant.as_str().into()),
+            ("gamma", (self.gamma as f64).into()),
             ("steps", self.steps.into()),
             ("lr", self.lr.into()),
             ("optimizer", self.optimizer.as_str().into()),
@@ -179,6 +200,20 @@ impl Config {
                 dims[self.depth] = self.classes;
                 crate::model::build_mlp(&dims, self.alpha, rng)
             }
+            ArchKind::RevNet => crate::model::build_revnet(
+                &RevNetSpec {
+                    channels: self.channels,
+                    depth: self.depth,
+                    variant: match self.revnet_variant.as_str() {
+                        "momentum" => RevNetVariant::Momentum,
+                        "residual" => RevNetVariant::Residual,
+                        "mixed" => RevNetVariant::Mixed,
+                        _ => RevNetVariant::Coupling,
+                    },
+                    gamma: self.gamma,
+                },
+                rng,
+            ),
         }
     }
 
@@ -191,6 +226,7 @@ impl Config {
                 vec![self.batch, self.input_hw, self.input_hw, self.channels]
             }
             ArchKind::Mlp => vec![self.batch, self.channels],
+            ArchKind::RevNet => vec![self.batch, self.channels],
         }
     }
 }
@@ -227,7 +263,7 @@ mod tests {
     #[test]
     fn builds_each_arch() {
         let mut rng = Rng::new(0);
-        for arch in ["cnn2d", "cnn1d", "invertible", "mlp"] {
+        for arch in ["cnn2d", "cnn1d", "invertible", "mlp", "revnet"] {
             let j = Json::parse(&format!(
                 r#"{{"arch": "{arch}", "depth": 2, "channels": 4, "input_hw": 16, "input_len": 16, "batch": 1}}"#
             ))

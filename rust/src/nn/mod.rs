@@ -28,6 +28,7 @@ pub mod conv2d;
 pub mod dense;
 pub mod loss;
 pub mod pool;
+pub mod reversible;
 
 pub use activation::LeakyRelu;
 pub use conv1d::Conv1d;
@@ -35,6 +36,7 @@ pub use conv2d::Conv2d;
 pub use dense::Dense;
 pub use loss::{Loss, MeanLoss, SoftmaxCrossEntropy};
 pub use pool::{MaxPool2d, Upsample};
+pub use reversible::{CouplingBlock, MomentumBlock, ResidualBlock};
 
 use crate::tensor::{BitTensor, Tensor};
 
@@ -71,6 +73,18 @@ pub enum ResidualData {
     Signs(BitTensor),
     /// Flat argmax indices (max pooling); stored as u32 per output element.
     ArgMax(IndexTensor),
+    /// Composite-block residual (the reversible blocks of
+    /// [`reversible`]): the inner layers' own Minimal residuals, plus
+    /// the block input under [`ResidualKind::Full`] — `None` at the
+    /// Minimal tier, which is the zero-residual contract that lets a
+    /// reversible stack run Moonwalk Phase I storing nothing at all.
+    Block {
+        /// Block input (Full tier only — what `vjp_params` recomputation
+        /// consumes; the Minimal tier stores `None`).
+        input: Option<Tensor>,
+        /// Inner layers' residuals, in block-specific order.
+        inner: Vec<Residual>,
+    },
 }
 
 /// A tracked u32 index tensor (pooling argmax residuals).
@@ -274,6 +288,10 @@ pub fn residual_bytes(res: &Residual) -> usize {
         ResidualData::Input(t) => t.bytes(),
         ResidualData::Signs(b) => b.bytes(),
         ResidualData::ArgMax(ix) => ix.data().len() * 4,
+        ResidualData::Block { input, inner } => {
+            input.as_ref().map(Tensor::bytes).unwrap_or(0)
+                + inner.iter().map(residual_bytes).sum::<usize>()
+        }
     }
 }
 

@@ -1,0 +1,767 @@
+//! Reversible composite blocks — the paper's best case for Phase-I
+//! residual storage (**zero bytes**), grown from the two cited related
+//! works: RevNet coupling blocks (Gomez et al., *The Reversible Residual
+//! Network*) and momentum residual networks (Sander et al., *Momentum
+//! Residual Neural Networks*).
+//!
+//! All three blocks operate on a channel split of the trailing axis
+//! (channel-last layouts `[N, …, C]` with `C` even): `x = (x_a ‖ x_b)`,
+//! each half mapped by an inner [`Layer`] that must be shape-preserving
+//! on the half width. Their input–output Jacobians are *unit-triangular
+//! compositions* (or triangular with a fixed `γ` diagonal for the
+//! momentum variant), hence exactly invertible for **any** differentiable
+//! inner layer — submersivity of the block does not require submersivity
+//! of `f`/`g`. Consequently:
+//!
+//! * `vijp` is an exact, fixed-point-free analytic inverse built from at
+//!   most two inner `vjp_input` calls — no linear solves, no iteration;
+//! * the [`ResidualKind::Minimal`] residual stores only the inner
+//!   layers' own minimal residuals (nothing at all for conv/dense
+//!   inners), so a pure block stack runs Moonwalk Phase I with **zero**
+//!   stored bytes and its tracked peak stays flat in depth;
+//! * `inverse` reconstructs the input from the output exactly, so the
+//!   RevBackprop baseline applies to block stacks too.
+//!
+//! Why the plain full-width residual `y = x + f(x)` is *not* here: its
+//! vijp is `h · (I + J_f)⁻ᵀ`, which for arbitrary `f` needs a linear
+//! solve or a fixed-point iteration (i-ResNet style) — both violate the
+//! zero-residual, fixed-point-free contract. [`ResidualBlock`] instead
+//! restricts `f` to read the first half and write the second
+//! (`y = (x_a, x_b + f(x_a))`), the unique additive-residual structure
+//! whose Jacobian is nilpotent-above-diagonal (`J_f̃² = 0`), giving the
+//! exact one-call inverse `(I + J_f̃)⁻¹ = I − J_f̃`. Stacking two such
+//! blocks with swapped halves is exactly the coupling block.
+//!
+//! Inverse formulas (documented invariants; each is enforced by
+//! `rust/tests/reversible.rs` and the per-block unit tests below):
+//!
+//! | block      | forward                              | vijp (given `h`, returns `h'`)                      |
+//! |------------|--------------------------------------|-----------------------------------------------------|
+//! | residual   | `y = (xa, xb + f(xa))`               | `h'b = hb;  h'a = ha − f.vjp(h'b)`                  |
+//! | coupling   | `y1 = x1 + f(x2); y2 = x2 + g(y1)`   | `h'2 = h2 − f.vjp(h1);  h'1 = h1 − g.vjp(h'2)`      |
+//! | momentum   | `v' = γ·v + f(x);  x' = x + v'`      | `w = hv/γ; h'x = hx − f.vjp(w); h'v = w − h'x`      |
+
+use crate::nn::{Layer, LayerBox, LayerError, Residual, ResidualData, ResidualKind, Submersivity};
+use crate::tensor::{ops, Tensor};
+
+/// Split the trailing axis in half: `x = (a ‖ b)` per row.
+fn split_last(x: &Tensor) -> (Tensor, Tensor) {
+    let c = *x.shape().last().expect("split_last needs rank ≥ 1");
+    assert!(c % 2 == 0, "reversible split needs an even trailing axis, got {c}");
+    let half = c / 2;
+    let rows = x.len() / c;
+    let mut hshape = x.shape().to_vec();
+    *hshape.last_mut().unwrap() = half;
+    let mut a = Tensor::zeros(&hshape);
+    let mut b = Tensor::zeros(&hshape);
+    {
+        let xd = x.data();
+        let ad = a.data_mut();
+        for r in 0..rows {
+            ad[r * half..(r + 1) * half].copy_from_slice(&xd[r * c..r * c + half]);
+        }
+    }
+    {
+        let xd = x.data();
+        let bd = b.data_mut();
+        for r in 0..rows {
+            bd[r * half..(r + 1) * half].copy_from_slice(&xd[r * c + half..(r + 1) * c]);
+        }
+    }
+    (a, b)
+}
+
+/// Inverse of [`split_last`]: interleave two half-width tensors back
+/// into one full-width tensor along the trailing axis.
+fn concat_last(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape(), b.shape(), "concat_last halves must agree");
+    let half = *a.shape().last().expect("concat_last needs rank ≥ 1");
+    let c = half * 2;
+    let rows = a.len() / half.max(1);
+    let mut shape = a.shape().to_vec();
+    *shape.last_mut().unwrap() = c;
+    let mut y = Tensor::zeros(&shape);
+    {
+        let ad = a.data();
+        let bd = b.data();
+        let yd = y.data_mut();
+        for r in 0..rows {
+            yd[r * c..r * c + half].copy_from_slice(&ad[r * half..(r + 1) * half]);
+            yd[r * c + half..(r + 1) * c].copy_from_slice(&bd[r * half..(r + 1) * half]);
+        }
+    }
+    y
+}
+
+/// The half-width shape of a block input, or a named shape error.
+fn half_shape(in_shape: &[usize], layer: &str) -> Result<Vec<usize>, LayerError> {
+    let c = *in_shape.last().ok_or_else(|| LayerError::Shape {
+        layer: layer.into(),
+        reason: "rank-0 input".into(),
+    })?;
+    if c % 2 != 0 {
+        return Err(LayerError::Shape {
+            layer: layer.into(),
+            reason: format!("trailing axis {c} must be even for the channel split"),
+        });
+    }
+    let mut h = in_shape.to_vec();
+    *h.last_mut().unwrap() = c / 2;
+    Ok(h)
+}
+
+/// Check an inner layer preserves the half-width shape.
+fn check_preserving(
+    inner: &dyn Layer,
+    half: &[usize],
+    block: &str,
+) -> Result<(), LayerError> {
+    let out = inner.out_shape(half)?;
+    if out != half {
+        return Err(LayerError::Shape {
+            layer: block.into(),
+            reason: format!(
+                "inner layer `{}` must be shape-preserving on the half width: {half:?} -> {out:?}",
+                inner.name()
+            ),
+        });
+    }
+    Ok(())
+}
+
+/// Unpack a block residual's inner residual list (panics on a foreign
+/// residual, like every layer does on a mismatched payload).
+fn block_inner<'a>(res: &'a Residual, who: &str) -> (&'a [Residual], Option<&'a Tensor>) {
+    match &res.kind {
+        ResidualData::Block { inner, input } => (inner.as_slice(), input.as_ref()),
+        other => panic!("{who}: expected a Block residual, got {other:?}"),
+    }
+}
+
+/// Build the block residual for a forward pass: inner residuals always
+/// ride at their own Minimal tier (that is all `vjp_input`/`vijp` need);
+/// the Full tier adds the block input, which is what a later
+/// `vjp_params` recomputation consumes — exactly the `Mθ = input bytes`
+/// accounting of every other parameterized layer.
+fn block_residual(
+    x: &Tensor,
+    kind: ResidualKind,
+    inner: Vec<Residual>,
+) -> Residual {
+    Residual {
+        in_shape: x.shape().to_vec(),
+        kind: ResidualData::Block {
+            input: match kind {
+                ResidualKind::Full => Some(x.clone()),
+                ResidualKind::Minimal => None,
+            },
+            inner,
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ResidualBlock
+// ---------------------------------------------------------------------------
+
+/// A channel-disjoint residual block `y = (x_a, x_b + f(x_a))`: the
+/// inner layer reads the first half of the trailing axis and its output
+/// is added to the second half. The read/write disjointness makes the
+/// residual Jacobian nilpotent (`J² = 0`), so `(I + J)⁻¹ = I − J`
+/// exactly — see the module docs for why the full-width `y = x + f(x)`
+/// cannot satisfy the fixed-point-free contract.
+pub struct ResidualBlock {
+    /// The wrapped residual branch (half width → half width).
+    pub f: LayerBox,
+    label: String,
+}
+
+impl ResidualBlock {
+    /// Wrap `f` (any shape-preserving half-width layer) as the residual
+    /// branch.
+    pub fn new(f: LayerBox) -> ResidualBlock {
+        let label = format!("residual_block({})", f.name());
+        ResidualBlock { f, label }
+    }
+}
+
+impl Layer for ResidualBlock {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>, LayerError> {
+        let half = half_shape(in_shape, &self.label)?;
+        check_preserving(self.f.as_ref(), &half, &self.label)?;
+        Ok(in_shape.to_vec())
+    }
+
+    fn forward_res(&self, x: &Tensor, kind: ResidualKind) -> (Tensor, Residual) {
+        let _sp = crate::span!("residual_block.forward");
+        let (xa, xb) = split_last(x);
+        let (f_out, res_f) = self.f.forward_res(&xa, ResidualKind::Minimal);
+        assert_eq!(
+            f_out.shape(),
+            xa.shape(),
+            "{}: inner layer must be shape-preserving",
+            self.label
+        );
+        let yb = ops::add(&xb, &f_out);
+        let y = concat_last(&xa, &yb);
+        (y, block_residual(x, kind, vec![res_f]))
+    }
+
+    fn vjp_input(&self, res: &Residual, grad_out: &Tensor) -> Tensor {
+        let (inner, _) = block_inner(res, &self.label);
+        let (ha_p, hb_p) = split_last(grad_out);
+        // ∂y_a/∂x_a = I, ∂y_b/∂x_a = J_f, ∂y_b/∂x_b = I.
+        let ha = ops::add(&ha_p, &self.f.vjp_input(&inner[0], &hb_p));
+        concat_last(&ha, &hb_p)
+    }
+
+    fn vjp_params(&self, x: &Tensor, grad_out: &Tensor) -> Vec<Tensor> {
+        let (xa, _) = split_last(x);
+        let (_, hb_p) = split_last(grad_out);
+        self.f.vjp_params(&xa, &hb_p)
+    }
+
+    fn vijp(&self, res: &Residual, h_in: &Tensor) -> Result<Tensor, LayerError> {
+        let _sp = crate::span!("residual_block.vijp");
+        let (inner, _) = block_inner(res, &self.label);
+        let (ha, hb) = split_last(h_in);
+        // Unit-triangular inverse: h'b = hb, h'a = ha − h'b·J_f.
+        let ha_p = ops::sub(&ha, &self.f.vjp_input(&inner[0], &hb));
+        Ok(concat_last(&ha_p, &hb))
+    }
+
+    fn jvp_input(&self, x: &Tensor, u: &Tensor) -> Tensor {
+        let (xa, _) = split_last(x);
+        let (ua, ub) = split_last(u);
+        let vb = ops::add(&ub, &self.f.jvp_input(&xa, &ua));
+        concat_last(&ua, &vb)
+    }
+
+    fn jvp_params(&self, x: &Tensor, dparams: &[Tensor]) -> Tensor {
+        let (xa, _) = split_last(x);
+        let vb = self.f.jvp_params(&xa, dparams);
+        concat_last(&Tensor::zeros(xa.shape()), &vb)
+    }
+
+    fn inverse(&self, y: &Tensor) -> Result<Tensor, LayerError> {
+        // The read channels pass through untouched, so the branch input
+        // is available verbatim: xa = ya, xb = yb − f(ya).
+        let (ya, yb) = split_last(y);
+        let xb = ops::sub(&yb, &self.f.forward(&ya));
+        Ok(concat_last(&ya, &xb))
+    }
+
+    fn submersivity(&self) -> Submersivity {
+        // Unit-triangular Jacobian ⇒ invertible for ANY differentiable
+        // inner layer (inner submersivity not required).
+        Submersivity::Submersive { fast_path: true }
+    }
+
+    fn params(&self) -> Vec<&Tensor> {
+        self.f.params()
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        self.f.params_mut()
+    }
+
+    fn project_submersive(&mut self) {
+        self.f.project_submersive();
+    }
+
+    fn flops_estimate(&self, in_shape: &[usize]) -> f64 {
+        match half_shape(in_shape, &self.label) {
+            Ok(h) => {
+                self.f.flops_estimate(&h) + h.iter().product::<usize>() as f64
+            }
+            Err(_) => 0.0,
+        }
+    }
+
+    fn conv_autotune(&self, x: &Tensor) -> Vec<crate::tensor::conv_algo::TuneOutcome> {
+        let (xa, _) = split_last(x);
+        self.f.conv_autotune(&xa)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CouplingBlock
+// ---------------------------------------------------------------------------
+
+/// A RevNet coupling block (Gomez et al.): over the channel split
+/// `x = (x1 ‖ x2)`,
+///
+/// ```text
+/// y1 = x1 + f(x2)
+/// y2 = x2 + g(y1)
+/// ```
+///
+/// Both halves are updated, so unlike [`ResidualBlock`] no channel
+/// passes through untouched — yet the Jacobian is a product of two
+/// unit-triangular factors and the block stays exactly invertible:
+/// `x2 = y2 − g(y1)`, `x1 = y1 − f(x2)`.
+pub struct CouplingBlock {
+    /// First branch `f` (reads `x2`, updates the first half).
+    pub f: LayerBox,
+    /// Second branch `g` (reads `y1`, updates the second half).
+    pub g: LayerBox,
+    label: String,
+}
+
+impl CouplingBlock {
+    /// Wrap `f` and `g` (shape-preserving half-width layers).
+    pub fn new(f: LayerBox, g: LayerBox) -> CouplingBlock {
+        let label = format!("coupling({}|{})", f.name(), g.name());
+        CouplingBlock { f, g, label }
+    }
+
+    /// The Phase-II cotangent entering `y1` for an output cotangent
+    /// `(h1', h2')`: `u = h1' + h2'·J_g` — shared by `vjp_input` and
+    /// `vjp_params`.
+    fn y1_cotangent(&self, res_g: &Residual, h1_p: &Tensor, h2_p: &Tensor) -> Tensor {
+        ops::add(h1_p, &self.g.vjp_input(res_g, h2_p))
+    }
+}
+
+impl Layer for CouplingBlock {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>, LayerError> {
+        let half = half_shape(in_shape, &self.label)?;
+        check_preserving(self.f.as_ref(), &half, &self.label)?;
+        check_preserving(self.g.as_ref(), &half, &self.label)?;
+        Ok(in_shape.to_vec())
+    }
+
+    fn forward_res(&self, x: &Tensor, kind: ResidualKind) -> (Tensor, Residual) {
+        let _sp = crate::span!("coupling.forward");
+        let (x1, x2) = split_last(x);
+        let (f_out, res_f) = self.f.forward_res(&x2, ResidualKind::Minimal);
+        assert_eq!(
+            f_out.shape(),
+            x1.shape(),
+            "{}: inner `f` must be shape-preserving",
+            self.label
+        );
+        let y1 = ops::add(&x1, &f_out);
+        let (g_out, res_g) = self.g.forward_res(&y1, ResidualKind::Minimal);
+        assert_eq!(
+            g_out.shape(),
+            x2.shape(),
+            "{}: inner `g` must be shape-preserving",
+            self.label
+        );
+        let y2 = ops::add(&x2, &g_out);
+        let y = concat_last(&y1, &y2);
+        (y, block_residual(x, kind, vec![res_f, res_g]))
+    }
+
+    fn vjp_input(&self, res: &Residual, grad_out: &Tensor) -> Tensor {
+        let (inner, _) = block_inner(res, &self.label);
+        let (h1_p, h2_p) = split_last(grad_out);
+        let u = self.y1_cotangent(&inner[1], &h1_p, &h2_p);
+        // x1 feeds y1 (identity): h_x1 = u.
+        // x2 feeds y2 (identity) and y1 via f: h_x2 = h2' + u·J_f.
+        let h_x2 = ops::add(&h2_p, &self.f.vjp_input(&inner[0], &u));
+        concat_last(&u, &h_x2)
+    }
+
+    fn vjp_params(&self, x: &Tensor, grad_out: &Tensor) -> Vec<Tensor> {
+        // Engines hand the block input (stored Full residual or a
+        // Phase-III recomputed activation); rebuild the inner forward
+        // state (y1, res_g) from it, then route the cotangents.
+        let (x1, x2) = split_last(x);
+        let y1 = ops::add(&x1, &self.f.forward(&x2));
+        let (_, res_g) = self.g.forward_res(&y1, ResidualKind::Minimal);
+        let (h1_p, h2_p) = split_last(grad_out);
+        let u = self.y1_cotangent(&res_g, &h1_p, &h2_p);
+        let mut grads = self.f.vjp_params(&x2, &u);
+        grads.extend(self.g.vjp_params(&y1, &h2_p));
+        grads
+    }
+
+    fn vijp(&self, res: &Residual, h_in: &Tensor) -> Result<Tensor, LayerError> {
+        let _sp = crate::span!("coupling.vijp");
+        let (inner, _) = block_inner(res, &self.label);
+        let (h1, h2) = split_last(h_in);
+        // Invert the two unit-triangular factors in reverse order:
+        // h2' = h2 − h1·J_f, then h1' = h1 − h2'·J_g.
+        let h2_p = ops::sub(&h2, &self.f.vjp_input(&inner[0], &h1));
+        let h1_p = ops::sub(&h1, &self.g.vjp_input(&inner[1], &h2_p));
+        Ok(concat_last(&h1_p, &h2_p))
+    }
+
+    fn jvp_input(&self, x: &Tensor, u: &Tensor) -> Tensor {
+        let (x1, x2) = split_last(x);
+        let y1 = ops::add(&x1, &self.f.forward(&x2));
+        let (u1, u2) = split_last(u);
+        let v1 = ops::add(&u1, &self.f.jvp_input(&x2, &u2));
+        let v2 = ops::add(&u2, &self.g.jvp_input(&y1, &v1));
+        concat_last(&v1, &v2)
+    }
+
+    fn jvp_params(&self, x: &Tensor, dparams: &[Tensor]) -> Tensor {
+        let (x1, x2) = split_last(x);
+        let y1 = ops::add(&x1, &self.f.forward(&x2));
+        let nf = self.f.params().len();
+        let v1 = self.f.jvp_params(&x2, &dparams[..nf]);
+        let v2 = ops::add(
+            &self.g.jvp_params(&y1, &dparams[nf..]),
+            &self.g.jvp_input(&y1, &v1),
+        );
+        concat_last(&v1, &v2)
+    }
+
+    fn inverse(&self, y: &Tensor) -> Result<Tensor, LayerError> {
+        let (y1, y2) = split_last(y);
+        let x2 = ops::sub(&y2, &self.g.forward(&y1));
+        let x1 = ops::sub(&y1, &self.f.forward(&x2));
+        Ok(concat_last(&x1, &x2))
+    }
+
+    fn submersivity(&self) -> Submersivity {
+        Submersivity::Submersive { fast_path: true }
+    }
+
+    fn params(&self) -> Vec<&Tensor> {
+        let mut p = self.f.params();
+        p.extend(self.g.params());
+        p
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        let mut p = self.f.params_mut();
+        p.extend(self.g.params_mut());
+        p
+    }
+
+    fn project_submersive(&mut self) {
+        self.f.project_submersive();
+        self.g.project_submersive();
+    }
+
+    fn flops_estimate(&self, in_shape: &[usize]) -> f64 {
+        match half_shape(in_shape, &self.label) {
+            Ok(h) => {
+                let elems = h.iter().product::<usize>() as f64;
+                self.f.flops_estimate(&h) + self.g.flops_estimate(&h) + 2.0 * elems
+            }
+            Err(_) => 0.0,
+        }
+    }
+
+    fn conv_autotune(&self, x: &Tensor) -> Vec<crate::tensor::conv_algo::TuneOutcome> {
+        let (x1, x2) = split_last(x);
+        let y1 = ops::add(&x1, &self.f.forward(&x2));
+        let mut out = self.f.conv_autotune(&x2);
+        out.extend(self.g.conv_autotune(&y1));
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MomentumBlock
+// ---------------------------------------------------------------------------
+
+/// A momentum residual block (Sander et al.): the state carries a
+/// velocity in the second half of the trailing axis, `x = (x_s ‖ v_s)`:
+///
+/// ```text
+/// v' = γ·v_s + f(x_s)
+/// x' = x_s + v'
+/// ```
+///
+/// The Jacobian is triangular with diagonal blocks `{I, γI}`, so the
+/// block is exactly invertible whenever `γ ≠ 0` — enforced at
+/// construction (`γ ∈ (0, 1]`, the damping regime of the paper).
+pub struct MomentumBlock {
+    /// The force branch `f` (reads the position half).
+    pub f: LayerBox,
+    /// Velocity damping factor `γ ∈ (0, 1]`.
+    pub gamma: f32,
+    label: String,
+}
+
+impl MomentumBlock {
+    /// Wrap `f` with damping `γ`; asserts `0 < γ ≤ 1` (at `γ = 0` the
+    /// velocity channels leave the Jacobian's row space and the block
+    /// stops being submersive).
+    pub fn new(f: LayerBox, gamma: f32) -> MomentumBlock {
+        assert!(
+            gamma > 0.0 && gamma <= 1.0,
+            "momentum block needs γ ∈ (0, 1], got {gamma}"
+        );
+        let label = format!("momentum(g={gamma},{})", f.name());
+        MomentumBlock { f, gamma, label }
+    }
+}
+
+impl Layer for MomentumBlock {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>, LayerError> {
+        let half = half_shape(in_shape, &self.label)?;
+        check_preserving(self.f.as_ref(), &half, &self.label)?;
+        Ok(in_shape.to_vec())
+    }
+
+    fn forward_res(&self, x: &Tensor, kind: ResidualKind) -> (Tensor, Residual) {
+        let _sp = crate::span!("momentum.forward");
+        let (xs, vs) = split_last(x);
+        let (f_out, res_f) = self.f.forward_res(&xs, ResidualKind::Minimal);
+        assert_eq!(
+            f_out.shape(),
+            xs.shape(),
+            "{}: inner layer must be shape-preserving",
+            self.label
+        );
+        let mut v_new = ops::scale(&vs, self.gamma);
+        ops::axpy_inplace(&mut v_new, 1.0, &f_out);
+        let x_new = ops::add(&xs, &v_new);
+        let y = concat_last(&x_new, &v_new);
+        (y, block_residual(x, kind, vec![res_f]))
+    }
+
+    fn vjp_input(&self, res: &Residual, grad_out: &Tensor) -> Tensor {
+        let (inner, _) = block_inner(res, &self.label);
+        let (hx_p, hv_p) = split_last(grad_out);
+        // Both outputs receive f(x_s) and γ·v_s, so their cotangents
+        // travel together: w = hx' + hv'.
+        let w = ops::add(&hx_p, &hv_p);
+        let h_xs = ops::add(&hx_p, &self.f.vjp_input(&inner[0], &w));
+        let h_vs = ops::scale(&w, self.gamma);
+        concat_last(&h_xs, &h_vs)
+    }
+
+    fn vjp_params(&self, x: &Tensor, grad_out: &Tensor) -> Vec<Tensor> {
+        let (xs, _) = split_last(x);
+        let (hx_p, hv_p) = split_last(grad_out);
+        let w = ops::add(&hx_p, &hv_p);
+        self.f.vjp_params(&xs, &w)
+    }
+
+    fn vijp(&self, res: &Residual, h_in: &Tensor) -> Result<Tensor, LayerError> {
+        let _sp = crate::span!("momentum.vijp");
+        let (inner, _) = block_inner(res, &self.label);
+        let (h_xs, h_vs) = split_last(h_in);
+        // From h_vs = γ·(hx' + hv') recover the shared term, then peel
+        // hx' off the position row: hx' = h_xs − w·J_f, hv' = w − hx'.
+        let w = ops::scale(&h_vs, 1.0 / self.gamma);
+        let hx_p = ops::sub(&h_xs, &self.f.vjp_input(&inner[0], &w));
+        let hv_p = ops::sub(&w, &hx_p);
+        Ok(concat_last(&hx_p, &hv_p))
+    }
+
+    fn jvp_input(&self, x: &Tensor, u: &Tensor) -> Tensor {
+        let (xs, _) = split_last(x);
+        let (us, uv) = split_last(u);
+        let mut dv = ops::scale(&uv, self.gamma);
+        ops::axpy_inplace(&mut dv, 1.0, &self.f.jvp_input(&xs, &us));
+        let dx = ops::add(&us, &dv);
+        concat_last(&dx, &dv)
+    }
+
+    fn jvp_params(&self, x: &Tensor, dparams: &[Tensor]) -> Tensor {
+        let (xs, _) = split_last(x);
+        let dv = self.f.jvp_params(&xs, dparams);
+        concat_last(&dv, &dv)
+    }
+
+    fn inverse(&self, y: &Tensor) -> Result<Tensor, LayerError> {
+        let (x_new, v_new) = split_last(y);
+        let xs = ops::sub(&x_new, &v_new);
+        let vs = ops::scale(&ops::sub(&v_new, &self.f.forward(&xs)), 1.0 / self.gamma);
+        Ok(concat_last(&xs, &vs))
+    }
+
+    fn submersivity(&self) -> Submersivity {
+        // γ > 0 by construction ⇒ the triangular Jacobian has a full
+        // diagonal and the block is always submersive.
+        Submersivity::Submersive { fast_path: true }
+    }
+
+    fn params(&self) -> Vec<&Tensor> {
+        self.f.params()
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        self.f.params_mut()
+    }
+
+    fn project_submersive(&mut self) {
+        self.f.project_submersive();
+    }
+
+    fn flops_estimate(&self, in_shape: &[usize]) -> f64 {
+        match half_shape(in_shape, &self.label) {
+            Ok(h) => {
+                let elems = h.iter().product::<usize>() as f64;
+                self.f.flops_estimate(&h) + 3.0 * elems
+            }
+            Err(_) => 0.0,
+        }
+    }
+
+    fn conv_autotune(&self, x: &Tensor) -> Vec<crate::tensor::conv_algo::TuneOutcome> {
+        let (xs, _) = split_last(x);
+        self.f.conv_autotune(&xs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::testutil::{
+        check_vijp_right_inverse, check_vjp_input_against_fd, check_vjp_params_adjoint,
+    };
+    use crate::nn::{Dense, LeakyRelu};
+    use crate::tensor::assert_close;
+    use crate::util::Rng;
+
+    fn dense_block(c: usize, seed: u64) -> (LayerBox, LayerBox) {
+        let mut rng = Rng::new(seed);
+        (
+            Box::new(Dense::new(c, c, true, &mut rng)),
+            Box::new(Dense::new(c, c, true, &mut rng)),
+        )
+    }
+
+    #[test]
+    fn split_concat_roundtrip() {
+        let mut rng = Rng::new(0);
+        let x = Tensor::randn(&[2, 3, 6], 1.0, &mut rng);
+        let (a, b) = split_last(&x);
+        assert_eq!(a.shape(), &[2, 3, 3]);
+        assert_eq!(concat_last(&a, &b), x);
+    }
+
+    #[test]
+    fn residual_block_quartet() {
+        let mut rng = Rng::new(1);
+        let block = ResidualBlock::new(Box::new(Dense::new(4, 4, true, &mut rng)));
+        let x = Tensor::randn(&[3, 8], 1.0, &mut rng);
+        check_vjp_input_against_fd(&block, &x, 10, 1e-3);
+        check_vjp_params_adjoint(&block, &x, 11, 1e-3);
+        check_vijp_right_inverse(&block, &x, 12, 1e-3);
+    }
+
+    #[test]
+    fn residual_block_nonlinear_inner() {
+        // Inner submersivity is NOT required: LeakyReLU is submersive,
+        // but the point is that the sign-dependent Jacobian rides in the
+        // inner Minimal residual and the block inverse stays exact.
+        let mut rng = Rng::new(2);
+        let block = ResidualBlock::new(Box::new(LeakyRelu::new(0.3)));
+        let x = Tensor::randn(&[2, 5, 6], 1.0, &mut rng);
+        check_vjp_input_against_fd(&block, &x, 20, 1e-3);
+        check_vijp_right_inverse(&block, &x, 21, 1e-3);
+        assert_eq!(block.n_params(), 0);
+    }
+
+    #[test]
+    fn coupling_block_quartet() {
+        let (f, g) = dense_block(4, 3);
+        let block = CouplingBlock::new(f, g);
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(&[3, 8], 1.0, &mut rng);
+        check_vjp_input_against_fd(&block, &x, 30, 1e-3);
+        check_vjp_params_adjoint(&block, &x, 31, 1e-3);
+        check_vijp_right_inverse(&block, &x, 32, 1e-3);
+    }
+
+    #[test]
+    fn coupling_block_mixed_inner() {
+        // A nonlinear g branch: the y1 recomputation in vjp_params and
+        // the stored res_g must agree.
+        let mut rng = Rng::new(5);
+        let block = CouplingBlock::new(
+            Box::new(Dense::new(3, 3, false, &mut rng)),
+            Box::new(LeakyRelu::new(0.2)),
+        );
+        let x = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        check_vjp_input_against_fd(&block, &x, 40, 1e-3);
+        check_vjp_params_adjoint(&block, &x, 41, 1e-3);
+        check_vijp_right_inverse(&block, &x, 42, 1e-3);
+    }
+
+    #[test]
+    fn momentum_block_quartet() {
+        let mut rng = Rng::new(6);
+        let block = MomentumBlock::new(Box::new(Dense::new(4, 4, true, &mut rng)), 0.9);
+        let x = Tensor::randn(&[3, 8], 1.0, &mut rng);
+        check_vjp_input_against_fd(&block, &x, 50, 1e-3);
+        check_vjp_params_adjoint(&block, &x, 51, 1e-3);
+        check_vijp_right_inverse(&block, &x, 52, 1e-3);
+    }
+
+    #[test]
+    fn inverses_are_exact() {
+        let mut rng = Rng::new(7);
+        let (f, g) = dense_block(3, 8);
+        let blocks: Vec<LayerBox> = vec![
+            Box::new(ResidualBlock::new(Box::new(Dense::new(3, 3, true, &mut rng)))),
+            Box::new(CouplingBlock::new(f, g)),
+            Box::new(MomentumBlock::new(Box::new(LeakyRelu::new(0.4)), 0.7)),
+        ];
+        for block in &blocks {
+            let x = Tensor::randn(&[2, 6], 1.0, &mut rng);
+            let y = block.forward(&x);
+            let rec = block.inverse(&y).unwrap();
+            assert_close(&rec, &x, 1e-4, &block.name());
+        }
+    }
+
+    #[test]
+    fn zero_residual_at_minimal_tier() {
+        let mut rng = Rng::new(9);
+        let (f, g) = dense_block(4, 10);
+        let block = CouplingBlock::new(f, g);
+        let x = Tensor::randn(&[2, 8], 1.0, &mut rng);
+        let (_, res_min) = block.forward_res(&x, ResidualKind::Minimal);
+        assert_eq!(crate::nn::residual_bytes(&res_min), 0, "the paper's best case");
+        let (_, res_full) = block.forward_res(&x, ResidualKind::Full);
+        assert_eq!(crate::nn::residual_bytes(&res_full), x.bytes());
+    }
+
+    #[test]
+    fn shape_errors_are_named() {
+        let mut rng = Rng::new(11);
+        // Odd trailing axis.
+        let block = ResidualBlock::new(Box::new(LeakyRelu::new(0.1)));
+        let err = block.out_shape(&[2, 5]).unwrap_err();
+        assert!(err.to_string().contains("even"), "{err}");
+        // Non-preserving inner layer.
+        let block = CouplingBlock::new(
+            Box::new(Dense::new(4, 2, false, &mut rng)),
+            Box::new(LeakyRelu::new(0.1)),
+        );
+        let err = block.out_shape(&[2, 8]).unwrap_err();
+        assert!(err.to_string().contains("shape-preserving"), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "γ ∈ (0, 1]")]
+    fn momentum_rejects_zero_gamma() {
+        MomentumBlock::new(Box::new(LeakyRelu::new(0.1)), 0.0);
+    }
+
+    #[test]
+    fn params_order_is_f_then_g() {
+        let (f, g) = dense_block(3, 12);
+        let f_w0 = f.params()[0].data()[0];
+        let g_w0 = g.params()[0].data()[0];
+        let block = CouplingBlock::new(f, g);
+        let ps = block.params();
+        assert_eq!(ps.len(), 4); // w+b for each branch
+        assert_eq!(ps[0].data()[0], f_w0);
+        assert_eq!(ps[2].data()[0], g_w0);
+    }
+}

@@ -33,6 +33,28 @@
 //! budget monotonicity exact — a tighter budget can never select a plan
 //! with more predicted bytes (`tests/planner.rs` proves it on random
 //! nets).
+//!
+//! ## Skip connections: the chain→DAG boundary
+//!
+//! The DP state walks a *chain* of layers, but the reversible blocks of
+//! `nn::reversible` (residual, RevNet coupling, momentum) introduce the
+//! repo's first skip connections. The chain DP stays sound because each
+//! block *folds its skip edges inside a single chain node*: a
+//! `CouplingBlock` is one `Layer` whose internal dataflow is a DAG, yet
+//! whose external interface is exactly one input edge and one output
+//! edge, with a composite Jacobian that is invertible as a whole. The
+//! probe sees one node (submersive, zero Minimal residual, `fast_vijp`),
+//! and the DP discovers the free-vijp assignment with no special casing
+//! — at a tight budget every reversible layer lands on
+//! [`Strategy::Vijp`] (`tests/reversible.rs::planner_assigns_vijp_…`).
+//! Topologies whose skip edges cross *block boundaries* (a transformer's
+//! residual stream spliced by attention, multi-branch merges) cannot be
+//! folded this way; they need the DP state generalized from a chain
+//! index to a DAG cut — the planned follow-up that this node-folding
+//! contract is the first step toward (ROADMAP "reversible layer
+//! family"). Until then, [`validate`] rejecting plans that assume an
+//! intact chain across a break is what keeps the chain assumption
+//! explicit rather than silent.
 
 use crate::memsim;
 use crate::plan::probe::LayerProbe;

@@ -24,6 +24,13 @@
 //! identical across runs and replicas, so every number here is a pure
 //! function of the network and input shape.
 //!
+//! Reversible blocks (`nn::reversible`) need no special handling here:
+//! each block is a single layer whose `forward_res` at `Minimal` yields
+//! a `ResidualData::Block` holding only the inner branches' residuals,
+//! so a pure-Dense coupling block probes to `measured_mx == 0` — the
+//! zero-residual contract the planner's free-vijp assignment rests on
+//! (`tests/reversible.rs` asserts it end to end).
+//!
 //! Wall-clock timing is the one exception, and it is opt-in only:
 //! [`calibrate_convs`] runs the conv autotune (`plan --autotune`) and
 //! [`attach_timed`] copies the resulting *cached* milliseconds onto the

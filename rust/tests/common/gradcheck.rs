@@ -1,0 +1,148 @@
+//! Finite-difference gradient checking against the public `Layer` API.
+//!
+//! The in-crate unit tests validate each layer's operators against its
+//! own `jvp`; this harness is deliberately more paranoid — every check
+//! here compares an analytic operator against **central differences of
+//! `forward` alone**, so a layer whose `jvp` and `vjp` share a bug still
+//! fails. All comparisons are relative: `|analytic − fd| / max(|fd|, 1)`
+//! must stay below the caller's tolerance (the reversible-family
+//! acceptance bar is 1e-3; see `tests/reversible.rs`).
+
+use moonwalk::nn::{Layer, ResidualKind};
+use moonwalk::tensor::{ops, Tensor};
+use moonwalk::util::Rng;
+
+/// Default central-difference step. f32 forward passes lose ~1e-3 of a
+/// unit-scale signal to cancellation below this; above it the O(ε²)
+/// truncation term dominates.
+pub const FD_EPS: f32 = 1e-2;
+
+/// Directional derivative of `forward` at `x` along `u`, by central
+/// differences: `(f(x + εu) − f(x − εu)) / 2ε`.
+pub fn fd_directional(layer: &dyn Layer, x: &Tensor, u: &Tensor, eps: f32) -> Tensor {
+    let xp = ops::add(x, &ops::scale(u, eps));
+    let xm = ops::sub(x, &ops::scale(u, eps));
+    ops::scale(&ops::sub(&layer.forward(&xp), &layer.forward(&xm)), 0.5 / eps)
+}
+
+fn rel_gap(analytic: f32, fd: f32) -> f32 {
+    (analytic - fd).abs() / fd.abs().max(1.0)
+}
+
+/// Check `vjp_input` against finite differences: for random directions
+/// `u` and cotangents `h'`, the adjoint identity
+/// `⟨vjp_input(h'), u⟩ = ⟨h', ∂f/∂x · u⟩` must hold, with the right-hand
+/// Jacobian-vector product measured numerically from `forward`.
+pub fn check_vjp_input_fd(layer: &dyn Layer, x: &Tensor, seed: u64, tol: f32) {
+    let mut rng = Rng::new(seed);
+    let (y, res) = layer.forward_res(x, ResidualKind::Full);
+    for trial in 0..3 {
+        let u = Tensor::randn(x.shape(), 1.0, &mut rng);
+        let hprime = Tensor::randn(y.shape(), 1.0, &mut rng);
+        let fd = ops::dot(&hprime, &fd_directional(layer, x, &u, FD_EPS));
+        let an = ops::dot(&layer.vjp_input(&res, &hprime), &u);
+        assert!(
+            rel_gap(an, fd) < tol,
+            "{}: vjp_input vs central differences (trial {trial}): \
+             analytic {an} vs fd {fd}",
+            layer.name()
+        );
+    }
+}
+
+/// Check `vjp_params` against finite differences, perturbing the real
+/// parameter storage through `params_mut` (and restoring it exactly):
+/// for random parameter directions `dθ` and cotangents `h'`,
+/// `Σᵢ ⟨vjp_params(x, h')ᵢ, dθᵢ⟩ = ⟨h', (f(θ+εdθ)(x) − f(θ−εdθ)(x))/2ε⟩`.
+/// Layers without parameters pass trivially.
+pub fn check_vjp_params_fd(layer: &mut dyn Layer, x: &Tensor, seed: u64, tol: f32) {
+    if layer.n_params() == 0 {
+        return;
+    }
+    let mut rng = Rng::new(seed);
+    let y = layer.forward(x);
+    for trial in 0..3 {
+        let hprime = Tensor::randn(y.shape(), 1.0, &mut rng);
+        let dparams: Vec<Tensor> = layer
+            .params()
+            .iter()
+            .map(|p| Tensor::randn(p.shape(), 1.0, &mut rng))
+            .collect();
+        let yp = forward_perturbed(layer, x, &dparams, FD_EPS);
+        let ym = forward_perturbed(layer, x, &dparams, -FD_EPS);
+        let fd = ops::dot(&hprime, &ops::scale(&ops::sub(&yp, &ym), 0.5 / FD_EPS));
+        let an: f32 = layer
+            .vjp_params(x, &hprime)
+            .iter()
+            .zip(&dparams)
+            .map(|(g, d)| ops::dot(g, d))
+            .sum();
+        assert!(
+            rel_gap(an, fd) < tol,
+            "{}: vjp_params vs central differences (trial {trial}): \
+             analytic {an} vs fd {fd}",
+            layer.name()
+        );
+    }
+}
+
+/// `f(θ + εdθ)(x)` evaluated by shifting the live parameters and shifting
+/// them back afterwards. Add-then-subtract of the same f32 values is not
+/// bit-exact, so the original data is saved and restored verbatim.
+fn forward_perturbed(layer: &mut dyn Layer, x: &Tensor, dparams: &[Tensor], eps: f32) -> Tensor {
+    let saved: Vec<Vec<f32>> = layer.params().iter().map(|p| p.data().to_vec()).collect();
+    for (p, d) in layer.params_mut().into_iter().zip(dparams) {
+        for (pv, dv) in p.data_mut().iter_mut().zip(d.data()) {
+            *pv += eps * dv;
+        }
+    }
+    let y = layer.forward(x);
+    for (p, orig) in layer.params_mut().into_iter().zip(&saved) {
+        p.data_mut().copy_from_slice(orig);
+    }
+    y
+}
+
+/// THE Moonwalk property, via the public API: on a submersive layer,
+/// `vijp` must be a right inverse of `vjp_input` on the row space —
+/// `vijp(vjp_input(h')) == h'` for any output cotangent `h'`.
+pub fn check_vijp_roundtrip(layer: &dyn Layer, x: &Tensor, seed: u64, tol: f32) {
+    let mut rng = Rng::new(seed);
+    let (y, res) = layer.forward_res(x, ResidualKind::Minimal);
+    for trial in 0..3 {
+        let hprime = Tensor::randn(y.shape(), 1.0, &mut rng);
+        let h = layer.vjp_input(&res, &hprime);
+        let recovered = layer
+            .vijp(&res, &h)
+            .unwrap_or_else(|e| panic!("{}: submersive layer's vijp failed: {e}", layer.name()));
+        let err = moonwalk::tensor::rel_err(&recovered, &hprime);
+        assert!(
+            err < tol,
+            "{}: vijp round-trip rel err {err} ≥ {tol} (trial {trial})",
+            layer.name()
+        );
+    }
+}
+
+/// Full gradcheck battery for one layer on one input: `vjp_input` and
+/// `vjp_params` against central differences, plus — iff the layer
+/// reports itself submersive — the `vijp ∘ vjp_input` round-trip. The
+/// submersivity flag itself is cross-checked: a non-submersive layer's
+/// `vijp` must return an error, not wrong numbers.
+pub fn gradcheck_layer(layer: &mut dyn Layer, x: &Tensor, seed: u64, tol: f32) {
+    check_vjp_input_fd(layer, x, seed, tol);
+    check_vjp_params_fd(layer, x, seed ^ 0x9e3779b9, tol);
+    let (y, res) = layer.forward_res(x, ResidualKind::Minimal);
+    if layer.submersivity().is_submersive() {
+        check_vijp_roundtrip(layer, x, seed ^ 0xdeadbeef, tol);
+    } else {
+        let mut rng = Rng::new(seed);
+        let h = Tensor::randn(y.shape(), 1.0, &mut rng);
+        let h_in = layer.vjp_input(&res, &h);
+        assert!(
+            layer.vijp(&res, &h_in).is_err(),
+            "{}: non-submersive layer's vijp must err",
+            layer.name()
+        );
+    }
+}

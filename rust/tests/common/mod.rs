@@ -1,0 +1,5 @@
+//! Shared helpers for integration tests. Files under `tests/common/` are
+//! not compiled as test binaries; suites pull them in with `mod common;`.
+#![allow(dead_code)]
+
+pub mod gradcheck;

@@ -430,3 +430,104 @@ fn prop_pool_vijp() {
         assert!(rel_err(&rec, &hp) < 1e-5);
     });
 }
+
+/// The reversible-family contract: across randomized layers and shapes,
+/// `is_submersive()` must agree with what `vijp` actually does — a
+/// submersive layer's `vijp ∘ vjp_input` round-trips the output
+/// cotangent, and a non-submersive layer's `vijp` returns a named
+/// [`moonwalk::nn::LayerError`] (never wrong numbers, never a panic).
+#[test]
+fn prop_submersivity_flag_matches_vijp_behaviour() {
+    use moonwalk::nn::{CouplingBlock, MomentumBlock, ResidualBlock, Upsample};
+    // A well-conditioned random Dense: the diagonal boost keeps the
+    // vijp's Gram solve far from the rank-deficiency certification edge,
+    // so the submersivity flag is the only thing under test.
+    fn dense(rng: &mut Rng, din: usize, dout: usize) -> Box<Dense> {
+        let mut d = Dense::new(din, dout, rng.bernoulli(0.5), rng);
+        for i in 0..din.min(dout) {
+            d.w.data_mut()[i * dout + i] += 1.5;
+        }
+        Box::new(d)
+    }
+    for_random_cases(900, 60, |rng| {
+        let batch = rng.int_range(1, 3);
+        let half = rng.int_range(1, 5);
+        let width = half * 2;
+        let gamma = [0.6f32, 0.8, 1.0][rng.int_range(0, 3)];
+        let (layer, x): (Box<dyn Layer>, Tensor) = match rng.int_range(0, 9) {
+            0 => {
+                // Square-or-wide Dense: submersive.
+                let dout = rng.int_range(1, width + 1);
+                (dense(rng, width, dout), Tensor::randn(&[batch, width], 1.0, rng))
+            }
+            1 => {
+                // Widening Dense: non-submersive.
+                let dout = width + rng.int_range(1, 4);
+                (dense(rng, width, dout), Tensor::randn(&[batch, width], 1.0, rng))
+            }
+            2 => (
+                Box::new(LeakyRelu::new(0.1)),
+                Tensor::randn(&[batch, width], 1.0, rng),
+            ),
+            3 => {
+                let (conv, x) = random_submersive_conv2d(rng);
+                (Box::new(conv) as Box<dyn Layer>, x)
+            }
+            4 => {
+                // s = 1 ≤ p = 1 breaks Lemma 1: non-submersive.
+                let cout = rng.int_range(1, 4);
+                let cin = cout + rng.int_range(0, 3);
+                let conv = Conv1d::new_fragmental(rng.int_range(2, 5), cin, cout, rng);
+                let len = rng.int_range(8, 16);
+                (Box::new(conv) as Box<dyn Layer>, Tensor::randn(&[batch, len, cin], 1.0, rng))
+            }
+            5 => (
+                Box::new(MaxPool2d::new(2)),
+                Tensor::randn(&[batch, 4, 4, rng.int_range(1, 4)], 1.0, rng),
+            ),
+            6 => {
+                // Expanding map: non-submersive.
+                let cin = rng.int_range(1, 4);
+                let cout = cin + rng.int_range(1, 3);
+                (
+                    Box::new(Upsample::new(cin, cout)),
+                    Tensor::randn(&[batch, 4, 4, cin], 1.0, rng),
+                )
+            }
+            7 => (
+                Box::new(ResidualBlock::new(dense(rng, half, half))),
+                Tensor::randn(&[batch, width], 1.0, rng),
+            ),
+            _ => {
+                let block: Box<dyn Layer> = if rng.bernoulli(0.5) {
+                    Box::new(CouplingBlock::new(
+                        dense(rng, half, half),
+                        dense(rng, half, half),
+                    ))
+                } else {
+                    Box::new(MomentumBlock::new(dense(rng, half, half), gamma))
+                };
+                (block, Tensor::randn(&[batch, width], 1.0, rng))
+            }
+        };
+        let (y, res) = layer.forward_res(&x, ResidualKind::Minimal);
+        let hp = Tensor::randn(y.shape(), 1.0, rng);
+        let h = layer.vjp_input(&res, &hp);
+        match (layer.submersivity().is_submersive(), layer.vijp(&res, &h)) {
+            (true, Ok(rec)) => {
+                let err = rel_err(&rec, &hp);
+                assert!(err < 5e-2, "{}: round-trip rel err {err}", layer.name());
+            }
+            (true, Err(e)) => panic!("{}: submersive flag but vijp failed: {e}", layer.name()),
+            (false, Ok(_)) => panic!("{}: non-submersive flag but vijp succeeded", layer.name()),
+            (false, Err(e)) => {
+                let msg = format!("{e}");
+                assert!(
+                    msg.contains(&layer.name()),
+                    "{}: error must name the layer: {msg}",
+                    layer.name()
+                );
+            }
+        }
+    });
+}

@@ -1,0 +1,676 @@
+//! The reversible layer family, end to end: finite-difference gradchecks
+//! for every `nn/` layer, cross-engine equivalence on 100+-layer block
+//! stacks, depth grids proving the zero-residual memory contract (peak
+//! flat in depth for Moonwalk/planned, linear for Backprop), the planner
+//! discovering free vijps unaided, indexed layer errors, and the
+//! parameter wire format on block topologies.
+
+mod common;
+
+use std::io::Cursor;
+use std::sync::Mutex;
+
+use common::gradcheck::{self, gradcheck_layer};
+use moonwalk::autodiff::{
+    engine_by_name, Backprop, GradEngine, Moonwalk, MoonwalkOpts, PlannedEngine, RevBackprop,
+    EXACT_ENGINES,
+};
+use moonwalk::coordinator::sweep::measure_engine;
+use moonwalk::distributed::transport::wire;
+use moonwalk::model::{build_revnet, Network, RevNetSpec, RevNetVariant};
+use moonwalk::nn::{
+    Conv1d, Conv2d, CouplingBlock, Dense, Layer, LayerError, LeakyRelu, MaxPool2d, MeanLoss,
+    MomentumBlock, Residual, ResidualBlock, ResidualData, ResidualKind, Submersivity, Upsample,
+    residual_bytes,
+};
+use moonwalk::plan::{build_frontier, probe_network, Strategy, DEFAULT_FRAG_BLOCKS};
+use moonwalk::runtime::pool;
+use moonwalk::tensor::{rel_err, Tensor};
+use moonwalk::util::Rng;
+
+/// Serializes the tests that pin the (process-global) pool thread count
+/// or compare tracked peaks (the tracker is process-global too).
+static THREAD_PIN: Mutex<()> = Mutex::new(());
+
+fn pin_lock() -> std::sync::MutexGuard<'static, ()> {
+    match THREAD_PIN.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// The acceptance bar for every finite-difference check in this suite.
+const GRADCHECK_TOL: f32 = 1e-3;
+
+/// Random input with every element pushed at least 0.25 from zero, so a
+/// ±`FD_EPS` probe cannot cross a LeakyReLU kink and corrupt the
+/// central-difference estimate.
+fn margin_input(shape: &[usize], rng: &mut Rng) -> Tensor {
+    let mut x = Tensor::randn(shape, 1.0, rng);
+    for v in x.data_mut() {
+        if v.abs() < 0.25 {
+            *v += if *v < 0.0 { -0.25 } else { 0.25 };
+        }
+    }
+    x
+}
+
+/// Deterministic input whose values are separated by ≥ 0.3, so a
+/// ±`FD_EPS` probe cannot flip a pooling argmax mid-check.
+fn grid_input(shape: &[usize]) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data: Vec<f32> = (0..n).map(|i| (i * 37 % 97) as f32 * 0.3).collect();
+    Tensor::from_vec(data, shape)
+}
+
+// ---------------------------------------------------------------------------
+// Gradcheck: every layer family against central differences.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gradcheck_every_layer_family() {
+    let mut rng = Rng::new(11);
+    // (layer, input) pairs covering every family in `nn/`.
+    let mut cases: Vec<(Box<dyn Layer>, Tensor)> = vec![
+        (
+            Box::new(Dense::new(6, 4, true, &mut rng)),
+            Tensor::randn(&[3, 6], 1.0, &mut rng),
+        ),
+        (
+            Box::new(LeakyRelu::new(0.1)),
+            margin_input(&[2, 5, 3], &mut rng),
+        ),
+        (
+            Box::new(Conv1d::new_submersive(3, 2, 2, 2, 1, &mut rng)),
+            Tensor::randn(&[2, 8, 2], 1.0, &mut rng),
+        ),
+        (
+            Box::new(Conv1d::new_fragmental(3, 2, 3, &mut rng)),
+            Tensor::randn(&[2, 8, 2], 1.0, &mut rng),
+        ),
+        (
+            Box::new(Conv2d::new_submersive(3, 2, 3, 2, 1, true, &mut rng)),
+            Tensor::randn(&[1, 8, 8, 2], 1.0, &mut rng),
+        ),
+        (Box::new(MaxPool2d::new(2)), grid_input(&[1, 4, 4, 2])),
+        (Box::new(Upsample::new(2, 4)), Tensor::randn(&[1, 4, 4, 2], 1.0, &mut rng)),
+        (
+            Box::new(ResidualBlock::new(Box::new(Dense::new(2, 2, true, &mut rng)))),
+            Tensor::randn(&[3, 4], 1.0, &mut rng),
+        ),
+        (
+            // Nonlinear inner: its input is the block's first channel
+            // half verbatim, so the margin conditioning still protects
+            // the finite differences from the kink.
+            Box::new(ResidualBlock::new(Box::new(LeakyRelu::new(0.2)))),
+            margin_input(&[3, 4], &mut rng),
+        ),
+        (
+            Box::new(CouplingBlock::new(
+                Box::new(Dense::new(2, 2, true, &mut rng)),
+                Box::new(Dense::new(2, 2, false, &mut rng)),
+            )),
+            Tensor::randn(&[3, 4], 1.0, &mut rng),
+        ),
+        (
+            Box::new(MomentumBlock::new(Box::new(Dense::new(3, 3, true, &mut rng)), 0.9)),
+            Tensor::randn(&[2, 6], 1.0, &mut rng),
+        ),
+    ];
+    for (seed, (layer, x)) in cases.iter_mut().enumerate() {
+        gradcheck_layer(layer.as_mut(), x, 100 + seed as u64, GRADCHECK_TOL);
+    }
+}
+
+#[test]
+fn vijp_roundtrip_survives_nonlinear_coupling() {
+    // The analytic (FD-free) round-trip also holds with a nonlinear
+    // branch whose kinks the FD battery above must avoid.
+    let mut rng = Rng::new(12);
+    let block = CouplingBlock::new(
+        Box::new(Dense::new(3, 3, true, &mut rng)),
+        Box::new(LeakyRelu::new(0.3)),
+    );
+    let x = Tensor::randn(&[4, 6], 1.0, &mut rng);
+    gradcheck::check_vijp_roundtrip(&block, &x, 77, GRADCHECK_TOL);
+}
+
+// ---------------------------------------------------------------------------
+// Zero-residual contract.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn revnet_stacks_store_zero_minimal_residual_bytes() {
+    let mut rng = Rng::new(21);
+    for variant in [
+        RevNetVariant::Coupling,
+        RevNetVariant::Momentum,
+        RevNetVariant::Residual,
+        RevNetVariant::Mixed,
+    ] {
+        let net = build_revnet(
+            &RevNetSpec { channels: 8, depth: 9, variant, ..Default::default() },
+            &mut rng,
+        );
+        let mut x = Tensor::randn(&[2, 8], 1.0, &mut rng);
+        for layer in &net.layers {
+            let (y, res) = layer.forward_res(&x, ResidualKind::Minimal);
+            assert_eq!(
+                residual_bytes(&res),
+                0,
+                "{}: Minimal residual must be empty",
+                layer.name()
+            );
+            assert!(matches!(
+                res.kind,
+                ResidualData::Block { input: None, .. }
+            ));
+            x = y;
+        }
+    }
+}
+
+#[test]
+fn blocks_are_submersive_even_with_nonsubmersive_branches() {
+    // The coupling structure lifts *any* branch into a submersive
+    // composite: a stride-1/pad-1 conv is NOT submersive on its own
+    // (s ≤ p breaks the Lemma-1 elimination), yet a coupling block built
+    // from two of them is — the composite Jacobian is unit-triangular.
+    let mut rng = Rng::new(22);
+    let branch = |rng: &mut Rng| Box::new(Conv1d::new_fragmental(3, 1, 1, rng));
+    assert!(
+        !branch(&mut rng).submersivity().is_submersive(),
+        "the branch itself must be non-submersive for this test to bite"
+    );
+    let mut block = CouplingBlock::new(branch(&mut rng), branch(&mut rng));
+    assert_eq!(
+        block.submersivity(),
+        Submersivity::Submersive { fast_path: true }
+    );
+    // And the lifted quartet is numerically correct end to end.
+    let mut x_rng = Rng::new(23);
+    let x = Tensor::randn(&[2, 8, 2], 1.0, &mut x_rng);
+    gradcheck_layer(&mut block, &x, 230, GRADCHECK_TOL);
+}
+
+// ---------------------------------------------------------------------------
+// Cross-engine equivalence on block stacks.
+// ---------------------------------------------------------------------------
+
+fn assert_engines_match(net: &Network, x: &Tensor, engines: &[Box<dyn GradEngine>], tol: f32) {
+    let reference = Backprop.compute(net, x, &MeanLoss).unwrap();
+    for engine in engines {
+        let got = engine
+            .compute(net, x, &MeanLoss)
+            .unwrap_or_else(|e| panic!("{} failed: {e}", engine.name()));
+        assert!(
+            (got.loss - reference.loss).abs() <= 1e-5 * reference.loss.abs().max(1.0),
+            "{}: loss {} vs {}",
+            engine.name(),
+            got.loss,
+            reference.loss
+        );
+        for (li, (a, b)) in reference.grads.iter().zip(&got.grads).enumerate() {
+            assert_eq!(a.len(), b.len(), "{}: arity at layer {li}", engine.name());
+            for (pi, (ga, gb)) in a.iter().zip(b).enumerate() {
+                let err = rel_err(gb, ga);
+                assert!(
+                    err <= tol,
+                    "{} layer {li} param {pi}: rel err {err} > {tol}",
+                    engine.name()
+                );
+            }
+        }
+    }
+}
+
+fn exact_engines() -> Vec<Box<dyn GradEngine>> {
+    EXACT_ENGINES
+        .iter()
+        .map(|n| engine_by_name(n, 8, 0, 0).unwrap())
+        .collect()
+}
+
+#[test]
+fn all_exact_engines_agree_on_every_block_variant() {
+    let _pin = pin_lock();
+    for variant in [
+        RevNetVariant::Coupling,
+        RevNetVariant::Momentum,
+        RevNetVariant::Residual,
+        RevNetVariant::Mixed,
+    ] {
+        let mut rng = Rng::new(31);
+        let net = build_revnet(
+            &RevNetSpec { channels: 8, depth: 6, variant, ..Default::default() },
+            &mut rng,
+        );
+        let x = Tensor::randn(&[4, 8], 1.0, &mut rng);
+        for threads in [1usize, 4] {
+            pool::with_threads(threads, || {
+                assert_engines_match(&net, &x, &exact_engines(), 5e-3);
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 100+-layer depth: training end to end, and the memory story.
+// ---------------------------------------------------------------------------
+
+fn deep_coupling_net(depth: usize) -> (Network, Tensor) {
+    let mut rng = Rng::new(42);
+    let net = build_revnet(
+        &RevNetSpec {
+            channels: 8,
+            depth,
+            variant: RevNetVariant::Coupling,
+            ..Default::default()
+        },
+        &mut rng,
+    );
+    let x = Tensor::randn(&[4, 8], 1.0, &mut rng);
+    (net, x)
+}
+
+/// Train `steps` of plain SGD with `engine` on a fresh 128-layer
+/// coupling stack (identical init every call) and return the loss curve.
+fn train_curve(engine: &dyn GradEngine, steps: usize, lr: f32) -> Vec<f32> {
+    let (mut net, x) = deep_coupling_net(128);
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let got = engine.compute(&net, &x, &MeanLoss).unwrap();
+        losses.push(got.loss);
+        for (layer, grads) in net.layers.iter_mut().zip(&got.grads) {
+            for (p, g) in layer.params_mut().into_iter().zip(grads) {
+                for (pv, gv) in p.data_mut().iter_mut().zip(g.data()) {
+                    *pv -= lr * gv;
+                }
+            }
+        }
+    }
+    losses
+}
+
+#[test]
+fn deep_128_layer_stack_trains_identically_across_engines() {
+    let _pin = pin_lock();
+    pool::with_threads(1, || {
+        let reference = train_curve(&Backprop, 4, 0.05);
+        assert!(
+            reference.last().unwrap() < reference.first().unwrap(),
+            "SGD on the 128-layer stack must reduce the loss: {reference:?}"
+        );
+        for name in EXACT_ENGINES {
+            let engine = engine_by_name(name, 8, 0, 0).unwrap();
+            let curve = train_curve(engine.as_ref(), 4, 0.05);
+            for (step, (a, b)) in reference.iter().zip(&curve).enumerate() {
+                let gap = (a - b).abs() / a.abs().max(1.0);
+                assert!(
+                    gap <= 1e-3,
+                    "{name}: loss curve diverged at step {step}: {a} vs {b}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn planned_unbounded_is_bit_identical_to_backprop_on_deep_stack() {
+    let _pin = pin_lock();
+    pool::with_threads(1, || {
+        let (net, x) = deep_coupling_net(128);
+        let bp = Backprop.compute(&net, &x, &MeanLoss).unwrap();
+        let planned = PlannedEngine::with_budget(None);
+        let pl = planned.compute(&net, &x, &MeanLoss).unwrap();
+        assert_eq!(bp.loss.to_bits(), pl.loss.to_bits(), "loss must be bit-identical");
+        for (a, b) in bp.grads.iter().flatten().zip(pl.grads.iter().flatten()) {
+            assert_eq!(a.shape(), b.shape());
+            for (va, vb) in a.data().iter().zip(b.data()) {
+                assert_eq!(va.to_bits(), vb.to_bits(), "grads must be bit-identical");
+            }
+        }
+    });
+}
+
+/// Tracked peak bytes for one engine across a coupling-depth grid.
+fn depth_grid_peaks(mk: &dyn Fn(&Network, &Tensor) -> Box<dyn GradEngine>, depths: &[usize]) -> Vec<usize> {
+    depths
+        .iter()
+        .map(|&depth| {
+            let (net, x) = deep_coupling_net(depth);
+            let engine = mk(&net, &x);
+            let (peak, _, _) =
+                measure_engine(engine.as_ref(), &net, &x, &MeanLoss, 1, 1).unwrap();
+            peak
+        })
+        .collect()
+}
+
+#[test]
+fn depth_grid_peak_flat_for_moonwalk_and_planned_linear_for_backprop() {
+    let _pin = pin_lock();
+    let depths = [8usize, 32, 128];
+    pool::with_threads(1, || {
+        let bp = depth_grid_peaks(&|_, _| Box::new(Backprop), &depths);
+        let mw = depth_grid_peaks(
+            &|_, _| Box::new(Moonwalk::new(MoonwalkOpts::default())),
+            &depths,
+        );
+        let pl = depth_grid_peaks(
+            &|net, x| {
+                // Tightest feasible budget — forces the all-vijp plan.
+                let probes = probe_network(net, x.shape(), DEFAULT_FRAG_BLOCKS).unwrap();
+                let budget = build_frontier(&probes).min_peak();
+                Box::new(PlannedEngine::with_budget(Some(budget)))
+            },
+            &depths,
+        );
+        // Backprop's tape stores each block's Full residual (the block
+        // input: 4×8 f32 = 128 bytes per layer), so 8 → 128 layers must
+        // add at least 120 × 128 bytes to the peak.
+        assert!(
+            bp[2] >= bp[0] + 120 * 128,
+            "backprop peak must grow linearly in depth: {bp:?}"
+        );
+        // Moonwalk and the planned engine store no per-layer residuals
+        // on a coupling stack: peak stays flat from depth 8 to 128.
+        for (name, peaks) in [("moonwalk", &mw), ("planned", &pl)] {
+            assert!(
+                (peaks[2] as f64) < (peaks[0] as f64) * 1.5 + 2048.0,
+                "{name} peak must be flat in depth: {peaks:?} (backprop: {bp:?})"
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Planner: the free vijp is discovered, not hinted.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn planner_assigns_vijp_to_every_reversible_layer_at_tight_budget() {
+    let (net, x) = deep_coupling_net(16);
+    let probes = probe_network(&net, x.shape(), DEFAULT_FRAG_BLOCKS).unwrap();
+    for p in &probes {
+        assert!(p.cost.submersive, "{}: block must probe submersive", p.cost.name);
+        assert!(p.cost.fast_vijp, "{}: block vijp has no wavefront", p.cost.name);
+        assert_eq!(p.measured_mx, 0, "{}: zero Minimal residual", p.cost.name);
+    }
+    let frontier = build_frontier(&probes);
+    let plan = frontier.select(&probes, Some(frontier.min_peak())).unwrap();
+    for (i, d) in plan.decisions.iter().enumerate() {
+        assert_eq!(
+            d.strategy,
+            Strategy::Vijp,
+            "layer {i} ({}) should ride the free vijp",
+            probes[i].cost.name
+        );
+        assert_eq!(d.aid_bytes, 0, "vijp stores nothing");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Layer errors carry the layer index and name.
+// ---------------------------------------------------------------------------
+
+/// A layer that *claims* submersivity but whose vijp always fails —
+/// the engines must surface the failure with the layer's index.
+struct LyingLayer;
+
+impl Layer for LyingLayer {
+    fn name(&self) -> String {
+        "liar".into()
+    }
+    fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>, LayerError> {
+        Ok(in_shape.to_vec())
+    }
+    fn forward_res(&self, x: &Tensor, _kind: ResidualKind) -> (Tensor, Residual) {
+        (
+            x.clone(),
+            Residual { in_shape: x.shape().to_vec(), kind: ResidualData::None },
+        )
+    }
+    fn vjp_input(&self, _res: &Residual, grad_out: &Tensor) -> Tensor {
+        grad_out.clone()
+    }
+    fn vjp_params(&self, _x: &Tensor, _grad_out: &Tensor) -> Vec<Tensor> {
+        Vec::new()
+    }
+    fn vijp(&self, _res: &Residual, _h_in: &Tensor) -> Result<Tensor, LayerError> {
+        Err(LayerError::NotSubmersive {
+            layer: self.name(),
+            reason: "the submersivity claim was a lie".into(),
+        })
+    }
+    fn jvp_input(&self, _x: &Tensor, u: &Tensor) -> Tensor {
+        u.clone()
+    }
+    fn jvp_params(&self, x: &Tensor, _dparams: &[Tensor]) -> Tensor {
+        Tensor::zeros(x.shape())
+    }
+    fn inverse(&self, _y: &Tensor) -> Result<Tensor, LayerError> {
+        Err(LayerError::NotInvertible {
+            layer: self.name(),
+            reason: "identity in forward only".into(),
+        })
+    }
+    fn submersivity(&self) -> Submersivity {
+        Submersivity::Submersive { fast_path: true }
+    }
+    fn params(&self) -> Vec<&Tensor> {
+        Vec::new()
+    }
+    fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        Vec::new()
+    }
+}
+
+#[test]
+fn moonwalk_vijp_failure_names_layer_index_and_layer() {
+    let mut rng = Rng::new(51);
+    let net = Network::new(vec![
+        Box::new(Dense::new(4, 4, true, &mut rng)),
+        Box::new(LyingLayer),
+        Box::new(Dense::new(4, 2, true, &mut rng)),
+    ]);
+    let x = Tensor::randn(&[2, 4], 1.0, &mut rng);
+    let err = Moonwalk::new(MoonwalkOpts::default())
+        .compute(&net, &x, &MeanLoss)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("layer 1"), "missing layer index: {msg}");
+    assert!(msg.contains("liar"), "missing layer name: {msg}");
+}
+
+#[test]
+fn planned_vijp_failure_names_layer_index_and_layer() {
+    let mut rng = Rng::new(52);
+    let net = Network::new(vec![
+        Box::new(Dense::new(4, 4, true, &mut rng)),
+        Box::new(LyingLayer),
+        Box::new(Dense::new(4, 2, true, &mut rng)),
+    ]);
+    let x = Tensor::randn(&[2, 4], 1.0, &mut rng);
+    // A tight budget forces the vijp strategy onto the lying layer.
+    let probes = probe_network(&net, x.shape(), DEFAULT_FRAG_BLOCKS).unwrap();
+    let budget = build_frontier(&probes).min_peak();
+    let err = PlannedEngine::with_budget(Some(budget))
+        .compute(&net, &x, &MeanLoss)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("layer 1"), "missing layer index: {msg}");
+    assert!(msg.contains("liar"), "missing layer name: {msg}");
+}
+
+#[test]
+fn revbackprop_inverse_failure_names_layer_index_and_layer() {
+    let net = Network::new(vec![
+        Box::new(LeakyRelu::new(0.2)),
+        Box::new(MaxPool2d::new(2)),
+    ]);
+    let mut rng = Rng::new(53);
+    let x = Tensor::randn(&[1, 4, 4, 2], 1.0, &mut rng);
+    let err = RevBackprop.compute(&net, &x, &MeanLoss).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("layer 1"), "missing layer index: {msg}");
+    assert!(msg.contains("maxpool2d"), "missing layer name: {msg}");
+}
+
+// ---------------------------------------------------------------------------
+// Parameter wire format on block topologies.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn export_import_roundtrips_block_topologies_bit_exactly() {
+    for (trial, variant) in [
+        RevNetVariant::Coupling,
+        RevNetVariant::Momentum,
+        RevNetVariant::Residual,
+        RevNetVariant::Mixed,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let spec = RevNetSpec { channels: 8, depth: 5, variant, ..Default::default() };
+        let mut src_rng = Rng::new(61 + trial as u64);
+        let src = build_revnet(&spec, &mut src_rng);
+        let exported = src.export_params();
+        // A differently-initialised twin adopts the snapshot…
+        let mut dst_rng = Rng::new(900 + trial as u64);
+        let mut dst = build_revnet(&spec, &mut dst_rng);
+        dst.import_params(&exported).unwrap();
+        // …and re-exports it bit-for-bit.
+        let reexported = dst.export_params();
+        assert_eq!(exported.len(), reexported.len());
+        for (a, b) in exported.iter().flatten().zip(reexported.iter().flatten()) {
+            assert_eq!(a.shape(), b.shape());
+            for (va, vb) in a.data().iter().zip(b.data()) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
+        }
+        // Identical params ⇒ identical forward.
+        let mut x_rng = Rng::new(7);
+        let x = Tensor::randn(&[2, 8], 1.0, &mut x_rng);
+        assert_eq!(
+            src.forward(&x).data(),
+            dst.forward(&x).data(),
+            "imported twin must forward identically"
+        );
+    }
+}
+
+#[test]
+fn import_params_shape_mismatch_is_a_named_error() {
+    let mut rng = Rng::new(62);
+    let wide = build_revnet(
+        &RevNetSpec { channels: 16, depth: 3, ..Default::default() },
+        &mut rng,
+    );
+    let mut narrow = build_revnet(
+        &RevNetSpec { channels: 8, depth: 3, ..Default::default() },
+        &mut rng,
+    );
+    let err = narrow.import_params(&wide.export_params()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("layer 0"), "error must name the layer: {msg}");
+
+    let deeper = build_revnet(
+        &RevNetSpec { channels: 8, depth: 4, ..Default::default() },
+        &mut rng,
+    );
+    let err = narrow.import_params(&deeper.export_params()).unwrap_err();
+    assert!(format!("{err:#}").contains("depth mismatch"));
+}
+
+/// Wire-encode a parameter snapshot the way the broadcast path does.
+fn encode_params(params: &[Vec<Tensor>]) -> Vec<u8> {
+    let borrowed: Vec<Vec<&Tensor>> =
+        params.iter().map(|l| l.iter().collect()).collect();
+    let mut buf = Vec::new();
+    wire::write_params(&mut buf, &borrowed).unwrap();
+    buf
+}
+
+#[test]
+fn params_wire_roundtrip_on_block_topology() {
+    let mut rng = Rng::new(63);
+    let net = build_revnet(
+        &RevNetSpec { channels: 8, depth: 4, variant: RevNetVariant::Mixed, ..Default::default() },
+        &mut rng,
+    );
+    let exported = net.export_params();
+    let buf = encode_params(&exported);
+    match wire::read_msg(&mut Cursor::new(&buf)).unwrap() {
+        wire::Msg::Params { layers } => {
+            assert_eq!(layers.len(), exported.len());
+            for (a, b) in exported.iter().flatten().zip(layers.iter().flatten()) {
+                assert_eq!(a.shape(), b.shape());
+                for (va, vb) in a.data().iter().zip(b.data()) {
+                    assert_eq!(va.to_bits(), vb.to_bits());
+                }
+            }
+        }
+        other => panic!("expected Params, got {other:?}"),
+    }
+}
+
+#[test]
+fn corrupt_and_truncated_param_blobs_are_named_errors_not_panics() {
+    let mut rng = Rng::new(64);
+    let net = build_revnet(
+        &RevNetSpec { channels: 8, depth: 3, ..Default::default() },
+        &mut rng,
+    );
+    let buf = encode_params(&net.export_params());
+
+    // Truncated stream: reader reports the frame tag, no panic.
+    let err = wire::read_msg(&mut Cursor::new(&buf[..buf.len() - 3])).unwrap_err();
+    assert!(format!("{err}").contains("frame tag"), "{err}");
+
+    // Corrupt payload (truncated mid-tensor): decode names the peer.
+    let tag = buf[0];
+    let payload = &buf[5..];
+    let err = wire::decode_frame(tag, &payload[..payload.len() - 2], "unit-test peer")
+        .unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("unit-test peer"), "{msg}");
+    assert!(msg.contains("corrupt frame"), "{msg}");
+
+    // Oversized length header: rejected before any allocation.
+    let mut huge = buf.clone();
+    huge[1] = 0xff;
+    huge[2] = 0xff;
+    huge[3] = 0xff;
+    huge[4] = 0xff;
+    let err = wire::read_msg(&mut Cursor::new(&huge)).unwrap_err();
+    assert!(format!("{err}").contains("exceeds"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Slow full matrix (MOONWALK_SLOW_TESTS=1 via --include-ignored).
+// ---------------------------------------------------------------------------
+
+#[test]
+#[ignore = "full variant × engine × thread matrix at depth 128; run with --include-ignored"]
+fn full_depth_matrix_slow() {
+    let _pin = pin_lock();
+    for variant in [
+        RevNetVariant::Coupling,
+        RevNetVariant::Momentum,
+        RevNetVariant::Residual,
+        RevNetVariant::Mixed,
+    ] {
+        let mut rng = Rng::new(71);
+        let net = build_revnet(
+            &RevNetSpec { channels: 8, depth: 128, variant, ..Default::default() },
+            &mut rng,
+        );
+        let x = Tensor::randn(&[4, 8], 1.0, &mut rng);
+        for threads in [1usize, 4] {
+            pool::with_threads(threads, || {
+                assert_engines_match(&net, &x, &exact_engines(), 1e-2);
+            });
+        }
+    }
+}

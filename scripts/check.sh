@@ -8,9 +8,11 @@
 # sweeps, engine equivalence, distributed replica sharding, the
 # multi-process transport grid, budgeted-planner invariants, the
 # fault-tolerance chaos grid, the tracing contract), re-runs the
-# distributed, transport, planner, fault-tolerance and trace suites as
-# dedicated invocations so replica/transport/planner/recovery/tracing
-# failures stay visible at the end of CI output, then enforces the
+# distributed, transport, planner, fault-tolerance, trace and
+# reversible suites as dedicated invocations so
+# replica/transport/planner/recovery/tracing/gradcheck failures stay
+# visible at the end of CI output (MOONWALK_SLOW_TESTS=1 additionally
+# runs the #[ignore]d slow matrices), then enforces the
 # documentation surface (rustdoc must build warning-free and every
 # doctest must pass — the doc system is tier-1 from PR 4 on), the
 # perf_ops --quick smoke, which emits BENCH_perf_ops.json (including
@@ -35,8 +37,16 @@ cargo test -q --test transport
 cargo test -q --test planner
 cargo test -q --test fault_tolerance
 cargo test -q --test trace
+# Reversible layer family (PR 9): gradcheck battery, depth grids,
+# planner free-vijp discovery, wire-format block topologies.
+cargo test -q --test reversible
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 cargo test -q --doc
+# Opt-in slow tier: the #[ignore]d suites (full variant × engine ×
+# thread matrices at depth 128, and any other marked-slow rows).
+if [ "${MOONWALK_SLOW_TESTS:-0}" = "1" ]; then
+  cargo test -q -- --include-ignored
+fi
 cargo bench --bench perf_ops -- --quick
 
 # --trace smoke (PR 8): a tiny train run per transport must emit one
