@@ -30,6 +30,16 @@ use std::collections::BTreeMap;
 /// and arranges for a merged Chrome trace-event JSON at PATH — entry
 /// points call `crate::obs::export::finish()` on success to write it.
 ///
+/// `--metrics-listen HOST:PORT` (env spelling
+/// `MOONWALK_METRICS_LISTEN`; port 0 binds an ephemeral port) starts
+/// the live telemetry endpoint ([`crate::obs::http`]) and prints the
+/// resolved address. Never started in `--replica-worker` mode: workers
+/// inherit the coordinator's environment, and the fleet's series reach
+/// the coordinator's endpoint over the wire instead.
+/// `--straggler-z Z` (env spelling `MOONWALK_STRAGGLER_Z`) sets the
+/// step-time z-score beyond which a replica is flagged as a straggler
+/// (`0` disables).
+///
 /// The per-run `--budget` knob is *not* global state — resolve
 /// it with [`budget_bytes`] where an engine is built. Call before any
 /// tensor work. The persistent worker team is prewarmed here so the
@@ -82,6 +92,33 @@ pub fn configure_runtime(args: &Args) -> anyhow::Result<()> {
         }
         if let Some(ms) = args.get_usize_opt("heartbeat-ms")? {
             supervisor::set_heartbeat_ms(ms as u64);
+        }
+        if let Some(s) = args.get("straggler-z") {
+            let z: f64 = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--straggler-z expects a number, got `{s}`"))?;
+            anyhow::ensure!(
+                z.is_finite() && z >= 0.0,
+                "--straggler-z must be >= 0 (0 disables)"
+            );
+            supervisor::set_straggler_z(z);
+        }
+    }
+    // The telemetry endpoint: flag > env. Worker subprocesses inherit
+    // the coordinator's environment but must not bind their own
+    // listener — their series travel to the coordinator over the wire
+    // (Msg::Metrics) and surface on *its* endpoint.
+    if !args.has("replica-worker") {
+        let listen = args.get("metrics-listen").map(str::to_string).or_else(|| {
+            std::env::var(crate::obs::http::METRICS_LISTEN_ENV)
+                .ok()
+                .filter(|s| !s.trim().is_empty())
+        });
+        if let Some(addr) = listen {
+            let local = crate::obs::http::serve(addr.trim())?;
+            // Port 0 resolves here; scrapers and the check.sh smoke
+            // parse this line for the ephemeral port.
+            println!("metrics endpoint listening on http://{local}/metrics");
         }
     }
     if let Some(path) = args.get("trace") {

@@ -74,6 +74,11 @@ pub struct TrainReport {
     /// Milliseconds spent sleeping in retry backoff during this run
     /// (delta of the `supervisor.backoff_wait_ms` metric).
     pub backoff_wait_ms: u64,
+    /// Straggler flags raised during this run (delta of the
+    /// `supervisor.stragglers` metric): shards whose wall time exceeded
+    /// the fleet's streaming mean by the configured z-score
+    /// (`--straggler-z`). 0 on a local transport or a healthy fleet.
+    pub stragglers: u64,
 }
 
 /// Classification trainer binding a network, engine, optimizer and data.
@@ -192,6 +197,7 @@ impl<'a> Trainer<'a> {
         let hb0 = crate::obs::metrics::counter("supervisor.heartbeat_misses");
         let rs0 = crate::obs::metrics::counter("supervisor.respawns");
         let bw0 = crate::obs::metrics::counter("supervisor.backoff_wait_ms");
+        let st0 = crate::obs::metrics::counter("supervisor.stragglers");
         let timer = Timer::start();
         let depth = self.net.depth();
         // The prefetch producer lives for the duration of the step loop:
@@ -308,6 +314,15 @@ impl<'a> Trainer<'a> {
                 reduce_total_s += step_reduce_s;
                 peak_mem = peak_mem.max(step_peak);
                 loss_curve.push(step_loss);
+                // Live-telemetry stamps (write-only; nothing the engines
+                // compute reads them): the `/healthz` freshness gauge and
+                // the coordinator-side step-time histogram `/metrics`
+                // scrapes mid-run.
+                crate::obs::metrics::gauge_set(
+                    crate::obs::http::LAST_STEP_GAUGE,
+                    crate::obs::span::now_us() as f64,
+                );
+                crate::obs::metrics::observe("train.step_seconds", step_timer.elapsed_s());
 
                 if let Some(w) = writer.as_mut() {
                     if step % self.log_every == 0 || step == steps {
@@ -362,6 +377,15 @@ impl<'a> Trainer<'a> {
                                 "backoff_wait_ms",
                                 (crate::obs::metrics::counter("supervisor.backoff_wait_ms")
                                     .saturating_sub(bw0) as usize)
+                                    .into(),
+                            ),
+                            // Straggler flags (z-score outliers of the
+                            // fleet's step-time distribution) cumulative
+                            // since the run started.
+                            (
+                                "stragglers",
+                                (crate::obs::metrics::counter("supervisor.stragglers")
+                                    .saturating_sub(st0) as usize)
                                     .into(),
                             ),
                             // Execution-planner signals: the compiled
@@ -423,6 +447,8 @@ impl<'a> Trainer<'a> {
             respawns: crate::obs::metrics::counter("supervisor.respawns").saturating_sub(rs0),
             backoff_wait_ms: crate::obs::metrics::counter("supervisor.backoff_wait_ms")
                 .saturating_sub(bw0),
+            stragglers: crate::obs::metrics::counter("supervisor.stragglers")
+                .saturating_sub(st0),
         })
     }
 

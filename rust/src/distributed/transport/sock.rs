@@ -28,6 +28,17 @@
 //!   (kill/hang, shipped in the init blob) and coordinator-side events
 //!   (drop/delay/corrupt a gradient frame, applied in the reader loop),
 //!   keyed deterministically on `(replica slot, global step)`.
+//! * **Fleet telemetry (ISSUE 10).** Each worker piggybacks a
+//!   [`Msg::Metrics`] frame per step (wire v3); the reader loop folds
+//!   its counter deltas and observations into the coordinator registry
+//!   under a `replica="<logical shard>"` label, so one `/metrics`
+//!   scrape shows every replica — including respawned incarnations,
+//!   which keep their logical shard's label. The coordinator also
+//!   times each shard wall-clock (dispatch → `StepDone`) into
+//!   `transport.step_seconds{replica=…}` and feeds a shared
+//!   [`StragglerTracker`]: a shard beyond the configured z-score bumps
+//!   `supervisor.stragglers` (total + per-replica) and drops a
+//!   `supervisor.straggler` trace instant.
 
 use std::collections::HashMap;
 use std::io::{self, BufReader, BufWriter, Read, Write};
@@ -45,7 +56,7 @@ use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::lock_ignore_poison as lock;
 
-use super::supervisor::{Deadlines, FaultKind, FaultPlan};
+use super::supervisor::{Deadlines, FaultKind, FaultPlan, StragglerTracker};
 use super::unix::EngineSpec;
 use super::wire::{self, FramePoll, FrameReader, Msg};
 use super::{submit_to_sink, ShardSpec};
@@ -247,6 +258,10 @@ pub(crate) struct SocketCoordinator {
     members: usize,
     synced: bool,
     step_idx: usize,
+    /// Streaming step-time moments for straggler detection, shared by
+    /// the per-slot reader threads (each records its shard's wall time
+    /// as `StepDone` arrives).
+    stragglers: Mutex<StragglerTracker>,
 }
 
 impl SocketCoordinator {
@@ -323,6 +338,7 @@ impl SocketCoordinator {
             members: replicas,
             synced: false,
             step_idx: 0,
+            stragglers: Mutex::new(StragglerTracker::new()),
         };
         let all: Vec<usize> = (0..replicas).collect();
         coord.establish(&all)?;
@@ -674,6 +690,7 @@ impl SocketCoordinator {
         let outcomes: Vec<Result<(), StepFailure>> = std::thread::scope(|scope| {
             let reducer = &reducer;
             let losses = &losses;
+            let stragglers = &self.stragglers;
             let handles: Vec<_> = self
                 .conns
                 .iter_mut()
@@ -687,7 +704,10 @@ impl SocketCoordinator {
                     let queue: Vec<usize> = (slot..replicas).step_by(members).collect();
                     let fault = slot_faults[slot];
                     scope.spawn(move || {
-                        drive_slot(conn, &queue, shards, reducer, losses, sink, dl, fault, family)
+                        drive_slot(
+                            conn, &queue, shards, reducer, losses, stragglers, sink, dl, fault,
+                            family,
+                        )
                     })
                 })
                 .collect();
@@ -753,7 +773,11 @@ impl SocketCoordinator {
 /// Drive one connection slot through its queue of logical shards:
 /// dispatch a shard, drain its gradient stream through the resumable
 /// frame reader under heartbeat-grace and step-deadline supervision,
-/// then move to the next queued shard.
+/// then move to the next queued shard. Telemetry side effects per
+/// shard: the worker's piggybacked [`Msg::Metrics`] deltas fold into
+/// `replica="q"`-labeled series, and the dispatch → `StepDone` wall
+/// time feeds `transport.step_seconds{replica=…}` plus the shared
+/// straggler tracker.
 #[allow(clippy::too_many_arguments)]
 fn drive_slot(
     conn: &mut WorkerConn,
@@ -761,6 +785,7 @@ fn drive_slot(
     shards: &[ShardSpec<'_>],
     reducer: &StreamingAllReduce,
     losses: &Mutex<Vec<Option<f32>>>,
+    stragglers: &Mutex<StragglerTracker>,
     sink: &(dyn Fn(usize, Vec<Tensor>) + Sync),
     dl: Deadlines,
     mut fault: Option<FaultKind>,
@@ -817,8 +842,49 @@ fn drive_slot(
                         Msg::Grad { layer, grads } => {
                             submit_to_sink(reducer, layer as usize, q, grads, sink);
                         }
+                        Msg::Metrics {
+                            counters,
+                            observations,
+                        } => {
+                            // Fold the worker's per-step telemetry into
+                            // the coordinator registry under the logical
+                            // shard's label: one scrape, whole fleet.
+                            let replica = q.to_string();
+                            let labels = [("replica", replica.as_str())];
+                            for (name, delta) in counters {
+                                crate::obs::metrics::counter_add_labeled(&name, &labels, delta);
+                            }
+                            for (name, v) in observations {
+                                crate::obs::metrics::observe_labeled(&name, &labels, v);
+                            }
+                        }
                         Msg::StepDone { loss } => {
                             lock(losses)[q] = Some(loss);
+                            let secs = started.elapsed().as_secs_f64();
+                            let replica = q.to_string();
+                            crate::obs::metrics::observe_labeled(
+                                "transport.step_seconds",
+                                &[("replica", replica.as_str())],
+                                secs,
+                            );
+                            if lock(stragglers).record(q, secs) {
+                                crate::obs::metrics::counter_add("supervisor.stragglers", 1);
+                                crate::obs::metrics::counter_add_labeled(
+                                    "supervisor.stragglers",
+                                    &[("replica", replica.as_str())],
+                                    1,
+                                );
+                                crate::obs::span::instant(
+                                    "supervisor.straggler",
+                                    Some(("replica", q as i64)),
+                                );
+                                crate::log_warn!(
+                                    "straggler: {peer} took {secs:.3}s this step \
+                                     (fleet mean {:.3}s over {} samples)",
+                                    lock(stragglers).mean(),
+                                    lock(stragglers).samples()
+                                );
+                            }
                             break;
                         }
                         Msg::Error { message } => {

@@ -17,6 +17,12 @@
 //!   deadline fires.
 //! * [`Backoff`] is the doubling retry delay used by step retry and
 //!   worker connect loops.
+//! * [`StragglerTracker`] keeps streaming mean/variance (Welford) of
+//!   per-replica step time and flags a replica whose sample sits beyond
+//!   a configurable z-score of the fleet distribution — the live
+//!   telemetry plane surfaces flags as `supervisor.stragglers` counters
+//!   (total + `replica`-labeled), `supervisor.straggler` trace
+//!   instants, and a per-row JSONL field.
 //! * [`FaultPlan`] is a deterministic, scriptable schedule of injected
 //!   failures (`kill:1@3,hang:0@5,drop:1@2,delay250:0@1,corrupt:1@4`),
 //!   wired through `--fault` / `MOONWALK_FAULT` and the bench harness.
@@ -260,6 +266,135 @@ impl Backoff {
         let d = self.next_ms.min(self.max_ms);
         self.next_ms = self.next_ms.saturating_mul(2).min(self.max_ms);
         Duration::from_millis(d)
+    }
+}
+
+// ----- straggler detection ---------------------------------------------------
+
+/// Default straggler z-score threshold: a replica's step time must sit
+/// more than this many standard deviations above the fleet mean to be
+/// flagged. 0 disables detection.
+pub const DEFAULT_STRAGGLER_Z: f64 = 3.0;
+
+/// Samples the fleet distribution must hold before any flagging — a
+/// cold cache or first-step parameter upload should not trip the
+/// detector.
+pub const STRAGGLER_MIN_SAMPLES: u64 = 8;
+
+// f64 bits in an AtomicU64, same lazy precedence as the deadline knobs:
+// explicit setter (CLI `--straggler-z`) > MOONWALK_STRAGGLER_Z env >
+// default. `u64::MAX` marks "unresolved" (it decodes to a NaN, which no
+// setter can produce via to_bits on a finite value path below).
+static STRAGGLER_Z: AtomicU64 = AtomicU64::new(u64::MAX);
+
+/// Set the straggler z-score threshold (CLI `--straggler-z`; `0`
+/// disables detection). Negative or non-finite values disable too.
+pub fn set_straggler_z(z: f64) {
+    let v = if z.is_finite() && z > 0.0 { z } else { 0.0 };
+    STRAGGLER_Z.store(v.to_bits(), Ordering::Relaxed);
+}
+
+/// Resolve the straggler z-score threshold: explicit setter >
+/// `MOONWALK_STRAGGLER_Z` env var > [`DEFAULT_STRAGGLER_Z`]. Returns
+/// 0.0 when detection is disabled.
+pub fn straggler_z() -> f64 {
+    match STRAGGLER_Z.load(Ordering::Relaxed) {
+        u64::MAX => {}
+        bits => return f64::from_bits(bits),
+    }
+    let v = match std::env::var("MOONWALK_STRAGGLER_Z") {
+        Ok(s) => match s.trim().parse::<f64>() {
+            Ok(z) if z.is_finite() && z >= 0.0 => z,
+            _ => {
+                crate::log_warn!(
+                    "MOONWALK_STRAGGLER_Z=`{s}` is not a valid threshold; using the default"
+                );
+                DEFAULT_STRAGGLER_Z
+            }
+        },
+        Err(_) => DEFAULT_STRAGGLER_Z,
+    };
+    STRAGGLER_Z.store(v.to_bits(), Ordering::Relaxed);
+    v
+}
+
+/// Streaming straggler detector over per-replica step times.
+///
+/// One Welford accumulator tracks the **fleet** distribution (every
+/// sample from every replica — the reference a straggler deviates
+/// from), plus a per-replica sample count/mean for attribution. A
+/// sample is flagged when the fleet holds at least
+/// [`STRAGGLER_MIN_SAMPLES`] observations, the variance is non-zero,
+/// and the sample's z-score exceeds the threshold. Purely
+/// observational: flagging never changes scheduling, so the §2.6
+/// determinism contract is untouched.
+#[derive(Debug, Default)]
+pub struct StragglerTracker {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    /// Per-replica `(samples, mean)` for the report line.
+    per_replica: Vec<(u64, f64)>,
+}
+
+impl StragglerTracker {
+    /// An empty tracker (thresholds resolve per call via
+    /// [`straggler_z`] unless given explicitly to [`Self::record_with`]).
+    pub fn new() -> StragglerTracker {
+        StragglerTracker::default()
+    }
+
+    /// Record `secs` for `replica` against the globally resolved
+    /// z-score knob. Returns `true` when the sample is flagged.
+    pub fn record(&mut self, replica: usize, secs: f64) -> bool {
+        self.record_with(replica, secs, straggler_z())
+    }
+
+    /// Record `secs` for `replica` against an explicit threshold `z`
+    /// (`0` disables). Flag semantics in the type docs.
+    pub fn record_with(&mut self, replica: usize, secs: f64, z: f64) -> bool {
+        // Flag against the distribution *before* folding the sample in,
+        // so one extreme outlier cannot dilute its own detection.
+        let flagged = z > 0.0 && self.n >= STRAGGLER_MIN_SAMPLES && {
+            let var = self.m2 / (self.n - 1) as f64;
+            var > 0.0 && (secs - self.mean) / var.sqrt() > z
+        };
+        self.n += 1;
+        let d = secs - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (secs - self.mean);
+        if replica >= self.per_replica.len() {
+            self.per_replica.resize(replica + 1, (0, 0.0));
+        }
+        let (rn, rmean) = &mut self.per_replica[replica];
+        *rn += 1;
+        *rmean += (secs - *rmean) / *rn as f64;
+        flagged
+    }
+
+    /// Fleet sample count.
+    pub fn samples(&self) -> u64 {
+        self.n
+    }
+
+    /// Fleet mean step time in seconds (0 before any sample).
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Fleet step-time standard deviation in seconds (0 below two
+    /// samples).
+    pub fn stddev(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+
+    /// Per-replica `(samples, mean seconds)`, indexed by replica.
+    pub fn replica_means(&self) -> &[(u64, f64)] {
+        &self.per_replica
     }
 }
 
@@ -540,6 +675,66 @@ mod tests {
                 "a long chain must end pinned at the cap"
             );
         }
+    }
+
+    #[test]
+    fn straggler_tracker_welford_matches_two_pass_moments() {
+        let mut t = StragglerTracker::new();
+        let samples = [0.010, 0.012, 0.011, 0.013, 0.009, 0.010, 0.012, 0.011];
+        for (i, &s) in samples.iter().enumerate() {
+            t.record_with(i % 2, s, 3.0);
+        }
+        let mean: f64 = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var: f64 = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>()
+            / (samples.len() - 1) as f64;
+        assert!((t.mean() - mean).abs() < 1e-12);
+        assert!((t.stddev() - var.sqrt()).abs() < 1e-12);
+        assert_eq!(t.samples(), samples.len() as u64);
+        let per = t.replica_means();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].0 + per[1].0, samples.len() as u64);
+    }
+
+    #[test]
+    fn straggler_flags_only_past_min_samples_and_threshold() {
+        let mut t = StragglerTracker::new();
+        // A huge outlier inside the warm-up window must NOT flag.
+        assert!(!t.record_with(0, 10.0, 3.0), "no flag before min samples");
+        let mut t = StragglerTracker::new();
+        for i in 0..STRAGGLER_MIN_SAMPLES {
+            // Tight cluster with a little genuine variance.
+            let jitter = (i % 3) as f64 * 1e-4;
+            assert!(!t.record_with((i % 2) as usize, 0.010 + jitter, 3.0));
+        }
+        // 100 ms against a ~10 ms fleet: far beyond 3 sigma.
+        assert!(t.record_with(1, 0.100, 3.0), "outlier must flag");
+        // The same sample with detection disabled (z = 0) must not.
+        let mut t2 = StragglerTracker::new();
+        for i in 0..STRAGGLER_MIN_SAMPLES {
+            let jitter = (i % 3) as f64 * 1e-4;
+            t2.record_with((i % 2) as usize, 0.010 + jitter, 0.0);
+        }
+        assert!(!t2.record_with(1, 0.100, 0.0), "z=0 disables detection");
+        // Zero variance (all samples identical) never flags — the
+        // z-score is undefined there, not infinite.
+        let mut t3 = StragglerTracker::new();
+        for _ in 0..20 {
+            t3.record_with(0, 0.010, 3.0);
+        }
+        assert!(!t3.record_with(0, 0.010, 3.0));
+    }
+
+    #[test]
+    fn straggler_z_setter_clamps_invalid_to_disabled() {
+        // Do not touch the global resolution order of other tests more
+        // than necessary: set, check, restore to the default.
+        set_straggler_z(-1.0);
+        assert_eq!(straggler_z(), 0.0, "negative disables");
+        set_straggler_z(f64::NAN);
+        assert_eq!(straggler_z(), 0.0, "NaN disables");
+        set_straggler_z(2.5);
+        assert_eq!(straggler_z(), 2.5);
+        set_straggler_z(DEFAULT_STRAGGLER_Z);
     }
 
     #[test]

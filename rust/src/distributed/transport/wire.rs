@@ -26,8 +26,10 @@ use crate::tensor::Tensor;
 
 /// Protocol version; bumped on any incompatible framing change. Carried
 /// in the [`Msg::Hello`] handshake and checked by both peers. Version 2
-/// added the [`Msg::Heartbeat`] liveness frame.
-pub const WIRE_VERSION: u8 = 2;
+/// added the [`Msg::Heartbeat`] liveness frame; version 3 added the
+/// [`Msg::Metrics`] telemetry frame workers piggyback after their last
+/// gradient frame each step.
+pub const WIRE_VERSION: u8 = 3;
 
 /// Handshake magic preceding the version byte (`b"MWTP"` — MoonWalk
 /// TransPort), so a stray connection is rejected immediately.
@@ -62,6 +64,8 @@ pub const TAG_ERROR: u8 = 7;
 pub const TAG_SHUTDOWN: u8 = 8;
 /// [`Msg::Heartbeat`] frame tag (wire version 2).
 pub const TAG_HEARTBEAT: u8 = 9;
+/// [`Msg::Metrics`] frame tag (wire version 3).
+pub const TAG_METRICS: u8 = 10;
 
 /// A serializable loss head — the subset of [`crate::nn::Loss`] choices
 /// a remote replica can reconstruct from bytes.
@@ -139,12 +143,30 @@ pub enum Msg {
     /// while the worker is computing a step. Carries no payload; the
     /// supervision layer only cares that bytes keep arriving.
     Heartbeat,
+    /// Worker → coordinator telemetry, piggybacked once per step after
+    /// the last gradient frame (wire version 3). Carries the worker's
+    /// per-step counter deltas and histogram observations under their
+    /// flat registry keys; the coordinator folds them into
+    /// `replica="<logical shard>"`-labeled series so one `/metrics`
+    /// scrape shows the whole fleet. Purely observational — losing or
+    /// reordering a metrics frame can never change a computed value.
+    Metrics {
+        /// `(registry key, delta)` counter increments for this step.
+        counters: Vec<(String, u64)>,
+        /// `(registry key, value)` histogram observations for this step.
+        observations: Vec<(String, f64)>,
+    },
 }
 
 // ----- primitive encoders ----------------------------------------------------
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
 }
 
 fn put_tensor(buf: &mut Vec<u8>, t: &Tensor) {
@@ -195,6 +217,24 @@ impl<'a> Cursor<'a> {
     fn f32(&mut self) -> io::Result<f32> {
         let b = self.take(4)?;
         Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f64(&mut self) -> io::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str(&mut self) -> io::Result<String> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "wire string is not UTF-8"))
     }
 
     fn tensor(&mut self) -> io::Result<Tensor> {
@@ -386,6 +426,26 @@ fn decode_frame_inner(tag: u8, payload: &[u8]) -> io::Result<Msg> {
         }
         TAG_SHUTDOWN => Msg::Shutdown,
         TAG_HEARTBEAT => Msg::Heartbeat,
+        TAG_METRICS => {
+            let n_counters = c.u32()? as usize;
+            let mut counters = Vec::with_capacity(n_counters.min(1024));
+            for _ in 0..n_counters {
+                let name = c.str()?;
+                let delta = c.u64()?;
+                counters.push((name, delta));
+            }
+            let n_obs = c.u32()? as usize;
+            let mut observations = Vec::with_capacity(n_obs.min(1024));
+            for _ in 0..n_obs {
+                let name = c.str()?;
+                let v = c.f64()?;
+                observations.push((name, v));
+            }
+            Msg::Metrics {
+                counters,
+                observations,
+            }
+        }
         other => {
             return Err(io::Error::new(
                 io::ErrorKind::InvalidData,
@@ -478,6 +538,28 @@ pub fn write_shutdown(w: &mut impl Write) -> io::Result<()> {
 /// Write a liveness heartbeat (worker → coordinator, mid-compute).
 pub fn write_heartbeat(w: &mut impl Write) -> io::Result<()> {
     write_frame(w, TAG_HEARTBEAT, &[])
+}
+
+/// Write one step's telemetry piggyback: counter deltas and histogram
+/// observations under their flat registry keys. f64 values travel as
+/// raw bits, so NaN/±inf observations survive the trip unchanged.
+pub fn write_metrics(
+    w: &mut impl Write,
+    counters: &[(String, u64)],
+    observations: &[(String, f64)],
+) -> io::Result<()> {
+    let mut buf = Vec::new();
+    put_u32(&mut buf, counters.len() as u32);
+    for (name, delta) in counters {
+        put_str(&mut buf, name);
+        buf.extend_from_slice(&delta.to_le_bytes());
+    }
+    put_u32(&mut buf, observations.len() as u32);
+    for (name, v) in observations {
+        put_str(&mut buf, name);
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    write_frame(w, TAG_METRICS, &buf)
 }
 
 // ----- resumable (deadline-aware) frame reading ------------------------------
@@ -724,6 +806,44 @@ mod tests {
             roundtrip(|w| write_heartbeat(w).unwrap()),
             Msg::Heartbeat
         ));
+    }
+
+    #[test]
+    fn metrics_roundtrip_exact_bits() {
+        let counters = vec![
+            ("engine.steps".to_string(), 1u64),
+            ("arena.hits".to_string(), u64::MAX),
+        ];
+        let observations = vec![
+            ("step.seconds".to_string(), 0.012345),
+            ("weird.values".to_string(), f64::NAN),
+            ("more.weird".to_string(), f64::NEG_INFINITY),
+        ];
+        match roundtrip(|w| write_metrics(w, &counters, &observations).unwrap()) {
+            Msg::Metrics {
+                counters: gc,
+                observations: go,
+            } => {
+                assert_eq!(gc, counters);
+                assert_eq!(go.len(), observations.len());
+                for ((gn, gv), (n, v)) in go.iter().zip(&observations) {
+                    assert_eq!(gn, n);
+                    assert_eq!(gv.to_bits(), v.to_bits(), "f64 bits survive the wire");
+                }
+            }
+            other => panic!("wrong msg {other:?}"),
+        }
+        // Empty piggyback is legal (a step with nothing to report).
+        match roundtrip(|w| write_metrics(w, &[], &[]).unwrap()) {
+            Msg::Metrics {
+                counters,
+                observations,
+            } => {
+                assert!(counters.is_empty());
+                assert!(observations.is_empty());
+            }
+            other => panic!("wrong msg {other:?}"),
+        }
     }
 
     #[test]

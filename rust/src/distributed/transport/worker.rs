@@ -29,6 +29,15 @@
 //! buffer; during compute they are exactly the liveness signal the
 //! supervisor's grace check needs.
 //!
+//! **Telemetry piggyback (wire v3).** After a step's last gradient
+//! frame and before `StepDone`, the worker sends one
+//! [`Metrics`](super::wire::Msg::Metrics) frame carrying the step's
+//! counter deltas (diff of the registry before/after compute) and a
+//! `step.seconds` observation. The coordinator folds these into
+//! `replica="<logical shard>"`-labeled series so one `/metrics` scrape
+//! shows the whole fleet (ISSUE 10). Purely observational: nothing the
+//! engine computes reads any of it.
+//!
 //! **Fault injection.** The init blob may carry worker-side
 //! [`FaultPlan`](super::supervisor::FaultPlan) events: `kill` aborts
 //! the process right after flushing the first gradient frame of the
@@ -207,6 +216,12 @@ fn serve_framed(
                         }
                         let kill = sabotage == Some(Sabotage::Kill);
                         let head = loss.build();
+                        // Telemetry piggyback baseline: counter values
+                        // before the step, diffed after compute so the
+                        // Metrics frame carries this step's deltas only.
+                        let counters_before: std::collections::BTreeMap<String, u64> =
+                            crate::obs::metrics::counters().into_iter().collect();
+                        let step_start = Instant::now();
                         // Stream each layer's gradients as the engine
                         // emits them; an I/O failure mid-stream aborts
                         // the step (the coordinator is gone or closing).
@@ -240,7 +255,22 @@ fn serve_framed(
                                 "replica {replica}: gradient upload failed: {e}"
                             ));
                         }
+                        // Telemetry piggyback: this step's counter deltas
+                        // plus the compute wall time, sent after the last
+                        // gradient frame and before StepDone (wire v3).
+                        // Pure observation — the coordinator folds it
+                        // into `replica="…"`-labeled series.
+                        let step_secs = step_start.elapsed().as_secs_f64();
+                        let mut deltas: Vec<(String, u64)> = Vec::new();
+                        for (name, value) in crate::obs::metrics::counters() {
+                            let before = counters_before.get(&name).copied().unwrap_or(0);
+                            if value > before {
+                                deltas.push((name, value - before));
+                            }
+                        }
+                        let observations = vec![("step.seconds".to_string(), step_secs)];
                         let mut w = lock(&writer);
+                        wire::write_metrics(&mut *w, &deltas, &observations)?;
                         match result {
                             Ok(loss_val) => wire::write_step_done(&mut *w, loss_val)?,
                             Err(e) => wire::write_error(&mut *w, &format!("{e:#}"))?,

@@ -15,6 +15,12 @@
 //!   `timed_ms` column shows the cached calibration per conv layer.
 //! * `sweep     --config cfg.json --depths 1,2,..` — memory/time sweep
 //!   (the Fig. 2 / Fig. 3 measurement, printable without cargo bench).
+//! * `report    <run.trace.json> [--json out.json] [--folded out.folded]`
+//!   — aggregate a `--trace` capture into a per-layer × per-phase
+//!   time/bytes attribution table (stdout; `--json` for the
+//!   machine-readable twin) and an inferno/flamegraph.pl-compatible
+//!   folded-stack file (`--folded`). The trace path is positional so it
+//!   never collides with the global `--trace` capture flag.
 //!
 //! Global flags (every subcommand):
 //! * `--threads N` — worker-pool size for the parallel tensor runtime
@@ -56,6 +62,18 @@
 //!   `MOONWALK_TRACE` is the env spelling). Covers every subcommand;
 //!   with a socket transport the worker subprocesses' spans are merged
 //!   into the same file. See `docs/OBSERVABILITY.md`.
+//! * `--metrics-listen HOST:PORT` — serve live telemetry over HTTP
+//!   while the run is in flight (`MOONWALK_METRICS_LISTEN` is the env
+//!   spelling; port 0 binds an ephemeral port, printed at startup):
+//!   `/metrics` (Prometheus text exposition, fleet series labeled
+//!   `replica="…"` under a socket transport), `/snapshot` (the metrics
+//!   registry as JSON) and `/healthz` (last-step age vs the step
+//!   deadline). Scraping never perturbs computed values.
+//! * `--straggler-z Z` — flag a replica whose step wall time exceeds
+//!   the fleet's streaming mean by more than `Z` standard deviations
+//!   (`supervisor.stragglers` metric, trace instants and the trainer's
+//!   JSONL `stragglers` field; `MOONWALK_STRAGGLER_Z` is the env
+//!   spelling, default 3, `0` disables).
 //! * Fault tolerance: `--step-retries N` (replay a failed step N times
 //!   per membership level, default 2), `--failover` (after the retry
 //!   budget, shrink onto surviving workers instead of aborting),
@@ -269,10 +287,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             None => String::new(),
         }
     );
-    if report.heartbeat_misses + report.respawns > 0 || report.backoff_wait_ms > 0 {
+    if report.heartbeat_misses + report.respawns + report.stragglers > 0
+        || report.backoff_wait_ms > 0
+    {
         println!(
-            "supervisor: heartbeat_misses={} respawns={} backoff_wait_ms={}",
-            report.heartbeat_misses, report.respawns, report.backoff_wait_ms
+            "supervisor: heartbeat_misses={} respawns={} backoff_wait_ms={} stragglers={}",
+            report.heartbeat_misses, report.respawns, report.backoff_wait_ms, report.stragglers
         );
     }
     Ok(())
@@ -475,6 +495,33 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    // The input trace is positional (`moonwalk report run.trace.json`):
+    // the `--trace` flag is the *capture* knob and must stay usable to
+    // record a trace of any subcommand, including this one.
+    let input = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("input"))
+        .ok_or_else(|| {
+            anyhow::anyhow!("usage: moonwalk report <run.trace.json> [--json out.json] [--folded out.folded]")
+        })?;
+    let report = moonwalk::obs::report::from_file(std::path::Path::new(input))?;
+    print!("{}", report.table());
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report.to_json().to_string())
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("report JSON written to {path}");
+    }
+    if let Some(path) = args.get("folded") {
+        std::fs::write(path, report.folded())
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("folded stacks written to {path} (inferno/flamegraph.pl format)");
+    }
+    Ok(())
+}
+
 fn main() {
     let args = match Args::from_env() {
         Ok(a) => a,
@@ -504,14 +551,15 @@ fn main() {
         Some("audit") => cmd_audit(&args),
         Some("plan") => cmd_plan(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("report") => cmd_report(&args),
         other => {
             eprintln!(
-                "usage: moonwalk <train|gradcheck|audit|plan|sweep> [--config cfg.json] \
+                "usage: moonwalk <train|gradcheck|audit|plan|sweep|report> [--config cfg.json] \
                  [--threads N] [--gemm auto|scalar|blocked|parallel] [--replicas N] \
                  [--transport local|unix|tcp] [--listen HOST:PORT] [--remote-workers K] \
                  [--step-timeout S] [--heartbeat-ms MS] [--step-retries N] [--failover] \
                  [--grad-accum K] [--fault SPEC] [--engine NAME] [--budget BYTES] \
-                 [--trace out.trace.json] \
+                 [--trace out.trace.json] [--metrics-listen HOST:PORT] [--straggler-z Z] \
                  [--conv-algo auto|direct|im2col|winograd] [--conv-cache PATH] ...\n\
                  (got {other:?}; see README.md)"
             );

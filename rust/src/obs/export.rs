@@ -7,18 +7,25 @@
 //! * `--trace out.trace.json` (any CLI entry point; `MOONWALK_TRACE`
 //!   env equivalent) calls [`set_trace_path`], which enables span
 //!   recording, creates a fresh `out.trace.json.workers/` spool
-//!   directory, and exports it as `MOONWALK_TRACE_DIR` so worker
+//!   directory, mints a per-run id, and exports both as
+//!   `MOONWALK_TRACE_DIR` / `MOONWALK_TRACE_RUN` so worker
 //!   subprocesses spawned later (unix/TCP transports respawn workers
 //!   freely) inherit the setting with no wire-format change.
 //! * A worker subprocess calls [`worker_init_from_env`] at entry; on
 //!   exit it writes its own events to
-//!   `<spool>/worker-<replica>-<pid>.trace.json` via
+//!   `<spool>/worker-<replica>-<pid>-<run id>.trace.json` via
 //!   [`write_worker_file`] — one file per process *incarnation*, so a
 //!   respawned replica never clobbers its predecessor's tail.
 //! * The coordinator calls [`finish`] once at process end: it drains
-//!   local rings, folds in every spool file, rebases timestamps to the
-//!   earliest event, deletes the spool and writes the single merged
-//!   `{"traceEvents": […]}` file.
+//!   local rings, folds in every spool file **stamped with the current
+//!   run id** (an orphaned worker from a crashed earlier run that
+//!   writes late can no longer leak its events into this trace),
+//!   deletes each matched file after merging it, rebases timestamps to
+//!   the earliest event, removes the spool and writes the single
+//!   merged `{"traceEvents": […]}` file. Ring overflow is surfaced
+//!   here too: when any thread (coordinator or worker) overwrote
+//!   events, `finish` warns `trace: N events dropped (ring full)` on
+//!   stderr and bumps the `trace.dropped_events` metric.
 //!
 //! Process/thread attribution uses the OS pid and the recorder's
 //! logical tid, with `process_name`/`thread_name` metadata events, so
@@ -41,10 +48,19 @@ static SPOOL_DIR: Mutex<Option<PathBuf>> = Mutex::new(None);
 
 /// Env var carrying the spool directory to worker subprocesses.
 pub const TRACE_DIR_ENV: &str = "MOONWALK_TRACE_DIR";
+/// Env var carrying the per-run spool id to worker subprocesses. Spool
+/// files are stamped with it so [`finish`] merges only files from the
+/// run it owns.
+pub const TRACE_RUN_ENV: &str = "MOONWALK_TRACE_RUN";
+
+/// The current capture's run id (coordinator mints it; workers inherit
+/// it through [`TRACE_RUN_ENV`]).
+static RUN_ID: Mutex<Option<String>> = Mutex::new(None);
 
 /// Enable tracing and arrange for [`finish`] to write the merged trace
-/// to `path`. Creates a fresh `<path>.workers/` spool and exports it as
-/// [`TRACE_DIR_ENV`] for worker subprocesses.
+/// to `path`. Creates a fresh `<path>.workers/` spool, mints a per-run
+/// id, and exports both as [`TRACE_DIR_ENV`] / [`TRACE_RUN_ENV`] for
+/// worker subprocesses.
 pub fn set_trace_path(path: &str) -> anyhow::Result<()> {
     let p = PathBuf::from(path);
     if let Some(dir) = p.parent() {
@@ -55,20 +71,32 @@ pub fn set_trace_path(path: &str) -> anyhow::Result<()> {
     let spool = PathBuf::from(format!("{path}.workers"));
     let _ = std::fs::remove_dir_all(&spool);
     std::fs::create_dir_all(&spool)?;
+    // Unique per capture within and across processes: pid disambiguates
+    // concurrent coordinators, the microsecond clock disambiguates
+    // successive captures in one process.
+    let run_id = format!("{}-{}", std::process::id(), span::now_us());
     std::env::set_var(TRACE_DIR_ENV, &spool);
+    std::env::set_var(TRACE_RUN_ENV, &run_id);
     *lock(&TRACE_PATH) = Some(p);
     *lock(&SPOOL_DIR) = Some(spool);
+    *lock(&RUN_ID) = Some(run_id);
     span::set_enabled(true);
     Ok(())
 }
 
 /// Worker-subprocess entry hook: if the coordinator exported
-/// [`TRACE_DIR_ENV`], enable span recording and remember the spool so
-/// [`write_worker_file`] has somewhere to write. No-op otherwise.
+/// [`TRACE_DIR_ENV`], enable span recording and remember the spool
+/// (and the run id, when stamped) so [`write_worker_file`] has
+/// somewhere to write. No-op otherwise.
 pub fn worker_init_from_env() {
     if let Ok(dir) = std::env::var(TRACE_DIR_ENV) {
         if !dir.is_empty() {
             *lock(&SPOOL_DIR) = Some(PathBuf::from(dir));
+            if let Ok(id) = std::env::var(TRACE_RUN_ENV) {
+                if !id.is_empty() {
+                    *lock(&RUN_ID) = Some(id);
+                }
+            }
             span::set_enabled(true);
         }
     }
@@ -82,8 +110,11 @@ pub fn trace_active() -> bool {
 }
 
 /// Drain the local rings into Chrome trace events, attributed to this
-/// process (`label` becomes the Perfetto process name).
-fn chrome_events(label: &str) -> Vec<Json> {
+/// process (`label` becomes the Perfetto process name). The second
+/// return is the total ring-overflow drop count across threads —
+/// surfaced by [`finish`] (coordinator) or embedded in the spool file
+/// (workers), never silently discarded.
+fn chrome_events(label: &str) -> (Vec<Json>, u64) {
     let pid = std::process::id() as usize;
     let mut out: Vec<Json> = Vec::new();
     let mut meta = Json::obj();
@@ -95,10 +126,12 @@ fn chrome_events(label: &str) -> Vec<Json> {
     margs.set("name", label.into());
     meta.set("args", margs);
     out.push(meta);
+    let mut dropped = 0u64;
     for t in span::drain_all() {
         if t.events.is_empty() && t.dropped == 0 {
             continue;
         }
+        dropped += t.dropped;
         let tid = t.tid as usize;
         let mut tmeta = Json::obj();
         tmeta.set("name", "thread_name".into());
@@ -109,12 +142,6 @@ fn chrome_events(label: &str) -> Vec<Json> {
         targs.set("name", format!("thread-{tid}").into());
         tmeta.set("args", targs);
         out.push(tmeta);
-        if t.dropped > 0 {
-            crate::log_warn!(
-                "trace ring overflow on thread {tid}: {} oldest event(s) overwritten",
-                t.dropped
-            );
-        }
         for e in &t.events {
             let mut args = Json::obj();
             if let Some((k, v)) = e.arg {
@@ -157,45 +184,71 @@ fn chrome_events(label: &str) -> Vec<Json> {
             }
         }
     }
-    out
+    (out, dropped)
 }
 
 /// Write this worker's drained events to its per-incarnation spool
-/// file. Returns the written path, or `None` when no spool is
-/// configured or the write fails (tracing is best-effort on the worker
-/// side — a dying worker must still exit cleanly).
+/// file, stamped with the capture's run id so the coordinator merges
+/// only its own run's files. Returns the written path, or `None` when
+/// no spool is configured or the write fails (tracing is best-effort
+/// on the worker side — a dying worker must still exit cleanly).
 pub fn write_worker_file(replica: usize) -> Option<PathBuf> {
     let dir = lock(&SPOOL_DIR).clone()?;
-    let events = chrome_events(&format!("worker-{replica}"));
+    let run_id = lock(&RUN_ID).clone().unwrap_or_default();
+    let (events, dropped) = chrome_events(&format!("worker-{replica}"));
     let path = dir.join(format!(
-        "worker-{replica}-{}.trace.json",
+        "worker-{replica}-{}-{run_id}.trace.json",
         std::process::id()
     ));
-    let obj = Json::from_pairs(vec![("traceEvents", Json::Arr(events))]);
+    let obj = Json::from_pairs(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("droppedEvents", (dropped as usize).into()),
+    ]);
     match std::fs::write(&path, obj.to_string()) {
         Ok(()) => Some(path),
         Err(_) => None,
     }
 }
 
-/// Merge local rings + every worker spool file and write the single
-/// Chrome trace JSON. Returns the written path, or `None` when no
-/// `--trace` capture was requested (callers invoke this
+/// Merge local rings + this run's worker spool files and write the
+/// single Chrome trace JSON. Returns the written path, or `None` when
+/// no `--trace` capture was requested (callers invoke this
 /// unconditionally at process end). Consumes the capture: tracing is
-/// disabled and the spool removed.
+/// disabled, each merged spool file is deleted, and the spool
+/// directory removed. Spool files from *other* runs (a crashed
+/// earlier incarnation, an orphaned worker writing late) are skipped
+/// with a warning instead of being merged — the per-run-id stamp is
+/// what tells them apart.
 pub fn finish() -> anyhow::Result<Option<PathBuf>> {
     let Some(path) = lock(&TRACE_PATH).take() else {
         return Ok(None);
     };
     let spool = lock(&SPOOL_DIR).take();
+    let run_id = lock(&RUN_ID).take().unwrap_or_default();
     span::set_enabled(false);
-    let mut events = chrome_events("coordinator");
+    let (mut events, mut dropped) = chrome_events("coordinator");
     if let Some(dir) = spool {
         if let Ok(entries) = std::fs::read_dir(&dir) {
-            let mut files: Vec<PathBuf> = entries
-                .filter_map(|e| e.ok().map(|e| e.path()))
-                .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
-                .collect();
+            let suffix = format!("-{run_id}.trace.json");
+            let mut files: Vec<PathBuf> = Vec::new();
+            let mut stale = 0usize;
+            for p in entries.filter_map(|e| e.ok().map(|e| e.path())) {
+                let name = p
+                    .file_name()
+                    .map(|n| n.to_string_lossy().into_owned())
+                    .unwrap_or_default();
+                if name.ends_with(&suffix) {
+                    files.push(p);
+                } else if name.ends_with(".json") {
+                    stale += 1;
+                }
+            }
+            if stale > 0 {
+                crate::log_warn!(
+                    "trace spool {}: skipped {stale} file(s) from other runs",
+                    dir.display()
+                );
+            }
             files.sort(); // deterministic merge order
             for file in files {
                 let Ok(text) = std::fs::read_to_string(&file) else {
@@ -206,6 +259,8 @@ pub fn finish() -> anyhow::Result<Option<PathBuf>> {
                         if let Some(arr) = j.get("traceEvents").as_arr() {
                             events.extend(arr.iter().cloned());
                         }
+                        dropped += j.get("droppedEvents").as_usize().unwrap_or(0) as u64;
+                        let _ = std::fs::remove_file(&file);
                     }
                     Err(e) => {
                         crate::log_warn!(
@@ -218,6 +273,13 @@ pub fn finish() -> anyhow::Result<Option<PathBuf>> {
         }
         let _ = std::fs::remove_dir_all(&dir);
         std::env::remove_var(TRACE_DIR_ENV);
+        std::env::remove_var(TRACE_RUN_ENV);
+    }
+    if dropped > 0 {
+        // Ring overflow means the trace is incomplete — say so loudly
+        // (stderr + metric) instead of letting the gap pass as truth.
+        eprintln!("trace: {dropped} events dropped (ring full)");
+        crate::obs::metrics::counter_add("trace.dropped_events", dropped);
     }
     // Rebase timestamps to the earliest event so the trace opens at
     // t=0 instead of unix-epoch microseconds (metadata events carry no
@@ -262,7 +324,8 @@ mod tests {
         }
         span::instant("unit.export_instant", None);
         span::set_enabled(false);
-        let evs = chrome_events("unit-test");
+        let (evs, dropped) = chrome_events("unit-test");
+        assert_eq!(dropped, 0, "two events cannot overflow the ring");
         // Find our X event and check the Chrome fields.
         let x = evs
             .iter()

@@ -1,0 +1,254 @@
+//! The live telemetry plane: a std-only, single-threaded HTTP/1.1
+//! listener serving the metrics registry while a run is in flight.
+//!
+//! Endpoints:
+//!
+//! * `GET /metrics` — Prometheus text exposition v0.0.4
+//!   ([`crate::obs::metrics::render_prometheus`]): every registered
+//!   counter/gauge/histogram (cumulative `_bucket`/`_sum`/`_count`
+//!   series) plus the live pool/arena/tracker statics. Fleet-aggregated
+//!   series carry a `replica="<logical shard>"` label, so one scrape of
+//!   the coordinator shows the whole elastic fleet.
+//! * `GET /snapshot` — the flat JSON [`crate::obs::metrics::snapshot`],
+//!   unchanged from what trainer JSONL rows and `BENCH_perf_ops.json`
+//!   embed.
+//! * `GET /healthz` — liveness: compares the age of the trainer's
+//!   `train.last_step_unix_us` gauge against the supervisor step
+//!   deadline. `200` while steps complete on time (or before the first
+//!   step finishes, or with the deadline disabled); `503` once the last
+//!   completed step is older than the deadline.
+//!
+//! Enabled by `--metrics-listen HOST:PORT` (env twin
+//! `MOONWALK_METRICS_LISTEN`); port `0` binds an ephemeral port, which
+//! [`serve`] resolves and `cli::configure_runtime` prints at startup.
+//!
+//! **Determinism.** The server thread is read-only with respect to the
+//! computation: it renders from the metrics registry (a mutex shared
+//! only with cold-path writers — supervisor events, per-step counters)
+//! and the lock-free pool/arena/tracker atomics. Nothing any kernel
+//! computes ever reads state the server writes, so the §2.6
+//! zero-effect-on-results contract extends to scraping mid-run:
+//! losses and gradients are bit-identical scraped or not
+//! (`tests/metrics_http.rs`). A scrape can at worst delay a cold-path
+//! counter bump by the render duration — observable only in timing,
+//! never in values.
+//!
+//! The listener thread is detached and lives for the remainder of the
+//! process (there is deliberately no shutdown path: the endpoint's job
+//! is to stay readable until exit, and tests bind port 0 so parallel
+//! servers never collide).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::lock_ignore_poison as lock;
+
+/// Environment twin of `--metrics-listen`.
+pub const METRICS_LISTEN_ENV: &str = "MOONWALK_METRICS_LISTEN";
+
+/// Gauge key the trainer stamps after every completed optimizer step
+/// (unix epoch microseconds, from [`crate::obs::span::now_us`]);
+/// `/healthz` measures staleness against it.
+pub const LAST_STEP_GAUGE: &str = "train.last_step_unix_us";
+
+/// The most recently bound listener address (for tests and status
+/// lines; [`serve`] also returns it directly).
+static BOUND: Mutex<Option<SocketAddr>> = Mutex::new(None);
+
+/// Bind `addr` (`HOST:PORT`; port 0 = ephemeral) and serve the
+/// telemetry endpoints from a detached background thread. Returns the
+/// resolved local address — with port 0 this is where the ephemeral
+/// port surfaces. Errors if the bind fails (address in use, bad spec).
+pub fn serve(addr: &str) -> anyhow::Result<SocketAddr> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| anyhow::anyhow!("--metrics-listen {addr}: bind failed: {e}"))?;
+    let local = listener.local_addr()?;
+    *lock(&BOUND) = Some(local);
+    std::thread::Builder::new()
+        .name("moonwalk-metrics-http".into())
+        .spawn(move || serve_loop(listener))?;
+    Ok(local)
+}
+
+/// The most recently bound listener address, if any listener started.
+pub fn bound_addr() -> Option<SocketAddr> {
+    *lock(&BOUND)
+}
+
+fn serve_loop(listener: TcpListener) {
+    // Single-threaded by design: scrapes are rare (1–10 Hz), responses
+    // are small, and one handler thread keeps the plane's footprint
+    // bounded no matter how aggressive the scraper is.
+    for conn in listener.incoming() {
+        let Ok(mut stream) = conn else { continue };
+        let _ = handle(&mut stream);
+    }
+}
+
+/// Read one request head (everything through the blank line; any body
+/// is ignored — the endpoints are all GET) and answer it. Request
+/// parse failures answer 400; I/O errors just drop the connection.
+fn handle(stream: &mut TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    let mut head = Vec::with_capacity(512);
+    let mut buf = [0u8; 512];
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") {
+        if head.len() > 16 * 1024 {
+            return respond(stream, 400, "text/plain", "request head too large\n");
+        }
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            return Ok(()); // peer closed before completing the head
+        }
+        head.extend_from_slice(&buf[..n]);
+    }
+    let text = String::from_utf8_lossy(&head);
+    let mut parts = text.lines().next().unwrap_or("").split_whitespace();
+    let (method, target) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if method != "GET" {
+        return respond(stream, 405, "text/plain", "only GET is served here\n");
+    }
+    let path = target.split('?').next().unwrap_or("");
+    match path {
+        "/metrics" => {
+            let body = crate::obs::metrics::render_prometheus();
+            respond(stream, 200, "text/plain; version=0.0.4", &body)
+        }
+        "/snapshot" => {
+            let body = crate::obs::metrics::snapshot().to_string();
+            respond(stream, 200, "application/json", &body)
+        }
+        "/healthz" => {
+            let (code, body) = healthz();
+            respond(stream, code, "text/plain", &body)
+        }
+        _ => respond(stream, 404, "text/plain", "try /metrics, /snapshot or /healthz\n"),
+    }
+}
+
+/// Health verdict: `(status code, body)`. Healthy before the first
+/// completed step (the run may still be loading) and whenever the step
+/// deadline is disabled; stale once the last completed step is older
+/// than the deadline.
+fn healthz() -> (u16, String) {
+    let Some(last_us) = crate::obs::metrics::gauge(LAST_STEP_GAUGE) else {
+        return (200, "ok: no steps completed yet\n".into());
+    };
+    let age_s = (crate::obs::span::now_us().saturating_sub(last_us as u64)) as f64 / 1e6;
+    let deadline = crate::distributed::transport::Deadlines::resolve().step;
+    match deadline {
+        None => (200, format!("ok: last step {age_s:.3}s ago (no step deadline)\n")),
+        Some(d) if age_s <= d.as_secs_f64() => (
+            200,
+            format!("ok: last step {age_s:.3}s ago (deadline {}s)\n", d.as_secs_f64()),
+        ),
+        Some(d) => (
+            503,
+            format!(
+                "stale: last step {age_s:.3}s ago exceeds the {}s step deadline\n",
+                d.as_secs_f64()
+            ),
+        ),
+    }
+}
+
+fn respond(stream: &mut TcpStream, code: u16, content_type: &str, body: &str) -> std::io::Result<()> {
+    let reason = match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    };
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Minimal HTTP GET against a telemetry endpoint — `(status code,
+/// body)`. Shared by the tests and the `metrics_rows` bench family so
+/// neither needs an HTTP client dependency.
+pub fn get(addr: SocketAddr, path: &str) -> anyhow::Result<(u16, String)> {
+    let mut stream = TcpStream::connect_timeout(&addr, Duration::from_secs(5))?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    stream.write_all(
+        format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n").as_bytes(),
+    )?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?;
+    let text = String::from_utf8_lossy(&raw).into_owned();
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow::anyhow!("malformed HTTP response from {addr}{path}"))?;
+    let code: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("missing status code from {addr}{path}"))?;
+    Ok((code, body.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One server instance shared by the unit tests (the listener
+    /// thread is process-lived; binding one port keeps the test
+    /// footprint small).
+    fn test_server() -> SocketAddr {
+        serve("127.0.0.1:0").expect("bind ephemeral")
+    }
+
+    #[test]
+    fn metrics_snapshot_and_404_roundtrip() {
+        let addr = test_server();
+        crate::obs::metrics::counter_add("unit.http.pings", 3);
+        let (code, body) = get(addr, "/metrics").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("# TYPE moonwalk_unit_http_pings counter"));
+        assert!(body.contains("moonwalk_unit_http_pings 3"));
+        assert!(body.contains("moonwalk_tracker_current_bytes"));
+        let (code, body) = get(addr, "/snapshot").unwrap();
+        assert_eq!(code, 200);
+        let json = crate::util::json::Json::parse(&body).expect("snapshot is JSON");
+        assert!(json.get("pool.regions").as_usize().is_some());
+        assert!(json.get("unit.http.pings").as_usize().is_some());
+        let (code, _) = get(addr, "/nope").unwrap();
+        assert_eq!(code, 404);
+    }
+
+    #[test]
+    fn healthz_transitions_from_fresh_to_verdict() {
+        let addr = test_server();
+        // Scope the gauge write: other tests in this process may also
+        // exercise healthz, so only assert on states this test owns.
+        let (code, body) = get(addr, "/healthz").unwrap();
+        assert!(code == 200 || code == 503, "healthz always answers: {body}");
+        crate::obs::metrics::gauge_set(LAST_STEP_GAUGE, crate::obs::span::now_us() as f64);
+        let (code, body) = get(addr, "/healthz").unwrap();
+        assert_eq!(code, 200, "a just-completed step is healthy: {body}");
+        assert!(body.starts_with("ok"));
+    }
+
+    #[test]
+    fn non_get_methods_rejected() {
+        let addr = test_server();
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(b"POST /metrics HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n")
+            .unwrap();
+        let mut raw = Vec::new();
+        stream.read_to_end(&mut raw).unwrap();
+        let text = String::from_utf8_lossy(&raw);
+        assert!(text.starts_with("HTTP/1.1 405"), "{text}");
+    }
+}

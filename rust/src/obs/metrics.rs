@@ -1,7 +1,8 @@
 //! Typed counter/gauge/histogram registry — one place for the runtime
 //! counters that PRs 1–7 scattered across modules as ad-hoc statics.
 //!
-//! Two kinds of source feed [`snapshot`]:
+//! Two kinds of source feed [`snapshot`] and the Prometheus exposition
+//! ([`render_prometheus`], served by [`crate::obs::http`]):
 //!
 //! * **Live sources** — counters that already exist as module statics
 //!   with public readers (pool lifecycle, arena recycle rate, tracker
@@ -20,6 +21,22 @@
 //! `docs/OBSERVABILITY.md`. Counters are process-global and monotone;
 //! consumers that need per-run numbers (the trainer's `TrainReport`)
 //! record a baseline with [`counter`] and report deltas.
+//!
+//! **Labels.** A series may carry Prometheus-style labels — the fleet
+//! aggregation path folds worker metric deltas under a
+//! `replica="<logical shard>"` label so one scrape shows every replica
+//! (`moonwalk_step_seconds{replica="3"}`). Labeled writes go through
+//! the `*_labeled` twins, which store the series under the composite
+//! key produced by [`series_key`]; the JSON [`snapshot`] keeps those
+//! composite keys flat, while [`render_prometheus`] parses them back
+//! into proper label sets.
+//!
+//! **Histogram buckets.** Every histogram shares the fixed
+//! [`BUCKET_BOUNDS`] seconds ladder, recorded as cumulative counts.
+//! Buckets surface only in the Prometheus exposition
+//! (`_bucket{le="…"}` series); the JSON snapshot keeps its original
+//! `{count, sum, min, max, mean}` shape so downstream consumers
+//! (trainer JSONL, `BENCH_perf_ops.json`) are untouched.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -27,13 +44,60 @@ use std::sync::Mutex;
 use crate::util::json::Json;
 use crate::util::lock_ignore_poison as lock;
 
+/// Shared histogram bucket upper bounds, in seconds: a step-time ladder
+/// from 1 ms to 1 min. Rendered cumulatively (plus the implicit `+Inf`
+/// bucket) in the Prometheus exposition.
+pub const BUCKET_BOUNDS: [f64; 14] = [
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 60.0,
+];
+
 enum Metric {
     Counter(u64),
     Gauge(f64),
-    Hist { count: u64, sum: f64, min: f64, max: f64 },
+    Hist {
+        count: u64,
+        sum: f64,
+        min: f64,
+        max: f64,
+        /// Non-cumulative per-bucket counts aligned with
+        /// [`BUCKET_BOUNDS`]; observations above the last bound land
+        /// only in `count` (the `+Inf` bucket).
+        buckets: [u64; BUCKET_BOUNDS.len()],
+    },
 }
 
 static REGISTRY: Mutex<BTreeMap<String, Metric>> = Mutex::new(BTreeMap::new());
+
+/// Compose the registry key for `name` with `labels` attached:
+/// `name{k="v",k2="v2"}` (label values escaped per the Prometheus text
+/// format). With no labels this is `name` itself. Write through the
+/// `*_labeled` functions rather than calling this directly.
+pub fn series_key(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let mut s = String::with_capacity(name.len() + 16 * labels.len());
+    s.push_str(name);
+    s.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(k);
+        s.push_str("=\"");
+        for c in v.chars() {
+            match c {
+                '\\' => s.push_str("\\\\"),
+                '"' => s.push_str("\\\""),
+                '\n' => s.push_str("\\n"),
+                c => s.push(c),
+            }
+        }
+        s.push('"');
+    }
+    s.push('}');
+    s
+}
 
 /// Add `delta` to the named monotone counter (created at 0 on first use).
 pub fn counter_add(name: &str, delta: u64) {
@@ -44,6 +108,11 @@ pub fn counter_add(name: &str, delta: u64) {
             reg.insert(name.to_string(), Metric::Counter(delta));
         }
     }
+}
+
+/// [`counter_add`] on the series of `name` labeled with `labels`.
+pub fn counter_add_labeled(name: &str, labels: &[(&str, &str)], delta: u64) {
+    counter_add(&series_key(name, labels), delta);
 }
 
 /// Current value of a registered counter (0 if absent). Use this to
@@ -60,8 +129,18 @@ pub fn gauge_set(name: &str, v: f64) {
     lock(&REGISTRY).insert(name.to_string(), Metric::Gauge(v));
 }
 
-/// Record one observation into the named histogram (count/sum/min/max —
-/// enough for rates and means without bucket configuration).
+/// Current value of a registered gauge (`None` if absent or not a
+/// gauge) — the `/healthz` endpoint reads the trainer's
+/// `train.last_step_unix_us` heartbeat through this.
+pub fn gauge(name: &str) -> Option<f64> {
+    match lock(&REGISTRY).get(name) {
+        Some(Metric::Gauge(v)) => Some(*v),
+        _ => None,
+    }
+}
+
+/// Record one observation into the named histogram (count/sum/min/max
+/// plus the fixed [`BUCKET_BOUNDS`] bucket counts).
 pub fn observe(name: &str, v: f64) {
     let mut reg = lock(&REGISTRY);
     match reg.get_mut(name) {
@@ -70,13 +149,21 @@ pub fn observe(name: &str, v: f64) {
             sum,
             min,
             max,
+            buckets,
         }) => {
             *count += 1;
             *sum += v;
             *min = min.min(v);
             *max = max.max(v);
+            if let Some(b) = BUCKET_BOUNDS.iter().position(|&ub| v <= ub) {
+                buckets[b] += 1;
+            }
         }
         _ => {
+            let mut buckets = [0u64; BUCKET_BOUNDS.len()];
+            if let Some(b) = BUCKET_BOUNDS.iter().position(|&ub| v <= ub) {
+                buckets[b] += 1;
+            }
             reg.insert(
                 name.to_string(),
                 Metric::Hist {
@@ -84,10 +171,29 @@ pub fn observe(name: &str, v: f64) {
                     sum: v,
                     min: v,
                     max: v,
+                    buckets,
                 },
             );
         }
     }
+}
+
+/// [`observe`] on the series of `name` labeled with `labels`.
+pub fn observe_labeled(name: &str, labels: &[(&str, &str)], v: f64) {
+    observe(&series_key(name, labels), v);
+}
+
+/// Registered counters as `(series key, value)` pairs — the worker
+/// side of fleet aggregation snapshots this before a step and ships
+/// per-step deltas over the wire.
+pub fn counters() -> Vec<(String, u64)> {
+    lock(&REGISTRY)
+        .iter()
+        .filter_map(|(k, m)| match m {
+            Metric::Counter(v) => Some((k.clone(), *v)),
+            _ => None,
+        })
+        .collect()
 }
 
 /// Drop every registered metric (tests; live sources are unaffected).
@@ -99,7 +205,8 @@ pub fn reset() {
 /// metric — the blob the trainer, `TrainReport` consumers and
 /// `BENCH_perf_ops.json` share. Histograms render as
 /// `{count, sum, min, max, mean}` sub-objects; everything else is a
-/// number.
+/// number. Labeled series appear under their composite
+/// `name{label="…"}` key.
 pub fn snapshot() -> Json {
     let mut out = Json::obj();
     let p = crate::runtime::pool::stats();
@@ -136,6 +243,7 @@ pub fn snapshot() -> Json {
                 sum,
                 min,
                 max,
+                ..
             } => {
                 out.set(
                     k,
@@ -147,6 +255,191 @@ pub fn snapshot() -> Json {
                         ("mean", (*sum / (*count).max(1) as f64).into()),
                     ]),
                 );
+            }
+        }
+    }
+    out
+}
+
+/// Mangle a flat `subsystem.metric` key into a valid Prometheus metric
+/// name: `moonwalk_` prefix, `.` (and any other invalid character)
+/// mapped to `_`.
+fn prom_name(base: &str) -> String {
+    let mut s = String::with_capacity(base.len() + 9);
+    s.push_str("moonwalk_");
+    for c in base.chars() {
+        s.push(if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+            c
+        } else {
+            '_'
+        });
+    }
+    s
+}
+
+/// Split a composite registry key into `(base name, raw label body)` —
+/// the inverse of [`series_key`]; the label body is empty for
+/// unlabeled series.
+fn split_key(key: &str) -> (&str, &str) {
+    match key.find('{') {
+        Some(i) => (&key[..i], key[i + 1..].trim_end_matches('}')),
+        None => (key, ""),
+    }
+}
+
+/// Format a float the way the Prometheus text format expects (`{}`
+/// prints integral floats without a decimal point, which the format
+/// accepts).
+fn prom_num(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".into()
+    } else if v == f64::INFINITY {
+        "+Inf".into()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".into()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render every live source and registered metric in Prometheus text
+/// exposition format v0.0.4 — `# TYPE` lines, one family per metric
+/// name with all its labeled series grouped, and cumulative
+/// `_bucket{le="…"}` / `_sum` / `_count` triplets for histograms.
+/// Served at `/metrics` by [`crate::obs::http`].
+pub fn render_prometheus() -> String {
+    let mut out = String::with_capacity(4096);
+    let mut fam =
+        |out: &mut String, name: &str, kind: &str, series: &[(String, String)]| {
+            out.push_str("# TYPE ");
+            out.push_str(name);
+            out.push(' ');
+            out.push_str(kind);
+            out.push('\n');
+            for (label_line, value) in series {
+                out.push_str(label_line);
+                out.push(' ');
+                out.push_str(value);
+                out.push('\n');
+            }
+        };
+
+    // Live sources first: module statics the hot paths already keep.
+    let p = crate::runtime::pool::stats();
+    let live_counters: [(&str, u64); 8] = [
+        ("pool_regions", p.regions as u64),
+        ("pool_wakes", p.wakes as u64),
+        ("pool_parks", p.parks as u64),
+        ("pool_workers_spawned", p.workers_spawned as u64),
+        ("arena_hits", crate::tensor::arena::hits() as u64),
+        ("arena_misses", crate::tensor::arena::misses() as u64),
+        (
+            "tracker_total_allocs",
+            crate::tensor::tracker::total_allocs() as u64,
+        ),
+        (
+            "tracker_total_frees",
+            crate::tensor::tracker::total_frees() as u64,
+        ),
+    ];
+    for (name, v) in live_counters {
+        let full = format!("moonwalk_{name}");
+        fam(&mut out, &full, "counter", &[(full.clone(), format!("{v}"))]);
+    }
+    let live_gauges: [(&str, f64); 3] = [
+        ("arena_pooled", crate::tensor::arena::pooled() as f64),
+        (
+            "tracker_current_bytes",
+            crate::tensor::tracker::current() as f64,
+        ),
+        ("tracker_peak_bytes", crate::tensor::tracker::peak() as f64),
+    ];
+    for (name, v) in live_gauges {
+        let full = format!("moonwalk_{name}");
+        fam(&mut out, &full, "gauge", &[(full.clone(), prom_num(v))]);
+    }
+
+    // Registered metrics: regroup composite keys into per-base-name
+    // families so every family's series sit under one TYPE line (the
+    // BTreeMap interleaves `foo.bar` between `foo` and `foo{…}`).
+    let reg = lock(&REGISTRY);
+    let mut families: BTreeMap<String, Vec<(&str, &Metric)>> = BTreeMap::new();
+    for (k, m) in reg.iter() {
+        let (base, labels) = split_key(k);
+        families.entry(base.to_string()).or_default().push((labels, m));
+    }
+    for (base, series) in &families {
+        let name = prom_name(base);
+        let kind = match series[0].1 {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Hist { .. } => "histogram",
+        };
+        out.push_str("# TYPE ");
+        out.push_str(&name);
+        out.push(' ');
+        out.push_str(kind);
+        out.push('\n');
+        for (labels, m) in series {
+            match m {
+                Metric::Counter(v) => {
+                    out.push_str(&name);
+                    if !labels.is_empty() {
+                        out.push('{');
+                        out.push_str(labels);
+                        out.push('}');
+                    }
+                    out.push(' ');
+                    out.push_str(&format!("{v}\n"));
+                }
+                Metric::Gauge(v) => {
+                    out.push_str(&name);
+                    if !labels.is_empty() {
+                        out.push('{');
+                        out.push_str(labels);
+                        out.push('}');
+                    }
+                    out.push(' ');
+                    out.push_str(&prom_num(*v));
+                    out.push('\n');
+                }
+                Metric::Hist {
+                    count,
+                    sum,
+                    buckets,
+                    ..
+                } => {
+                    let mut cum = 0u64;
+                    for (bi, ub) in BUCKET_BOUNDS.iter().enumerate() {
+                        cum += buckets[bi];
+                        out.push_str(&name);
+                        out.push_str("_bucket{");
+                        if !labels.is_empty() {
+                            out.push_str(labels);
+                            out.push(',');
+                        }
+                        out.push_str(&format!("le=\"{}\"}} {cum}\n", prom_num(*ub)));
+                    }
+                    out.push_str(&name);
+                    out.push_str("_bucket{");
+                    if !labels.is_empty() {
+                        out.push_str(labels);
+                        out.push(',');
+                    }
+                    out.push_str(&format!("le=\"+Inf\"}} {count}\n"));
+                    for (suffix, v) in [("_sum", prom_num(*sum)), ("_count", format!("{count}"))] {
+                        out.push_str(&name);
+                        out.push_str(suffix);
+                        if !labels.is_empty() {
+                            out.push('{');
+                            out.push_str(labels);
+                            out.push('}');
+                        }
+                        out.push(' ');
+                        out.push_str(&v);
+                        out.push('\n');
+                    }
+                }
             }
         }
     }
@@ -182,5 +475,70 @@ mod tests {
     #[test]
     fn absent_counter_reads_zero() {
         assert_eq!(counter("unit.m.never_written"), 0);
+    }
+
+    #[test]
+    fn labeled_series_compose_and_read_back() {
+        counter_add_labeled("unit.lbl.count", &[("replica", "3")], 7);
+        assert_eq!(counter("unit.lbl.count{replica=\"3\"}"), 7);
+        assert_eq!(counter("unit.lbl.count"), 0, "labeled != unlabeled");
+        assert_eq!(
+            series_key("a.b", &[("k", "v\"x\\y")]),
+            "a.b{k=\"v\\\"x\\\\y\"}"
+        );
+        assert_eq!(series_key("a.b", &[]), "a.b");
+    }
+
+    #[test]
+    fn gauge_reads_back_and_rejects_other_kinds() {
+        gauge_set("unit.g.read", 2.25);
+        assert_eq!(gauge("unit.g.read"), Some(2.25));
+        counter_add("unit.g.not_a_gauge", 1);
+        assert_eq!(gauge("unit.g.not_a_gauge"), None);
+        assert_eq!(gauge("unit.g.absent"), None);
+    }
+
+    #[test]
+    fn prometheus_exposition_groups_families_and_buckets_are_cumulative() {
+        counter_add_labeled("unit.prom.steps", &[("replica", "0")], 2);
+        counter_add_labeled("unit.prom.steps", &[("replica", "1")], 4);
+        observe_labeled("unit.prom.lat", &[("replica", "0")], 0.004);
+        observe_labeled("unit.prom.lat", &[("replica", "0")], 0.09);
+        observe_labeled("unit.prom.lat", &[("replica", "0")], 999.0); // +Inf only
+        let text = render_prometheus();
+        assert!(text.contains("# TYPE moonwalk_unit_prom_steps counter"));
+        assert!(text.contains("moonwalk_unit_prom_steps{replica=\"0\"} 2"));
+        assert!(text.contains("moonwalk_unit_prom_steps{replica=\"1\"} 4"));
+        assert!(text.contains("# TYPE moonwalk_unit_prom_lat histogram"));
+        assert!(text.contains("moonwalk_unit_prom_lat_sum{replica=\"0\"}"));
+        assert!(text.contains("moonwalk_unit_prom_lat_count{replica=\"0\"} 3"));
+        assert!(text.contains("moonwalk_unit_prom_lat_bucket{replica=\"0\",le=\"+Inf\"} 3"));
+        // Cumulative monotonicity across the bucket ladder.
+        let mut last = 0u64;
+        let mut seen = 0;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("moonwalk_unit_prom_lat_bucket{replica=\"0\",le=")
+            {
+                let v: u64 = rest.split(' ').next_back().unwrap().parse().unwrap();
+                assert!(v >= last, "bucket counts must be cumulative: {line}");
+                last = v;
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, BUCKET_BOUNDS.len() + 1, "every bound plus +Inf");
+        // Live sources render too.
+        assert!(text.contains("# TYPE moonwalk_pool_regions counter"));
+        assert!(text.contains("# TYPE moonwalk_tracker_current_bytes gauge"));
+    }
+
+    #[test]
+    fn histogram_buckets_count_observations_at_or_below_bound() {
+        observe("unit.bkt.h", 0.0005); // below first bound
+        observe("unit.bkt.h", 0.001); // exactly the first bound (le = ≤)
+        let text = render_prometheus();
+        assert!(
+            text.contains("moonwalk_unit_bkt_h_bucket{le=\"0.001\"} 2"),
+            "le is inclusive: {text}"
+        );
     }
 }

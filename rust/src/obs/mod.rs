@@ -20,6 +20,17 @@
 //!   [`metrics::snapshot`] JSON view over both the registered metrics
 //!   (supervisor retries, respawns, heartbeat misses, backoff waits)
 //!   and the pre-existing live counters (pool, arena, tracker).
+//!   Labeled series (`metrics::counter_add_labeled`) carry fleet
+//!   dimensions like `replica="3"`, and
+//!   [`metrics::render_prometheus`] renders the whole registry as
+//!   Prometheus text exposition v0.0.4 (ISSUE 10).
+//! * [`http`] — the live telemetry plane: a std-only HTTP/1.1 listener
+//!   (`--metrics-listen`) serving `/metrics` (Prometheus), `/snapshot`
+//!   (JSON) and `/healthz` while a run is in flight (ISSUE 10).
+//! * [`report`] — the post-run profile report behind `moonwalk
+//!   report`: aggregates a Chrome trace into a per-layer × per-phase
+//!   time/bytes attribution table and an inferno-compatible
+//!   folded-stack file (ISSUE 10).
 //!
 //! **Determinism contract:** tracing never perturbs computed values —
 //! recording reads clocks and the tracker but takes no lock shared
@@ -29,5 +40,7 @@
 //! metrics glossary live in `docs/OBSERVABILITY.md`.
 
 pub mod export;
+pub mod http;
 pub mod metrics;
+pub mod report;
 pub mod span;

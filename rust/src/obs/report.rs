@@ -1,0 +1,426 @@
+//! Post-run profile reports: aggregate a Chrome trace (the
+//! `--trace out.trace.json` artifact) into a per-layer × per-phase
+//! time/bytes attribution table and an inferno/flamegraph.pl-compatible
+//! folded-stack file — the `moonwalk report` subcommand.
+//!
+//! Two views over the same events:
+//!
+//! * **Attribution table** ([`ProfileReport::table`] /
+//!   [`ProfileReport::to_json`]): every duration (`ph:"X"`) event is
+//!   keyed by *phase* (the span-name prefix before the first `.` —
+//!   `phase1`, `phase2`, `phase3`, `reduce`, `pool`, …) and *layer*
+//!   (the span's `layer` arg, `-` when absent). Each cell sums the
+//!   events' full durations and their net tracked-bytes deltas
+//!   (`mem_close_bytes − mem_open_bytes`), so a phase's total equals
+//!   the sum of that phase's span durations in the trace — the
+//!   reconciliation `tests/report.rs` pins. Rows are *inclusive*
+//!   (a parent span's row also covers time attributed to its children's
+//!   rows — `moonwalk` includes `phase1`..`phase3`); the folded view
+//!   below is where self-time lives.
+//! * **Folded stacks** ([`ProfileReport::folded`]): per `(pid, tid)`
+//!   lane, events are nested by timestamp containment and each frame is
+//!   weighted by its **self** time (duration minus children), in
+//!   microseconds. One `proc;frame;frame N` line per unique stack —
+//!   feed to `inferno-flamegraph` or `flamegraph.pl` directly.
+//!
+//! This is the measured replacement for the analytic cost model: the
+//! table's per-layer × per-phase seconds/bytes are exactly the observed
+//! quantities the budget planner's DP consumes as predictions.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One duration event lifted out of the trace (the subset the report
+/// aggregates).
+#[derive(Clone, Debug)]
+struct SpanEvent {
+    name: String,
+    pid: usize,
+    tid: usize,
+    /// Start, trace microseconds.
+    ts: f64,
+    /// Duration, microseconds.
+    dur: f64,
+    /// The span's `layer` arg, when recorded.
+    layer: Option<i64>,
+    /// `mem_close_bytes − mem_open_bytes`.
+    net_bytes: f64,
+}
+
+/// One attribution cell: all spans sharing a `(phase, layer)` key.
+#[derive(Clone, Debug, Default)]
+pub struct Cell {
+    /// Number of spans aggregated into this cell.
+    pub count: usize,
+    /// Sum of the spans' durations, microseconds.
+    pub total_us: f64,
+    /// Sum of the spans' net tracked-bytes deltas (may be negative:
+    /// a span that frees more than it allocates).
+    pub net_bytes: f64,
+}
+
+/// The aggregated profile of one Chrome trace.
+#[derive(Clone, Debug)]
+pub struct ProfileReport {
+    /// `(phase, layer label)` → aggregated cell. Layer label is the
+    /// decimal `layer` arg or `-` for spans without one.
+    pub cells: BTreeMap<(String, String), Cell>,
+    /// Per-phase duration totals (microseconds) — the numbers that
+    /// reconcile against the trace's span durations.
+    pub phase_totals: BTreeMap<String, f64>,
+    /// Folded-stack lines (`proc;frame;frame self_us`), one per unique
+    /// stack, sorted.
+    folded_lines: Vec<String>,
+    /// Duration events aggregated.
+    pub events: usize,
+    /// Instant events seen (counted, not timed).
+    pub instants: usize,
+    /// Distinct processes in the trace.
+    pub processes: usize,
+}
+
+/// Phase key: the span-name prefix before the first `.`
+/// (`phase1.forward` → `phase1`, `reduce.layer` → `reduce`); names
+/// without a dot are their own phase.
+fn phase_of(name: &str) -> &str {
+    name.split('.').next().unwrap_or(name)
+}
+
+/// Parse and aggregate a Chrome trace file written by
+/// [`super::export::finish`] (any `{"traceEvents": […]}` JSON with
+/// `ph`/`ts`/`dur`/`pid`/`tid` fields works).
+pub fn from_file(path: &Path) -> anyhow::Result<ProfileReport> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading trace {}: {e}", path.display()))?;
+    let json = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("trace {} is not valid JSON: {e}", path.display()))?;
+    from_trace(&json)
+}
+
+/// Aggregate an already-parsed trace JSON (the testable core of
+/// [`from_file`]).
+pub fn from_trace(json: &Json) -> anyhow::Result<ProfileReport> {
+    let events = json
+        .get("traceEvents")
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("trace has no traceEvents array"))?;
+    let mut spans: Vec<SpanEvent> = Vec::new();
+    let mut proc_names: BTreeMap<usize, String> = BTreeMap::new();
+    let mut instants = 0usize;
+    for e in events {
+        let ph = e.get("ph").as_str().unwrap_or("");
+        let pid = e.get("pid").as_usize().unwrap_or(0);
+        match ph {
+            "M" => {
+                if e.get("name").as_str() == Some("process_name") {
+                    if let Some(label) = e.get("args").get("name").as_str() {
+                        proc_names.insert(pid, label.to_string());
+                    }
+                }
+            }
+            "i" => instants += 1,
+            "X" => {
+                let args = e.get("args");
+                let open = args.get("mem_open_bytes").as_f64().unwrap_or(0.0);
+                let close = args.get("mem_close_bytes").as_f64().unwrap_or(0.0);
+                spans.push(SpanEvent {
+                    name: e.get("name").as_str().unwrap_or("?").to_string(),
+                    pid,
+                    tid: e.get("tid").as_usize().unwrap_or(0),
+                    ts: e.get("ts").as_f64().unwrap_or(0.0),
+                    dur: e.get("dur").as_f64().unwrap_or(0.0),
+                    layer: args.get("layer").as_f64().map(|v| v as i64),
+                    net_bytes: close - open,
+                });
+            }
+            _ => {} // counters and unknown phases: not aggregated
+        }
+    }
+
+    // Attribution cells: full (inclusive) durations per (phase, layer).
+    let mut cells: BTreeMap<(String, String), Cell> = BTreeMap::new();
+    let mut phase_totals: BTreeMap<String, f64> = BTreeMap::new();
+    for s in &spans {
+        let phase = phase_of(&s.name).to_string();
+        let layer = s.layer.map(|l| l.to_string()).unwrap_or_else(|| "-".into());
+        let cell = cells.entry((phase.clone(), layer)).or_default();
+        cell.count += 1;
+        cell.total_us += s.dur;
+        cell.net_bytes += s.net_bytes;
+        *phase_totals.entry(phase).or_insert(0.0) += s.dur;
+    }
+
+    let folded_lines = fold_stacks(&spans, &proc_names);
+    let processes = {
+        let mut pids: Vec<usize> = spans.iter().map(|s| s.pid).collect();
+        pids.extend(proc_names.keys().copied());
+        pids.sort_unstable();
+        pids.dedup();
+        pids.len()
+    };
+    Ok(ProfileReport {
+        cells,
+        phase_totals,
+        folded_lines,
+        events: spans.len(),
+        instants,
+        processes,
+    })
+}
+
+/// Nest each `(pid, tid)` lane's spans by timestamp containment and
+/// weight every frame by its self time (duration minus children),
+/// rounded to whole microseconds. Zero-self frames are elided (their
+/// time lives entirely in their children).
+fn fold_stacks(spans: &[SpanEvent], proc_names: &BTreeMap<usize, String>) -> Vec<String> {
+    /// A span whose close we haven't passed yet.
+    struct Open {
+        name: String,
+        end: f64,
+        dur: f64,
+        child_us: f64,
+    }
+    let mut lanes: BTreeMap<(usize, usize), Vec<&SpanEvent>> = BTreeMap::new();
+    for s in spans {
+        lanes.entry((s.pid, s.tid)).or_default().push(s);
+    }
+    let mut folded: BTreeMap<String, u64> = BTreeMap::new();
+    for ((pid, _tid), mut lane) in lanes {
+        // Parents first: earlier start, and at equal starts the longer
+        // span encloses the shorter one.
+        lane.sort_by(|a, b| {
+            a.ts.partial_cmp(&b.ts)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(b.dur.partial_cmp(&a.dur).unwrap_or(std::cmp::Ordering::Equal))
+        });
+        let root = proc_names
+            .get(&pid)
+            .cloned()
+            .unwrap_or_else(|| format!("pid-{pid}"));
+        let mut stack: Vec<Open> = Vec::new();
+        let mut close_top = |stack: &mut Vec<Open>, folded: &mut BTreeMap<String, u64>| {
+            let top = stack.pop().expect("caller checked non-empty");
+            let self_us = (top.dur - top.child_us).max(0.0).round() as u64;
+            if self_us > 0 {
+                let mut frames = Vec::with_capacity(stack.len() + 2);
+                frames.push(root.as_str());
+                for o in stack.iter() {
+                    frames.push(o.name.as_str());
+                }
+                frames.push(top.name.as_str());
+                *folded.entry(frames.join(";")).or_insert(0) += self_us;
+            }
+        };
+        for s in lane {
+            while stack
+                .last()
+                .map(|top| top.end <= s.ts)
+                .unwrap_or(false)
+            {
+                close_top(&mut stack, &mut folded);
+            }
+            if let Some(parent) = stack.last_mut() {
+                parent.child_us += s.dur;
+            }
+            stack.push(Open {
+                name: s.name.clone(),
+                end: s.ts + s.dur,
+                dur: s.dur,
+                child_us: 0.0,
+            });
+        }
+        while !stack.is_empty() {
+            close_top(&mut stack, &mut folded);
+        }
+    }
+    folded
+        .into_iter()
+        .map(|(frames, us)| format!("{frames} {us}"))
+        .collect()
+}
+
+impl ProfileReport {
+    /// The stdout attribution table: one row per `(phase, layer)` cell,
+    /// sorted by total time descending, followed by the per-phase
+    /// totals line the acceptance reconciliation checks.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "per-layer × per-phase attribution ({} span(s), {} instant(s), {} process(es)):",
+            self.events, self.instants, self.processes
+        );
+        let _ = writeln!(
+            out,
+            "  {:<16} {:>6} {:>8} {:>12} {:>11} {:>14}",
+            "phase", "layer", "count", "total ms", "mean µs", "net bytes"
+        );
+        let mut rows: Vec<(&(String, String), &Cell)> = self.cells.iter().collect();
+        rows.sort_by(|a, b| {
+            b.1.total_us
+                .partial_cmp(&a.1.total_us)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for ((phase, layer), cell) in rows {
+            let _ = writeln!(
+                out,
+                "  {:<16} {:>6} {:>8} {:>12.3} {:>11.1} {:>+14.0}",
+                phase,
+                layer,
+                cell.count,
+                cell.total_us / 1e3,
+                cell.total_us / cell.count.max(1) as f64,
+                cell.net_bytes,
+            );
+        }
+        let _ = write!(out, "phase totals:");
+        for (phase, us) in &self.phase_totals {
+            let _ = write!(out, " {phase}={:.3}ms", us / 1e3);
+        }
+        out.push('\n');
+        out
+    }
+
+    /// The machine-readable report (`--json out.json`): the rows and
+    /// phase totals of [`Self::table`] plus the event counts.
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|((phase, layer), cell)| {
+                Json::from_pairs(vec![
+                    ("phase", phase.as_str().into()),
+                    ("layer", layer.as_str().into()),
+                    ("count", cell.count.into()),
+                    ("total_us", cell.total_us.into()),
+                    ("net_bytes", cell.net_bytes.into()),
+                ])
+            })
+            .collect();
+        let mut totals = Json::obj();
+        for (phase, us) in &self.phase_totals {
+            totals.set(phase, (*us).into());
+        }
+        Json::from_pairs(vec![
+            ("events", self.events.into()),
+            ("instants", self.instants.into()),
+            ("processes", self.processes.into()),
+            ("rows", Json::Arr(rows)),
+            ("phase_totals_us", totals),
+        ])
+    }
+
+    /// The folded-stack file body (`--folded out.folded`): one
+    /// `proc;frame;frame self_us` line per unique stack, ready for
+    /// `inferno-flamegraph` / `flamegraph.pl`.
+    pub fn folded(&self) -> String {
+        let mut out = self.folded_lines.join("\n");
+        if !out.is_empty() {
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic two-process trace: coordinator with a nested pair of
+    /// spans (outer 100µs containing inner 30µs) plus a worker span
+    /// carrying a layer arg.
+    fn fixture() -> Json {
+        let ev = |name: &str, ph: &str, pid: usize, tid: usize, ts: f64, dur: f64, layer: Option<i64>| {
+            let mut args = Json::obj();
+            if let Some(l) = layer {
+                args.set("layer", (l as f64).into());
+            }
+            args.set("mem_open_bytes", 100usize.into());
+            args.set("mem_close_bytes", 164usize.into());
+            let mut e = Json::obj();
+            e.set("name", name.into());
+            e.set("ph", ph.into());
+            e.set("pid", pid.into());
+            e.set("tid", tid.into());
+            e.set("ts", ts.into());
+            if ph == "X" {
+                e.set("dur", dur.into());
+            }
+            e.set("args", args);
+            e
+        };
+        let mut pmeta = Json::obj();
+        pmeta.set("name", "process_name".into());
+        pmeta.set("ph", "M".into());
+        pmeta.set("pid", 1usize.into());
+        pmeta.set("tid", 0usize.into());
+        let mut margs = Json::obj();
+        margs.set("name", "coordinator".into());
+        pmeta.set("args", margs);
+        Json::from_pairs(vec![(
+            "traceEvents",
+            Json::Arr(vec![
+                pmeta,
+                ev("moonwalk.phase1", "X", 1, 7, 0.0, 100.0, None),
+                ev("phase1.forward", "X", 1, 7, 10.0, 30.0, Some(2)),
+                ev("phase2.cotangent", "X", 2, 3, 50.0, 40.0, Some(2)),
+                ev("supervisor.straggler", "i", 1, 7, 60.0, 0.0, None),
+            ]),
+        )])
+    }
+
+    #[test]
+    fn attribution_cells_and_phase_totals_reconcile() {
+        let r = from_trace(&fixture()).unwrap();
+        assert_eq!(r.events, 3);
+        assert_eq!(r.instants, 1);
+        assert_eq!(r.processes, 2);
+        let c = &r.cells[&("phase1".to_string(), "2".to_string())];
+        assert_eq!(c.count, 1);
+        assert_eq!(c.total_us, 30.0);
+        assert_eq!(c.net_bytes, 64.0);
+        // Phase totals equal the sum of that phase's span durations —
+        // the reconciliation contract.
+        assert_eq!(r.phase_totals["moonwalk"], 100.0);
+        assert_eq!(r.phase_totals["phase1"], 30.0);
+        assert_eq!(r.phase_totals["phase2"], 40.0);
+        let total: f64 = r.phase_totals.values().sum();
+        assert_eq!(total, 170.0);
+        let table = r.table();
+        assert!(table.contains("phase1"), "{table}");
+        assert!(table.contains("moonwalk=0.100ms"), "{table}");
+    }
+
+    #[test]
+    fn folded_stacks_use_self_time_and_nest_by_containment() {
+        let r = from_trace(&fixture()).unwrap();
+        let folded = r.folded();
+        // Outer span: 100µs minus the 30µs child = 70µs self.
+        assert!(
+            folded.contains("coordinator;moonwalk.phase1 70"),
+            "{folded}"
+        );
+        // Nested child keeps its full 30µs.
+        assert!(
+            folded.contains("coordinator;moonwalk.phase1;phase1.forward 30"),
+            "{folded}"
+        );
+        // The second process has no process_name metadata → pid label.
+        assert!(folded.contains("pid-2;phase2.cotangent 40"), "{folded}");
+    }
+
+    #[test]
+    fn json_view_matches_table_rows() {
+        let r = from_trace(&fixture()).unwrap();
+        let j = r.to_json();
+        assert_eq!(j.req_usize("events").unwrap(), 3);
+        let rows = j.get("rows").as_arr().unwrap();
+        assert_eq!(rows.len(), r.cells.len());
+        assert!(j.get("phase_totals_us").get("phase2").as_f64() == Some(40.0));
+        // Missing traceEvents is a clean error, not a panic.
+        assert!(from_trace(&Json::obj()).is_err());
+    }
+}

@@ -1,0 +1,376 @@
+//! Live telemetry plane contract (ISSUE 10):
+//!
+//! 1. **Fleet aggregation over the wire** — scraping `/metrics` during
+//!    a 2-replica unix-transport train returns per-replica-labeled
+//!    series (the workers' piggybacked `step.seconds` histograms and
+//!    the coordinator's `transport.step_seconds`), rendered in valid
+//!    Prometheus text exposition v0.0.4.
+//! 2. **Histogram correctness** — `_bucket` series are cumulative and
+//!    monotone across the whole ladder, the `+Inf` bucket equals
+//!    `_count`, and every bound appears exactly once per series.
+//! 3. **Snapshot schema stability** — `/snapshot` keeps the flat JSON
+//!    shape trainer JSONL rows and `BENCH_perf_ops.json` embed: plain
+//!    numbers for counters/gauges, `{count, sum, min, max, mean}`
+//!    sub-objects for histograms, live pool/arena/tracker sources
+//!    always present.
+//! 4. **Scrape determinism** — the §2.6 zero-effect-on-results
+//!    contract extends to scraping mid-run: the full `EXACT_ENGINES`
+//!    grid produces bit-identical loss curves with a scraper hammering
+//!    `/metrics` + `/snapshot` vs no scraper at all.
+//!
+//! The metrics registry is process-global, so every test serializes
+//! through one mutex and resets the registry while holding it. The
+//! listener thread is process-lived; all tests share one ephemeral-port
+//! server.
+
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use moonwalk::autodiff::{engine_by_name, EXACT_ENGINES};
+use moonwalk::coordinator::{Optimizer, OptimizerKind, SyntheticSpec, TextureDataset, Trainer};
+use moonwalk::distributed::transport::{EngineSpec, UnixTransport, UnixTransportOpts};
+use moonwalk::model::config::Config;
+use moonwalk::obs::http;
+use moonwalk::obs::metrics::{self, BUCKET_BOUNDS};
+use moonwalk::util::json::Json;
+use moonwalk::util::Rng;
+
+/// Serializes every test: the metrics registry is process-global.
+static REGISTRY_LOCK: Mutex<()> = Mutex::new(());
+
+fn registry_lock() -> std::sync::MutexGuard<'static, ()> {
+    match REGISTRY_LOCK.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// One shared ephemeral-port listener (the serve thread is
+/// process-lived by design, so binding once keeps the footprint small).
+fn server() -> SocketAddr {
+    static ADDR: OnceLock<SocketAddr> = OnceLock::new();
+    *ADDR.get_or_init(|| http::serve("127.0.0.1:0").expect("bind ephemeral port"))
+}
+
+/// The tiny CNN config the transport suite uses, so worker subprocesses
+/// can rebuild the identical architecture.
+fn tiny_cfg(seed: u64) -> Config {
+    Config::from_json(
+        &Json::parse(&format!(
+            r#"{{"arch": "cnn2d", "depth": 2, "channels": 5, "input_hw": 16,
+                 "cin": 2, "classes": 4, "alpha": 0.1, "constrained": true,
+                 "seed": {seed}}}"#
+        ))
+        .unwrap(),
+    )
+    .unwrap()
+}
+
+/// A spawned 2-replica unix transport pointed at the built binary.
+fn unix_transport(cfg: &Config, engine: EngineSpec) -> UnixTransport {
+    let mut opts = UnixTransportOpts::new(2, cfg.to_json().to_string(), engine);
+    opts.worker_bin = Some(std::path::PathBuf::from(env!("CARGO_BIN_EXE_moonwalk")));
+    UnixTransport::spawn(opts).expect("spawn unix transport")
+}
+
+/// Start a background scraper that hammers `/metrics` and `/snapshot`
+/// until the returned stop flag is raised (drop the handle via
+/// `join` after raising it).
+fn spawn_scraper(addr: SocketAddr) -> (Arc<AtomicBool>, std::thread::JoinHandle<u64>) {
+    let stop = Arc::new(AtomicBool::new(false));
+    let flag = stop.clone();
+    let handle = std::thread::spawn(move || {
+        let mut scrapes = 0u64;
+        while !flag.load(Ordering::Relaxed) {
+            let (code, _) = http::get(addr, "/metrics").expect("scrape /metrics");
+            assert_eq!(code, 200);
+            let (code, _) = http::get(addr, "/snapshot").expect("scrape /snapshot");
+            assert_eq!(code, 200);
+            scrapes += 1;
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        scrapes
+    });
+    (stop, handle)
+}
+
+/// Validate the whole body against the text exposition grammar: every
+/// non-comment line is `name[{labels}] value` with a legal metric name,
+/// balanced `k="v"` label pairs, and a parseable value (`NaN`/`±Inf`
+/// included — Rust's float parser accepts all three spellings).
+fn assert_exposition_grammar(text: &str) {
+    let mut series = 0usize;
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split(' ');
+            let (name, kind) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+            assert!(!name.is_empty(), "TYPE line without a name: {line}");
+            assert!(
+                matches!(kind, "counter" | "gauge" | "histogram"),
+                "unknown TYPE kind: {line}"
+            );
+            continue;
+        }
+        assert!(!line.starts_with('#'), "only TYPE comments are emitted: {line}");
+        let (key, value) = line
+            .rsplit_once(' ')
+            .unwrap_or_else(|| panic!("no value on sample line: {line:?}"));
+        value
+            .parse::<f64>()
+            .unwrap_or_else(|_| panic!("unparseable value {value:?} on: {line}"));
+        let name_end = key.find('{').unwrap_or(key.len());
+        let name = &key[..name_end];
+        assert!(
+            !name.is_empty()
+                && !name.starts_with(|c: char| c.is_ascii_digit())
+                && name
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+            "illegal metric name on: {line}"
+        );
+        if name_end < key.len() {
+            assert!(key.ends_with('}'), "unterminated label set: {line}");
+            let body = &key[name_end + 1..key.len() - 1];
+            for pair in body.split(',') {
+                let (k, v) = pair
+                    .split_once('=')
+                    .unwrap_or_else(|| panic!("label without '=' on: {line}"));
+                assert!(
+                    !k.is_empty() && v.len() >= 2 && v.starts_with('"') && v.ends_with('"'),
+                    "label {pair:?} is not k=\"v\" on: {line}"
+                );
+            }
+        }
+        series += 1;
+    }
+    assert!(series > 0, "exposition body is empty");
+}
+
+/// Walk one labeled histogram's bucket ladder: cumulative counts must
+/// be monotone, every bound plus `+Inf` appears exactly once, and the
+/// `+Inf` bucket is returned for comparison against `_count`.
+fn assert_bucket_ladder(text: &str, bucket_prefix: &str) -> u64 {
+    let mut last = 0u64;
+    let mut seen = 0usize;
+    let mut inf = None;
+    for line in text.lines() {
+        let Some(rest) = line.strip_prefix(bucket_prefix) else {
+            continue;
+        };
+        let v: u64 = rest
+            .rsplit_once(' ')
+            .and_then(|(_, v)| v.parse().ok())
+            .unwrap_or_else(|| panic!("bad bucket line: {line}"));
+        assert!(v >= last, "bucket counts must be cumulative: {line}");
+        last = v;
+        seen += 1;
+        if rest.starts_with("\"+Inf\"") {
+            inf = Some(v);
+        }
+    }
+    assert_eq!(
+        seen,
+        BUCKET_BOUNDS.len() + 1,
+        "{bucket_prefix}: every bound plus +Inf appears once"
+    );
+    inf.unwrap_or_else(|| panic!("{bucket_prefix}: no +Inf bucket"))
+}
+
+/// Grab one sample's value by its exact series key.
+fn sample(text: &str, key: &str) -> Option<f64> {
+    let prefix = format!("{key} ");
+    text.lines()
+        .find_map(|l| l.strip_prefix(&prefix))
+        .and_then(|v| v.parse().ok())
+}
+
+// ---------------------------------------------------------------------------
+// 1 + 2. Live 2-replica scrape: per-replica series, valid exposition,
+//        cumulative buckets
+// ---------------------------------------------------------------------------
+
+#[test]
+fn two_replica_unix_train_scrape_exposes_per_replica_series() {
+    let _g = registry_lock();
+    metrics::reset();
+    let addr = server();
+    let (stop, scraper) = spawn_scraper(addr);
+
+    let cfg = tiny_cfg(21);
+    let mut rng = Rng::new(cfg.seed);
+    let mut net = cfg.build_network(&mut rng);
+    let data = TextureDataset::generate(
+        SyntheticSpec {
+            hw: 16,
+            cin: 2,
+            classes: 4,
+            noise: 0.15,
+            seed: 21,
+        },
+        40,
+    );
+    let (train, test) = data.split(0.2);
+    let engine = engine_by_name("moonwalk", cfg.block, cfg.checkpoint_every, cfg.seed).unwrap();
+    let opt = Optimizer::new(OptimizerKind::Sgd, 1e-3, &net, false);
+    let steps = 3;
+    let mut trainer = Trainer::new(&mut net, engine.as_ref(), opt);
+    trainer.replicas = 2;
+    trainer.transport = Some(Box::new(unix_transport(&cfg, EngineSpec::new("moonwalk"))));
+    let report = trainer
+        .train(&train, &test, 4, steps, &mut Rng::new(22), None)
+        .unwrap();
+    assert_eq!(report.transport, "unix");
+
+    stop.store(true, Ordering::Relaxed);
+    let scrapes = scraper.join().expect("scraper thread");
+    assert!(scrapes > 0, "the scraper ran during the train");
+
+    let (code, body) = http::get(addr, "/metrics").unwrap();
+    assert_eq!(code, 200);
+    assert_exposition_grammar(&body);
+
+    // Workers piggyback their step.seconds over the wire; the
+    // coordinator folds each under its logical shard's replica label.
+    assert!(
+        body.contains("# TYPE moonwalk_step_seconds histogram"),
+        "fleet histogram family missing:\n{body}"
+    );
+    for replica in ["0", "1"] {
+        let count = sample(&body, &format!("moonwalk_step_seconds_count{{replica=\"{replica}\"}}"))
+            .unwrap_or_else(|| panic!("no step.seconds count for replica {replica}:\n{body}"));
+        assert!(
+            count >= steps as f64,
+            "replica {replica} reported {count} steps, ran {steps}"
+        );
+        // Coordinator-side wall time per logical shard rides along.
+        assert!(
+            sample(
+                &body,
+                &format!("moonwalk_transport_step_seconds_count{{replica=\"{replica}\"}}")
+            )
+            .is_some(),
+            "no transport.step_seconds for replica {replica}:\n{body}"
+        );
+        let inf = assert_bucket_ladder(
+            &body,
+            &format!("moonwalk_step_seconds_bucket{{replica=\"{replica}\",le="),
+        );
+        assert_eq!(inf as f64, count, "+Inf bucket equals _count");
+    }
+    // The trainer's own unlabeled step histogram and the live sources
+    // render in the same scrape.
+    assert!(sample(&body, "moonwalk_train_step_seconds_count").is_some());
+    assert!(body.contains("# TYPE moonwalk_tracker_peak_bytes gauge"));
+
+    // A just-finished run reads healthy.
+    let (code, health) = http::get(addr, "/healthz").unwrap();
+    assert_eq!(code, 200, "{health}");
+    assert!(health.starts_with("ok"), "{health}");
+}
+
+// ---------------------------------------------------------------------------
+// 3. /snapshot schema stability
+// ---------------------------------------------------------------------------
+
+#[test]
+fn snapshot_schema_is_stable() {
+    let _g = registry_lock();
+    metrics::reset();
+    let addr = server();
+    metrics::counter_add("itest.snap.count", 7);
+    metrics::gauge_set("itest.snap.gauge", 2.5);
+    metrics::observe_labeled("step.seconds", &[("replica", "0")], 0.25);
+    metrics::observe_labeled("step.seconds", &[("replica", "0")], 0.75);
+
+    let (code, body) = http::get(addr, "/snapshot").unwrap();
+    assert_eq!(code, 200);
+    let snap = Json::parse(&body).expect("snapshot is valid JSON");
+
+    // Live sources are always present as plain numbers.
+    for key in [
+        "pool.regions",
+        "arena.hits",
+        "arena.misses",
+        "tracker.current_bytes",
+        "tracker.peak_bytes",
+        "tracker.total_allocs",
+        "tracker.total_frees",
+    ] {
+        assert!(snap.get(key).as_f64().is_some(), "live source {key} missing");
+    }
+    // Counters and gauges stay flat numbers.
+    assert_eq!(snap.get("itest.snap.count").as_usize(), Some(7));
+    assert_eq!(snap.get("itest.snap.gauge").as_f64(), Some(2.5));
+    // Labeled histograms keep the documented sub-object under their
+    // composite key — the shape JSONL rows and perf_ops embed.
+    let h = snap.get("step.seconds{replica=\"0\"}");
+    assert_eq!(h.req_usize("count").unwrap(), 2);
+    assert_eq!(h.req_f64("sum").unwrap(), 1.0);
+    assert_eq!(h.req_f64("min").unwrap(), 0.25);
+    assert_eq!(h.req_f64("max").unwrap(), 0.75);
+    assert_eq!(h.req_f64("mean").unwrap(), 0.5);
+}
+
+// ---------------------------------------------------------------------------
+// 4. Scraping never perturbs the computation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn exact_engine_grid_loss_curves_bit_identical_scraped_vs_not() {
+    let _g = registry_lock();
+    metrics::reset();
+    let addr = server();
+    let cfg = tiny_cfg(23);
+    let data = TextureDataset::generate(
+        SyntheticSpec {
+            hw: 16,
+            cin: 2,
+            classes: 4,
+            noise: 0.15,
+            seed: 23,
+        },
+        32,
+    );
+    let (train, test) = data.split(0.25);
+
+    for name in EXACT_ENGINES {
+        let run = || {
+            let mut rng = Rng::new(cfg.seed);
+            let mut net = cfg.build_network(&mut rng);
+            let engine = engine_by_name(name, cfg.block, cfg.checkpoint_every, cfg.seed).unwrap();
+            let opt = Optimizer::new(OptimizerKind::Sgd, 1e-3, &net, false);
+            let mut trainer = Trainer::new(&mut net, engine.as_ref(), opt);
+            trainer
+                .train(&train, &test, 4, 4, &mut Rng::new(24), None)
+                .unwrap()
+        };
+        let quiet = run();
+        let (stop, scraper) = spawn_scraper(addr);
+        let scraped = run();
+        stop.store(true, Ordering::Relaxed);
+        let scrapes = scraper.join().expect("scraper thread");
+        assert!(scrapes > 0, "{name}: the scraper ran during the train");
+
+        assert_eq!(
+            quiet.loss_curve.len(),
+            scraped.loss_curve.len(),
+            "{name}: curve length"
+        );
+        for (step, (a, b)) in quiet.loss_curve.iter().zip(&scraped.loss_curve).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{name} step {step}: loss must be bit-identical under scraping ({a} vs {b})"
+            );
+        }
+        assert_eq!(
+            quiet.final_loss.to_bits(),
+            scraped.final_loss.to_bits(),
+            "{name}: final loss bits"
+        );
+    }
+}

@@ -13,7 +13,10 @@
 //!    transport folds worker-subprocess spool files into the single
 //!    coordinator trace: events from ≥ 2 distinct pids, including the
 //!    workers' `worker.step` spans.
-//! 4. **Determinism** — the full `EXACT_ENGINES` grid produces
+//! 4. **Spool hygiene** — spool files stamped with a different run id
+//!    (a crashed earlier incarnation, an orphaned worker writing late)
+//!    are skipped by the merge instead of leaking into the trace.
+//! 5. **Determinism** — the full `EXACT_ENGINES` grid produces
 //!    bit-identical losses and parameter gradients with span capture
 //!    on vs off (the never-perturb contract of ARCHITECTURE.md §2.6).
 //!
@@ -286,7 +289,54 @@ fn chrome_trace_merges_unix_worker_processes() {
 }
 
 // ---------------------------------------------------------------------------
-// 4. Tracing never perturbs determinism
+// 4. Stale spool files from other runs never leak into a merge
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stale_spool_files_from_other_runs_are_not_merged() {
+    let _g = trace_lock();
+    let path = std::env::temp_dir().join(format!(
+        "moonwalk_trace_stale_{}.trace.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    let _ = span::drain_all();
+    export::set_trace_path(path.to_str().unwrap()).unwrap();
+    // A crashed earlier incarnation left a spool file behind: same
+    // naming shape, but stamped with a run id this capture never
+    // minted.
+    let spool = std::path::PathBuf::from(format!("{}.workers", path.display()));
+    std::fs::write(
+        spool.join("worker-0-4242-0-0.trace.json"),
+        r#"{"traceEvents": [{"name": "stale.marker", "ph": "X",
+            "pid": 4242, "tid": 1, "ts": 5, "dur": 5}],
+            "droppedEvents": 0}"#,
+    )
+    .unwrap();
+    span::instant("live.marker", None);
+    let written = export::finish().unwrap().expect("capture was active");
+    let json = Json::parse(&std::fs::read_to_string(&written).unwrap()).unwrap();
+    let names: std::collections::BTreeSet<String> = json
+        .get("traceEvents")
+        .as_arr()
+        .expect("traceEvents")
+        .iter()
+        .filter_map(|e| e.get("name").as_str().map(str::to_string))
+        .collect();
+    assert!(
+        names.contains("live.marker"),
+        "this run's own events merge: {names:?}"
+    );
+    assert!(
+        !names.contains("stale.marker"),
+        "a stale spool file's events must not leak into the merge"
+    );
+    assert!(!spool.exists(), "finish still removes the spool");
+    let _ = std::fs::remove_file(&written);
+}
+
+// ---------------------------------------------------------------------------
+// 5. Tracing never perturbs determinism
 // ---------------------------------------------------------------------------
 
 #[test]

@@ -7,22 +7,28 @@
 # (unit + integration: parallel-runtime grids, pool stress, property
 # sweeps, engine equivalence, distributed replica sharding, the
 # multi-process transport grid, budgeted-planner invariants, the
-# fault-tolerance chaos grid, the tracing contract), re-runs the
-# distributed, transport, planner, fault-tolerance, trace and
-# reversible suites as dedicated invocations so
-# replica/transport/planner/recovery/tracing/gradcheck failures stay
-# visible at the end of CI output (MOONWALK_SLOW_TESTS=1 additionally
+# fault-tolerance chaos grid, the tracing contract, the live
+# telemetry plane), re-runs the distributed, transport, planner,
+# fault-tolerance, trace, reversible and metrics_http suites as
+# dedicated invocations so replica/transport/planner/recovery/
+# tracing/gradcheck/telemetry failures stay visible at the end of
+# CI output (MOONWALK_SLOW_TESTS=1 additionally
 # runs the #[ignore]d slow matrices), then enforces the
 # documentation surface (rustdoc must build warning-free and every
 # doctest must pass — the doc system is tier-1 from PR 4 on), the
 # perf_ops --quick smoke, which emits BENCH_perf_ops.json (including
 # the replicas {1,2} scaling rows, the local/unix transport-overhead
 # rows, the planner_rows budget sweep, the fault_rows recovery smoke,
-# the conv_rows autotune family and the trace_rows tracing-overhead
-# family; field schema in docs/BENCH_SCHEMA.md) so the perf trajectory
-# stays diffable across commits, and finally a --trace train smoke on
-# the local and unix transports asserting the merged Chrome trace is
-# emitted and parses. Exits non-zero on the first failure.
+# the conv_rows autotune family, the trace_rows tracing-overhead
+# family and the metrics_rows telemetry-overhead family; field schema
+# in docs/BENCH_SCHEMA.md) so the perf trajectory stays diffable
+# across commits, and finally three end-to-end smokes against the
+# release binary: a --trace train per transport asserting the merged
+# Chrome trace is emitted and parses, a `moonwalk report` pass over
+# that trace asserting the attribution table / JSON / folded-stack
+# outputs, and a --metrics-listen train asserting a live mid-run
+# scrape returns valid exposition with the per-replica fleet series.
+# Exits non-zero on the first failure.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -40,6 +46,9 @@ cargo test -q --test trace
 # Reversible layer family (PR 9): gradcheck battery, depth grids,
 # planner free-vijp discovery, wire-format block topologies.
 cargo test -q --test reversible
+# Live telemetry plane (PR 10): exposition correctness, per-replica
+# fleet series, snapshot schema, scrape determinism.
+cargo test -q --test metrics_http
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 cargo test -q --doc
 # Opt-in slow tier: the #[ignore]d suites (full variant × engine ×
@@ -79,3 +88,104 @@ assert "moonwalk.phase1" in names, sorted(names)
 EOF
   fi
 done
+
+# Profile report smoke (PR 10): `moonwalk report` over the unix trace
+# emitted above must print an attribution table, write the JSON view,
+# and emit a non-empty folded-stack file.
+./target/release/moonwalk report "$trace_dir/unix.trace.json" \
+  --json "$trace_dir/report.json" --folded "$trace_dir/report.folded" \
+  > "$trace_dir/report.txt"
+grep -q "phase totals:" "$trace_dir/report.txt"
+test -s "$trace_dir/report.json"
+test -s "$trace_dir/report.folded"
+
+# Metrics endpoint smoke (PR 10): a short 2-replica unix train with
+# --metrics-listen 127.0.0.1:0 must print its resolved ephemeral
+# endpoint and serve valid Prometheus text exposition mid-run,
+# including the per-replica fleet series the workers piggyback over
+# the wire. Skips gracefully when the binary or python3 is absent
+# (mirroring the perf_ops --quick skip symmetry).
+if [ ! -x ./target/release/moonwalk ]; then
+  echo "metrics smoke: skipped (moonwalk binary not built)"
+elif ! command -v python3 > /dev/null 2>&1; then
+  echo "metrics smoke: skipped (python3 not available)"
+else
+  cat > "$trace_dir/metrics_cfg.json" <<'EOF'
+{"arch": "cnn2d", "depth": 2, "channels": 4, "input_hw": 16,
+ "cin": 2, "classes": 4, "seed": 5, "batch": 4, "steps": 12,
+ "dataset_size": 32}
+EOF
+  metrics_log="$trace_dir/metrics_train.log"
+  ./target/release/moonwalk train --config "$trace_dir/metrics_cfg.json" \
+    --engine moonwalk --transport unix --replicas 2 \
+    --metrics-listen 127.0.0.1:0 > "$metrics_log" 2>&1 &
+  train_pid=$!
+  endpoint=""
+  for _ in $(seq 1 100); do
+    endpoint="$(sed -n 's#^metrics endpoint listening on http://\([^/]*\)/metrics$#\1#p' "$metrics_log")"
+    if [ -n "$endpoint" ]; then
+      break
+    fi
+    if ! kill -0 "$train_pid" 2> /dev/null; then
+      break
+    fi
+    sleep 0.1
+  done
+  if [ -z "$endpoint" ]; then
+    cat "$metrics_log"
+    echo "metrics smoke: endpoint line never appeared" >&2
+    exit 1
+  fi
+  python3 - "$endpoint" "$train_pid" <<'EOF'
+import os, re, sys, time, urllib.request
+
+addr, pid = sys.argv[1], int(sys.argv[2])
+name = r"[a-zA-Z_:][a-zA-Z0-9_:]*"
+label = rf'{name}="[^"]*"'
+sample = re.compile(rf"^{name}(\{{{label}(,{label})*\}})? \S+$")
+
+def alive(pid):
+    try:
+        os.kill(pid, 0)
+        return True
+    except OSError:
+        return False
+
+must_have = [
+    'moonwalk_step_seconds_count{replica="0"}',
+    'moonwalk_step_seconds_count{replica="1"}',
+    'moonwalk_transport_step_seconds_count{replica="0"}',
+    "moonwalk_tracker_peak_bytes",
+]
+found = set()
+scrapes = 0
+deadline = time.time() + 60
+while time.time() < deadline and len(found) < len(must_have):
+    try:
+        with urllib.request.urlopen(f"http://{addr}/metrics", timeout=5) as r:
+            body = r.read().decode()
+    except OSError:
+        if not alive(pid):
+            break  # the run (and with it the listener) already exited
+        time.sleep(0.1)
+        continue
+    scrapes += 1
+    lines = body.splitlines()
+    for line in lines:
+        if not line:
+            continue
+        if line.startswith("#"):
+            assert line.startswith("# TYPE "), f"unexpected comment: {line!r}"
+            continue
+        assert sample.match(line), f"exposition grammar violation: {line!r}"
+    for key in must_have:
+        if any(l.startswith(key + " ") for l in lines):
+            found.add(key)
+    time.sleep(0.2)
+assert scrapes > 0, "never managed to scrape the live endpoint"
+missing = sorted(set(must_have) - found)
+assert not missing, f"series never appeared across {scrapes} scrapes: {missing}"
+print(f"metrics smoke: {scrapes} scrape(s), all must-have series present")
+EOF
+  wait "$train_pid"
+fi
