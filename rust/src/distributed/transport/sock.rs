@@ -849,13 +849,21 @@ fn drive_slot(
                             // Fold the worker's per-step telemetry into
                             // the coordinator registry under the logical
                             // shard's label: one scrape, whole fleet.
+                            // with_label merges into any label block the
+                            // worker already shipped rather than
+                            // appending a second, malformed one.
                             let replica = q.to_string();
-                            let labels = [("replica", replica.as_str())];
                             for (name, delta) in counters {
-                                crate::obs::metrics::counter_add_labeled(&name, &labels, delta);
+                                crate::obs::metrics::counter_add(
+                                    &crate::obs::metrics::with_label(&name, "replica", &replica),
+                                    delta,
+                                );
                             }
                             for (name, v) in observations {
-                                crate::obs::metrics::observe_labeled(&name, &labels, v);
+                                crate::obs::metrics::observe(
+                                    &crate::obs::metrics::with_label(&name, "replica", &replica),
+                                    v,
+                                );
                             }
                         }
                         Msg::StepDone { loss } => {
@@ -867,7 +875,16 @@ fn drive_slot(
                                 &[("replica", replica.as_str())],
                                 secs,
                             );
-                            if lock(stragglers).record(q, secs) {
+                            // One lock covers record + the stats the
+                            // warning needs: log_warn! formats eagerly,
+                            // so a second lock(stragglers) inside the
+                            // same statement would self-deadlock the
+                            // non-reentrant mutex.
+                            let (flagged, fleet_mean, fleet_samples) = {
+                                let mut t = lock(stragglers);
+                                (t.record(q, secs), t.mean(), t.samples())
+                            };
+                            if flagged {
                                 crate::obs::metrics::counter_add("supervisor.stragglers", 1);
                                 crate::obs::metrics::counter_add_labeled(
                                     "supervisor.stragglers",
@@ -880,9 +897,7 @@ fn drive_slot(
                                 );
                                 crate::log_warn!(
                                     "straggler: {peer} took {secs:.3}s this step \
-                                     (fleet mean {:.3}s over {} samples)",
-                                    lock(stragglers).mean(),
-                                    lock(stragglers).samples()
+                                     (fleet mean {fleet_mean:.3}s over {fleet_samples} samples)"
                                 );
                             }
                             break;

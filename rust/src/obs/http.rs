@@ -1,5 +1,6 @@
-//! The live telemetry plane: a std-only, single-threaded HTTP/1.1
-//! listener serving the metrics registry while a run is in flight.
+//! The live telemetry plane: a std-only HTTP/1.1 listener (one accept
+//! thread, one short-lived thread per connection) serving the metrics
+//! registry while a run is in flight.
 //!
 //! Endpoints:
 //!
@@ -22,8 +23,8 @@
 //! `MOONWALK_METRICS_LISTEN`); port `0` binds an ephemeral port, which
 //! [`serve`] resolves and `cli::configure_runtime` prints at startup.
 //!
-//! **Determinism.** The server thread is read-only with respect to the
-//! computation: it renders from the metrics registry (a mutex shared
+//! **Determinism.** The server threads are read-only with respect to
+//! the computation: they render from the metrics registry (a mutex shared
 //! only with cold-path writers — supervisor events, per-step counters)
 //! and the lock-free pool/arena/tracker atomics. Nothing any kernel
 //! computes ever reads state the server writes, so the §2.6
@@ -78,12 +79,18 @@ pub fn bound_addr() -> Option<SocketAddr> {
 }
 
 fn serve_loop(listener: TcpListener) {
-    // Single-threaded by design: scrapes are rare (1–10 Hz), responses
-    // are small, and one handler thread keeps the plane's footprint
-    // bounded no matter how aggressive the scraper is.
+    // One short-lived thread per connection: scrapes are rare
+    // (1–10 Hz) and responses small, but a stuck or idle client must
+    // not stall `/healthz` for an external liveness probe sharing the
+    // endpoint — the 5s read/write timeouts bound each handler
+    // thread's lifetime, so the plane's footprint stays small.
     for conn in listener.incoming() {
         let Ok(mut stream) = conn else { continue };
-        let _ = handle(&mut stream);
+        let _ = std::thread::Builder::new()
+            .name("moonwalk-metrics-conn".into())
+            .spawn(move || {
+                let _ = handle(&mut stream);
+            });
     }
 }
 
@@ -237,6 +244,25 @@ mod tests {
         let (code, body) = get(addr, "/healthz").unwrap();
         assert_eq!(code, 200, "a just-completed step is healthy: {body}");
         assert!(body.starts_with("ok"));
+    }
+
+    #[test]
+    fn idle_connection_does_not_stall_healthz() {
+        let addr = test_server();
+        // Regression: a single-threaded serve loop let one idle client
+        // (a stuck scraper that never sends a request head) hold every
+        // endpoint hostage for the whole 5 s read timeout — long enough
+        // for an external liveness probe on /healthz to time out. Each
+        // connection now gets its own short-lived thread.
+        let _idle = TcpStream::connect(addr).unwrap();
+        let t0 = std::time::Instant::now();
+        let (code, body) = get(addr, "/healthz").unwrap();
+        assert!(code == 200 || code == 503, "healthz always answers: {body}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(3),
+            "healthz stalled {:?} behind an idle connection",
+            t0.elapsed()
+        );
     }
 
     #[test]

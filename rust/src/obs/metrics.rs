@@ -83,20 +83,47 @@ pub fn series_key(name: &str, labels: &[(&str, &str)]) -> String {
         if i > 0 {
             s.push(',');
         }
-        s.push_str(k);
-        s.push_str("=\"");
-        for c in v.chars() {
-            match c {
-                '\\' => s.push_str("\\\\"),
-                '"' => s.push_str("\\\""),
-                '\n' => s.push_str("\\n"),
-                c => s.push(c),
-            }
-        }
-        s.push('"');
+        push_label(&mut s, k, v);
     }
     s.push('}');
     s
+}
+
+/// Append one `k="v"` pair (value escaped per the Prometheus text
+/// format) to a label body under construction.
+fn push_label(s: &mut String, k: &str, v: &str) {
+    s.push_str(k);
+    s.push_str("=\"");
+    for c in v.chars() {
+        match c {
+            '\\' => s.push_str("\\\\"),
+            '"' => s.push_str("\\\""),
+            '\n' => s.push_str("\\n"),
+            c => s.push(c),
+        }
+    }
+    s.push('"');
+}
+
+/// Attach `k="v"` to a series key that may already carry labels:
+/// `name` becomes `name{k="v"}`, while `name{a="b"}` becomes
+/// `name{a="b",k="v"}` — the label merges into the existing block
+/// instead of growing a second `{…}` that [`split_key`] (and every
+/// Prometheus parser) would misread. The fleet-aggregation fold routes
+/// worker-shipped keys through this, so a worker-side labeled metric
+/// gains its `replica` label cleanly.
+pub fn with_label(key: &str, k: &str, v: &str) -> String {
+    match key.find('{') {
+        Some(_) if key.ends_with('}') => {
+            let mut s = String::with_capacity(key.len() + k.len() + v.len() + 8);
+            s.push_str(&key[..key.len() - 1]);
+            s.push(',');
+            push_label(&mut s, k, v);
+            s.push('}');
+            s
+        }
+        _ => series_key(key, &[(k, v)]),
+    }
 }
 
 /// Add `delta` to the named monotone counter (created at 0 on first use).
@@ -368,19 +395,29 @@ pub fn render_prometheus() -> String {
         let (base, labels) = split_key(k);
         families.entry(base.to_string()).or_default().push((labels, m));
     }
+    let kind_of = |m: &Metric| match m {
+        Metric::Counter(_) => "counter",
+        Metric::Gauge(_) => "gauge",
+        Metric::Hist { .. } => "histogram",
+    };
     for (base, series) in &families {
         let name = prom_name(base);
-        let kind = match series[0].1 {
-            Metric::Counter(_) => "counter",
-            Metric::Gauge(_) => "gauge",
-            Metric::Hist { .. } => "histogram",
-        };
+        // A Prometheus family has exactly one type; if labeled and
+        // unlabeled series under one base name ever disagree (a
+        // programming error), render only the first kind and say so in
+        // a comment rather than emitting an exposition scrapers reject.
+        let kind = kind_of(series[0].1);
+        let mut skipped = 0usize;
         out.push_str("# TYPE ");
         out.push_str(&name);
         out.push(' ');
         out.push_str(kind);
         out.push('\n');
         for (labels, m) in series {
+            if kind_of(*m) != kind {
+                skipped += 1;
+                continue;
+            }
             match m {
                 Metric::Counter(v) => {
                     out.push_str(&name);
@@ -442,6 +479,11 @@ pub fn render_prometheus() -> String {
                 }
             }
         }
+        if skipped > 0 {
+            out.push_str(&format!(
+                "# moonwalk: skipped {skipped} series of {name} whose kind is not {kind}\n"
+            ));
+        }
     }
     out
 }
@@ -487,6 +529,44 @@ mod tests {
             "a.b{k=\"v\\\"x\\\\y\"}"
         );
         assert_eq!(series_key("a.b", &[]), "a.b");
+    }
+
+    #[test]
+    fn with_label_merges_into_an_existing_label_block() {
+        // Unlabeled keys gain a fresh block…
+        assert_eq!(with_label("a.b", "replica", "3"), "a.b{replica=\"3\"}");
+        // …while already-labeled keys merge into the existing one
+        // instead of growing a second `{…}` split_key would misread.
+        assert_eq!(
+            with_label("a.b{k=\"v\"}", "replica", "3"),
+            "a.b{k=\"v\",replica=\"3\"}"
+        );
+        assert_eq!(split_key("a.b{k=\"v\",replica=\"3\"}").0, "a.b");
+        // Escaping applies to the merged value too.
+        assert_eq!(
+            with_label("a.b{k=\"v\"}", "r", "q\"z"),
+            "a.b{k=\"v\",r=\"q\\\"z\"}"
+        );
+    }
+
+    #[test]
+    fn mixed_kind_family_keeps_one_type_and_skips_conflicting_series() {
+        counter_add("unit.mixedkind.fam", 1);
+        // A programming error: the same base name reused as a gauge on
+        // a labeled series. The family must still render as exactly one
+        // kind — the conflicting series is skipped, visibly.
+        gauge_set(&series_key("unit.mixedkind.fam", &[("replica", "0")]), 2.0);
+        let text = render_prometheus();
+        assert!(text.contains("# TYPE moonwalk_unit_mixedkind_fam counter"));
+        assert!(text.contains("moonwalk_unit_mixedkind_fam 1"));
+        assert!(
+            !text.contains("moonwalk_unit_mixedkind_fam{replica=\"0\"}"),
+            "conflicting-kind series must not render under a counter TYPE: {text}"
+        );
+        assert!(
+            text.contains("# moonwalk: skipped 1 series of moonwalk_unit_mixedkind_fam"),
+            "the skip must be visible in the exposition: {text}"
+        );
     }
 
     #[test]

@@ -29,7 +29,9 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use moonwalk::autodiff::{engine_by_name, EXACT_ENGINES};
 use moonwalk::coordinator::{Optimizer, OptimizerKind, SyntheticSpec, TextureDataset, Trainer};
-use moonwalk::distributed::transport::{EngineSpec, UnixTransport, UnixTransportOpts};
+use moonwalk::distributed::transport::{
+    supervisor, EngineSpec, FaultPlan, UnixTransport, UnixTransportOpts,
+};
 use moonwalk::model::config::Config;
 use moonwalk::obs::http;
 use moonwalk::obs::metrics::{self, BUCKET_BOUNDS};
@@ -115,7 +117,11 @@ fn assert_exposition_grammar(text: &str) {
             );
             continue;
         }
-        assert!(!line.starts_with('#'), "only TYPE comments are emitted: {line}");
+        if line.starts_with('#') {
+            // Non-TYPE comments (e.g. the mixed-kind skip note) are
+            // legal exposition; scrapers ignore them.
+            continue;
+        }
         let (key, value) = line
             .rsplit_once(' ')
             .unwrap_or_else(|| panic!("no value on sample line: {line:?}"));
@@ -270,6 +276,68 @@ fn two_replica_unix_train_scrape_exposes_per_replica_series() {
     let (code, health) = http::get(addr, "/healthz").unwrap();
     assert_eq!(code, 200, "{health}");
     assert!(health.starts_with("ok"), "{health}");
+}
+
+// ---------------------------------------------------------------------------
+// 1b. Straggler flagging mid-train must complete (deadlock regression)
+// ---------------------------------------------------------------------------
+
+/// Regression: the straggler warning used to re-lock the tracker mutex
+/// inside the eagerly-formatted `log_warn!` arguments while the guard
+/// from the same statement's first lock was still alive — a guaranteed
+/// self-deadlock of the non-reentrant `std::sync::Mutex` the moment any
+/// replica was flagged, hanging the drive thread and with it the whole
+/// run. Force a flag deterministically — low z threshold plus one
+/// delayed gradient frame well past the 8-sample warm-up — and assert
+/// the run completes and reports the flag everywhere it should.
+#[test]
+fn straggler_flag_mid_train_completes_and_is_reported() {
+    let _g = registry_lock();
+    metrics::reset();
+    supervisor::set_straggler_z(0.5);
+
+    let cfg = tiny_cfg(29);
+    let mut rng = Rng::new(cfg.seed);
+    let mut net = cfg.build_network(&mut rng);
+    let data = TextureDataset::generate(
+        SyntheticSpec {
+            hw: 16,
+            cin: 2,
+            classes: 4,
+            noise: 0.15,
+            seed: 29,
+        },
+        48,
+    );
+    let (train, test) = data.split(0.2);
+    let engine = engine_by_name("moonwalk", cfg.block, cfg.checkpoint_every, cfg.seed).unwrap();
+    let opt = Optimizer::new(OptimizerKind::Sgd, 1e-3, &net, false);
+    let mut trainer = Trainer::new(&mut net, engine.as_ref(), opt);
+    trainer.replicas = 2;
+    // Steps 0..=5 of 2 replicas give 12 warm-up samples; the 150 ms
+    // frame delay at step 6 then makes replica 1's step a guaranteed
+    // z-outlier against tiny-net step-time jitter.
+    let mut opts = UnixTransportOpts::new(2, cfg.to_json().to_string(), EngineSpec::new("moonwalk"));
+    opts.worker_bin = Some(std::path::PathBuf::from(env!("CARGO_BIN_EXE_moonwalk")));
+    opts.faults = FaultPlan::parse("delay150:1@6").unwrap();
+    trainer.transport = Some(Box::new(
+        UnixTransport::spawn(opts).expect("spawn unix transport"),
+    ));
+    let result = trainer.train(&train, &test, 4, 8, &mut Rng::new(30), None);
+    supervisor::set_straggler_z(supervisor::DEFAULT_STRAGGLER_Z);
+
+    let report = result.expect("a flagged straggler must not hang or fail the run");
+    assert_eq!(report.transport, "unix");
+    assert!(
+        report.stragglers >= 1,
+        "the delayed replica must be flagged in TrainReport, got {}",
+        report.stragglers
+    );
+    assert!(metrics::counter("supervisor.stragglers") >= 1);
+    assert!(
+        metrics::counter("supervisor.stragglers{replica=\"1\"}") >= 1,
+        "the per-replica flag counter must name the delayed replica"
+    );
 }
 
 // ---------------------------------------------------------------------------

@@ -175,7 +175,9 @@ while time.time() < deadline and len(found) < len(must_have):
         if not line:
             continue
         if line.startswith("#"):
-            assert line.startswith("# TYPE "), f"unexpected comment: {line!r}"
+            # TYPE lines plus the renderer's own "# moonwalk:" notes
+            # (e.g. mixed-kind series skips) are the only comments.
+            assert line.startswith(("# TYPE ", "# moonwalk:")), f"unexpected comment: {line!r}"
             continue
         assert sample.match(line), f"exposition grammar violation: {line!r}"
     for key in must_have:
